@@ -1,0 +1,70 @@
+//! Kernel benchmarks: margins / wgram / fused step on native vs PJRT
+//! engines across dimensions and batch sizes — the §Perf L1/L2 numbers.
+//!
+//! Run: `cargo bench --bench kernels` (add `-- --quick` for short runs).
+
+use triplet_screen::linalg::Mat;
+use triplet_screen::prelude::*;
+use triplet_screen::runtime::Engine;
+use triplet_screen::util::bench::Bench;
+
+fn inputs(rng: &mut Pcg64, n: usize, d: usize) -> (Mat, Mat, Mat, Vec<f64>) {
+    let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+    m.symmetrize();
+    let a = Mat::from_fn(n, d, |_, _| rng.normal());
+    let b = Mat::from_fn(n, d, |_, _| rng.normal());
+    let w: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+    (m.scaled(0.05), a, b, w)
+}
+
+fn bench_engine(bench: &mut Bench, engine: &dyn Engine, n: usize, d: usize) {
+    let mut rng = Pcg64::seed(42);
+    let (m, a, b, w) = inputs(&mut rng, n, d);
+    let mut out = vec![0.0; n];
+    bench.run(
+        &format!("margins/{}/d{}/n{}", engine.name(), d, n),
+        Some(n as u64),
+        || engine.margins(&m, &a, &b, &mut out),
+    );
+    bench.run(
+        &format!("wgram/{}/d{}/n{}", engine.name(), d, n),
+        Some(n as u64),
+        || engine.wgram(&a, &b, &w),
+    );
+    bench.run(
+        &format!("step/{}/d{}/n{}", engine.name(), d, n),
+        Some(n as u64),
+        || engine.step(&m, &a, &b, 0.05, &mut out),
+    );
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = if quick { Bench::quick() } else { Bench::default() };
+    Bench::header();
+
+    let native = NativeEngine::new(0);
+    let pjrt = PjrtEngine::from_default_dir().ok();
+
+    for (d, n) in [(19usize, 8192usize), (64, 8192), (128, 8192), (19, 65536)] {
+        bench_engine(&mut bench, &native, n, d);
+        if let Some(p) = &pjrt {
+            if p.supports_dim(d) {
+                bench_engine(&mut bench, p, n, d);
+            }
+        }
+    }
+
+    // eigendecomposition (the per-iteration PSD projection cost)
+    for d in [19usize, 64, 128, 200] {
+        let mut rng = Pcg64::seed(1);
+        let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+        m.symmetrize();
+        bench.run(&format!("sym_eig/d{d}"), None, || {
+            triplet_screen::linalg::sym_eig(&m)
+        });
+        bench.run(&format!("min_eigpair/d{d}"), None, || {
+            triplet_screen::linalg::min_eigpair(&m, 1e-9, 200)
+        });
+    }
+}

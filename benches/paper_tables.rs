@@ -1,0 +1,51 @@
+//! End-to-end per-table/figure benchmarks: one small-scale run of every
+//! paper experiment, timed. This is the `cargo bench` entry point the
+//! DESIGN.md §5 experiment index maps to; full-scale runs go through
+//! `cargo run --release --bin experiments`.
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+use triplet_screen::coordinator::experiments as exp;
+use triplet_screen::prelude::*;
+use triplet_screen::util::bench::Bench;
+
+fn main() {
+    let engine = NativeEngine::new(0);
+    let opts = exp::ExpOptions {
+        scale: 0.25,
+        seed: 7,
+        trials: 1,
+        tol: 1e-5,
+        verbose: false,
+        max_steps: 25,
+    };
+    let mut bench = Bench::quick();
+    bench.min_iters = 1;
+    bench.min_time = std::time::Duration::from_millis(1);
+    Bench::header();
+
+    bench.run("table1/dataset-summary", None, || {
+        exp::run_table1(&engine, &opts)
+    });
+    bench.run("fig4/rule-comparison(segment,GB)", None, || {
+        exp::run_fig4(&engine, &opts, "segment-small", true)
+    });
+    bench.run("fig8/rule-comparison(segment,DGB)", None, || {
+        exp::run_fig4(&engine, &opts, "segment-small", false)
+    });
+    bench.run("fig5/bound-comparison(phishing)", None, || {
+        exp::run_fig5(&engine, &opts, "phishing-small")
+    });
+    bench.run("fig6/range-heatmap(segment)", None, || {
+        exp::run_fig6(&engine, &opts, "segment-small", 1e-4)
+    });
+    bench.run("fig7/hinge-pgb(segment)", None, || {
+        exp::run_fig7(&engine, &opts, "segment-small")
+    });
+    bench.run("table2/active-set(iris,wine)", None, || {
+        exp::run_table2(&engine, &opts, &["iris", "wine"], 0.95)
+    });
+    bench.run("table4/bound-totals(iris,wine)", None, || {
+        exp::run_table4(&engine, &opts, &["iris", "wine"])
+    });
+}

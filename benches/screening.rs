@@ -1,0 +1,125 @@
+//! Screening micro-benchmarks: per-triplet rule-evaluation throughput for
+//! the sphere, linear and SDLS rules, plus bound construction and the
+//! range extension — the §Perf L3 numbers behind the paper's §3.3 cost
+//! analysis.
+//!
+//! Run: `cargo bench --bench screening` (add `-- --quick` for short runs).
+
+use triplet_screen::linalg::Mat;
+use triplet_screen::loss::Loss;
+use triplet_screen::prelude::*;
+use triplet_screen::screening::{bounds, l_range, r_range, rules, sdls};
+use triplet_screen::solver::{Problem, Solver, SolverConfig};
+use triplet_screen::util::bench::Bench;
+use triplet_screen::util::timer::PhaseTimers;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = if quick { Bench::quick() } else { Bench::default() };
+    Bench::header();
+
+    // realistic screening state: segment-small, mid-path λ, rough iterate
+    let mut rng = Pcg64::seed(7);
+    let ds = synthetic::analogue("segment-small", &mut rng);
+    let store = TripletStore::from_dataset(&ds, 5, &mut rng);
+    let engine = NativeEngine::new(0);
+    let loss = Loss::smoothed_hinge(0.05);
+    let lmax = Problem::lambda_max(&store, &loss, &engine);
+    let lambda = lmax * 0.05;
+    let mut prob = Problem::new(&store, loss, lambda);
+    let (m, _) = Solver::new(SolverConfig {
+        tol: 1e-3,
+        tol_relative: false,
+        ..Default::default()
+    })
+    .solve(&mut prob, &engine, Mat::zeros(store.d, store.d), None);
+    let mut timers = PhaseTimers::default();
+    let ev = prob.eval(&m, &engine, &mut timers);
+    let grad = prob.grad(&m, &ev.k);
+    let (d_val, _) = prob.dual(&ev.margins, &ev.k, &mut timers);
+    let gap = ev.p - d_val;
+    let n = store.len();
+
+    // ---- bound construction ----
+    bench.run("bound/GB", None, || bounds::gb(&m, &grad, lambda));
+    bench.run("bound/PGB (eig)", None, || bounds::pgb(&m, &grad, lambda));
+    bench.run("bound/DGB", None, || bounds::dgb(&m, gap, lambda));
+    bench.run("bound/RRPB", None, || bounds::rrpb(&m, 1e-4, lambda / 0.9, lambda));
+
+    // ---- per-triplet statistics (the margins pass with Q) ----
+    let sphere = bounds::dgb(&m, gap, lambda);
+    let mut hq = vec![0.0; n];
+    bench.run("stats/margins-pass(Q)", Some(n as u64), || {
+        engine.margins(&sphere.q, &store.a, &store.b, &mut hq)
+    });
+
+    // ---- rule evaluation throughput ----
+    let thr_l = loss.l_threshold();
+    let thr_r = loss.r_threshold();
+    bench.run("rule/sphere", Some(n as u64), || {
+        let mut count = 0usize;
+        for t in 0..n {
+            if rules::sphere_rule(hq[t], store.h_norm[t], sphere.r, thr_l, thr_r)
+                != rules::Decision::None
+            {
+                count += 1;
+            }
+        }
+        count
+    });
+
+    let (s_pgb, split) = bounds::pgb(&m, &grad, lambda);
+    let p = split.minus.scaled(-1.0);
+    let mut hp = vec![0.0; n];
+    engine.margins(&p, &store.a, &store.b, &mut hp);
+    let (pq, pn_sq) = (p.dot(&s_pgb.q), p.norm_sq());
+    bench.run("rule/linear", Some(n as u64), || {
+        let mut count = 0usize;
+        for t in 0..n {
+            if rules::linear_rule(hq[t], store.h_norm[t], hp[t], pq, pn_sq, s_pgb.r, thr_l, thr_r)
+                != rules::Decision::None
+            {
+                count += 1;
+            }
+        }
+        count
+    });
+
+    let q_norm_sq = sphere.q.norm_sq();
+    let sub = (n / 64).max(1); // SDLS is per-triplet expensive: sample
+    bench.run(&format!("rule/sdls (n/{sub} sample)"), Some((n / sub) as u64), || {
+        let mut count = 0usize;
+        for t in (0..n).step_by(sub) {
+            let query = sdls::SdlsQuery {
+                q: &sphere.q,
+                q_norm_sq,
+                psd_center: true,
+                r_sq: sphere.r * sphere.r,
+                a: store.a.row(t),
+                b: store.b.row(t),
+                hq: hq[t],
+                hn: store.h_norm[t],
+                hx0: hq[t],
+            };
+            if sdls::sdls_screens_r(&query, thr_r, 30) {
+                count += 1;
+            }
+        }
+        count
+    });
+
+    // ---- range extension ----
+    let mn = m.norm();
+    bench.run("range/r+l per-triplet", Some(n as u64), || {
+        let mut count = 0usize;
+        for t in 0..n {
+            let hn = store.h_norm[t];
+            if r_range(hq[t], hn, mn, 1e-4, lambda, thr_r).contains(lambda * 0.9)
+                || l_range(hq[t], hn, mn, 1e-4, lambda, thr_l).contains(lambda * 0.9)
+            {
+                count += 1;
+            }
+        }
+        count
+    });
+}

@@ -1,0 +1,107 @@
+//! End-to-end driver: proves all three layers compose.
+//!
+//! Pipeline: synthetic dataset → triplet generation → **PJRT engine
+//! executing the AOT-compiled Pallas kernels** (falling back to native
+//! with a warning if artifacts are missing) → regularization path with
+//! RRPB screening + range extension → kNN evaluation with the learned
+//! metric → headline metrics (screening rate, speedup vs naive, accuracy).
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use triplet_screen::data::knn_classify;
+use triplet_screen::loss::Loss;
+use triplet_screen::path::{PathConfig, RegPath};
+use triplet_screen::prelude::*;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut rng = Pcg64::seed(2024);
+
+    // ---- data & triplets -------------------------------------------------
+    let data = synthetic::analogue("segment", &mut rng);
+    let (train, test) = data.split(0.9, &mut rng);
+    let store = TripletStore::from_dataset(&train, 10, &mut rng);
+    println!(
+        "data: n={} d={} classes={}  triplets={}",
+        train.n(),
+        train.d(),
+        train.n_classes,
+        store.len()
+    );
+
+    // ---- engine: the AOT three-layer path --------------------------------
+    let pjrt = PjrtEngine::from_default_dir();
+    let engine: Box<dyn Engine> = match pjrt {
+        Ok(e) if e.supports_dim(train.d()) => {
+            println!("engine: pjrt (AOT Pallas kernels via {:?})", e.artifacts_dir());
+            Box::new(e)
+        }
+        _ => {
+            eprintln!("warning: artifacts missing — run `make artifacts`; using native engine");
+            Box::new(NativeEngine::new(0))
+        }
+    };
+
+    // ---- regularization path: naive vs screened --------------------------
+    let base = PathConfig {
+        loss: Loss::smoothed_hinge(0.05),
+        rho: 0.9,
+        max_steps: 20,
+        solver: SolverConfig {
+            tol: 1e-6,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    println!("\n[1/2] naive path …");
+    let naive = RegPath::new(base.clone()).run(&store, engine.as_ref());
+    println!("[2/2] screened path (RRPB + range) …");
+    let mut cfg = base;
+    cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+    cfg.range_screening = true;
+    let screened = RegPath::new(cfg).run(&store, engine.as_ref());
+
+    println!("\n  λ          rate      naive(s)  screened(s)");
+    for (a, b) in naive.steps.iter().zip(&screened.steps) {
+        println!(
+            "  {:<10.4} {:>6.1}%  {:>9.3}  {:>10.3}",
+            a.lambda,
+            100.0 * b.rate_final,
+            a.wall,
+            b.wall
+        );
+        assert!(
+            (a.p - b.p).abs() <= 1e-3 * a.p.abs().max(1.0),
+            "screened objective drifted at λ={}",
+            a.lambda
+        );
+    }
+
+    // ---- evaluation -------------------------------------------------------
+    let m = &screened.m_final;
+    let k = 5;
+    let acc_euclid = {
+        let p = knn_classify(&train, &test, k, &Mat::identity(train.d()));
+        p.iter().zip(&test.y).filter(|(a, b)| a == b).count() as f64 / test.n() as f64
+    };
+    let acc_learned = {
+        let p = knn_classify(&train, &test, k, m);
+        p.iter().zip(&test.y).filter(|(a, b)| a == b).count() as f64 / test.n() as f64
+    };
+
+    let avg_rate: f64 =
+        screened.steps.iter().map(|s| s.rate_final).sum::<f64>() / screened.steps.len() as f64;
+    println!("\n==== headline metrics ====");
+    println!("path length          : {} λ values", screened.steps.len());
+    println!("avg screening rate   : {:.1}%", 100.0 * avg_rate);
+    println!(
+        "path speedup         : {:.2}x (naive {:.2}s → screened {:.2}s)",
+        naive.total_wall / screened.total_wall.max(1e-12),
+        naive.total_wall,
+        screened.total_wall
+    );
+    println!("kNN acc euclidean    : {:.1}%", 100.0 * acc_euclid);
+    println!("kNN acc learned M    : {:.1}%", 100.0 * acc_learned);
+    println!("total wall           : {:.1}s", t0.elapsed().as_secs_f64());
+}

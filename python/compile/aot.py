@@ -1,0 +1,94 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernels) -> HLO text.
+
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. Lowered with ``return_tuple=True``; the rust side
+unwraps with ``to_tuple1()`` / tuple indexing.
+
+Artifacts are keyed by (entry, d, n): ``<entry>_d{d}_b{n}.hlo.txt`` where n
+is the padded triplet-block length per PJRT dispatch (DISPATCH_N rows,
+internally tiled by the Pallas block). ``make artifacts`` is incremental:
+the Makefile stamps the directory and skips when inputs are unchanged.
+
+A ``manifest.json`` records every emitted artifact so the rust registry can
+enumerate them without globbing conventions drifting.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Feature dimensions of the dataset analogues used by the experiment suite
+# (see DESIGN.md §5) plus power-of-two sizes for the perf sweep.
+DEFAULT_DIMS = [4, 13, 16, 19, 32, 36, 64, 68, 100, 128, 200]
+# Rows per PJRT dispatch; multiple of the Pallas block (512).
+DISPATCH_N = 8192
+
+ENTRIES = {
+    "margins": model.entry_margins,
+    "wgram": model.entry_wgram,
+    "step": model.entry_step,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry: str, d: int, n: int, block: int) -> str:
+    fn, args = ENTRIES[entry](d, n, block=block)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--dims", type=int, nargs="*", default=DEFAULT_DIMS)
+    ap.add_argument("--n", type=int, default=DISPATCH_N)
+    ap.add_argument("--block", type=int, default=512)
+    ap.add_argument(
+        "--entries", nargs="*", default=list(ENTRIES), choices=list(ENTRIES)
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "dispatch_n": args.n,
+        "pallas_block": args.block,
+        "dtype": "f64",
+        "artifacts": [],
+    }
+    for d in args.dims:
+        for entry in args.entries:
+            name = f"{entry}_d{d}_b{args.n}.hlo.txt"
+            path = os.path.join(args.out, name)
+            text = lower_entry(entry, d, args.n, args.block)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {"entry": entry, "d": d, "n": args.n, "file": name}
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

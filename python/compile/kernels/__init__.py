@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for safe triplet screening.
+
+Both kernels are authored as Pallas kernels and lowered with
+``interpret=True`` so the resulting HLO runs on any PJRT backend (the rust
+CPU client in particular). Real-TPU lowering would emit Mosaic custom-calls
+the CPU plugin cannot execute; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .triplet_margin import triplet_margins, DEFAULT_BLOCK
+from .weighted_gram import weighted_gram
+
+__all__ = ["triplet_margins", "weighted_gram", "DEFAULT_BLOCK"]

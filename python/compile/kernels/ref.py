@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is deliberately naive (einsum over explicit H_t where
+feasible) — the single source of numerical truth for pytest.
+"""
+
+import jax.numpy as jnp
+
+
+def margins_ref(mat, a, b):
+    """m_t = a_t^T mat a_t - b_t^T mat b_t (vectorized, no Pallas)."""
+    return jnp.einsum("ti,ij,tj->t", a, mat, a) - jnp.einsum(
+        "ti,ij,tj->t", b, mat, b
+    )
+
+
+def margins_ref_explicit(mat, a, b):
+    """Same via explicit H_t matrices — O(n d^2) memory, tiny inputs only."""
+    h = a[:, :, None] * a[:, None, :] - b[:, :, None] * b[:, None, :]
+    return jnp.einsum("tij,ij->t", h, mat)
+
+
+def wgram_ref(a, b, w):
+    """sum_t w_t (a_t a_t^T - b_t b_t^T)."""
+    return jnp.einsum("t,ti,tj->ij", w, a, a) - jnp.einsum(
+        "t,ti,tj->ij", w, b, b
+    )
+
+
+def smoothed_hinge(m, gamma):
+    """l(m): 0 for m>1; (1-m)^2/(2 gamma) on [1-gamma, 1]; 1-m-gamma/2 below."""
+    return jnp.where(
+        m > 1.0,
+        0.0,
+        jnp.where(
+            m >= 1.0 - gamma,
+            (1.0 - m) ** 2 / (2.0 * gamma),
+            1.0 - m - gamma / 2.0,
+        ),
+    )
+
+
+def smoothed_hinge_alpha(m, gamma):
+    """alpha = -l'(m) in [0, 1]."""
+    return jnp.clip((1.0 - m) / gamma, 0.0, 1.0)
+
+
+def fused_step_ref(mat, a, b, mask, gamma):
+    """Reference for the fused AOT step: (loss_sum, grad_loss_sum, margins).
+
+    grad_loss_sum = sum_t alpha_t H_t (the rust side forms
+    grad P = -grad_loss_sum + lambda M itself).
+    """
+    m = margins_ref(mat, a, b)
+    loss = jnp.sum(smoothed_hinge(m, gamma) * mask)
+    alpha = smoothed_hinge_alpha(m, gamma) * mask
+    g = wgram_ref(a, b, alpha)
+    return loss, g, m

@@ -1,0 +1,57 @@
+"""Weighted gram-difference Pallas kernel: the loss-gradient accumulation.
+
+    G = sum_t w_t H_t = A^T diag(w) A - B^T diag(w) B,
+
+with w_t = alpha_t (the dual-feasible coefficients -l'(m_t)). Together with
+``triplet_margins`` this covers every O(d^2 |T|) operation in RTLM.
+
+TPU mapping: the grid walks triplet tiles; each step performs two
+``[d, block] x [block, d]`` MXU matmuls and accumulates into the
+VMEM-resident [d, d] output block (revisited across the whole grid, which
+Pallas keeps live between steps).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .triplet_margin import DEFAULT_BLOCK
+
+
+def _wgram_kernel(a_ref, b_ref, w_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    w = w_ref[...]
+    aw = a * w[:, None]
+    bw = b * w[:, None]
+    out_ref[...] += aw.T @ a - bw.T @ b
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def weighted_gram(a, b, w, *, block=DEFAULT_BLOCK, interpret=True):
+    """G = A^T diag(w) A - B^T diag(w) B, [d, d].
+
+    Padded tail rows must carry w=0 so they contribute nothing.
+    """
+    n, d = a.shape
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    grid = (n // block,)
+    return pl.pallas_call(
+        _wgram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((d, d), a.dtype),
+        interpret=interpret,
+    )(a, b, w)

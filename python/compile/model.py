@@ -1,0 +1,101 @@
+"""Layer-2: the RTLM compute graph, composed from the L1 Pallas kernels.
+
+Three exported entry points (all f64; the rust coordinator owns the solver
+state and the regularization term, so lambda never appears here):
+
+  margins(mat, a, b)            -> m[n]             (objective & screening)
+  wgram(a, b, w)                -> G[d,d]           (sum_t w_t H_t)
+  fused_step(mat, a, b, mask, gamma) -> (loss_sum, grad_loss_sum, margins)
+
+``fused_step`` fuses margin computation, the smoothed-hinge loss/derivative
+and the gradient accumulation into a single HLO module so the rust hot loop
+pays one PJRT dispatch per triplet block instead of three.
+
+The smoothed hinge here must match ``rust/src/loss/`` bit-for-bit in
+branch structure:
+
+    l(m)  = 0                     m > 1
+          = (1-m)^2 / (2 gamma)   1-gamma <= m <= 1
+          = 1 - m - gamma/2       m < 1-gamma
+    alpha = -l'(m) = clip((1-m)/gamma, 0, 1)
+
+gamma is a runtime scalar input (not baked) so one artifact serves every
+loss configuration; the hinge loss is the gamma->0 limit and is handled on
+the rust side natively (alpha is set-valued at the kink).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import triplet_margins, weighted_gram, DEFAULT_BLOCK
+from .kernels import ref
+
+
+def margins(mat, a, b, *, block=DEFAULT_BLOCK, interpret=True):
+    """<M, H_t> for every triplet row; serves <H_t, Q> for screening too."""
+    return triplet_margins(mat, a, b, block=block, interpret=interpret)
+
+
+def wgram(a, b, w, *, block=DEFAULT_BLOCK, interpret=True):
+    """sum_t w_t H_t as A^T diag(w) A - B^T diag(w) B."""
+    return weighted_gram(a, b, w, block=block, interpret=interpret)
+
+
+def fused_step(mat, a, b, mask, gamma, *, block=DEFAULT_BLOCK, interpret=True):
+    """One objective/gradient evaluation over a (padded) triplet block.
+
+    Returns (loss_sum, grad_loss_sum, margins): the rust side forms
+      P_lambda      = loss_sum + lambda/2 ||M||_F^2   (+ screened-L terms)
+      grad P_lambda = -grad_loss_sum + lambda M       (+ screened-L terms)
+    Padded tail rows must carry mask=0.
+    """
+    m = triplet_margins(mat, a, b, block=block, interpret=interpret)
+    loss = jnp.sum(ref.smoothed_hinge(m, gamma) * mask)
+    alpha = ref.smoothed_hinge_alpha(m, gamma) * mask
+    g = weighted_gram(a, b, alpha, block=block, interpret=interpret)
+    return loss, g, m
+
+
+def entry_margins(d, n, block=DEFAULT_BLOCK):
+    """Build the jittable margins entry point and its example args."""
+
+    def fn(mat, a, b):
+        return (margins(mat, a, b, block=block),)
+
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((d, d), jnp.float64),
+        spec((n, d), jnp.float64),
+        spec((n, d), jnp.float64),
+    )
+    return fn, args
+
+
+def entry_wgram(d, n, block=DEFAULT_BLOCK):
+    def fn(a, b, w):
+        return (wgram(a, b, w, block=block),)
+
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((n, d), jnp.float64),
+        spec((n, d), jnp.float64),
+        spec((n,), jnp.float64),
+    )
+    return fn, args
+
+
+def entry_step(d, n, block=DEFAULT_BLOCK):
+    def fn(mat, a, b, mask, gamma):
+        return fused_step(mat, a, b, mask, gamma, block=block)
+
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((d, d), jnp.float64),
+        spec((n, d), jnp.float64),
+        spec((n, d), jnp.float64),
+        spec((n,), jnp.float64),
+        spec((), jnp.float64),
+    )
+    return fn, args

@@ -1,0 +1,170 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts — every HLO
+module the rust coordinator executes is lowered from exactly these
+functions. Hypothesis sweeps shapes/dtypes/value scales.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import triplet_margins, weighted_gram, ref
+
+
+def rand(rng, *shape, scale=1.0, dtype=np.float64):
+    return (rng.normal(size=shape) * scale).astype(dtype)
+
+
+def sym(rng, d, dtype=np.float64):
+    m = rng.normal(size=(d, d))
+    return ((m + m.T) / 2).astype(dtype)
+
+
+# ---------------------------------------------------------------- margins
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4, 7, 19, 33, 64])
+@pytest.mark.parametrize("blocks", [1, 2, 5])
+def test_margins_matches_ref(d, blocks):
+    rng = np.random.default_rng(d * 100 + blocks)
+    n = 64 * blocks
+    mat, a, b = sym(rng, d), rand(rng, n, d), rand(rng, n, d)
+    got = triplet_margins(jnp.array(mat), jnp.array(a), jnp.array(b), block=64)
+    want = ref.margins_ref(jnp.array(mat), jnp.array(a), jnp.array(b))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_margins_matches_explicit_h():
+    rng = np.random.default_rng(7)
+    d, n = 5, 32
+    mat, a, b = sym(rng, d), rand(rng, n, d), rand(rng, n, d)
+    got = triplet_margins(jnp.array(mat), jnp.array(a), jnp.array(b), block=32)
+    want = ref.margins_ref_explicit(jnp.array(mat), jnp.array(a), jnp.array(b))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_margins_identity_matrix_is_norm_difference():
+    """<I, H_t> = ||a||^2 - ||b||^2."""
+    rng = np.random.default_rng(3)
+    d, n = 8, 128
+    a, b = rand(rng, n, d), rand(rng, n, d)
+    got = triplet_margins(jnp.eye(d, dtype=jnp.float64), jnp.array(a), jnp.array(b), block=128)
+    want = (a * a).sum(1) - (b * b).sum(1)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_margins_rejects_ragged_n():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        triplet_margins(
+            jnp.eye(3, dtype=jnp.float64),
+            jnp.array(rand(rng, 65, 3)),
+            jnp.array(rand(rng, 65, 3)),
+            block=64,
+        )
+
+
+def test_margins_psd_matrix_nonneg_when_b_zero():
+    """a^T M a >= 0 for PSD M: screening geometry sanity."""
+    rng = np.random.default_rng(11)
+    d, n = 6, 64
+    r = rng.normal(size=(d, d))
+    mat = r @ r.T
+    a = rand(rng, n, d)
+    b = np.zeros((n, d))
+    got = triplet_margins(jnp.array(mat), jnp.array(a), jnp.array(b), block=64)
+    assert np.all(np.asarray(got) >= -1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 24),
+    blocks=st.integers(1, 3),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_margins_hypothesis_sweep(d, blocks, scale, seed):
+    rng = np.random.default_rng(seed)
+    n = 32 * blocks
+    mat = sym(rng, d) * scale
+    a, b = rand(rng, n, d, scale=scale), rand(rng, n, d, scale=scale)
+    got = triplet_margins(jnp.array(mat), jnp.array(a), jnp.array(b), block=32)
+    want = ref.margins_ref(jnp.array(mat), jnp.array(a), jnp.array(b))
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10 * scale**3)
+
+
+# ----------------------------------------------------------------- wgram
+
+@pytest.mark.parametrize("d", [1, 2, 5, 19, 40])
+@pytest.mark.parametrize("blocks", [1, 3])
+def test_wgram_matches_ref(d, blocks):
+    rng = np.random.default_rng(d + blocks)
+    n = 64 * blocks
+    a, b, w = rand(rng, n, d), rand(rng, n, d), rng.uniform(size=n)
+    got = weighted_gram(jnp.array(a), jnp.array(b), jnp.array(w), block=64)
+    want = ref.wgram_ref(jnp.array(a), jnp.array(b), jnp.array(w))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_wgram_zero_weights_vanish():
+    rng = np.random.default_rng(5)
+    d, n = 7, 128
+    a, b = rand(rng, n, d), rand(rng, n, d)
+    got = weighted_gram(jnp.array(a), jnp.array(b), jnp.zeros(n), block=64)
+    np.testing.assert_allclose(got, np.zeros((d, d)), atol=0)
+
+
+def test_wgram_is_symmetric():
+    rng = np.random.default_rng(9)
+    d, n = 12, 256
+    a, b, w = rand(rng, n, d), rand(rng, n, d), rng.uniform(size=n)
+    got = np.asarray(weighted_gram(jnp.array(a), jnp.array(b), jnp.array(w), block=128))
+    np.testing.assert_allclose(got, got.T, rtol=1e-12, atol=1e-12)
+
+
+def test_wgram_linearity_in_w():
+    rng = np.random.default_rng(13)
+    d, n = 4, 64
+    a, b = rand(rng, n, d), rand(rng, n, d)
+    w1, w2 = rng.uniform(size=n), rng.uniform(size=n)
+    g1 = weighted_gram(jnp.array(a), jnp.array(b), jnp.array(w1), block=64)
+    g2 = weighted_gram(jnp.array(a), jnp.array(b), jnp.array(w2), block=64)
+    g12 = weighted_gram(jnp.array(a), jnp.array(b), jnp.array(w1 + w2), block=64)
+    np.testing.assert_allclose(g12, g1 + g2, rtol=1e-11, atol=1e-11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(1, 16), blocks=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_wgram_hypothesis_sweep(d, blocks, seed):
+    rng = np.random.default_rng(seed)
+    n = 32 * blocks
+    a, b = rand(rng, n, d), rand(rng, n, d)
+    w = rng.uniform(-1, 1, size=n)
+    got = weighted_gram(jnp.array(a), jnp.array(b), jnp.array(w), block=32)
+    want = ref.wgram_ref(jnp.array(a), jnp.array(b), jnp.array(w))
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------- margin/wgram duality
+
+def test_margin_wgram_adjointness():
+    """<wgram(w), M> == w . margins(M): the two kernels are adjoint maps.
+
+    This identity is what lets the coordinator reuse margins(Q) as <H_t,Q>
+    in the screening rules (paper §3.3).
+    """
+    rng = np.random.default_rng(21)
+    d, n = 9, 128
+    mat, a, b = sym(rng, d), rand(rng, n, d), rand(rng, n, d)
+    w = rng.uniform(size=n)
+    m = triplet_margins(jnp.array(mat), jnp.array(a), jnp.array(b), block=64)
+    g = weighted_gram(jnp.array(a), jnp.array(b), jnp.array(w), block=64)
+    lhs = float(jnp.sum(jnp.array(mat) * g))
+    rhs = float(jnp.dot(jnp.array(w), m))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-11)

@@ -1,0 +1,130 @@
+"""L2 model tests: fused step vs oracle, loss branch structure, shapes."""
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _data(seed, d, n, scale=1.0):
+    rng = np.random.default_rng(seed)
+    m = rng.normal(size=(d, d))
+    mat = (m + m.T) / 2 * scale
+    a = rng.normal(size=(n, d)) * scale
+    b = rng.normal(size=(n, d)) * scale
+    return jnp.array(mat), jnp.array(a), jnp.array(b)
+
+
+# ------------------------------------------------------------ fused step
+
+@pytest.mark.parametrize("d", [2, 5, 19])
+@pytest.mark.parametrize("gamma", [0.01, 0.05, 0.5, 1.0])
+def test_fused_step_matches_ref(d, gamma):
+    mat, a, b = _data(d, d, 128)
+    mask = jnp.ones(128)
+    got = model.fused_step(mat, a, b, mask, jnp.float64(gamma), block=64)
+    want = ref.fused_step_ref(mat, a, b, mask, gamma)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-11, atol=1e-11)
+
+
+def test_fused_step_mask_removes_padding():
+    """Padded rows (mask 0) must not contribute to loss or gradient."""
+    mat, a, b = _data(1, 6, 128)
+    mask_full = jnp.ones(128)
+    # zero out tail and compare against the truncated computation
+    mask = mask_full.at[96:].set(0.0)
+    loss_m, g_m, _ = model.fused_step(mat, a, b, mask, jnp.float64(0.05), block=32)
+    loss_t, g_t, _ = ref.fused_step_ref(mat, a[:96], b[:96], jnp.ones(96), 0.05)
+    np.testing.assert_allclose(loss_m, loss_t, rtol=1e-12)
+    np.testing.assert_allclose(g_m, g_t, rtol=1e-11, atol=1e-11)
+
+
+def test_fused_step_zero_matrix():
+    """M = 0 -> every margin 0 -> loss = n*(1 - gamma/2), alpha = 1."""
+    d, n, gamma = 4, 64, 0.05
+    _, a, b = _data(2, d, n)
+    loss, g, m = model.fused_step(
+        jnp.zeros((d, d)), a, b, jnp.ones(n), jnp.float64(gamma), block=64
+    )
+    np.testing.assert_allclose(loss, n * (1 - gamma / 2), rtol=1e-12)
+    np.testing.assert_allclose(m, np.zeros(n), atol=0)
+    want_g = ref.wgram_ref(a, b, jnp.ones(n))
+    np.testing.assert_allclose(g, want_g, rtol=1e-11, atol=1e-11)
+
+
+def test_gradient_matches_jax_autodiff():
+    """grad_loss_sum from the kernel == autodiff of the loss wrt M.
+
+    d/dM sum_t l(<M,H_t>) = sum_t l'(m_t) H_t = -sum_t alpha_t H_t,
+    so autodiff(loss) must equal -(our grad output).
+    """
+    d, n, gamma = 5, 64, 0.1
+    mat, a, b = _data(3, d, n)
+
+    def loss_fn(mm):
+        m = ref.margins_ref(mm, a, b)
+        return jnp.sum(ref.smoothed_hinge(m, gamma))
+
+    auto = jax.grad(loss_fn)(mat)
+    _, g, _ = model.fused_step(mat, a, b, jnp.ones(n), jnp.float64(gamma), block=64)
+    np.testing.assert_allclose(auto, -g, rtol=1e-9, atol=1e-9)
+
+
+# --------------------------------------------------------- loss structure
+
+def test_smoothed_hinge_branches():
+    gamma = 0.05
+    m = jnp.array([2.0, 1.0 + 1e-9, 1.0, 1.0 - gamma / 2, 1.0 - gamma, 0.0, -3.0])
+    l = ref.smoothed_hinge(m, gamma)
+    assert float(l[0]) == 0.0 and float(l[1]) == 0.0
+    np.testing.assert_allclose(float(l[2]), 0.0, atol=1e-15)
+    np.testing.assert_allclose(float(l[3]), (gamma / 2) ** 2 / (2 * gamma))
+    np.testing.assert_allclose(float(l[4]), gamma / 2)
+    np.testing.assert_allclose(float(l[5]), 1 - gamma / 2)
+    np.testing.assert_allclose(float(l[6]), 4 - gamma / 2)
+
+
+def test_smoothed_hinge_alpha_branches():
+    gamma = 0.05
+    m = jnp.array([2.0, 1.0, 1.0 - gamma / 2, 1.0 - gamma, -1.0])
+    a = ref.smoothed_hinge_alpha(m, gamma)
+    np.testing.assert_allclose(np.asarray(a), [0.0, 0.0, 0.5, 1.0, 1.0], atol=1e-15)
+
+
+def test_smoothed_hinge_is_convex_and_decreasing():
+    gamma = 0.05
+    xs = jnp.linspace(-2, 2, 401)
+    l = np.asarray(ref.smoothed_hinge(xs, gamma))
+    assert np.all(np.diff(l) <= 1e-15)  # non-increasing
+    assert np.all(np.diff(l, 2) >= -1e-12)  # convex
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    gamma=st.floats(1e-3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_alpha_in_unit_interval(gamma, seed):
+    rng = np.random.default_rng(seed)
+    m = jnp.array(rng.normal(scale=3.0, size=256))
+    a = np.asarray(ref.smoothed_hinge_alpha(m, gamma))
+    assert np.all(a >= 0.0) and np.all(a <= 1.0)
+
+
+def test_fenchel_young_equality_on_derivative():
+    """l(m) + l*(-alpha) == -alpha*m when alpha = -l'(m) (KKT eq. (3))."""
+    gamma = 0.05
+    m = jnp.linspace(-2, 2, 101)
+    alpha = ref.smoothed_hinge_alpha(m, gamma)
+    lstar = gamma / 2 * alpha**2 - alpha  # conjugate from Appendix A
+    lhs = ref.smoothed_hinge(m, gamma) + lstar
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(-alpha * m), atol=1e-12)

@@ -1,0 +1,180 @@
+//! `experiments` — regenerate every table and figure of the paper (§5).
+//!
+//! Usage: `experiments <table1|fig4|fig5|fig6|fig7|fig8|table2|table4|all>`
+//!   [--dataset NAME] [--engine native|pjrt] [--scale F] [--trials N]
+//!   [--seed N] [--tol F] [--verbose]
+//!
+//! Outputs are printed as markdown and persisted under `reports/`.
+//! See DESIGN.md §5 for the experiment index and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+use triplet_screen::coordinator::experiments as exp;
+use triplet_screen::prelude::*;
+use triplet_screen::util::cli::Args;
+
+fn make_engine(args: &Args) -> Box<dyn Engine> {
+    match args.get_or("engine", "native") {
+        "native" => Box::new(NativeEngine::new(args.get_usize("threads", 0))),
+        "pjrt" => Box::new(
+            PjrtEngine::from_default_dir().expect("loading PJRT artifacts (run `make artifacts`)"),
+        ),
+        other => panic!("unknown engine {other:?}"),
+    }
+}
+
+fn options(args: &Args) -> exp::ExpOptions {
+    exp::ExpOptions {
+        scale: args.get_f64("scale", 1.0),
+        seed: args.get_usize("seed", 7) as u64,
+        trials: args.get_usize("trials", 1),
+        tol: args.get_f64("tol", 1e-6),
+        verbose: args.flag("verbose"),
+        max_steps: args.get_usize("max-steps", 0),
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let engine = make_engine(&args);
+    let opts = options(&args);
+    let which = args.subcommand.clone().unwrap_or_else(|| {
+        eprintln!("usage: experiments <table1|fig4|fig5|fig6|fig7|fig8|table2|table4|all>");
+        std::process::exit(2);
+    });
+    run(&which, engine.as_ref(), &opts, &args);
+}
+
+fn run(which: &str, engine: &dyn Engine, opts: &exp::ExpOptions, args: &Args) {
+    match which {
+        "table1" => {
+            let t = exp::run_table1(engine, opts);
+            exp::emit("table1", &[&t]);
+        }
+        "fig4" => {
+            let ds = args.get_or("dataset", "segment");
+            let (rate, time) = exp::run_fig4(engine, opts, ds, true);
+            exp::emit("fig4", &[&rate, &time]);
+        }
+        "fig8" => {
+            let ds = args.get_or("dataset", "segment");
+            let (rate, time) = exp::run_fig4(engine, opts, ds, false);
+            exp::emit("fig8", &[&rate, &time]);
+        }
+        "fig5" => {
+            let ds = args.get_or("dataset", "phishing");
+            let (rate, dyn_rate, time) = exp::run_fig5(engine, opts, ds);
+            exp::emit("fig5", &[&rate, &dyn_rate, &time]);
+        }
+        "fig6" => {
+            let ds = args.get_or("dataset", "segment");
+            let t4 = exp::run_fig6(engine, opts, ds, 1e-4);
+            let t6 = exp::run_fig6(engine, opts, ds, 1e-6);
+            exp::emit("fig6", &[&t4, &t6]);
+        }
+        "fig7" => {
+            let ds = args.get_or("dataset", "segment");
+            let t = exp::run_fig7(engine, opts, ds);
+            exp::emit("fig7", &[&t]);
+        }
+        "table2" => {
+            let datasets: Vec<&str> = args
+                .get("datasets")
+                .map(|s| s.split(',').collect())
+                .unwrap_or_else(|| vec!["phishing", "sensit", "a9a", "mnist"]);
+            let rho = args.get_f64("rho", 0.99);
+            let t = exp::run_table2(engine, opts, &datasets, rho);
+            exp::emit("table2", &[&t]);
+        }
+        "table4" => {
+            let datasets: Vec<&str> = args
+                .get("datasets")
+                .map(|s| s.split(',').collect())
+                .unwrap_or_else(|| vec!["iris", "wine", "segment", "satimage"]);
+            let t = exp::run_table4(engine, opts, &datasets);
+            exp::emit("table4", &[&t]);
+        }
+        "table5" => {
+            let datasets: Vec<&str> = args
+                .get("datasets")
+                .map(|s| s.split(',').collect())
+                .unwrap_or_else(|| vec!["usps", "madelon", "colon-cancer", "gisette"]);
+            let t = exp::run_table5(opts, &datasets);
+            exp::emit("table5", &[&t]);
+        }
+        "perf" => {
+            // §Perf artifacts: L1 TPU structural estimates + native-vs-PJRT
+            // kernel timings on this host
+            let profile = triplet_screen::coordinator::tpu_model::TpuProfile::v4_like();
+            let est = triplet_screen::coordinator::tpu_model::estimate_table(
+                &[19, 68, 128, 200],
+                512,
+                &profile,
+            );
+            let mut timing = triplet_screen::coordinator::report::Table::new(
+                "engine kernel timings (this host)",
+                &["kernel", "d", "n", "native_ms", "pjrt_ms", "pjrt/native"],
+            );
+            let native = NativeEngine::new(0);
+            let pjrt = PjrtEngine::from_default_dir().ok();
+            let mut rng = Pcg64::seed(1);
+            for (d, n) in [(19usize, 8192usize), (68, 8192), (128, 8192)] {
+                use triplet_screen::linalg::Mat;
+                let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+                m.symmetrize();
+                let m = m.scaled(0.05);
+                let a = Mat::from_fn(n, d, |_, _| rng.normal());
+                let b = Mat::from_fn(n, d, |_, _| rng.normal());
+                let mut out = vec![0.0; n];
+                let time_it = |f: &mut dyn FnMut()| -> f64 {
+                    f(); // warm
+                    let t0 = std::time::Instant::now();
+                    let mut iters = 0;
+                    while t0.elapsed().as_millis() < 200 {
+                        f();
+                        iters += 1;
+                    }
+                    t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+                };
+                for kernel in ["margins", "step"] {
+                    let nat = time_it(&mut || {
+                        if kernel == "margins" {
+                            native.margins(&m, &a, &b, &mut out);
+                        } else {
+                            let _ = native.step(&m, &a, &b, 0.05, &mut out);
+                        }
+                    });
+                    let pj = pjrt.as_ref().filter(|p| p.supports_dim(d)).map(|p| {
+                        time_it(&mut || {
+                            if kernel == "margins" {
+                                p.margins(&m, &a, &b, &mut out);
+                            } else {
+                                let _ = p.step(&m, &a, &b, 0.05, &mut out);
+                            }
+                        })
+                    });
+                    timing.row(vec![
+                        kernel.to_string(),
+                        d.to_string(),
+                        n.to_string(),
+                        format!("{nat:.2}"),
+                        pj.map_or("-".into(), |v| format!("{v:.2}")),
+                        pj.map_or("-".into(), |v| format!("{:.2}", v / nat)),
+                    ]);
+                }
+            }
+            exp::emit("perf", &[&est, &timing]);
+        }
+        "all" => {
+            for w in [
+                "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "table2", "table4", "table5",
+            ] {
+                eprintln!("=== {w} ===");
+                run(w, engine, opts, args);
+            }
+        }
+        other => {
+            eprintln!("unknown experiment {other:?}");
+            std::process::exit(2);
+        }
+    }
+}

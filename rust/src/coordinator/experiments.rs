@@ -1,0 +1,536 @@
+//! Runners for every table and figure of the paper's evaluation (§5).
+//!
+//! Each `run_*` function regenerates the corresponding artifact's *shape*
+//! on the synthetic dataset analogues (see DESIGN.md §3 for the
+//! substitution rationale): the rows/series the paper reports, printed as
+//! markdown and persisted under `reports/`. Absolute seconds differ from
+//! the paper's testbed; orderings, collapse points and speedup factors are
+//! the reproduced quantities, recorded in EXPERIMENTS.md.
+
+use super::report::{fnum, fpct, write_report, Table};
+use crate::data::synthetic;
+use crate::loss::Loss;
+use crate::path::{PathConfig, PathResult, RegPath};
+use crate::runtime::Engine;
+use crate::screening::{BoundKind, RuleKind, ScreeningConfig};
+use crate::solver::{Problem, SolverConfig};
+use crate::triplet::TripletStore;
+use crate::util::rng::Pcg64;
+
+/// Shared experiment options (dataset scale, seed, engine choice).
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// scale factor on the analogue's n (1.0 = DESIGN.md defaults)
+    pub scale: f64,
+    pub seed: u64,
+    /// number of random subsample trials to average (paper: 5)
+    pub trials: usize,
+    pub tol: f64,
+    pub verbose: bool,
+    /// maximum λ steps per path (0 = paper-length default)
+    pub max_steps: usize,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            scale: 1.0,
+            seed: 7,
+            trials: 1,
+            tol: 1e-6,
+            verbose: false,
+            max_steps: 0,
+        }
+    }
+}
+
+/// Build the analogue dataset + triplet store for an experiment.
+pub fn build_store(name: &str, opts: &ExpOptions, rng: &mut Pcg64) -> TripletStore {
+    let spec = synthetic::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+    let mut ds = synthetic::analogue(name, rng);
+    if opts.scale < 1.0 {
+        let keep = ((ds.n() as f64 * opts.scale) as usize).max(spec.n_classes * 8);
+        ds = ds.subsample(keep as f64 / ds.n() as f64, rng);
+    }
+    // paper protocol: random 90% subsample per trial
+    let ds = ds.subsample(0.9, rng);
+    TripletStore::from_dataset(&ds, spec.k, rng)
+}
+
+fn base_path_cfg(opts: &ExpOptions, rho: f64) -> PathConfig {
+    PathConfig {
+        loss: Loss::smoothed_hinge(0.05),
+        rho,
+        // long enough for the paper's λ_max→λ_min span (the loss-based
+        // stop criterion usually fires earlier); overridable for CI budgets
+        max_steps: if opts.max_steps > 0 {
+            opts.max_steps
+        } else if rho >= 0.99 {
+            600
+        } else {
+            140
+        },
+        stop_ratio: 0.01,
+        lambda_min: None,
+        solver: SolverConfig {
+            tol: opts.tol,
+            tol_relative: true,
+            max_iters: 4000,
+            screen_every: 10,
+            gap_every: 1,
+        },
+        screening: None,
+        secondary_screening: None,
+        active_set: false,
+        range_screening: false,
+    }
+}
+
+fn run_variant(
+    store: &TripletStore,
+    engine: &dyn Engine,
+    cfg: &PathConfig,
+    label: &str,
+    verbose: bool,
+) -> PathResult {
+    if verbose {
+        eprintln!("  running {label} …");
+    }
+    RegPath::new(cfg.clone()).run(store, engine)
+}
+
+/// Paper Table 1 / Table 3: dataset summary with λ_max and #triplets.
+pub fn run_table1(engine: &dyn Engine, opts: &ExpOptions) -> Table {
+    let mut table = Table::new(
+        "Table 1/3 — dataset analogues",
+        &["dataset", "d", "n", "classes", "k", "#triplet", "lambda_max"],
+    );
+    for spec in synthetic::ANALOGUES.iter().filter(|s| s.d <= 200) {
+        let mut rng = Pcg64::seed(opts.seed);
+        let store = build_store(spec.name, opts, &mut rng);
+        let loss = Loss::smoothed_hinge(0.05);
+        let lmax = Problem::lambda_max(&store, &loss, engine);
+        table.row(vec![
+            spec.name.to_string(),
+            spec.d.to_string(),
+            spec.n.to_string(),
+            spec.n_classes.to_string(),
+            if spec.k == usize::MAX {
+                "inf".into()
+            } else {
+                spec.k.to_string()
+            },
+            store.len().to_string(),
+            fnum(lmax),
+        ]);
+    }
+    table
+}
+
+/// Figure 4 (and Figure 8 with `bound = Dgb`): screening-rule comparison —
+/// regularization-path screening rate and CPU-time ratio per λ, for the
+/// rule variants of one gradient bound on the segment analogue.
+pub fn run_fig4(
+    engine: &dyn Engine,
+    opts: &ExpOptions,
+    dataset: &str,
+    gb_based: bool,
+) -> (Table, Table) {
+    let variants: Vec<(String, ScreeningConfig)> = if gb_based {
+        vec![
+            ("GB".into(), ScreeningConfig::new(BoundKind::Gb, RuleKind::Sphere)),
+            ("PGB".into(), ScreeningConfig::new(BoundKind::Pgb, RuleKind::Sphere)),
+            ("GB+Linear".into(), ScreeningConfig::new(BoundKind::Gb, RuleKind::Linear)),
+            (
+                "GB+Semidefinite".into(),
+                ScreeningConfig::new(BoundKind::Gb, RuleKind::SemiDefinite),
+            ),
+            (
+                "PGB+Semidefinite".into(),
+                ScreeningConfig::new(BoundKind::Pgb, RuleKind::SemiDefinite),
+            ),
+        ]
+    } else {
+        vec![
+            ("DGB".into(), ScreeningConfig::new(BoundKind::Dgb, RuleKind::Sphere)),
+            ("DGB+Linear".into(), ScreeningConfig::new(BoundKind::Dgb, RuleKind::Linear)),
+            (
+                "DGB+Semidefinite".into(),
+                ScreeningConfig::new(BoundKind::Dgb, RuleKind::SemiDefinite),
+            ),
+        ]
+    };
+    rule_comparison(engine, opts, dataset, &variants)
+}
+
+fn rule_comparison(
+    engine: &dyn Engine,
+    opts: &ExpOptions,
+    dataset: &str,
+    variants: &[(String, ScreeningConfig)],
+) -> (Table, Table) {
+    let mut rng = Pcg64::seed(opts.seed);
+    let store = build_store(dataset, opts, &mut rng);
+    let cfg0 = base_path_cfg(opts, 0.9);
+    let naive = run_variant(&store, engine, &cfg0, "naive", opts.verbose);
+
+    let mut rate = Table::new(
+        format!("screening rate (reg-path) on {dataset}"),
+        &[&["lambda"], variants.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().as_slice()]
+            .concat(),
+    );
+    let mut time = Table::new(
+        format!("CPU-time ratio vs naive on {dataset}"),
+        &[&["lambda"], variants.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().as_slice()]
+            .concat(),
+    );
+
+    let mut results = Vec::new();
+    for (label, sc) in variants {
+        let mut cfg = cfg0.clone();
+        cfg.screening = Some(*sc);
+        results.push(run_variant(&store, engine, &cfg, label, opts.verbose));
+    }
+    for (i, step) in naive.steps.iter().enumerate() {
+        let mut rrow = vec![fnum(step.lambda)];
+        let mut trow = vec![fnum(step.lambda)];
+        for res in &results {
+            if let Some(s) = res.steps.get(i) {
+                rrow.push(fpct(s.rate_regpath));
+                trow.push(fnum(s.wall / step.wall.max(1e-12)));
+            } else {
+                rrow.push("-".into());
+                trow.push("-".into());
+            }
+        }
+        rate.row(rrow);
+        time.row(trow);
+    }
+    (rate, time)
+}
+
+/// Figure 5: bound comparison (GB/PGB/DGB/CDGB/RRPB, sphere rule) —
+/// reg-path rate, final dynamic rate and CPU ratio per λ.
+pub fn run_fig5(engine: &dyn Engine, opts: &ExpOptions, dataset: &str) -> (Table, Table, Table) {
+    let bounds = [
+        BoundKind::Gb,
+        BoundKind::Pgb,
+        BoundKind::Dgb,
+        BoundKind::Cdgb,
+        BoundKind::Rrpb,
+    ];
+    let mut rng = Pcg64::seed(opts.seed);
+    let store = build_store(dataset, opts, &mut rng);
+    let cfg0 = base_path_cfg(opts, 0.9);
+    let naive = run_variant(&store, engine, &cfg0, "naive", opts.verbose);
+
+    let names: Vec<&str> = bounds.iter().map(|b| b.name()).collect();
+    let headers: Vec<&str> = [&["lambda"], names.as_slice()].concat();
+    let mut rate = Table::new(format!("reg-path screening rate on {dataset}"), &headers);
+    let mut dyn_rate = Table::new(format!("final dynamic screening rate on {dataset}"), &headers);
+    let mut time = Table::new(format!("CPU-time ratio vs naive on {dataset}"), &headers);
+
+    let mut results = Vec::new();
+    for b in bounds {
+        let mut cfg = cfg0.clone();
+        cfg.screening = Some(ScreeningConfig::new(b, RuleKind::Sphere));
+        results.push(run_variant(&store, engine, &cfg, b.name(), opts.verbose));
+    }
+    for (i, step) in naive.steps.iter().enumerate() {
+        let mut r1 = vec![fnum(step.lambda)];
+        let mut r2 = vec![fnum(step.lambda)];
+        let mut r3 = vec![fnum(step.lambda)];
+        for res in &results {
+            match res.steps.get(i) {
+                Some(s) => {
+                    r1.push(fpct(s.rate_regpath));
+                    r2.push(fpct(s.rate_final));
+                    r3.push(fnum(s.wall / step.wall.max(1e-12)));
+                }
+                None => {
+                    r1.push("-".into());
+                    r2.push("-".into());
+                    r3.push("-".into());
+                }
+            }
+        }
+        rate.row(r1);
+        dyn_rate.row(r2);
+        time.row(r3);
+    }
+    (rate, dyn_rate, time)
+}
+
+/// Figure 6: range-based screening-rate heatmap. Rows: reference λ₀ along
+/// the path; columns: target λ; cell: fraction of triplets screened purely
+/// by the range extension. `eps_accuracy` mirrors the paper's 1e-4 / 1e-6.
+pub fn run_fig6(engine: &dyn Engine, opts: &ExpOptions, dataset: &str, eps_accuracy: f64) -> Table {
+    use crate::screening::{l_range, r_range};
+    let mut rng = Pcg64::seed(opts.seed);
+    let store = build_store(dataset, opts, &mut rng);
+    let loss = Loss::smoothed_hinge(0.05);
+    let mut cfg = base_path_cfg(opts, 0.9);
+    cfg.solver.tol = eps_accuracy;
+    cfg.solver.tol_relative = false;
+    cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+
+    // run the path, collecting (λ0, M0, ε, margins) references
+    let res = RegPath::new(cfg.clone()).run(&store, engine);
+    let lambdas: Vec<f64> = res.steps.iter().map(|s| s.lambda).collect();
+
+    // re-solve at each λ0 to capture its reference (the path run above
+    // already produced them; re-run cheaply with warm starts)
+    let mut refs: Vec<(f64, crate::linalg::Mat, f64, Vec<f64>)> = Vec::new();
+    {
+        let mut warm = crate::linalg::Mat::zeros(store.d, store.d);
+        for &l0 in &lambdas {
+            let mut prob = Problem::new(&store, loss, l0);
+            let solver = crate::solver::Solver::new(cfg.solver.clone());
+            let (m, st) = solver.solve(&mut prob, engine, warm.clone(), None);
+            let eps = (2.0 * st.gap.max(0.0) / l0).sqrt();
+            let mut hm = vec![0.0; store.len()];
+            engine.margins(&m, &store.a, &store.b, &mut hm);
+            refs.push((l0, m.clone(), eps, hm));
+            warm = m;
+        }
+    }
+
+    let mut table = Table::new(
+        format!(
+            "Fig 6 — range-based screening rate on {dataset} (ref accuracy {eps_accuracy:.0e})"
+        ),
+        &[&["lambda0 \\ lambda"], lambdas
+            .iter()
+            .map(|l| fnum(*l))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>()
+            .as_slice()]
+        .concat(),
+    );
+    for (l0, m0, eps, hm) in &refs {
+        let mn = m0.norm();
+        let mut row = vec![fnum(*l0)];
+        for &l in &lambdas {
+            let mut screened = 0usize;
+            for t in 0..store.len() {
+                let hn = store.h_norm[t];
+                if r_range(hm[t], hn, mn, *eps, *l0, loss.r_threshold()).contains(l)
+                    || l_range(hm[t], hn, mn, *eps, *l0, loss.l_threshold()).contains(l)
+                {
+                    screened += 1;
+                }
+            }
+            row.push(fpct(screened as f64 / store.len() as f64));
+        }
+        table.row(row);
+    }
+    table
+}
+
+/// Figure 7: hinge-loss PGB performance (screening rate + time ratio).
+pub fn run_fig7(engine: &dyn Engine, opts: &ExpOptions, dataset: &str) -> Table {
+    let mut rng = Pcg64::seed(opts.seed);
+    let store = build_store(dataset, opts, &mut rng);
+    let mut cfg = base_path_cfg(opts, 0.9);
+    cfg.loss = Loss::hinge();
+    let naive = run_variant(&store, engine, &cfg, "naive(hinge)", opts.verbose);
+    let mut cfg_s = cfg.clone();
+    cfg_s.screening = Some(ScreeningConfig::new(BoundKind::Pgb, RuleKind::Sphere));
+    let pgb = run_variant(&store, engine, &cfg_s, "PGB(hinge)", opts.verbose);
+
+    let mut table = Table::new(
+        format!("Fig 7 — hinge-loss PGB on {dataset}"),
+        &["lambda", "rate_regpath", "rate_final", "time_ratio"],
+    );
+    for (i, step) in naive.steps.iter().enumerate() {
+        if let Some(s) = pgb.steps.get(i) {
+            table.row(vec![
+                fnum(step.lambda),
+                fpct(s.rate_regpath),
+                fpct(s.rate_final),
+                fnum(s.wall / step.wall.max(1e-12)),
+            ]);
+        }
+    }
+    table
+}
+
+/// Table 2 (and Table 4's structure): total path CPU time for the
+/// active-set method variants, averaged over trials. The "+RRPB+PGB"
+/// variant evaluates the rules of *both* spheres per screening call (the
+/// paper's protocol).
+pub fn run_table2(
+    engine: &dyn Engine,
+    opts: &ExpOptions,
+    datasets: &[&str],
+    rho: f64,
+) -> Table {
+    let labels = ["ActiveSet", "ActiveSet+RRPB", "ActiveSet+RRPB+PGB"];
+    let mut table = Table::new(
+        format!("Table 2 — total path time (s), rho = {rho}"),
+        &[&["method"], datasets].concat(),
+    );
+    let mut rows: Vec<Vec<String>> = labels.iter().map(|n| vec![n.to_string()]).collect();
+    for ds in datasets {
+        let mut totals = vec![0.0; labels.len()];
+        for trial in 0..opts.trials {
+            let mut rng = Pcg64::seed(opts.seed + trial as u64);
+            let store = build_store(ds, opts, &mut rng);
+            for (vi, label) in labels.iter().enumerate() {
+                let mut cfg = base_path_cfg(opts, rho);
+                cfg.active_set = true;
+                match vi {
+                    0 => {}
+                    1 => {
+                        cfg.screening =
+                            Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+                        cfg.range_screening = true;
+                    }
+                    _ => {
+                        cfg.screening = Some(ScreeningConfig::new(
+                            BoundKind::Rrpb,
+                            RuleKind::Sphere,
+                        ));
+                        cfg.secondary_screening =
+                            Some(ScreeningConfig::new(BoundKind::Pgb, RuleKind::Sphere));
+                        cfg.range_screening = true;
+                    }
+                }
+                let res = run_variant(&store, engine, &cfg, &format!("{ds}/{label}"), opts.verbose);
+                totals[vi] += res.total_wall;
+            }
+        }
+        for (vi, t) in totals.iter().enumerate() {
+            rows[vi].push(fnum(t / opts.trials as f64));
+        }
+    }
+    for r in rows {
+        table.row(r);
+    }
+    table
+}
+
+/// Table 4: total path time per bound (sphere rule), with screening-eval
+/// seconds in parentheses.
+pub fn run_table4(engine: &dyn Engine, opts: &ExpOptions, datasets: &[&str]) -> Table {
+    let bounds: [Option<BoundKind>; 6] = [
+        None,
+        Some(BoundKind::Gb),
+        Some(BoundKind::Pgb),
+        Some(BoundKind::Dgb),
+        Some(BoundKind::Cdgb),
+        Some(BoundKind::Rrpb),
+    ];
+    let mut table = Table::new(
+        "Table 4 — total path time seconds (screening-eval seconds)",
+        &[&["bound"], datasets].concat(),
+    );
+    let mut rows: Vec<Vec<String>> = bounds
+        .iter()
+        .map(|b| vec![b.map_or("naive".to_string(), |b| b.name().to_string())])
+        .collect();
+    for ds in datasets {
+        let mut rng = Pcg64::seed(opts.seed);
+        let store = build_store(ds, opts, &mut rng);
+        for (bi, b) in bounds.iter().enumerate() {
+            let mut cfg = base_path_cfg(opts, 0.9);
+            cfg.screening = b.map(|b| ScreeningConfig::new(b, RuleKind::Sphere));
+            let res = run_variant(
+                &store,
+                engine,
+                &cfg,
+                &format!("{ds}/{:?}", b.map(|b| b.name())),
+                opts.verbose,
+            );
+            let screen_secs: f64 = res.steps.iter().map(|s| s.screen_time).sum();
+            rows[bi].push(format!("{} ({})", fnum(res.total_wall), fnum(screen_secs)));
+        }
+    }
+    for r in rows {
+        table.row(r);
+    }
+    table
+}
+
+/// Table 5: diagonal-M regularization path on the high-dimensional
+/// analogues — plain vs +RRPB(sphere) vs +RRPB(analytic nonneg rule,
+/// the Appendix-B counterpart of "+PGB").
+pub fn run_table5(opts: &ExpOptions, datasets: &[&str]) -> Table {
+    use crate::diag::{lambda_max, DiagProblem, DiagStore};
+    let mut table = Table::new(
+        "Table 5 — diagonal-M total path time (s)",
+        &[&["method"], datasets].concat(),
+    );
+    let methods = ["plain", "+RRPB", "+RRPB+nonneg"];
+    let mut rows: Vec<Vec<String>> = methods.iter().map(|m| vec![m.to_string()]).collect();
+    for ds_name in datasets {
+        let mut rng = Pcg64::seed(opts.seed);
+        let spec = synthetic::spec(ds_name).unwrap_or_else(|| panic!("unknown {ds_name}"));
+        let mut ds = synthetic::analogue(ds_name, &mut rng);
+        if opts.scale < 1.0 {
+            ds = ds.subsample(opts.scale.max(0.05), &mut rng);
+        }
+        let ds = ds.subsample(0.9, &mut rng);
+        let store = DiagStore::from_dataset(&ds, spec.k.min(10), &mut rng);
+        let loss = Loss::smoothed_hinge(0.05);
+        let lmax = lambda_max(&store, &loss);
+        let d = store.d;
+        for (mi, method) in methods.iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            let mut lambda = lmax;
+            let mut m_warm = vec![0.0; d];
+            let mut reference: Option<(Vec<f64>, f64, f64)> = None;
+            let mut prev_loss: Option<f64> = None;
+            for _ in 0..40 {
+                let l_prev = lambda;
+                lambda *= 0.9;
+                let mut prob = DiagProblem::new(&store, loss, lambda);
+                let screening = match (mi, &reference) {
+                    (0, _) | (_, None) => None,
+                    (1, Some((m0, l0, eps))) => Some((m0.as_slice(), *l0, *eps, false)),
+                    (_, Some((m0, l0, eps))) => Some((m0.as_slice(), *l0, *eps, true)),
+                };
+                let (m, st) = prob.solve(m_warm.clone(), opts.tol, 4000, screening);
+                let loss_term =
+                    st.p - 0.5 * lambda * m.iter().map(|v| v * v).sum::<f64>();
+                let eps = (2.0 * st.gap.max(0.0) / lambda).sqrt();
+                reference = Some((m.clone(), lambda, eps));
+                m_warm = m;
+                if let Some(prev) = prev_loss {
+                    if prev > 0.0
+                        && ((prev - loss_term) / prev) * (l_prev / (l_prev - lambda)) < 0.01
+                    {
+                        break;
+                    }
+                }
+                prev_loss = Some(loss_term);
+            }
+            rows[mi].push(fnum(t0.elapsed().as_secs_f64()));
+            if opts.verbose {
+                eprintln!("  table5 {ds_name}/{method} done");
+            }
+        }
+    }
+    for r in rows {
+        table.row(r);
+    }
+    table
+}
+
+/// Persist a set of tables as one markdown report + CSVs.
+pub fn emit(name: &str, tables: &[&Table]) {
+    let mut md = String::new();
+    for t in tables {
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+    }
+    print!("{md}");
+    if let Ok(path) = write_report(&format!("{name}.md"), &md) {
+        eprintln!("wrote {}", path.display());
+    }
+    for (i, t) in tables.iter().enumerate() {
+        let _ = write_report(&format!("{name}_{i}.csv"), &t.to_csv());
+    }
+}

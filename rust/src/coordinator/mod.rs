@@ -1,0 +1,7 @@
+//! Experiment coordination: configs, runners for every paper table/figure,
+//! and report formatting (markdown/CSV/JSON).
+
+pub mod experiments;
+pub mod plot;
+pub mod report;
+pub mod tpu_model;

@@ -1,0 +1,114 @@
+//! Terminal plots for the experiment reports: line charts (screening rate
+//! / time-ratio over the λ path, the paper's figure panels) and heatmaps
+//! (Fig 6's range-screening matrix) rendered as unicode text that survives
+//! markdown code fences.
+
+use std::fmt::Write as _;
+
+const SHADES: &[char] = &[' ', '░', '▒', '▓', '█'];
+
+/// Render series as an ASCII line chart. `x` is shared; each series is
+/// (label, ys). Y is auto-scaled; X is displayed left→right in index
+/// order (the λ path prints λ decreasing, as the paper's figures do).
+pub fn line_chart(
+    title: &str,
+    x_label: &str,
+    series: &[(&str, &[f64])],
+    height: usize,
+    width: usize,
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let n: usize = series.iter().map(|(_, ys)| ys.len()).max().unwrap_or(0);
+    if n == 0 {
+        return out;
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, ys) in series {
+        for &y in ys.iter() {
+            if y.is_finite() {
+                lo = lo.min(y);
+                hi = hi.max(y);
+            }
+        }
+    }
+    if !lo.is_finite() || hi <= lo {
+        hi = lo + 1.0;
+    }
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let col = i * (width - 1) / n.max(1).max(1);
+            let row = ((y - lo) / (hi - lo) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][col.min(width - 1)] = mark;
+        }
+    }
+    for (r, row) in grid.iter().enumerate() {
+        let y_val = hi - (hi - lo) * r as f64 / (height - 1) as f64;
+        let _ = writeln!(out, "{y_val:>9.3} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "{:>9} +{}", "", "-".repeat(width));
+    let _ = writeln!(out, "{:>10} {x_label} →", "");
+    for (si, (label, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "{:>10} {} = {label}", "", marks[si % marks.len()]);
+    }
+    out
+}
+
+/// Render a matrix of values in [0, 1] as a shaded heatmap (Fig 6 style).
+pub fn heatmap(title: &str, rows: &[(&str, Vec<f64>)]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    for (label, vals) in rows {
+        let cells: String = vals
+            .iter()
+            .map(|&v| {
+                let v = v.clamp(0.0, 1.0);
+                SHADES[((v * (SHADES.len() - 1) as f64).round() as usize).min(SHADES.len() - 1)]
+            })
+            .collect();
+        let _ = writeln!(out, "{label:>12} |{cells}|");
+    }
+    let _ = writeln!(out, "{:>12}  shades: 0% {} 100%", "", SHADES.iter().collect::<String>());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_contains_series_marks() {
+        let ys1: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys2: Vec<f64> = (0..20).map(|i| (20 - i) as f64).collect();
+        let s = line_chart("T", "x", &[("up", &ys1), ("down", &ys2)], 8, 40);
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("= up") && s.contains("= down"));
+    }
+
+    #[test]
+    fn heatmap_shades_extremes() {
+        let s = heatmap("H", &[("r", vec![0.0, 0.5, 1.0])]);
+        assert!(s.contains('█'));
+        assert!(s.contains('▒') || s.contains('▓') || s.contains('░'));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let s = line_chart("T", "x", &[("e", &[])], 4, 10);
+        assert!(s.contains('T'));
+    }
+
+    #[test]
+    fn non_finite_values_skipped() {
+        let ys = vec![1.0, f64::NAN, 2.0, f64::INFINITY];
+        let s = line_chart("T", "x", &[("v", &ys)], 5, 20);
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,220 @@
+//! Analytical TPU performance model for the L1 Pallas kernels.
+//!
+//! Interpret-mode Pallas gives CPU-numpy wallclock, which is *not* a TPU
+//! proxy (DESIGN.md §Hardware-Adaptation). This module estimates what the
+//! kernels would do on real hardware from their BlockSpec structure:
+//! VMEM footprint, HBM traffic, MXU FLOPs, arithmetic intensity, and the
+//! roofline-limited utilization — the §Perf L1 deliverable.
+//!
+//! Model (TPUv4-like defaults, configurable): one core with a 128×128 MXU
+//! at `flops_peak`, `hbm_bw` bytes/s, `vmem_bytes` of scratchpad. A grid
+//! step of `triplet_margins` moves two `[block, d]` tiles from HBM and
+//! performs one `[block,d]×[d,d]` matmul per tile plus O(block·d)
+//! elementwise work; `weighted_gram` moves the same tiles and performs two
+//! `[d,block]×[block,d]` matmuls into a VMEM-resident accumulator.
+
+/// Hardware profile for the estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct TpuProfile {
+    pub name: &'static str,
+    /// peak matmul throughput, FLOP/s (f32 on MXU)
+    pub flops_peak: f64,
+    /// HBM bandwidth, bytes/s
+    pub hbm_bw: f64,
+    /// VMEM capacity, bytes
+    pub vmem_bytes: f64,
+    /// element width in bytes (f32 = 4; we ship f64 on CPU for exact gaps,
+    /// a real TPU build would use f32/bf16)
+    pub elem_bytes: f64,
+}
+
+impl TpuProfile {
+    pub fn v4_like() -> TpuProfile {
+        TpuProfile {
+            name: "tpu-v4-like",
+            flops_peak: 137.5e12,  // bf16/f32 MXU, per chip half for f32
+            hbm_bw: 1.2e12,
+            vmem_bytes: 16.0 * 1024.0 * 1024.0,
+            elem_bytes: 4.0,
+        }
+    }
+}
+
+/// Estimate for one kernel configuration.
+#[derive(Clone, Debug)]
+pub struct KernelEstimate {
+    pub kernel: &'static str,
+    pub d: usize,
+    pub block: usize,
+    /// VMEM bytes live per grid step
+    pub vmem_used: f64,
+    /// fraction of VMEM capacity
+    pub vmem_frac: f64,
+    /// FLOPs per triplet row
+    pub flops_per_row: f64,
+    /// HBM bytes per triplet row
+    pub bytes_per_row: f64,
+    /// arithmetic intensity, FLOP/byte
+    pub intensity: f64,
+    /// roofline-limited fraction of MXU peak
+    pub mxu_utilization: f64,
+    /// estimated triplets/second at the roofline
+    pub rows_per_sec: f64,
+}
+
+/// Margins kernel: per row `2·(2d² )` matmul FLOPs (a and b tiles) +
+/// `4d` elementwise; per row HBM traffic `2d` elements in, 1 out
+/// (M is grid-invariant and VMEM-resident).
+pub fn margins_estimate(d: usize, block: usize, p: &TpuProfile) -> KernelEstimate {
+    let df = d as f64;
+    let bf = block as f64;
+    let flops_per_row = 2.0 * (2.0 * df * df) + 4.0 * df;
+    let bytes_per_row = (2.0 * df + 1.0) * p.elem_bytes;
+    // VMEM: A,B tiles (+double buffer), M, margins out
+    let vmem = (2.0 * bf * df * 2.0 + df * df + bf) * p.elem_bytes;
+    finish("margins", d, block, vmem, flops_per_row, bytes_per_row, p)
+}
+
+/// Weighted-gram kernel: per row `2·(2d²)` FLOPs for the two rank-block
+/// updates + `2d` scaling; traffic `2d + 1` in (accumulator stays in VMEM).
+pub fn wgram_estimate(d: usize, block: usize, p: &TpuProfile) -> KernelEstimate {
+    let df = d as f64;
+    let bf = block as f64;
+    let flops_per_row = 2.0 * (2.0 * df * df) + 2.0 * df;
+    let bytes_per_row = (2.0 * df + 1.0) * p.elem_bytes;
+    let vmem = (2.0 * bf * df * 2.0 + df * df + bf) * p.elem_bytes;
+    finish("wgram", d, block, vmem, flops_per_row, bytes_per_row, p)
+}
+
+/// Fused step = margins + loss/α (elementwise) + wgram sharing the same
+/// tile loads: per row `~8d²` FLOPs but the *same* `2d+1` HBM traffic —
+/// the fusion's arithmetic-intensity win.
+pub fn step_estimate(d: usize, block: usize, p: &TpuProfile) -> KernelEstimate {
+    let df = d as f64;
+    let bf = block as f64;
+    let flops_per_row = 8.0 * df * df + 12.0 * df;
+    let bytes_per_row = (2.0 * df + 1.0) * p.elem_bytes;
+    let vmem = (2.0 * bf * df * 2.0 + 2.0 * df * df + 2.0 * bf) * p.elem_bytes;
+    finish("step", d, block, vmem, flops_per_row, bytes_per_row, p)
+}
+
+fn finish(
+    kernel: &'static str,
+    d: usize,
+    block: usize,
+    vmem_used: f64,
+    flops_per_row: f64,
+    bytes_per_row: f64,
+    p: &TpuProfile,
+) -> KernelEstimate {
+    let intensity = flops_per_row / bytes_per_row;
+    let ridge = p.flops_peak / p.hbm_bw;
+    // roofline: compute-bound iff intensity > ridge; MXU efficiency also
+    // capped by how well [block,d]×[d,d] fills the 128×128 systolic array
+    let fill = ((d as f64 / 128.0).min(1.0)) * ((block as f64 / 128.0).min(1.0));
+    let roofline_frac = (intensity / ridge).min(1.0);
+    let mxu_utilization = roofline_frac * fill;
+    let rows_per_sec = if intensity >= ridge {
+        p.flops_peak * fill / flops_per_row
+    } else {
+        p.hbm_bw / bytes_per_row
+    };
+    KernelEstimate {
+        kernel,
+        d,
+        block,
+        vmem_used,
+        vmem_frac: vmem_used / p.vmem_bytes,
+        flops_per_row,
+        bytes_per_row,
+        intensity,
+        mxu_utilization,
+        rows_per_sec,
+    }
+}
+
+/// Render the estimate table for a set of dimensions (used by the bench
+/// harness and EXPERIMENTS.md §Perf).
+pub fn estimate_table(dims: &[usize], block: usize, p: &TpuProfile) -> super::report::Table {
+    use super::report::{fnum, fpct, Table};
+    let mut t = Table::new(
+        format!("L1 TPU estimates ({}, block {block})", p.name),
+        &[
+            "kernel", "d", "VMEM", "VMEM%", "FLOP/row", "B/row", "AI", "MXU util",
+            "rows/s",
+        ],
+    );
+    for &d in dims {
+        for est in [
+            margins_estimate(d, block, p),
+            wgram_estimate(d, block, p),
+            step_estimate(d, block, p),
+        ] {
+            t.row(vec![
+                est.kernel.to_string(),
+                d.to_string(),
+                format!("{:.2}MB", est.vmem_used / 1e6),
+                fpct(est.vmem_frac),
+                fnum(est.flops_per_row),
+                fnum(est.bytes_per_row),
+                format!("{:.1}", est.intensity),
+                fpct(est.mxu_utilization),
+                fnum(est.rows_per_sec),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vmem_fits_for_paper_dimensions() {
+        let p = TpuProfile::v4_like();
+        for d in [19usize, 68, 100, 200] {
+            let e = step_estimate(d, 512, &p);
+            assert!(
+                e.vmem_frac < 0.5,
+                "d={d}: VMEM {:.1}% leaves no double-buffer headroom",
+                100.0 * e.vmem_frac
+            );
+        }
+    }
+
+    #[test]
+    fn fusion_increases_intensity() {
+        let p = TpuProfile::v4_like();
+        let d = 64;
+        let m = margins_estimate(d, 512, &p);
+        let s = step_estimate(d, 512, &p);
+        assert!(s.intensity > 1.5 * m.intensity, "fusion should roughly double AI");
+    }
+
+    #[test]
+    fn memory_bound_at_small_d_compute_bound_at_large() {
+        let p = TpuProfile::v4_like();
+        let ridge = p.flops_peak / p.hbm_bw; // ~115 FLOP/B
+        let small = margins_estimate(8, 512, &p);
+        assert!(small.intensity < ridge);
+        let large = margins_estimate(512, 512, &p);
+        assert!(large.intensity > ridge);
+    }
+
+    #[test]
+    fn throughput_monotone_in_block_fill() {
+        let p = TpuProfile::v4_like();
+        let e64 = margins_estimate(200, 64, &p);
+        let e512 = margins_estimate(200, 512, &p);
+        assert!(e512.mxu_utilization >= e64.mxu_utilization);
+    }
+
+    #[test]
+    fn table_renders() {
+        let p = TpuProfile::v4_like();
+        let t = estimate_table(&[19, 200], 512, &p);
+        assert_eq!(t.rows.len(), 6);
+        assert!(t.to_markdown().contains("MXU util"));
+    }
+}

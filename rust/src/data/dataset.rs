@@ -1,0 +1,228 @@
+//! Labeled dataset container + preprocessing.
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+/// A labeled dataset: `x` is `n × d` (rows are instances), labels are
+/// contiguous class ids `0..n_classes`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Mat,
+    pub y: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Mat, y: Vec<usize>) -> Dataset {
+        assert_eq!(x.rows(), y.len(), "feature/label length mismatch");
+        let n_classes = y.iter().copied().max().map_or(0, |m| m + 1);
+        Dataset {
+            name: name.into(),
+            x,
+            y,
+            n_classes,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Per-class instance counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0; self.n_classes];
+        for &yi in &self.y {
+            c[yi] += 1;
+        }
+        c
+    }
+
+    /// Standardize features to zero mean / unit variance in place
+    /// (constant features are left centered). Returns (mean, std).
+    pub fn standardize(&mut self) -> (Vec<f64>, Vec<f64>) {
+        let (n, d) = (self.n(), self.d());
+        let mut mean = vec![0.0; d];
+        for i in 0..n {
+            for (j, v) in self.x.row(i).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut var = vec![0.0; d];
+        for i in 0..n {
+            for (j, v) in self.x.row(i).iter().enumerate() {
+                var[j] += (v - mean[j]).powi(2);
+            }
+        }
+        let std: Vec<f64> = var
+            .iter()
+            .map(|v| {
+                let s = (v / n as f64).sqrt();
+                if s > 1e-12 {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        for i in 0..n {
+            let row = self.x.row_mut(i);
+            for j in 0..d {
+                row[j] = (row[j] - mean[j]) / std[j];
+            }
+        }
+        (mean, std)
+    }
+
+    /// Random subsample of a fraction of instances (the paper's protocol:
+    /// "randomly selected 90% of the instances ... 5 times").
+    pub fn subsample(&self, frac: f64, rng: &mut Pcg64) -> Dataset {
+        let keep = ((self.n() as f64 * frac).round() as usize).clamp(1, self.n());
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(keep);
+        idx.sort_unstable();
+        self.take(&idx)
+    }
+
+    /// Dataset restricted to the given row indices.
+    pub fn take(&self, idx: &[usize]) -> Dataset {
+        let x = self.x.select_rows(idx);
+        let y = idx.iter().map(|&i| self.y[i]).collect();
+        Dataset::new(self.name.clone(), x, y)
+    }
+
+    /// Split into (train, test) with the given train fraction.
+    pub fn split(&self, train_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        rng.shuffle(&mut idx);
+        let cut = ((self.n() as f64 * train_frac).round() as usize).clamp(1, self.n() - 1);
+        let (tr, te) = idx.split_at(cut);
+        (self.take(tr), self.take(te))
+    }
+
+    /// PCA-reduce to `k` dimensions (the paper reduces rcv1 by PCA) using
+    /// our own eigensolver on the covariance matrix.
+    pub fn pca(&self, k: usize) -> Dataset {
+        let (n, d) = (self.n(), self.d());
+        let k = k.min(d);
+        // covariance
+        let mut mean = vec![0.0; d];
+        for i in 0..n {
+            for (j, v) in self.x.row(i).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut cov = Mat::zeros(d, d);
+        for i in 0..n {
+            let row = self.x.row(i);
+            for a in 0..d {
+                let xa = row[a] - mean[a];
+                for b in a..d {
+                    cov[(a, b)] += xa * (row[b] - mean[b]);
+                }
+            }
+        }
+        for a in 0..d {
+            for b in a..d {
+                let v = cov[(a, b)] / n as f64;
+                cov[(a, b)] = v;
+                cov[(b, a)] = v;
+            }
+        }
+        let e = crate::linalg::sym_eig(&cov);
+        // top-k eigenvectors = last k columns (ascending order)
+        let mut x = Mat::zeros(n, k);
+        for i in 0..n {
+            let row = self.x.row(i);
+            for c in 0..k {
+                let col = d - 1 - c;
+                let mut acc = 0.0;
+                for j in 0..d {
+                    acc += (row[j] - mean[j]) * e.vectors[(j, col)];
+                }
+                x[(i, c)] = acc;
+            }
+        }
+        Dataset::new(format!("{}-pca{k}", self.name), x, self.y.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Mat::from_rows(4, 2, vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0, 1.0, 2.0]);
+        Dataset::new("toy", x, vec![0, 0, 1, 1])
+    }
+
+    #[test]
+    fn counts_and_shape() {
+        let d = toy();
+        assert_eq!(d.n(), 4);
+        assert_eq!(d.d(), 2);
+        assert_eq!(d.n_classes, 2);
+        assert_eq!(d.class_counts(), vec![2, 2]);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = toy();
+        d.standardize();
+        for j in 0..d.d() {
+            let mean: f64 = (0..d.n()).map(|i| d.x[(i, j)]).sum::<f64>() / d.n() as f64;
+            let var: f64 =
+                (0..d.n()).map(|i| d.x[(i, j)].powi(2)).sum::<f64>() / d.n() as f64 - mean * mean;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn subsample_and_take() {
+        let d = toy();
+        let mut rng = Pcg64::seed(1);
+        let s = d.subsample(0.5, &mut rng);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.d(), 2);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let mut rng = Pcg64::seed(2);
+        let (tr, te) = d.split(0.75, &mut rng);
+        assert_eq!(tr.n() + te.n(), 4);
+        assert_eq!(tr.n(), 3);
+    }
+
+    #[test]
+    fn pca_reduces_and_decorrelates() {
+        // strongly correlated 2d data -> first PC captures nearly all var
+        let mut rng = Pcg64::seed(3);
+        let n = 200;
+        let mut x = Mat::zeros(n, 3);
+        for i in 0..n {
+            let t = rng.normal();
+            x[(i, 0)] = t;
+            x[(i, 1)] = 2.0 * t + 0.01 * rng.normal();
+            x[(i, 2)] = 0.01 * rng.normal();
+        }
+        let d = Dataset::new("corr", x, vec![0; n]);
+        let r = d.pca(1);
+        assert_eq!(r.d(), 1);
+        let var: f64 = (0..n).map(|i| r.x[(i, 0)].powi(2)).sum::<f64>() / n as f64;
+        assert!(var > 4.5, "first PC variance should be ~5, got {var}");
+    }
+}

@@ -1,0 +1,196 @@
+//! Exact k-nearest-neighbor queries.
+//!
+//! Two uses: (1) triplet generation — for each anchor `x_i`, the k nearest
+//! *same-class* neighbors `x_j` and k nearest *different-class* neighbors
+//! `x_l` (the paper follows Shen et al. [21]); (2) kNN classification under
+//! a learned Mahalanobis metric for the examples.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::parallel;
+
+/// Squared Euclidean distance between rows.
+#[inline]
+fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Squared Mahalanobis distance `(a-b)^T M (a-b)`.
+#[inline]
+fn mahal_sq(a: &[f64], b: &[f64], m: &Mat, scratch: &mut [f64]) -> f64 {
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        scratch[k] = x - y;
+    }
+    m.quad_form(scratch)
+}
+
+/// For each anchor i: the `k` nearest same-class indices and the `k`
+/// nearest different-class indices (Euclidean, exact, parallel).
+/// `k = usize::MAX` means "all" (the paper's ∞ entries in Table 3).
+pub fn neighbors(ds: &Dataset, k: usize) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+    let n = ds.n();
+    let workers = parallel::default_threads();
+    let results = parallel::par_ranges(n, workers, |range| {
+        let mut same_all = Vec::with_capacity(range.len());
+        let mut diff_all = Vec::with_capacity(range.len());
+        for i in range {
+            let xi = ds.x.row(i);
+            let mut same: Vec<(f64, usize)> = Vec::new();
+            let mut diff: Vec<(f64, usize)> = Vec::new();
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let d = dist_sq(xi, ds.x.row(j));
+                if ds.y[j] == ds.y[i] {
+                    same.push((d, j));
+                } else {
+                    diff.push((d, j));
+                }
+            }
+            let take = |mut v: Vec<(f64, usize)>, k: usize| -> Vec<usize> {
+                let kk = k.min(v.len());
+                if kk == 0 {
+                    return vec![];
+                }
+                let pivot = kk - 1;
+                v.select_nth_unstable_by(pivot, |a, b| a.0.partial_cmp(&b.0).unwrap());
+                v.truncate(kk);
+                v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                v.into_iter().map(|(_, j)| j).collect()
+            };
+            same_all.push(take(same, k));
+            diff_all.push(take(diff, k));
+        }
+        (same_all, diff_all)
+    });
+    let mut same = Vec::with_capacity(n);
+    let mut diff = Vec::with_capacity(n);
+    for (s, d) in results {
+        same.extend(s);
+        diff.extend(d);
+    }
+    (same, diff)
+}
+
+/// kNN classification of `test` against `train` under metric `M`
+/// (`M = I` recovers Euclidean kNN). Returns predicted labels.
+pub fn knn_classify(train: &Dataset, test: &Dataset, k: usize, m: &Mat) -> Vec<usize> {
+    assert_eq!(train.d(), test.d());
+    let d = train.d();
+    let workers = parallel::default_threads();
+    let chunks = parallel::par_ranges(test.n(), workers, |range| {
+        let mut preds = Vec::with_capacity(range.len());
+        let mut scratch = vec![0.0; d];
+        for t in range {
+            let xt = test.x.row(t);
+            let mut near: Vec<(f64, usize)> = (0..train.n())
+                .map(|i| (mahal_sq(xt, train.x.row(i), m, &mut scratch), i))
+                .collect();
+            let kk = k.min(near.len());
+            near.select_nth_unstable_by(kk - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+            near.truncate(kk);
+            // majority vote (ties -> smallest label, deterministic)
+            let mut votes = vec![0usize; train.n_classes];
+            for &(_, i) in &near {
+                votes[train.y[i]] += 1;
+            }
+            let best = votes
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+                .unwrap()
+                .0;
+            preds.push(best);
+        }
+        preds
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+/// Classification accuracy helper.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let hit = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    hit as f64 / pred.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg64;
+
+    fn grid_dataset() -> Dataset {
+        // 1-D points 0,1,2 (class 0) and 10,11,12 (class 1)
+        let x = Mat::from_rows(6, 1, vec![0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        Dataset::new("grid", x, vec![0, 0, 0, 1, 1, 1])
+    }
+
+    #[test]
+    fn neighbors_pick_closest_same_and_diff() {
+        let ds = grid_dataset();
+        let (same, diff) = neighbors(&ds, 1);
+        assert_eq!(same[0], vec![1]); // 0's nearest same-class is 1
+        assert_eq!(diff[0], vec![3]); // 0's nearest diff-class is 10
+        assert_eq!(same[5], vec![4]);
+        assert_eq!(diff[5], vec![2]);
+    }
+
+    #[test]
+    fn neighbors_k_larger_than_class() {
+        let ds = grid_dataset();
+        let (same, diff) = neighbors(&ds, 100);
+        assert_eq!(same[0].len(), 2); // only 2 same-class others
+        assert_eq!(diff[0].len(), 3);
+    }
+
+    #[test]
+    fn neighbors_infinite_k() {
+        let ds = grid_dataset();
+        let (same, _) = neighbors(&ds, usize::MAX);
+        assert_eq!(same[0].len(), 2);
+    }
+
+    #[test]
+    fn neighbors_sorted_by_distance() {
+        let ds = grid_dataset();
+        let (same, _) = neighbors(&ds, 2);
+        assert_eq!(same[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn knn_classifies_separated_blobs() {
+        let mut rng = Pcg64::seed(4);
+        let ds = synthetic::gaussian_mixture("g", 400, 6, 2, 4.0, &mut rng);
+        let (train, test) = ds.split(0.8, &mut rng);
+        let pred = knn_classify(&train, &test, 5, &Mat::identity(6));
+        let acc = accuracy(&pred, &test.y);
+        assert!(acc > 0.9, "euclidean kNN on separated blobs: acc={acc}");
+    }
+
+    #[test]
+    fn metric_changes_predictions() {
+        // metric that kills the informative dims should hurt accuracy
+        let mut rng = Pcg64::seed(5);
+        let ds = synthetic::xor_blobs(400, 4, &mut rng);
+        let (train, test) = ds.split(0.8, &mut rng);
+        let good = knn_classify(&train, &test, 5, &Mat::identity(4));
+        let mut bad_m = Mat::identity(4);
+        bad_m[(0, 0)] = 0.0;
+        bad_m[(1, 1)] = 0.0; // only noise dims remain
+        let bad = knn_classify(&train, &test, 5, &bad_m);
+        let (ga, ba) = (accuracy(&good, &test.y), accuracy(&bad, &test.y));
+        assert!(ga > ba + 0.2, "good={ga} bad={ba}");
+    }
+
+    #[test]
+    fn accuracy_helper() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+    }
+}

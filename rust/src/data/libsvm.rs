@@ -1,0 +1,141 @@
+//! LIBSVM sparse-text format parser.
+//!
+//! The paper's datasets ship in LIBSVM format (`label idx:val idx:val ...`,
+//! 1-based indices). We parse into dense rows (metric learning needs dense
+//! features anyway) and remap arbitrary labels (including negatives and
+//! floats like `+1`/`-1`) to contiguous class ids by order of first
+//! appearance.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use std::collections::HashMap;
+
+/// Parse LIBSVM text. `d_hint` fixes the dimensionality (0 = infer from
+/// the max index seen).
+pub fn parse_libsvm(text: &str, d_hint: usize) -> Result<Dataset, String> {
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut raw_labels: Vec<String> = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label = parts
+            .next()
+            .ok_or_else(|| format!("line {}: empty", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            if tok.starts_with('#') {
+                break; // trailing comment
+            }
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad token {tok:?}", lineno + 1))?;
+            let idx: usize = i
+                .parse()
+                .map_err(|_| format!("line {}: bad index {i:?}", lineno + 1))?;
+            if idx == 0 {
+                return Err(format!("line {}: LIBSVM indices are 1-based", lineno + 1));
+            }
+            let val: f64 = v
+                .parse()
+                .map_err(|_| format!("line {}: bad value {v:?}", lineno + 1))?;
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        raw_labels.push(label.to_string());
+        rows.push(feats);
+    }
+
+    let d = if d_hint > 0 { d_hint } else { max_idx };
+    if max_idx > d {
+        return Err(format!("feature index {max_idx} exceeds d_hint {d}"));
+    }
+
+    // map labels to contiguous ids by first appearance
+    let mut label_ids: HashMap<String, usize> = HashMap::new();
+    let mut y = Vec::with_capacity(raw_labels.len());
+    for l in raw_labels {
+        let next = label_ids.len();
+        let id = *label_ids.entry(l).or_insert(next);
+        y.push(id);
+    }
+
+    let n = rows.len();
+    let mut x = Mat::zeros(n, d);
+    for (i, feats) in rows.into_iter().enumerate() {
+        for (j, v) in feats {
+            x[(i, j)] = v;
+        }
+    }
+    Ok(Dataset::new("libsvm", x, y))
+}
+
+/// Read a LIBSVM file from disk.
+pub fn read_libsvm(path: &str, d_hint: usize) -> Result<Dataset, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut ds = parse_libsvm(&text, d_hint)?;
+    ds.name = std::path::Path::new(path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("libsvm")
+        .to_string();
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n+1 1:1.0 2:-1.0 3:0.0\n";
+        let ds = parse_libsvm(text, 0).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.y, vec![0, 1, 0]);
+        assert_eq!(ds.x[(0, 0)], 0.5);
+        assert_eq!(ds.x[(0, 1)], 0.0);
+        assert_eq!(ds.x[(0, 2)], 1.5);
+        assert_eq!(ds.x[(1, 1)], 2.0);
+    }
+
+    #[test]
+    fn multiclass_labels_remapped_in_order() {
+        let text = "7 1:1\n3 1:2\n7 1:3\n5 1:4\n";
+        let ds = parse_libsvm(text, 0).unwrap();
+        assert_eq!(ds.y, vec![0, 1, 0, 2]);
+        assert_eq!(ds.n_classes, 3);
+    }
+
+    #[test]
+    fn skips_blank_and_comment_lines() {
+        let text = "\n# header\n1 1:1.0\n\n2 1:2.0\n";
+        let ds = parse_libsvm(text, 0).unwrap();
+        assert_eq!(ds.n(), 2);
+    }
+
+    #[test]
+    fn d_hint_pads_dimensions() {
+        let ds = parse_libsvm("1 1:1\n", 5).unwrap();
+        assert_eq!(ds.d(), 5);
+    }
+
+    #[test]
+    fn rejects_zero_index_and_bad_tokens() {
+        assert!(parse_libsvm("1 0:1\n", 0).is_err());
+        assert!(parse_libsvm("1 a:b\n", 0).is_err());
+        assert!(parse_libsvm("1 nocolon\n", 0).is_err());
+        assert!(parse_libsvm("1 3:1\n", 2).is_err()); // exceeds hint
+    }
+
+    #[test]
+    fn scientific_notation_values() {
+        let ds = parse_libsvm("1 1:1e-3 2:-2.5E2\n", 0).unwrap();
+        assert_eq!(ds.x[(0, 0)], 1e-3);
+        assert_eq!(ds.x[(0, 1)], -250.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Datasets: container, LIBSVM-format parser, synthetic generators
+//! (analogues of the paper's benchmark suite), preprocessing and exact kNN.
+
+mod dataset;
+mod knn;
+mod libsvm;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use knn::{accuracy, knn_classify, neighbors};
+pub use libsvm::{parse_libsvm, read_libsvm};

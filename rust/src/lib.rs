@@ -1,0 +1,69 @@
+//! # triplet-screen
+//!
+//! Production-grade reproduction of *"Safe Triplet Screening for Distance
+//! Metric Learning"* (Yoshida, Takeuchi, Karasuyama — KDD 2018).
+//!
+//! The crate implements regularized triplet-loss metric learning (RTLM)
+//!
+//! ```text
+//!   min_{M ⪰ O}  Σ_{(i,j,l)∈T} ℓ(⟨M, H_ijl⟩) + (λ/2)‖M‖_F²
+//! ```
+//!
+//! with **safe triplet screening** as a first-class feature: six sphere
+//! bounds (GB, PGB, DGB, CDGB, RPB, RRPB), three screening rules (sphere,
+//! linear-relaxation, SDLS semi-definite), the diagonal-mode analytic rule,
+//! and the range-based extension over the regularization path.
+//!
+//! ## Architecture (three layers)
+//!
+//! - **Layer 1/2 (build time, python)** — the O(d²·|T|) hot spots (triplet
+//!   margins `⟨M,H_t⟩` and the gradient accumulation `Σ_t w_t H_t`) are
+//!   Pallas kernels composed into JAX entry points and AOT-lowered to HLO
+//!   text under `artifacts/`.
+//! - **Layer 3 (runtime, this crate)** — the coordinator: regularization
+//!   path driver, projected-gradient solver, screening engine, triplet
+//!   bookkeeping, datasets, experiments. Artifacts are loaded and executed
+//!   through the PJRT C API ([`runtime::PjrtEngine`]); a pure-rust
+//!   [`runtime::NativeEngine`] provides the oracle/baseline.
+//!
+//! Python never runs at request time: after `make artifacts` the binaries
+//! are self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use triplet_screen::prelude::*;
+//!
+//! let mut rng = Pcg64::seed(7);
+//! let data = synthetic::analogue("segment-small", &mut rng);
+//! let store = TripletStore::from_dataset(&data, 5, &mut rng);
+//! let engine = NativeEngine::new(0);
+//! let cfg = PathConfig::default();
+//! let result = RegPath::new(cfg).run(&store, &engine);
+//! println!("path of {} lambdas", result.steps.len());
+//! ```
+
+pub mod util;
+pub mod diag;
+pub mod linalg;
+pub mod data;
+pub mod triplet;
+pub mod loss;
+pub mod solver;
+pub mod screening;
+pub mod runtime;
+pub mod path;
+pub mod coordinator;
+
+/// One-stop imports for examples and tests.
+pub mod prelude {
+    pub use crate::data::{synthetic, Dataset};
+    pub use crate::linalg::Mat;
+    pub use crate::loss::Loss;
+    pub use crate::path::{PathConfig, RegPath};
+    pub use crate::runtime::{Engine, NativeEngine, PjrtEngine};
+    pub use crate::screening::{BoundKind, RuleKind, ScreeningConfig};
+    pub use crate::solver::{Solver, SolverConfig};
+    pub use crate::triplet::TripletStore;
+    pub use crate::util::rng::Pcg64;
+}

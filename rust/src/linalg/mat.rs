@@ -1,0 +1,333 @@
+//! Row-major dense matrix with the Frobenius-space operations used all
+//! over the screening math. Deliberately small: this is a substrate, not a
+//! general-purpose linear-algebra library.
+
+use crate::util::parallel;
+
+/// Row-major `rows x cols` matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Rank-one `x x^T`.
+    pub fn outer(x: &[f64]) -> Mat {
+        Mat::from_fn(x.len(), x.len(), |i, j| x[i] * x[j])
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Select a subset of rows (compaction for the active triplet set).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// `(A + A^T) / 2` — used to clean accumulated asymmetry.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    // -------------------------------------------------- Frobenius algebra
+
+    /// `<A, B> = tr(A^T B)`.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .sum()
+    }
+
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn scaled(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        out.scale(s);
+        out
+    }
+
+    /// `self += s * other`.
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += s * y;
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+
+    /// Matrix-vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for j in 0..self.cols {
+                acc += row[j] * x[j];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Bilinear form `x^T A x` in O(d²).
+    pub fn quad_form(&self, x: &[f64]) -> f64 {
+        debug_assert!(self.is_square());
+        let mut acc = 0.0;
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut rx = 0.0;
+            for j in 0..self.cols {
+                rx += row[j] * x[j];
+            }
+            acc += x[i] * rx;
+        }
+        acc
+    }
+
+    /// Dense matmul `self * other`, ikj loop order (cache-friendly for
+    /// row-major), parallel over row blocks.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        let workers = parallel::default_threads();
+        let a = &self.data;
+        let b = &other.data;
+        parallel::par_fill(&mut out.data, workers.min(m.max(1)), |range, chunk| {
+            // range is over flat cells; recover the row window
+            let r0 = range.start / n;
+            let r1 = (range.end + n - 1) / n;
+            debug_assert_eq!(range.start % n, 0);
+            let _ = r1;
+            for (local_i, i) in (r0..r0 + chunk.len() / n).enumerate() {
+                let crow = &mut chunk[local_i * n..(local_i + 1) * n];
+                for kk in 0..k {
+                    let aik = a[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).collect()
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randmat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Pcg64::seed(1);
+        let a = randmat(&mut rng, 7, 7);
+        let i = Mat::identity(7);
+        let ai = a.matmul(&i);
+        assert!(ai.sub(&a).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::seed(2);
+        let a = randmat(&mut rng, 13, 5);
+        let b = randmat(&mut rng, 5, 9);
+        let c = a.matmul(&b);
+        for i in 0..13 {
+            for j in 0..9 {
+                let want: f64 = (0..5).map(|k| a[(i, k)] * b[(k, j)]).sum();
+                assert!((c[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn quad_form_matches_matvec() {
+        let mut rng = Pcg64::seed(3);
+        let a = randmat(&mut rng, 6, 6);
+        let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let mut ax = vec![0.0; 6];
+        a.matvec(&x, &mut ax);
+        let want: f64 = x.iter().zip(&ax).map(|(xi, yi)| xi * yi).sum();
+        assert!((a.quad_form(&x) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_trace_identity() {
+        // <A, B> = tr(A^T B)
+        let mut rng = Pcg64::seed(4);
+        let a = randmat(&mut rng, 5, 5);
+        let b = randmat(&mut rng, 5, 5);
+        let tr = a.transpose().matmul(&b).trace();
+        assert!((a.dot(&b) - tr).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outer_rank_one() {
+        let x = [1.0, -2.0, 3.0];
+        let m = Mat::outer(&x);
+        assert_eq!(m[(0, 1)], -2.0);
+        assert_eq!(m[(1, 2)], -6.0);
+        assert!((m.trace() - 14.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn select_rows_compacts() {
+        let m = Mat::from_fn(4, 2, |i, j| (i * 10 + j) as f64);
+        let s = m.select_rows(&[3, 1]);
+        assert_eq!(s.row(0), &[30.0, 31.0]);
+        assert_eq!(s.row(1), &[10.0, 11.0]);
+    }
+
+    #[test]
+    fn symmetrize_symmetric() {
+        let mut rng = Pcg64::seed(5);
+        let mut a = randmat(&mut rng, 6, 6);
+        a.symmetrize();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(a[(i, j)], a[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let a = Mat::from_rows(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let mut b = Mat::zeros(2, 2);
+        b.axpy(2.0, &a);
+        assert!((b.norm_sq() - 8.0).abs() < 1e-14);
+        assert!((b.norm() - 8.0f64.sqrt()).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate (LAPACK/BLAS stand-in).
+//!
+//! Everything the screening machinery needs: a row-major [`Mat`] with
+//! Frobenius-space operations, a symmetric eigensolver (Householder
+//! tridiagonalization + implicit-shift QL, with a cyclic-Jacobi oracle),
+//! positive-semidefinite cone projections `[·]_+ / [·]_-`, and a Lanczos
+//! minimum-eigenpair solver used by the SDLS screening rule.
+
+mod mat;
+mod sym_eig;
+mod psd;
+mod lanczos;
+
+pub use lanczos::min_eigpair;
+pub use mat::Mat;
+pub use psd::{psd_project, psd_split, PsdSplit};
+pub use sym_eig::{jacobi_eig, sym_eig, SymEig};

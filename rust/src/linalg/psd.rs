@@ -1,0 +1,145 @@
+//! Projections onto the positive semi-definite cone.
+//!
+//! For symmetric `A = V Λ V^T` the paper's notation (§Notation) splits
+//! `A = A_+ + A_-` with `A_+ = V Λ_+ V^T` (the Frobenius projection onto
+//! the PSD cone) and `A_- = V Λ_- V^T`; `<A_+, A_-> = 0`.
+
+use super::{sym_eig, Mat};
+
+/// Result of splitting `A` into its PSD and NSD parts.
+#[derive(Clone, Debug)]
+pub struct PsdSplit {
+    /// `[A]_+` — projection onto the PSD cone.
+    pub plus: Mat,
+    /// `‖[A]_-‖_F²` (needed by PGB without materializing `minus`).
+    pub minus_norm_sq: f64,
+    /// `[A]_-` — the NSD remainder (`A = plus + minus`).
+    pub minus: Mat,
+    /// Smallest eigenvalue of `A` (handy for PSD checks).
+    pub min_eig: f64,
+}
+
+/// Project a symmetric matrix onto the PSD cone, `[A]_+`.
+pub fn psd_project(a: &Mat) -> Mat {
+    psd_split(a).plus
+}
+
+/// Full split `A = [A]_+ + [A]_-`.
+pub fn psd_split(a: &Mat) -> PsdSplit {
+    let e = sym_eig(a);
+    let d = e.values.len();
+    let mut plus = Mat::zeros(d, d);
+    let mut minus = Mat::zeros(d, d);
+    let mut minus_norm_sq = 0.0;
+    for k in 0..d {
+        let lk = e.values[k];
+        if lk == 0.0 {
+            continue;
+        }
+        let target = if lk > 0.0 { &mut plus } else { &mut minus };
+        if lk < 0.0 {
+            minus_norm_sq += lk * lk;
+        }
+        for i in 0..d {
+            let vik = e.vectors[(i, k)];
+            if vik == 0.0 {
+                continue;
+            }
+            let w = lk * vik;
+            for j in 0..d {
+                target[(i, j)] += w * e.vectors[(j, k)];
+            }
+        }
+    }
+    let min_eig = e.values.first().copied().unwrap_or(0.0);
+    PsdSplit {
+        plus,
+        minus_norm_sq,
+        minus,
+        min_eig,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{close, forall};
+    use crate::util::rng::Pcg64;
+
+    fn rand_sym(rng: &mut Pcg64, n: usize) -> Mat {
+        let mut m = Mat::from_fn(n, n, |_, _| rng.normal());
+        m.symmetrize();
+        m
+    }
+
+    #[test]
+    fn split_reconstructs_and_is_orthogonal() {
+        forall("psd-split", 24, |rng| {
+            let n = 1 + rng.below(10);
+            let a = rand_sym(rng, n);
+            let s = psd_split(&a);
+            close(
+                s.plus.add(&s.minus).sub(&a).max_abs(),
+                0.0,
+                0.0,
+                1e-10,
+                "plus + minus = A",
+            )?;
+            close(s.plus.dot(&s.minus), 0.0, 0.0, 1e-8, "<A+, A-> = 0")?;
+            close(
+                s.minus.norm_sq(),
+                s.minus_norm_sq,
+                1e-10,
+                1e-10,
+                "minus norm cached",
+            )?;
+            // plus is PSD: all eigenvalues >= -tol
+            let e = sym_eig(&s.plus);
+            if e.values.iter().any(|&v| v < -1e-9) {
+                return Err(format!("plus not PSD: {:?}", e.values));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        let mut rng = Pcg64::seed(8);
+        let a = rand_sym(&mut rng, 7);
+        let p1 = psd_project(&a);
+        let p2 = psd_project(&p1);
+        assert!(p2.sub(&p1).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn psd_input_unchanged() {
+        let mut rng = Pcg64::seed(9);
+        let b = Mat::from_fn(6, 4, |_, _| rng.normal());
+        let a = b.matmul(&b.transpose()); // PSD by construction
+        let p = psd_project(&a);
+        assert!(p.sub(&a).max_abs() < 1e-9 * (1.0 + a.max_abs()));
+    }
+
+    #[test]
+    fn nsd_input_projects_to_zero() {
+        let mut rng = Pcg64::seed(10);
+        let b = Mat::from_fn(5, 3, |_, _| rng.normal());
+        let a = b.matmul(&b.transpose()).scaled(-1.0);
+        let p = psd_project(&a);
+        assert!(p.max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn projection_is_frobenius_nearest() {
+        // ‖A - [A]_+‖ <= ‖A - X‖ for sampled PSD X
+        let mut rng = Pcg64::seed(11);
+        let a = rand_sym(&mut rng, 5);
+        let p = psd_project(&a);
+        let best = a.sub(&p).norm();
+        for _ in 0..20 {
+            let b = Mat::from_fn(5, 5, |_, _| rng.normal());
+            let x = b.matmul(&b.transpose());
+            assert!(a.sub(&x).norm() >= best - 1e-9);
+        }
+    }
+}

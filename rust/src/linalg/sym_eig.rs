@@ -1,0 +1,470 @@
+//! Symmetric eigendecomposition.
+//!
+//! Primary path: Householder tridiagonalization (`tred2`) followed by
+//! implicit-shift QL iteration (`tql2`) — the classic EISPACK pair, O(d³)
+//! with excellent constants for the d ≤ a-few-hundred regime of metric
+//! learning. A cyclic Jacobi solver is kept as an independent oracle for
+//! the test suite.
+//!
+//! Conventions: `A = V diag(w) V^T`, eigenvalues ascending, eigenvectors
+//! in the *columns* of `V`.
+
+use super::Mat;
+
+/// Eigendecomposition result: `a = vectors * diag(values) * vectors^T`.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    /// Ascending eigenvalues.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors, column `k` pairs with `values[k]`.
+    pub vectors: Mat,
+}
+
+impl SymEig {
+    /// Reconstruct `V f(Λ) V^T` for an elementwise spectral map `f`.
+    pub fn apply_spectral(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let d = self.values.len();
+        let mut out = Mat::zeros(d, d);
+        for k in 0..d {
+            let fk = f(self.values[k]);
+            if fk == 0.0 {
+                continue;
+            }
+            for i in 0..d {
+                let vik = self.vectors[(i, k)];
+                if vik == 0.0 {
+                    continue;
+                }
+                for j in 0..d {
+                    out[(i, j)] += fk * vik * self.vectors[(j, k)];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Eigendecomposition of a symmetric matrix via tred2 + tql2.
+///
+/// Panics if the QL iteration fails to converge (50 sweeps per eigenvalue;
+/// never observed on symmetric input).
+pub fn sym_eig(a: &Mat) -> SymEig {
+    assert!(a.is_square(), "sym_eig needs a square matrix");
+    let n = a.rows();
+    if n == 0 {
+        return SymEig {
+            values: vec![],
+            vectors: Mat::zeros(0, 0),
+        };
+    }
+    // v starts as a copy of A and is overwritten with the accumulated
+    // orthogonal transform.
+    let mut v = a.clone();
+    v.symmetrize();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut v, &mut d, &mut e);
+    tql2(&mut v, &mut d, &mut e);
+    SymEig {
+        values: d,
+        vectors: v,
+    }
+}
+
+/// Householder reduction of `v` (symmetric) to tridiagonal form.
+/// On exit: `d` diagonal, `e` sub-diagonal (e[0] = 0), `v` the accumulated
+/// transform. Translated from the public-domain EISPACK/JAMA routine.
+fn tred2(v: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+    }
+    for i in (1..n).rev() {
+        // scale to avoid under/overflow
+        let mut scale = 0.0;
+        let mut h = 0.0;
+        for k in 0..i {
+            scale += d[k].abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[i - 1];
+            for j in 0..i {
+                d[j] = v[(i - 1, j)];
+                v[(i, j)] = 0.0;
+                v[(j, i)] = 0.0;
+            }
+        } else {
+            for k in 0..i {
+                d[k] /= scale;
+                h += d[k] * d[k];
+            }
+            let mut f = d[i - 1];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[i - 1] = f - g;
+            for j in 0..i {
+                e[j] = 0.0;
+            }
+            // apply similarity transformation to remaining columns
+            for j in 0..i {
+                f = d[j];
+                v[(j, i)] = f;
+                g = e[j] + v[(j, j)] * f;
+                for k in (j + 1)..i {
+                    g += v[(k, j)] * d[k];
+                    e[k] += v[(k, j)] * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                f = d[j];
+                g = e[j];
+                for k in j..i {
+                    v[(k, j)] -= f * e[k] + g * d[k];
+                }
+                d[j] = v[(i - 1, j)];
+                v[(i, j)] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+    // accumulate transformations
+    for i in 0..(n - 1) {
+        v[(n - 1, i)] = v[(i, i)];
+        v[(i, i)] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[(k, i + 1)] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[(k, i + 1)] * v[(k, j)];
+                }
+                for k in 0..=i {
+                    v[(k, j)] -= g * d[k];
+                }
+            }
+        }
+        for k in 0..=i {
+            v[(k, i + 1)] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+        v[(n - 1, j)] = 0.0;
+    }
+    v[(n - 1, n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+/// Implicit-shift QL on the tridiagonal (d, e), accumulating eigenvectors
+/// into `v`. Eigenvalues returned ascending in `d`.
+fn tql2(v: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter <= 50, "tql2 failed to converge");
+                // implicit shift
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = (p * p + 1.0).sqrt();
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for i in (l + 2)..n {
+                    d[i] -= h;
+                }
+                f += h;
+                // QL sweep
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = (p * p + e[i] * e[i]).sqrt();
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    // accumulate
+                    for k in 0..n {
+                        h = v[(k, i + 1)];
+                        v[(k, i + 1)] = s * v[(k, i)] + c * h;
+                        v[(k, i)] = c * v[(k, i)] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // sort ascending (selection sort, swapping vector columns)
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in (i + 1)..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d[k] = d[i];
+            d[i] = p;
+            for r in 0..n {
+                let tmp = v[(r, i)];
+                v[(r, i)] = v[(r, k)];
+                v[(r, k)] = tmp;
+            }
+        }
+    }
+}
+
+/// Cyclic Jacobi eigensolver — slower but independently derived; serves as
+/// the oracle for `sym_eig` in tests.
+pub fn jacobi_eig(a: &Mat) -> SymEig {
+    assert!(a.is_square());
+    let n = a.rows();
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::identity(n);
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * m.norm().max(1e-300) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (m[(q, q)] - m[(p, p)]) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // extract + sort ascending
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let vectors = Mat::from_fn(n, n, |i, k| v[(i, pairs[k].1)]);
+    SymEig { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{close, forall};
+    use crate::util::rng::Pcg64;
+
+    fn rand_sym(rng: &mut Pcg64, n: usize) -> Mat {
+        let mut m = Mat::from_fn(n, n, |_, _| rng.normal());
+        m.symmetrize();
+        m
+    }
+
+    fn reconstruct(e: &SymEig) -> Mat {
+        e.apply_spectral(|x| x)
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_rows(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1, 3
+        let a = Mat::from_rows(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality_random() {
+        forall("sym_eig-reconstructs", 24, |rng| {
+            let n = 1 + rng.below(12);
+            let a = rand_sym(rng, n);
+            let e = sym_eig(&a);
+            // ascending
+            for k in 1..n {
+                if e.values[k] < e.values[k - 1] - 1e-12 {
+                    return Err(format!("values not ascending: {:?}", e.values));
+                }
+            }
+            // V V^T = I
+            let vvt = e.vectors.matmul(&e.vectors.transpose());
+            close(vvt.sub(&Mat::identity(n)).max_abs(), 0.0, 0.0, 1e-10, "V V^T - I")?;
+            // A = V Λ V^T
+            let diff = reconstruct(&e).sub(&a).max_abs();
+            close(diff, 0.0, 0.0, 1e-10 * (1.0 + a.max_abs()), "reconstruction")
+        });
+    }
+
+    #[test]
+    fn matches_jacobi_oracle() {
+        forall("sym_eig-vs-jacobi", 16, |rng| {
+            let n = 1 + rng.below(10);
+            let a = rand_sym(rng, n);
+            let e1 = sym_eig(&a);
+            let e2 = jacobi_eig(&a);
+            for k in 0..n {
+                close(e1.values[k], e2.values[k], 1e-9, 1e-9, "eigenvalue")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn eigenvector_equation_holds() {
+        let mut rng = Pcg64::seed(42);
+        let n = 9;
+        let a = rand_sym(&mut rng, n);
+        let e = sym_eig(&a);
+        for k in 0..n {
+            let v: Vec<f64> = (0..n).map(|i| e.vectors[(i, k)]).collect();
+            let mut av = vec![0.0; n];
+            a.matvec(&v, &mut av);
+            for i in 0..n {
+                assert!(
+                    (av[i] - e.values[k] * v[i]).abs() < 1e-9,
+                    "A v != lambda v for k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_one_spectrum() {
+        // x x^T has eigenvalues {‖x‖², 0, ..., 0}
+        let x = [1.0, 2.0, -1.0, 0.5];
+        let a = Mat::outer(&x);
+        let e = sym_eig(&a);
+        let ns: f64 = x.iter().map(|v| v * v).sum();
+        assert!((e.values[3] - ns).abs() < 1e-12);
+        for k in 0..3 {
+            assert!(e.values[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        let a = Mat::identity(5).scaled(2.5);
+        let e = sym_eig(&a);
+        for v in &e.values {
+            assert!((v - 2.5).abs() < 1e-12);
+        }
+        let vvt = e.vectors.matmul(&e.vectors.transpose());
+        assert!(vvt.sub(&Mat::identity(5)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        forall("eig-trace", 16, |rng| {
+            let n = 2 + rng.below(10);
+            let a = rand_sym(rng, n);
+            let e = sym_eig(&a);
+            close(
+                e.values.iter().sum::<f64>(),
+                a.trace(),
+                1e-10,
+                1e-10,
+                "tr(A) = sum of eigenvalues",
+            )
+        });
+    }
+
+    #[test]
+    fn empty_and_one() {
+        let e = sym_eig(&Mat::zeros(0, 0));
+        assert!(e.values.is_empty());
+        let e1 = sym_eig(&Mat::from_rows(1, 1, vec![-4.0]));
+        assert_eq!(e1.values, vec![-4.0]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Triplet loss functions: smoothed hinge (γ > 0) and hinge (γ = 0).
+//!
+//! Paper §2.1. Both losses share a "zero part" (no penalty, m > 1) and a
+//! "linear part" (slope −1, m < 1−γ); the smoothed hinge interpolates
+//! quadratically in between. The dual-feasible coefficient is
+//! `α = −ℓ'(m) ∈ [0, 1]` (eq. (3)); at the hinge kink any `α ∈ [0,1]` is a
+//! valid subgradient and we pick 1 (consistent with treating `m = 1` as
+//! the boundary of L*).
+//!
+//! Convex conjugate (Appendix A): `ℓ*(−α) = (γ/2)α² − α` for α ∈ [0, 1] —
+//! a single formula valid for both losses (γ = 0 for hinge).
+
+/// A triplet loss with the structure the screening machinery requires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Loss {
+    /// smoothing width γ ≥ 0; 0 = hinge
+    pub gamma: f64,
+}
+
+impl Loss {
+    pub fn smoothed_hinge(gamma: f64) -> Loss {
+        assert!(gamma > 0.0, "smoothed hinge needs gamma > 0");
+        Loss { gamma }
+    }
+
+    pub fn hinge() -> Loss {
+        Loss { gamma: 0.0 }
+    }
+
+    pub fn is_hinge(&self) -> bool {
+        self.gamma == 0.0
+    }
+
+    /// ℓ(m).
+    #[inline]
+    pub fn value(&self, m: f64) -> f64 {
+        let g = self.gamma;
+        if m > 1.0 {
+            0.0
+        } else if g > 0.0 && m >= 1.0 - g {
+            let z = 1.0 - m;
+            z * z / (2.0 * g)
+        } else {
+            1.0 - m - g / 2.0
+        }
+    }
+
+    /// `α(m) = −ℓ'(m) ∈ [0, 1]`; at the hinge kink returns 1 (a valid
+    /// subgradient choice — see module docs).
+    #[inline]
+    pub fn alpha(&self, m: f64) -> f64 {
+        let g = self.gamma;
+        if m > 1.0 {
+            0.0
+        } else if g > 0.0 {
+            ((1.0 - m) / g).clamp(0.0, 1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Convex conjugate ℓ*(−α) for α ∈ [0, 1].
+    #[inline]
+    pub fn conjugate(&self, alpha: f64) -> f64 {
+        debug_assert!((-1e-12..=1.0 + 1e-12).contains(&alpha));
+        self.gamma / 2.0 * alpha * alpha - alpha
+    }
+
+    /// Lower screening threshold: m < `l_threshold()` ⟹ triplet in L*.
+    /// (The paper's 1 − γ.)
+    #[inline]
+    pub fn l_threshold(&self) -> f64 {
+        1.0 - self.gamma
+    }
+
+    /// Upper screening threshold: m > `r_threshold()` ⟹ triplet in R*.
+    #[inline]
+    pub fn r_threshold(&self) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{close, forall};
+
+    #[test]
+    fn smoothed_hinge_branch_values() {
+        let l = Loss::smoothed_hinge(0.05);
+        assert_eq!(l.value(2.0), 0.0);
+        assert_eq!(l.value(1.0), 0.0);
+        close(l.value(0.975), 0.025 * 0.025 / 0.1, 1e-12, 0.0, "mid").unwrap();
+        close(l.value(0.95), 0.025, 1e-12, 0.0, "knee").unwrap();
+        close(l.value(0.0), 0.975, 1e-12, 0.0, "linear").unwrap();
+    }
+
+    #[test]
+    fn hinge_branch_values() {
+        let l = Loss::hinge();
+        assert_eq!(l.value(1.5), 0.0);
+        assert_eq!(l.value(1.0), 0.0);
+        assert_eq!(l.value(0.0), 1.0);
+        assert_eq!(l.value(-2.0), 3.0);
+    }
+
+    #[test]
+    fn alpha_branches() {
+        let l = Loss::smoothed_hinge(0.05);
+        assert_eq!(l.alpha(1.1), 0.0);
+        close(l.alpha(0.975), 0.5, 1e-12, 0.0, "mid").unwrap();
+        assert_eq!(l.alpha(0.9), 1.0);
+        let h = Loss::hinge();
+        assert_eq!(h.alpha(1.0 + 1e-12), 0.0);
+        assert_eq!(h.alpha(1.0), 1.0);
+        assert_eq!(h.alpha(-5.0), 1.0);
+    }
+
+    #[test]
+    fn loss_is_convex_nonincreasing() {
+        for gamma in [0.0, 0.01, 0.05, 0.5, 1.0] {
+            let l = if gamma > 0.0 {
+                Loss::smoothed_hinge(gamma)
+            } else {
+                Loss::hinge()
+            };
+            let xs: Vec<f64> = (0..400).map(|i| -2.0 + i as f64 * 0.01).collect();
+            let vs: Vec<f64> = xs.iter().map(|&x| l.value(x)).collect();
+            for w in vs.windows(2) {
+                assert!(w[1] <= w[0] + 1e-12);
+            }
+            for w in vs.windows(3) {
+                assert!(w[0] - 2.0 * w[1] + w[2] >= -1e-9, "gamma={gamma}");
+            }
+        }
+    }
+
+    #[test]
+    fn fenchel_young_equality_at_derivative() {
+        // ℓ(m) + ℓ*(−α(m)) = −α(m)·m for the maximizing α (eq. (3))
+        forall("fenchel-young", 64, |rng| {
+            let gamma = rng.range(1e-3, 1.0);
+            let l = Loss::smoothed_hinge(gamma);
+            let m = rng.range(-3.0, 3.0);
+            let a = l.alpha(m);
+            close(l.value(m) + l.conjugate(a), -a * m, 1e-9, 1e-9, "FY")
+        });
+    }
+
+    #[test]
+    fn fenchel_young_inequality_everywhere() {
+        // ℓ(m) + ℓ*(−α) ≥ −α·m for all α ∈ [0,1]
+        forall("fenchel-young-ineq", 64, |rng| {
+            let gamma = rng.range(0.0, 1.0);
+            let l = Loss { gamma };
+            let m = rng.range(-3.0, 3.0);
+            let a = rng.uniform();
+            if l.value(m) + l.conjugate(a) >= -a * m - 1e-10 {
+                Ok(())
+            } else {
+                Err(format!("violated at gamma={gamma} m={m} a={a}"))
+            }
+        });
+    }
+
+    #[test]
+    fn smoothed_hinge_converges_to_hinge() {
+        let h = Loss::hinge();
+        let s = Loss::smoothed_hinge(1e-9);
+        for m in [-2.0, 0.0, 0.5, 0.9999, 1.0001, 2.0] {
+            assert!((h.value(m) - s.value(m)).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn thresholds() {
+        let l = Loss::smoothed_hinge(0.05);
+        assert_eq!(l.l_threshold(), 0.95);
+        assert_eq!(l.r_threshold(), 1.0);
+        assert_eq!(Loss::hinge().l_threshold(), 1.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! `triplet-screen` — CLI for safe-triplet-screening metric learning.
+//!
+//! Subcommands:
+//!   train   — solve RTLM at one λ (optionally with screening)
+//!   path    — run a full regularization path
+//!   info    — dataset/triplet/λ_max summary
+//!
+//! Common options: --dataset <name[-small]> --engine native|pjrt
+//!   --bound GB|PGB|DGB|CDGB|RPB|RRPB --rule sphere|linear|semidefinite
+//!   --k <n> --seed <n> --tol <f> --rho <f> --active-set --range
+
+use triplet_screen::coordinator::report::{fnum, fpct, Table};
+use triplet_screen::data::synthetic;
+use triplet_screen::loss::Loss;
+use triplet_screen::path::{PathConfig, RegPath};
+use triplet_screen::prelude::*;
+use triplet_screen::solver::Problem;
+use triplet_screen::util::cli::Args;
+
+fn parse_bound(s: &str) -> BoundKind {
+    match s.to_ascii_uppercase().as_str() {
+        "GB" => BoundKind::Gb,
+        "PGB" => BoundKind::Pgb,
+        "DGB" => BoundKind::Dgb,
+        "CDGB" => BoundKind::Cdgb,
+        "RPB" => BoundKind::Rpb,
+        "RRPB" => BoundKind::Rrpb,
+        other => panic!("unknown bound {other:?}"),
+    }
+}
+
+fn parse_rule(s: &str) -> RuleKind {
+    match s.to_ascii_lowercase().as_str() {
+        "sphere" => RuleKind::Sphere,
+        "linear" => RuleKind::Linear,
+        "semidefinite" | "sdls" => RuleKind::SemiDefinite,
+        other => panic!("unknown rule {other:?}"),
+    }
+}
+
+fn make_engine(args: &Args) -> Box<dyn Engine> {
+    match args.get_or("engine", "native") {
+        "native" => Box::new(NativeEngine::new(args.get_usize("threads", 0))),
+        "pjrt" => Box::new(
+            PjrtEngine::from_default_dir().expect("loading PJRT artifacts (run `make artifacts`)"),
+        ),
+        other => panic!("unknown engine {other:?} (native|pjrt)"),
+    }
+}
+
+fn load_store(args: &Args, rng: &mut Pcg64) -> TripletStore {
+    let name = args.get_or("dataset", "segment-small");
+    let ds = if let Some(path) = args.get("libsvm") {
+        let mut ds = triplet_screen::data::read_libsvm(path, args.get_usize("d", 0))
+            .expect("reading libsvm file");
+        ds.standardize();
+        ds
+    } else {
+        synthetic::analogue(name, rng)
+    };
+    let k = args.get_usize(
+        "k",
+        synthetic::spec(name).map(|s| s.k.min(20)).unwrap_or(5),
+    );
+    eprintln!(
+        "dataset {} (n={}, d={}, classes={})",
+        ds.name,
+        ds.n(),
+        ds.d(),
+        ds.n_classes
+    );
+    let store = TripletStore::from_dataset(&ds, k, rng);
+    eprintln!("triplets: {}", store.len());
+    store
+}
+
+fn screening_cfg(args: &Args) -> Option<ScreeningConfig> {
+    if args.flag("no-screening") {
+        return None;
+    }
+    let bound = parse_bound(args.get_or("bound", "RRPB"));
+    let rule = parse_rule(args.get_or("rule", "sphere"));
+    Some(ScreeningConfig::new(bound, rule))
+}
+
+fn main() {
+    let args = Args::parse();
+    let mut rng = Pcg64::seed(args.get_usize("seed", 7) as u64);
+    match args.subcommand.as_deref() {
+        Some("info") => {
+            let engine = make_engine(&args);
+            let store = load_store(&args, &mut rng);
+            let loss = Loss::smoothed_hinge(args.get_f64("gamma", 0.05));
+            let lmax = Problem::lambda_max(&store, &loss, engine.as_ref());
+            println!("triplets       : {}", store.len());
+            println!("lambda_max     : {}", fnum(lmax));
+            println!("engine         : {}", engine.name());
+        }
+        Some("train") => {
+            let engine = make_engine(&args);
+            let store = load_store(&args, &mut rng);
+            let loss = Loss::smoothed_hinge(args.get_f64("gamma", 0.05));
+            let lmax = Problem::lambda_max(&store, &loss, engine.as_ref());
+            let lambda = args.get_f64("lambda", lmax * 0.1);
+            let mut prob = Problem::new(&store, loss, lambda);
+            let cfg = SolverConfig {
+                tol: args.get_f64("tol", 1e-6),
+                ..Default::default()
+            };
+            let d = store.d;
+            let screening = screening_cfg(&args);
+            let mut mgr = screening.map(triplet_screen::screening::ScreeningManager::new);
+            let engine_ref: &dyn Engine = engine.as_ref();
+            let mut cb = |p: &Problem, ctx: &triplet_screen::solver::ScreenCtx| {
+                mgr.as_mut()
+                    .map(|m| m.screen(p, ctx, engine_ref))
+                    .unwrap_or_default()
+            };
+            let (m, stats) = Solver::new(cfg).solve(
+                &mut prob,
+                engine.as_ref(),
+                triplet_screen::linalg::Mat::zeros(d, d),
+                if screening.is_some() { Some(&mut cb) } else { None },
+            );
+            println!("lambda     : {}", fnum(lambda));
+            println!("iters      : {}", stats.iters);
+            println!("primal     : {}", fnum(stats.p));
+            println!("gap        : {:.3e}", stats.gap);
+            println!(
+                "screened   : L={} R={} ({})",
+                stats.screen_l,
+                stats.screen_r,
+                fpct(prob.status().screening_rate())
+            );
+            println!("||M||_F    : {}", fnum(m.norm()));
+        }
+        Some("path") => {
+            let engine = make_engine(&args);
+            let store = load_store(&args, &mut rng);
+            // config file (TOML subset) + --set overrides + CLI flags
+            let cfg = if let Some(path) = args.get("config") {
+                let mut file_cfg = triplet_screen::util::config::Config::load(path)
+                    .expect("loading --config file");
+                if let Some(sets) = args.get("set") {
+                    for assignment in sets.split(',') {
+                        file_cfg.set(assignment).expect("applying --set override");
+                    }
+                }
+                triplet_screen::util::config::path_config(&file_cfg)
+            } else {
+                PathConfig {
+                    loss: Loss::smoothed_hinge(args.get_f64("gamma", 0.05)),
+                    rho: args.get_f64("rho", 0.9),
+                    max_steps: args.get_usize("max-steps", 60),
+                    solver: SolverConfig {
+                        tol: args.get_f64("tol", 1e-6),
+                        ..Default::default()
+                    },
+                    screening: screening_cfg(&args),
+                    active_set: args.flag("active-set"),
+                    range_screening: args.flag("range"),
+                    ..Default::default()
+                }
+            };
+            let res = RegPath::new(cfg).run(&store, engine.as_ref());
+            let mut t = Table::new(
+                format!("regularization path (lambda_max = {})", fnum(res.lambda_max)),
+                &["lambda", "iters", "P", "gap", "rate", "range", "wall_s"],
+            );
+            for s in &res.steps {
+                t.row(vec![
+                    fnum(s.lambda),
+                    s.iters.to_string(),
+                    fnum(s.p),
+                    format!("{:.1e}", s.gap),
+                    fpct(s.rate_final),
+                    s.range_screened.to_string(),
+                    fnum(s.wall),
+                ]);
+            }
+            println!("{}", t.to_markdown());
+            println!("total wall: {} s", fnum(res.total_wall));
+        }
+        _ => {
+            eprintln!(
+                "usage: triplet-screen <info|train|path> [--dataset NAME] [--engine native|pjrt]\n\
+                 \x20  [--bound GB|PGB|DGB|CDGB|RPB|RRPB] [--rule sphere|linear|semidefinite]\n\
+                 \x20  [--lambda F] [--rho F] [--tol F] [--k N] [--seed N] [--active-set] [--range]\n\
+                 \x20  [--no-screening] [--libsvm PATH]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

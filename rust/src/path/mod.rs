@@ -1,0 +1,393 @@
+//! Regularization-path driver (paper §5 protocol).
+//!
+//! Solves RTLM for λ_max = λ₀ > λ₁ > … (geometric schedule λ_t = ρ·λ_{t−1})
+//! with warm starts, *regularization-path screening* (first screening of
+//! each λ, using the previous λ's solution as the RRPB/RPB reference),
+//! *dynamic screening* every `screen_every` solver iterations, and the
+//! range-based extension (§4) that screens without rule evaluation while
+//! λ stays inside a triplet's certified interval.
+
+use crate::linalg::{psd_split, Mat};
+use crate::loss::Loss;
+use crate::runtime::Engine;
+use crate::screening::{l_range, r_range, ScreeningConfig, ScreeningManager};
+use crate::solver::{ActiveSetSolver, Problem, ScreenCtx, Solver, SolverConfig};
+use crate::triplet::TripletStore;
+
+/// Path configuration.
+#[derive(Clone, Debug)]
+pub struct PathConfig {
+    pub loss: Loss,
+    /// geometric decay λ_t = ρ·λ_{t−1} (paper: 0.9, practical eval 0.99)
+    pub rho: f64,
+    pub max_steps: usize,
+    /// paper's termination: relative loss decrease per relative λ decrease
+    /// below this ratio stops the path (0.01)
+    pub stop_ratio: f64,
+    /// optional hard lower bound on λ
+    pub lambda_min: Option<f64>,
+    pub solver: SolverConfig,
+    /// None = naive optimization (the paper's baseline)
+    pub screening: Option<ScreeningConfig>,
+    /// optional second screening config whose rules are evaluated in the
+    /// same pass (the paper's "+RRPB+PGB" protocol)
+    pub secondary_screening: Option<ScreeningConfig>,
+    /// use the active-set heuristic (paper §5.3)
+    pub active_set: bool,
+    /// use the range-based extension (§4, RRPB-based)
+    pub range_screening: bool,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            loss: Loss::smoothed_hinge(0.05),
+            rho: 0.9,
+            max_steps: 100,
+            stop_ratio: 0.01,
+            lambda_min: None,
+            solver: SolverConfig::default(),
+            screening: None,
+            secondary_screening: None,
+            active_set: false,
+            range_screening: false,
+        }
+    }
+}
+
+/// Per-λ outcome record.
+#[derive(Clone, Debug)]
+pub struct PathStep {
+    pub lambda: f64,
+    pub iters: usize,
+    /// reduced primal at convergence
+    pub p: f64,
+    /// loss term Σℓ (without the regularizer) — drives path termination
+    pub loss_term: f64,
+    pub gap: f64,
+    pub converged: bool,
+    /// screening rate right after the first (regularization-path) screening
+    pub rate_regpath: f64,
+    /// screening rate at convergence (after dynamic screening)
+    pub rate_final: f64,
+    pub screened_l: usize,
+    pub screened_r: usize,
+    /// triplets fixed by the range extension before any rule evaluation
+    pub range_screened: usize,
+    /// wall-clock seconds for this λ
+    pub wall: f64,
+    /// seconds spent evaluating screening rules (Table 4's parentheses)
+    pub screen_time: f64,
+    /// seconds spent in margin/gradient kernels
+    pub compute_time: f64,
+}
+
+/// Full path outcome.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    pub steps: Vec<PathStep>,
+    pub lambda_max: f64,
+    pub total_wall: f64,
+    pub m_final: Mat,
+}
+
+/// The regularization-path coordinator.
+pub struct RegPath {
+    pub cfg: PathConfig,
+}
+
+impl RegPath {
+    pub fn new(cfg: PathConfig) -> RegPath {
+        RegPath { cfg }
+    }
+
+    /// Run the full path on `store` using `engine` for the kernels.
+    pub fn run(&self, store: &TripletStore, engine: &dyn Engine) -> PathResult {
+        let t_total = std::time::Instant::now();
+        let loss = self.cfg.loss;
+        let lambda_max = Problem::lambda_max(store, &loss, engine);
+
+        // exact solution at λ_max: M = [ΣH]_+ / λ (all α = 1)
+        let ones = vec![1.0; store.len()];
+        let sum_h = engine.wgram(&store.a, &store.b, &ones);
+        let sum_h_plus = psd_split(&sum_h).plus;
+        let mut m_warm = sum_h_plus.scaled(1.0 / lambda_max);
+
+        let mut manager = self.cfg.screening.map(ScreeningManager::new);
+        let mut manager2 = self.cfg.secondary_screening.map(ScreeningManager::new);
+        for mgr in [manager.as_mut(), manager2.as_mut()].into_iter().flatten() {
+            if mgr.cfg.bound.needs_reference() {
+                // λ_max solution is exact: ε = 0 reference
+                mgr.set_reference(m_warm.clone(), lambda_max, 0.0, store, engine);
+            }
+        }
+        // RRPB reference state for the range extension
+        let mut range_ref: Option<(Mat, f64, f64, Vec<f64>)> = if self.cfg.range_screening {
+            let mut hm = vec![0.0; store.len()];
+            engine.margins(&m_warm, &store.a, &store.b, &mut hm);
+            Some((m_warm.clone(), lambda_max, 0.0, hm))
+        } else {
+            None
+        };
+
+        let mut steps: Vec<PathStep> = Vec::new();
+        let mut lambda = lambda_max;
+        let mut prev_loss_term: Option<f64> = None;
+
+        for _step in 0..self.cfg.max_steps {
+            let lambda_prev = lambda;
+            lambda *= self.cfg.rho;
+            if let Some(lmin) = self.cfg.lambda_min {
+                if lambda < lmin {
+                    break;
+                }
+            }
+            let t_step = std::time::Instant::now();
+            let mut problem = Problem::new(store, loss, lambda);
+
+            // ---- range-based screening (no rule evaluation) ----
+            let mut range_screened = 0usize;
+            if let Some((m0, l0, eps, hm)) = &range_ref {
+                let mn = m0.norm();
+                let mut rl = Vec::new();
+                let mut rr = Vec::new();
+                for t in 0..store.len() {
+                    let hn = store.h_norm[t];
+                    if r_range(hm[t], hn, mn, *eps, *l0, loss.r_threshold()).contains(lambda) {
+                        rr.push(t);
+                    } else if l_range(hm[t], hn, mn, *eps, *l0, loss.l_threshold())
+                        .contains(lambda)
+                    {
+                        rl.push(t);
+                    }
+                }
+                range_screened = rl.len() + rr.len();
+                problem.apply_screening(&rl, &rr);
+            }
+
+            // ---- solve with dynamic screening ----
+            let mut rate_regpath = problem.status().screening_rate();
+            let mut first_screen_done = false;
+            let (m_sol, stats) = {
+                let mut cb_mgr = manager.as_mut();
+                let mut cb_mgr2 = manager2.as_mut();
+                let engine_ref = engine;
+                let mut cb = |p: &Problem, ctx: &ScreenCtx| -> (Vec<usize>, Vec<usize>) {
+                    if let Some(m) = cb_mgr.as_deref_mut() {
+                        let mut out = m.screen(p, ctx, engine_ref);
+                        if let Some(m2) = cb_mgr2.as_deref_mut() {
+                            // both safe rules on the same state: union
+                            let (l2, r2) = m2.screen(p, ctx, engine_ref);
+                            out.0.extend(l2);
+                            out.1.extend(r2);
+                            out.0.sort_unstable();
+                            out.0.dedup();
+                            out.1.sort_unstable();
+                            out.1.dedup();
+                        }
+                        if !first_screen_done {
+                            // regularization-path screening = the first call
+                            let screened: usize = p.status().n_screened_l()
+                                + p.status().n_screened_r()
+                                + out.0.len()
+                                + out.1.len();
+                            rate_regpath = screened as f64 / p.status().len() as f64;
+                            first_screen_done = true;
+                        }
+                        out
+                    } else {
+                        (vec![], vec![])
+                    }
+                };
+                let screen_opt: Option<&mut dyn FnMut(&Problem, &ScreenCtx) -> (Vec<usize>, Vec<usize>)> =
+                    if self.cfg.screening.is_some() {
+                        Some(&mut cb)
+                    } else {
+                        None
+                    };
+                if self.cfg.active_set {
+                    ActiveSetSolver::new(self.cfg.solver.clone()).solve(
+                        &mut problem,
+                        engine,
+                        m_warm.clone(),
+                        screen_opt,
+                    )
+                } else {
+                    Solver::new(self.cfg.solver.clone()).solve(
+                        &mut problem,
+                        engine,
+                        m_warm.clone(),
+                        screen_opt,
+                    )
+                }
+            };
+
+            let wall = t_step.elapsed().as_secs_f64();
+            let loss_term = stats.p - 0.5 * lambda * m_sol.norm_sq();
+            let eps = (2.0 * stats.gap.max(0.0) / lambda).sqrt();
+
+            steps.push(PathStep {
+                lambda,
+                iters: stats.iters,
+                p: stats.p,
+                loss_term,
+                gap: stats.gap,
+                converged: stats.converged,
+                rate_regpath,
+                rate_final: problem.status().screening_rate(),
+                screened_l: problem.status().n_screened_l(),
+                screened_r: problem.status().n_screened_r(),
+                range_screened,
+                wall,
+                screen_time: stats.timers.screening.secs(),
+                compute_time: stats.timers.compute.secs(),
+            });
+
+            // ---- update references for the next λ ----
+            for mgr in [manager.as_mut(), manager2.as_mut()].into_iter().flatten() {
+                if mgr.cfg.bound.needs_reference() {
+                    mgr.set_reference(m_sol.clone(), lambda, eps, store, engine);
+                }
+            }
+            if self.cfg.range_screening {
+                let mut hm = vec![0.0; store.len()];
+                engine.margins(&m_sol, &store.a, &store.b, &mut hm);
+                range_ref = Some((m_sol.clone(), lambda, eps, hm));
+            }
+            m_warm = m_sol;
+
+            // ---- paper's termination criterion ----
+            if let Some(prev) = prev_loss_term {
+                if prev > 0.0 {
+                    let ratio = ((prev - loss_term) / prev) * (lambda_prev / (lambda_prev - lambda));
+                    if ratio < self.cfg.stop_ratio {
+                        break;
+                    }
+                }
+            }
+            prev_loss_term = Some(loss_term);
+        }
+
+        PathResult {
+            steps,
+            lambda_max,
+            total_wall: t_total.elapsed().as_secs_f64(),
+            m_final: m_warm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::runtime::NativeEngine;
+    use crate::screening::{BoundKind, RuleKind};
+    use crate::util::rng::Pcg64;
+
+    fn small_store(seed: u64) -> TripletStore {
+        let mut rng = Pcg64::seed(seed);
+        let ds = synthetic::gaussian_mixture("g", 40, 4, 2, 2.6, &mut rng);
+        TripletStore::from_dataset(&ds, 3, &mut rng)
+    }
+
+    fn base_cfg() -> PathConfig {
+        PathConfig {
+            max_steps: 12,
+            solver: SolverConfig {
+                tol: 1e-7,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn naive_path_runs_and_descends() {
+        let store = small_store(1);
+        let engine = NativeEngine::new(2);
+        let res = RegPath::new(base_cfg()).run(&store, &engine);
+        assert!(!res.steps.is_empty());
+        // λ strictly decreasing, loss term non-increasing (more fitting)
+        for w in res.steps.windows(2) {
+            assert!(w[1].lambda < w[0].lambda);
+            assert!(w[1].loss_term <= w[0].loss_term * (1.0 + 1e-6));
+        }
+        assert!(res.steps.iter().all(|s| s.converged));
+    }
+
+    #[test]
+    fn screened_path_matches_naive_losses() {
+        let store = small_store(2);
+        let engine = NativeEngine::new(2);
+        let naive = RegPath::new(base_cfg()).run(&store, &engine);
+
+        let mut cfg = base_cfg();
+        cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        let screened = RegPath::new(cfg).run(&store, &engine);
+
+        assert_eq!(naive.steps.len(), screened.steps.len());
+        for (a, b) in naive.steps.iter().zip(&screened.steps) {
+            assert!((a.lambda - b.lambda).abs() < 1e-12);
+            let tol = 1e-4 * a.p.abs().max(1.0);
+            assert!(
+                (a.p - b.p).abs() < tol,
+                "λ={}: naive P={} screened P={}",
+                a.lambda,
+                a.p,
+                b.p
+            );
+        }
+        // screening did something
+        assert!(screened.steps.iter().any(|s| s.rate_final > 0.0));
+    }
+
+    #[test]
+    fn range_screening_is_safe_and_counts() {
+        let store = small_store(3);
+        let engine = NativeEngine::new(2);
+        let mut cfg = base_cfg();
+        cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        cfg.range_screening = true;
+        let with_range = RegPath::new(cfg).run(&store, &engine);
+
+        let mut cfg2 = base_cfg();
+        cfg2.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        let without = RegPath::new(cfg2).run(&store, &engine);
+
+        for (a, b) in with_range.steps.iter().zip(&without.steps) {
+            let tol = 1e-4 * b.p.abs().max(1.0);
+            assert!((a.p - b.p).abs() < tol, "range screening changed optimum");
+        }
+        assert!(
+            with_range.steps.iter().skip(1).any(|s| s.range_screened > 0),
+            "range extension never fired"
+        );
+    }
+
+    #[test]
+    fn active_set_path_matches() {
+        let store = small_store(4);
+        let engine = NativeEngine::new(2);
+        let plain = RegPath::new(base_cfg()).run(&store, &engine);
+        let mut cfg = base_cfg();
+        cfg.active_set = true;
+        cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        let aset = RegPath::new(cfg).run(&store, &engine);
+        for (a, b) in plain.steps.iter().zip(&aset.steps) {
+            let tol = 1e-3 * a.p.abs().max(1.0);
+            assert!((a.p - b.p).abs() < tol, "active set deviates at λ={}", a.lambda);
+        }
+    }
+
+    #[test]
+    fn termination_criterion_stops_early() {
+        let store = small_store(5);
+        let engine = NativeEngine::new(2);
+        let mut cfg = base_cfg();
+        cfg.max_steps = 500;
+        cfg.stop_ratio = 0.5; // aggressive: stop as soon as returns diminish
+        let res = RegPath::new(cfg).run(&store, &engine);
+        assert!(res.steps.len() < 500, "stop criterion never fired");
+    }
+}

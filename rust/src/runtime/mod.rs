@@ -1,0 +1,52 @@
+//! Compute engines: where the O(d²·|T|) kernels run.
+//!
+//! [`Engine`] abstracts the three hot operations (margins, weighted gram,
+//! fused step). Two implementations:
+//!
+//! - [`NativeEngine`] — pure-rust f64, threaded. The correctness oracle
+//!   and the fallback for dimensions without compiled artifacts.
+//! - [`PjrtEngine`] — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//!   lowered from the L2 JAX model wrapping the L1 Pallas kernels) and
+//!   executes them through the PJRT C API via the `xla` crate.
+//!
+//! Both must agree to f64 round-off; `rust/tests/runtime_pjrt.rs` checks
+//! exactly that on the real artifacts.
+
+mod native;
+mod pjrt;
+
+pub use native::NativeEngine;
+pub use pjrt::{PjrtEngine, ARTIFACTS_DIR_ENV};
+
+use crate::linalg::Mat;
+
+/// One objective/gradient evaluation: `(loss_sum, grad_loss_sum)` where
+/// `grad_loss_sum = Σ_t α_t H_t`; margins are written to `margins_out`.
+pub type StepOut = (f64, Mat);
+
+/// A compute engine for the triplet kernels.
+///
+/// Rows of `a`/`b` are the difference vectors `x_i − x_l` / `x_i − x_j`
+/// of the (compacted) triplet set. All matrices are row-major f64.
+pub trait Engine: Sync {
+    fn name(&self) -> &'static str;
+
+    /// `out[t] = a_t^T mat a_t − b_t^T mat b_t` — serves both `⟨M, H_t⟩`
+    /// (objective) and `⟨H_t, Q⟩` (screening statistic).
+    fn margins(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64]);
+
+    /// `Σ_t w_t H_t = A^T diag(w) A − B^T diag(w) B`.
+    fn wgram(&self, a: &Mat, b: &Mat, w: &[f64]) -> Mat;
+
+    /// Fused margins + smoothed-hinge loss/derivative + gradient
+    /// accumulation (one PJRT dispatch per block on the AOT path):
+    /// returns `(Σ_t ℓ(m_t), Σ_t α_t H_t)` and fills `margins_out`.
+    fn step(
+        &self,
+        mat: &Mat,
+        a: &Mat,
+        b: &Mat,
+        gamma: f64,
+        margins_out: &mut [f64],
+    ) -> StepOut;
+}

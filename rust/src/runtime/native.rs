@@ -1,0 +1,249 @@
+//! Pure-rust reference engine (threaded f64).
+//!
+//! Each worker processes a contiguous block of triplets: margins via a
+//! per-row `M a` matvec (M stays L2-resident for d ≤ a few hundred), the
+//! fused step additionally accumulates a worker-local `Σ α_t H_t` that is
+//! reduced at the end — matching the Pallas kernel's grid-accumulator
+//! structure exactly, which keeps native-vs-PJRT comparisons meaningful.
+
+use super::{Engine, StepOut};
+use crate::linalg::Mat;
+use crate::loss::Loss;
+use crate::util::parallel;
+
+/// Native engine; `threads = 0` means auto.
+pub struct NativeEngine {
+    threads: usize,
+}
+
+impl NativeEngine {
+    pub fn new(threads: usize) -> NativeEngine {
+        NativeEngine { threads }
+    }
+
+    fn workers(&self) -> usize {
+        if self.threads == 0 {
+            parallel::default_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine::new(0)
+    }
+}
+
+#[inline]
+fn row_quad(mat: &Mat, x: &[f64], tmp: &mut [f64]) -> f64 {
+    mat.matvec(x, tmp);
+    let mut acc = 0.0;
+    for (xi, ti) in x.iter().zip(tmp.iter()) {
+        acc += xi * ti;
+    }
+    acc
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn margins(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64]) {
+        let d = mat.rows();
+        debug_assert_eq!(a.cols(), d);
+        debug_assert_eq!(a.rows(), out.len());
+        debug_assert_eq!(b.rows(), out.len());
+        parallel::par_fill(out, self.workers(), |range, chunk| {
+            let mut tmp = vec![0.0; d];
+            for (k, t) in range.enumerate() {
+                chunk[k] = row_quad(mat, a.row(t), &mut tmp) - row_quad(mat, b.row(t), &mut tmp);
+            }
+        });
+    }
+
+    fn wgram(&self, a: &Mat, b: &Mat, w: &[f64]) -> Mat {
+        let (n, d) = (a.rows(), a.cols());
+        debug_assert_eq!(w.len(), n);
+        let partials = parallel::par_ranges(n, self.workers(), |range| {
+            let mut g = Mat::zeros(d, d);
+            for t in range {
+                let wt = w[t];
+                if wt == 0.0 {
+                    continue;
+                }
+                let (ra, rb) = (a.row(t), b.row(t));
+                for i in 0..d {
+                    let (wai, wbi) = (wt * ra[i], wt * rb[i]);
+                    let grow = g.row_mut(i);
+                    for j in 0..d {
+                        grow[j] += wai * ra[j] - wbi * rb[j];
+                    }
+                }
+            }
+            g
+        });
+        let mut g = Mat::zeros(d, d);
+        for p in partials {
+            g.axpy(1.0, &p);
+        }
+        g
+    }
+
+    fn step(
+        &self,
+        mat: &Mat,
+        a: &Mat,
+        b: &Mat,
+        gamma: f64,
+        margins_out: &mut [f64],
+    ) -> StepOut {
+        let (n, d) = (a.rows(), a.cols());
+        debug_assert_eq!(margins_out.len(), n);
+        let loss = if gamma > 0.0 {
+            Loss::smoothed_hinge(gamma)
+        } else {
+            Loss::hinge()
+        };
+        // one fused pass per worker: margins, loss, alpha, local gram
+        let ranges = parallel::split_ranges(n, self.workers());
+        let results: Vec<(f64, Mat)> = std::thread::scope(|scope| {
+            // split margins_out into per-range chunks
+            let mut handles = Vec::new();
+            let mut rest: &mut [f64] = margins_out;
+            for range in &ranges {
+                let (head, tail) = rest.split_at_mut(range.len());
+                rest = tail;
+                let range = range.clone();
+                handles.push(scope.spawn(move || {
+                    let mut tmp = vec![0.0; d];
+                    let mut g = Mat::zeros(d, d);
+                    let mut lsum = 0.0;
+                    for (k, t) in range.enumerate() {
+                        let (ra, rb) = (a.row(t), b.row(t));
+                        let m =
+                            row_quad(mat, ra, &mut tmp) - row_quad(mat, rb, &mut tmp);
+                        head[k] = m;
+                        lsum += loss.value(m);
+                        let alpha = loss.alpha(m);
+                        if alpha != 0.0 {
+                            for i in 0..d {
+                                let (wai, wbi) = (alpha * ra[i], alpha * rb[i]);
+                                let grow = g.row_mut(i);
+                                for j in 0..d {
+                                    grow[j] += wai * ra[j] - wbi * rb[j];
+                                }
+                            }
+                        }
+                    }
+                    (lsum, g)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut lsum = 0.0;
+        let mut g = Mat::zeros(d, d);
+        for (l, p) in results {
+            lsum += l;
+            g.axpy(1.0, &p);
+        }
+        (lsum, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{close, forall};
+    use crate::util::rng::Pcg64;
+
+    fn rand_inputs(rng: &mut Pcg64, n: usize, d: usize) -> (Mat, Mat, Mat) {
+        let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+        m.symmetrize();
+        let a = Mat::from_fn(n, d, |_, _| rng.normal());
+        let b = Mat::from_fn(n, d, |_, _| rng.normal());
+        (m, a, b)
+    }
+
+    #[test]
+    fn margins_match_naive() {
+        forall("native-margins", 16, |rng| {
+            let (n, d) = (1 + rng.below(200), 1 + rng.below(12));
+            let (m, a, b) = rand_inputs(rng, n, d);
+            let mut out = vec![0.0; n];
+            NativeEngine::new(3).margins(&m, &a, &b, &mut out);
+            for t in 0..n {
+                let want = m.quad_form(a.row(t)) - m.quad_form(b.row(t));
+                close(out[t], want, 1e-12, 1e-12, "margin")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wgram_matches_outer_sum() {
+        forall("native-wgram", 12, |rng| {
+            let (n, d) = (1 + rng.below(100), 1 + rng.below(10));
+            let (_, a, b) = rand_inputs(rng, n, d);
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+            let g = NativeEngine::new(2).wgram(&a, &b, &w);
+            let mut want = Mat::zeros(d, d);
+            for t in 0..n {
+                want.axpy(w[t], &Mat::outer(a.row(t)));
+                want.axpy(-w[t], &Mat::outer(b.row(t)));
+            }
+            close(g.sub(&want).max_abs(), 0.0, 0.0, 1e-10, "wgram")
+        });
+    }
+
+    #[test]
+    fn step_consistent_with_parts() {
+        forall("native-step", 12, |rng| {
+            let (n, d) = (8 + rng.below(120), 1 + rng.below(10));
+            let (m, a, b) = rand_inputs(rng, n, d);
+            let gamma = 0.05;
+            let loss = Loss::smoothed_hinge(gamma);
+            let eng = NativeEngine::new(4);
+            let mut margins = vec![0.0; n];
+            let (lsum, g) = eng.step(&m, &a, &b, gamma, &mut margins);
+            let mut margins2 = vec![0.0; n];
+            eng.margins(&m, &a, &b, &mut margins2);
+            for t in 0..n {
+                close(margins[t], margins2[t], 1e-13, 1e-13, "m")?;
+            }
+            let want_l: f64 = margins2.iter().map(|&m| loss.value(m)).sum();
+            close(lsum, want_l, 1e-11, 1e-11, "loss")?;
+            let alpha: Vec<f64> = margins2.iter().map(|&m| loss.alpha(m)).collect();
+            let want_g = eng.wgram(&a, &b, &alpha);
+            close(g.sub(&want_g).max_abs(), 0.0, 0.0, 1e-10, "grad")
+        });
+    }
+
+    #[test]
+    fn thread_count_invariance() {
+        let mut rng = Pcg64::seed(5);
+        let (m, a, b) = rand_inputs(&mut rng, 333, 7);
+        let mut o1 = vec![0.0; 333];
+        let mut o8 = vec![0.0; 333];
+        NativeEngine::new(1).margins(&m, &a, &b, &mut o1);
+        NativeEngine::new(8).margins(&m, &a, &b, &mut o8);
+        for t in 0..333 {
+            assert!((o1[t] - o8[t]).abs() < 1e-12);
+        }
+        let g1 = NativeEngine::new(1).wgram(&a, &b, &vec![0.5; 333]);
+        let g8 = NativeEngine::new(8).wgram(&a, &b, &vec![0.5; 333]);
+        assert!(g1.sub(&g8).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn hinge_step_gamma_zero() {
+        let mut rng = Pcg64::seed(6);
+        let (m, a, b) = rand_inputs(&mut rng, 64, 5);
+        let mut margins = vec![0.0; 64];
+        let (lsum, _) = NativeEngine::new(2).step(&m, &a, &b, 0.0, &mut margins);
+        let want: f64 = margins.iter().map(|&m| (1.0 - m).max(0.0)).sum();
+        assert!((lsum - want).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,339 @@
+//! PJRT engine: loads the AOT artifacts and runs them via the `xla` crate.
+//!
+//! Interchange contract (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): artifacts are **HLO text** — jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids. Modules are lowered with
+//! `return_tuple=True`, so outputs are unwrapped as tuples here.
+//!
+//! Executables are compiled lazily per (entry, d) on first use and cached.
+//! Inputs are padded to the artifact's dispatch length `n`; the `step`
+//! artifact takes an explicit mask so padded rows contribute nothing, the
+//! `wgram` artifact gets w = 0 padding, and padded `margins` outputs are
+//! simply dropped. All access is serialized through a mutex — PJRT-CPU
+//! parallelizes internally, and the coordinator's callers are sequential.
+
+use super::{Engine, StepOut};
+use crate::linalg::Mat;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Environment variable overriding the artifacts directory.
+pub const ARTIFACTS_DIR_ENV: &str = "TS_ARTIFACTS_DIR";
+
+/// Default artifacts directory (relative to the working directory).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var(ARTIFACTS_DIR_ENV)
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct Key {
+    entry: &'static str,
+    d: usize,
+}
+
+#[derive(Clone, Debug)]
+struct ArtifactMeta {
+    n: usize,
+    file: PathBuf,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    /// compiled executables keyed by (entry, d, n)
+    exes: HashMap<(Key, usize), xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: every use of `Inner` is serialized behind `PjrtEngine::inner`'s
+// mutex; the PJRT CPU client itself is internally synchronized.
+unsafe impl Send for Inner {}
+
+/// Engine backed by AOT-compiled HLO artifacts executed through PJRT.
+pub struct PjrtEngine {
+    dir: PathBuf,
+    /// (entry, d) -> available dispatch sizes (ascending)
+    registry: HashMap<Key, Vec<ArtifactMeta>>,
+    inner: Mutex<Inner>,
+}
+
+impl PjrtEngine {
+    /// Load the manifest from `dir` and start a PJRT CPU client.
+    pub fn from_dir(dir: impl AsRef<Path>) -> Result<PjrtEngine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest =
+            json::parse(&text).map_err(|e| anyhow!("parsing {manifest_path:?}: {e}"))?;
+        let mut registry: HashMap<Key, Vec<ArtifactMeta>> = HashMap::new();
+        for art in manifest
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            let entry = match art.get("entry").and_then(Json::as_str) {
+                Some("margins") => "margins",
+                Some("wgram") => "wgram",
+                Some("step") => "step",
+                other => return Err(anyhow!("unknown artifact entry {other:?}")),
+            };
+            let d = art
+                .get("d")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("artifact missing d"))?;
+            let n = art
+                .get("n")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("artifact missing n"))?;
+            let file = art
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing file"))?;
+            registry
+                .entry(Key { entry, d })
+                .or_default()
+                .push(ArtifactMeta {
+                    n,
+                    file: dir.join(file),
+                });
+        }
+        for metas in registry.values_mut() {
+            metas.sort_by_key(|m| m.n);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtEngine {
+            dir,
+            registry,
+            inner: Mutex::new(Inner {
+                client,
+                exes: HashMap::new(),
+            }),
+        })
+    }
+
+    /// Load from `$TS_ARTIFACTS_DIR` / `./artifacts`.
+    pub fn from_default_dir() -> Result<PjrtEngine> {
+        Self::from_dir(default_artifacts_dir())
+    }
+
+    /// Does the registry have artifacts for dimension `d`?
+    pub fn supports_dim(&self, d: usize) -> bool {
+        ["margins", "wgram", "step"]
+            .iter()
+            .all(|e| self.registry.contains_key(&Key { entry: e, d }))
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Pick the smallest dispatch size that fits `rows`, else the largest.
+    fn pick_meta<'a>(&'a self, key: &Key, rows: usize) -> Result<&'a ArtifactMeta> {
+        let metas = self.registry.get(key).ok_or_else(|| {
+            anyhow!(
+                "no artifact for entry={} d={} under {:?} (run `make artifacts`)",
+                key.entry,
+                key.d,
+                self.dir
+            )
+        })?;
+        Ok(metas
+            .iter()
+            .find(|m| m.n >= rows)
+            .unwrap_or_else(|| metas.last().unwrap()))
+    }
+
+    /// Execute `entry` over all row chunks, invoking `consume` with
+    /// (chunk_range, outputs) per dispatch.
+    fn run_chunks(
+        &self,
+        entry: &'static str,
+        mat: Option<&Mat>,
+        a: &Mat,
+        b: &Mat,
+        w_or_mask: Option<&[f64]>,
+        gamma: Option<f64>,
+        mut consume: impl FnMut(std::ops::Range<usize>, Vec<xla::Literal>) -> Result<()>,
+    ) -> Result<()> {
+        let d = a.cols();
+        let rows = a.rows();
+        let key = Key { entry, d };
+        let meta = self.pick_meta(&key, rows)?.clone();
+        let n = meta.n;
+        let mut inner = self.inner.lock().expect("pjrt mutex poisoned");
+        if !inner.exes.contains_key(&(key.clone(), n)) {
+            let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                .map_err(|e| anyhow!("loading {:?}: {e:?}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {:?}: {e:?}", meta.file))?;
+            inner.exes.insert((key.clone(), n), exe);
+        }
+        let exe = inner.exes.get(&(key, n)).unwrap();
+
+        let mat_lit = mat.map(|m| mat_literal(m, &[d, n.min(usize::MAX)])).transpose()?;
+        let mut start = 0;
+        while start < rows {
+            let take = (rows - start).min(n);
+            let range = start..start + take;
+            let a_lit = rows_literal(a, range.clone(), n)?;
+            let b_lit = rows_literal(b, range.clone(), n)?;
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(5);
+            if let Some(m) = &mat_lit {
+                args.push(m.clone());
+            }
+            args.push(a_lit);
+            args.push(b_lit);
+            if let Some(w) = w_or_mask {
+                let mut padded = vec![0.0f64; n];
+                padded[..take].copy_from_slice(&w[range.clone()]);
+                args.push(vec_literal(&padded, &[n])?);
+            }
+            if let Some(g) = gamma {
+                args.push(scalar_literal(g)?);
+            }
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| anyhow!("executing {entry}: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching {entry} result: {e:?}"))?;
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| anyhow!("untupling {entry} result: {e:?}"))?;
+            consume(range, parts)?;
+            start += take;
+        }
+        Ok(())
+    }
+}
+
+fn mat_literal(m: &Mat, _hint: &[usize]) -> Result<xla::Literal> {
+    let bytes = f64_bytes(m.as_slice());
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F64,
+        &[m.rows(), m.cols()],
+        bytes,
+    )
+    .map_err(|e| anyhow!("matrix literal: {e:?}"))
+}
+
+/// Rows `range` of `m`, zero-padded to `n` rows.
+fn rows_literal(m: &Mat, range: std::ops::Range<usize>, n: usize) -> Result<xla::Literal> {
+    let d = m.cols();
+    let take = range.len();
+    if take == n {
+        let flat = &m.as_slice()[range.start * d..range.end * d];
+        return xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F64,
+            &[n, d],
+            f64_bytes(flat),
+        )
+        .map_err(|e| anyhow!("rows literal: {e:?}"));
+    }
+    let mut padded = vec![0.0f64; n * d];
+    padded[..take * d].copy_from_slice(&m.as_slice()[range.start * d..range.end * d]);
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F64,
+        &[n, d],
+        f64_bytes(&padded),
+    )
+    .map_err(|e| anyhow!("rows literal: {e:?}"))
+}
+
+fn vec_literal(v: &[f64], dims: &[usize]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F64, dims, f64_bytes(v))
+        .map_err(|e| anyhow!("vector literal: {e:?}"))
+}
+
+fn scalar_literal(x: f64) -> Result<xla::Literal> {
+    vec_literal(std::slice::from_ref(&x), &[])
+}
+
+fn f64_bytes(xs: &[f64]) -> &[u8] {
+    // SAFETY: plain-old-data reinterpretation, alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8) }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn margins(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64]) {
+        assert_eq!(out.len(), a.rows());
+        self.run_chunks("margins", Some(mat), a, b, None, None, |range, parts| {
+            let vals: Vec<f64> = parts[0]
+                .to_vec::<f64>()
+                .map_err(|e| anyhow!("margins output: {e:?}"))?;
+            out[range.clone()].copy_from_slice(&vals[..range.len()]);
+            Ok(())
+        })
+        .expect("pjrt margins failed");
+    }
+
+    fn wgram(&self, a: &Mat, b: &Mat, w: &[f64]) -> Mat {
+        let d = a.cols();
+        let mut g = Mat::zeros(d, d);
+        self.run_chunks("wgram", None, a, b, Some(w), None, |_range, parts| {
+            let vals: Vec<f64> = parts[0]
+                .to_vec::<f64>()
+                .map_err(|e| anyhow!("wgram output: {e:?}"))?;
+            let chunk = Mat::from_rows(d, d, vals);
+            g.axpy(1.0, &chunk);
+            Ok(())
+        })
+        .expect("pjrt wgram failed");
+        g
+    }
+
+    fn step(
+        &self,
+        mat: &Mat,
+        a: &Mat,
+        b: &Mat,
+        gamma: f64,
+        margins_out: &mut [f64],
+    ) -> StepOut {
+        let d = a.cols();
+        assert_eq!(margins_out.len(), a.rows());
+        let ones = vec![1.0f64; a.rows()];
+        let mut loss_sum = 0.0;
+        let mut g = Mat::zeros(d, d);
+        self.run_chunks(
+            "step",
+            Some(mat),
+            a,
+            b,
+            Some(&ones),
+            Some(gamma),
+            |range, parts| {
+                // outputs: (loss_sum, grad, margins)
+                loss_sum += parts[0]
+                    .to_vec::<f64>()
+                    .map_err(|e| anyhow!("step loss: {e:?}"))?[0];
+                let gv: Vec<f64> = parts[1]
+                    .to_vec::<f64>()
+                    .map_err(|e| anyhow!("step grad: {e:?}"))?;
+                g.axpy(1.0, &Mat::from_rows(d, d, gv));
+                let mv: Vec<f64> = parts[2]
+                    .to_vec::<f64>()
+                    .map_err(|e| anyhow!("step margins: {e:?}"))?;
+                margins_out[range.clone()].copy_from_slice(&mv[..range.len()]);
+                Ok(())
+            },
+        )
+        .expect("pjrt step failed");
+        (loss_sum, g)
+    }
+}
+
+// SAFETY: all interior mutability is behind the mutex (see `Inner`).
+unsafe impl Sync for PjrtEngine {}

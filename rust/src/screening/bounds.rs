@@ -1,0 +1,296 @@
+//! Sphere bounds (paper §3.2): regions guaranteed to contain `M*`.
+//!
+//! Each constructor returns a [`Sphere`] `{Q, r}` with `‖M* − Q‖_F ≤ r`.
+//! Derivations are referenced next to each function; the geometric
+//! relations the paper proves (PGB ⊆ GB, RPB ⊆ DGB at the optimum,
+//! PGB = RPB at the optimum) are asserted in the test suite.
+
+use crate::linalg::{psd_split, Mat, PsdSplit};
+
+/// A Frobenius-norm ball `{X : ‖X − Q‖_F ≤ r}` containing `M*`.
+#[derive(Clone, Debug)]
+pub struct Sphere {
+    pub q: Mat,
+    pub r: f64,
+    /// true when `Q ⪰ O` by construction (enables the cheap min-eig path
+    /// in the SDLS rule, §3.1.2)
+    pub psd_center: bool,
+}
+
+impl Sphere {
+    pub fn new(q: Mat, r: f64, psd_center: bool) -> Sphere {
+        debug_assert!(r.is_finite() && r >= 0.0, "radius must be >= 0, got {r}");
+        Sphere { q, r, psd_center }
+    }
+
+    /// Does the sphere contain `X`? (tests)
+    pub fn contains(&self, x: &Mat) -> bool {
+        x.sub(&self.q).norm() <= self.r * (1.0 + 1e-12) + 1e-12
+    }
+}
+
+/// **GB** (Thm 3.2). For any feasible `M ⪰ O`:
+/// center `M − ∇P_λ(M)/(2λ)`, radius `‖∇P_λ(M)‖_F/(2λ)`.
+pub fn gb(m: &Mat, grad: &Mat, lambda: f64) -> Sphere {
+    let gn = grad.norm();
+    let mut q = m.clone();
+    q.axpy(-0.5 / lambda, grad);
+    Sphere::new(q, 0.5 * gn / lambda, false)
+}
+
+/// **PGB** (Thm 3.3): project the GB center onto the PSD cone;
+/// `r² = r_GB² − ‖[Q^GB]_−‖²`. Returns the sphere together with the split
+/// of the GB center — the `[Q^GB]_−` part doubles as the supporting
+/// hyperplane `P = −[Q^GB]_−` for the linear rule (§3.1.3, Fig 3a).
+pub fn pgb(m: &Mat, grad: &Mat, lambda: f64) -> (Sphere, PsdSplit) {
+    let g = gb(m, grad, lambda);
+    let split = psd_split(&g.q);
+    let r_sq = (g.r * g.r - split.minus_norm_sq).max(0.0);
+    (Sphere::new(split.plus.clone(), r_sq.sqrt(), true), split)
+}
+
+/// **DGB** (Thm 3.5): center = the primal feasible `M`,
+/// `r = sqrt(2·gap/λ)` where gap = `P_λ(M) − D_λ(α, Γ)`.
+pub fn dgb(m: &Mat, gap: f64, lambda: f64) -> Sphere {
+    Sphere::new(m.clone(), (2.0 * gap.max(0.0) / lambda).sqrt(), true)
+}
+
+/// **CDGB** (Thm 3.6): center = the dual iterate `M_λ(α) = [K]_+/λ`,
+/// `r = sqrt(G_D(α)/λ)` with `G_D(α) = P_λ(M_λ(α)) − D_λ(α)` — the caller
+/// provides that gap (it requires one extra primal evaluation at the dual
+/// iterate; the √2-smaller radius is the payoff).
+pub fn cdgb(k_plus: &Mat, gap_at_dual: f64, lambda: f64) -> Sphere {
+    let center = k_plus.scaled(1.0 / lambda);
+    Sphere::new(center, (gap_at_dual.max(0.0) / lambda).sqrt(), true)
+}
+
+/// **RPB** (Thm 3.7): given the *optimal* `M₀*` at λ₀, for λ₁:
+/// center `((λ₀+λ₁)/2λ₁)·M₀*`, radius `(|λ₀−λ₁|/2λ₁)·‖M₀*‖`.
+pub fn rpb(m0_star: &Mat, lambda0: f64, lambda1: f64) -> Sphere {
+    let c = (lambda0 + lambda1) / (2.0 * lambda1);
+    let r = (lambda0 - lambda1).abs() / (2.0 * lambda1) * m0_star.norm();
+    Sphere::new(m0_star.scaled(c), r, true)
+}
+
+/// **RRPB** (Thm 3.10): RPB with an approximate reference
+/// `‖M₀* − M₀‖ ≤ ε`:
+/// center `((λ₀+λ₁)/2λ₁)·M₀`, radius
+/// `(|λ₀−λ₁|/2λ₁)‖M₀‖ + ((|λ₀−λ₁|+λ₀+λ₁)/2λ₁)·ε`.
+pub fn rrpb(m0: &Mat, eps: f64, lambda0: f64, lambda1: f64) -> Sphere {
+    let dl = (lambda0 - lambda1).abs();
+    let c = (lambda0 + lambda1) / (2.0 * lambda1);
+    let r = dl / (2.0 * lambda1) * m0.norm() + (dl + lambda0 + lambda1) / (2.0 * lambda1) * eps;
+    Sphere::new(m0.scaled(c), r, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::loss::Loss;
+    use crate::runtime::NativeEngine;
+    use crate::solver::{Problem, Solver, SolverConfig};
+    use crate::triplet::TripletStore;
+    use crate::util::rng::Pcg64;
+    use crate::util::timer::PhaseTimers;
+
+    struct Fixture {
+        store: TripletStore,
+        loss: Loss,
+        lmax: f64,
+    }
+
+    fn fixture(seed: u64) -> Fixture {
+        let mut rng = Pcg64::seed(seed);
+        let ds = synthetic::gaussian_mixture("g", 40, 4, 2, 2.6, &mut rng);
+        let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+        let loss = Loss::smoothed_hinge(0.05);
+        let engine = NativeEngine::new(2);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        Fixture { store, loss, lmax }
+    }
+
+    fn solve(f: &Fixture, lambda: f64, tol: f64) -> Mat {
+        let engine = NativeEngine::new(2);
+        let mut prob = Problem::new(&f.store, f.loss, lambda);
+        let solver = Solver::new(SolverConfig {
+            tol,
+            tol_relative: false,
+            ..Default::default()
+        });
+        let (m, stats) = solver.solve(&mut prob, &engine, Mat::zeros(f.store.d, f.store.d), None);
+        assert!(stats.converged);
+        m
+    }
+
+    /// All bounds must contain a near-exact optimum when built from a
+    /// rough iterate — the fundamental safety property.
+    #[test]
+    fn all_bounds_contain_optimum() {
+        let f = fixture(1);
+        let engine = NativeEngine::new(2);
+        let lambda = f.lmax * 0.3;
+        let m_star = solve(&f, lambda, 1e-11);
+
+        // rough reference: a few iterations only
+        let mut prob = Problem::new(&f.store, f.loss, lambda);
+        let rough_solver = Solver::new(SolverConfig {
+            tol: 1e-2,
+            tol_relative: false,
+            max_iters: 50,
+            ..Default::default()
+        });
+        let (m_rough, _) =
+            rough_solver.solve(&mut prob, &engine, Mat::zeros(f.store.d, f.store.d), None);
+
+        let mut timers = PhaseTimers::default();
+        let ev = prob.eval(&m_rough, &engine, &mut timers);
+        let grad = prob.grad(&m_rough, &ev.k);
+        let (d_val, split) = prob.dual(&ev.margins, &ev.k, &mut timers);
+        let gap = ev.p - d_val;
+
+        let s_gb = gb(&m_rough, &grad, lambda);
+        assert!(s_gb.contains(&m_star), "GB violated");
+        let (s_pgb, _) = pgb(&m_rough, &grad, lambda);
+        assert!(s_pgb.contains(&m_star), "PGB violated");
+        let s_dgb = dgb(&m_rough, gap, lambda);
+        assert!(s_dgb.contains(&m_star), "DGB violated");
+
+        // CDGB: gap at the dual iterate
+        let center = split.plus.scaled(1.0 / lambda);
+        let ev_c = prob.eval(&center, &engine, &mut timers);
+        let s_cdgb = cdgb(&split.plus, ev_c.p - d_val, lambda);
+        assert!(s_cdgb.contains(&m_star), "CDGB violated");
+    }
+
+    #[test]
+    fn pgb_tighter_than_gb() {
+        let f = fixture(2);
+        let engine = NativeEngine::new(2);
+        let lambda = f.lmax * 0.2;
+        let mut prob = Problem::new(&f.store, f.loss, lambda);
+        let (m, _) = Solver::new(SolverConfig {
+            tol: 1e-3,
+            tol_relative: false,
+            ..Default::default()
+        })
+        .solve(&mut prob, &engine, Mat::zeros(4, 4), None);
+        let mut timers = PhaseTimers::default();
+        let ev = prob.eval(&m, &engine, &mut timers);
+        let grad = prob.grad(&m, &ev.k);
+        let (s_pgb, _) = pgb(&m, &grad, lambda);
+        let s_gb = gb(&m, &grad, lambda);
+        assert!(s_pgb.r <= s_gb.r + 1e-15);
+    }
+
+    /// Thm 3.8: at the previous-λ optimum, PGB (with the dual subgradient)
+    /// coincides with RPB — center and radius.
+    #[test]
+    fn pgb_equals_rpb_at_optimum() {
+        let f = fixture(3);
+        let engine = NativeEngine::new(2);
+        let l0 = f.lmax * 0.5;
+        let l1 = l0 * 0.8;
+        let m0 = solve(&f, l0, 1e-12);
+
+        // ∇P_{λ1}(M0*) with the dual-variable subgradient = λ1·M0* − K(M0*)
+        let prob1 = Problem::new(&f.store, f.loss, l1);
+        let mut timers = PhaseTimers::default();
+        let ev = prob1.eval(&m0, &engine, &mut timers);
+        let grad = prob1.grad(&m0, &ev.k);
+
+        let (s_pgb, _) = pgb(&m0, &grad, l1);
+        let s_rpb = rpb(&m0, l0, l1);
+        assert!(
+            s_pgb.q.sub(&s_rpb.q).max_abs() < 1e-6 * (1.0 + s_rpb.q.max_abs()),
+            "centers differ"
+        );
+        assert!(
+            (s_pgb.r - s_rpb.r).abs() < 1e-6 * (1.0 + s_rpb.r),
+            "radii differ: PGB={} RPB={}",
+            s_pgb.r,
+            s_rpb.r
+        );
+    }
+
+    /// Thm 3.9: at the previous-λ optimum, r_DGB = 2·r_RPB and the RPB
+    /// ball is inside the DGB ball.
+    #[test]
+    fn dgb_twice_rpb_at_optimum() {
+        let f = fixture(4);
+        let engine = NativeEngine::new(2);
+        let l0 = f.lmax * 0.5;
+        let l1 = l0 * 0.7;
+        let m0 = solve(&f, l0, 1e-12);
+
+        let prob1 = Problem::new(&f.store, f.loss, l1);
+        let mut timers = PhaseTimers::default();
+        let ev = prob1.eval(&m0, &engine, &mut timers);
+        let (d_val, _) = prob1.dual(&ev.margins, &ev.k, &mut timers);
+        let gap = ev.p - d_val;
+
+        let s_dgb = dgb(&m0, gap, l1);
+        let s_rpb = rpb(&m0, l0, l1);
+        assert!(
+            (s_dgb.r - 2.0 * s_rpb.r).abs() < 1e-5 * (1.0 + s_dgb.r),
+            "r_DGB={} vs 2 r_RPB={}",
+            s_dgb.r,
+            2.0 * s_rpb.r
+        );
+        // center distance = r_RPB (Appendix I) => inclusion
+        let cd = s_dgb.q.sub(&s_rpb.q).norm();
+        assert!((cd - s_rpb.r).abs() < 1e-5 * (1.0 + s_rpb.r));
+        assert!(cd + s_rpb.r <= s_dgb.r + 1e-9);
+    }
+
+    /// RRPB must contain the λ1 optimum when built from an ε-accurate λ0
+    /// solution; and with ε = 0 it reduces to RPB.
+    #[test]
+    fn rrpb_contains_next_optimum() {
+        let f = fixture(5);
+        let l0 = f.lmax * 0.4;
+        let l1 = l0 * 0.6;
+        let m0_star = solve(&f, l0, 1e-12);
+        let m1_star = solve(&f, l1, 1e-11);
+
+        // perturb the reference by a known amount
+        let mut rng = Pcg64::seed(99);
+        let mut noise = Mat::from_fn(4, 4, |_, _| rng.normal());
+        noise.symmetrize();
+        noise.scale(1e-3 / noise.norm());
+        let m0 = m0_star.add(&noise);
+        let eps = m0.sub(&m0_star).norm() * 1.0001;
+
+        let s = rrpb(&m0, eps, l0, l1);
+        assert!(s.contains(&m1_star), "RRPB violated");
+
+        let s0 = rrpb(&m0_star, 0.0, l0, l1);
+        let sr = rpb(&m0_star, l0, l1);
+        assert!((s0.r - sr.r).abs() < 1e-12);
+        assert!(s0.q.sub(&sr.q).max_abs() < 1e-12);
+    }
+
+    /// Thm 3.4 / convergence: bounds built at (near-)optimal references
+    /// have (near-)zero radius — DGB/CDGB via the gap, PGB via Thm 3.4.
+    #[test]
+    fn radii_vanish_at_optimum() {
+        let f = fixture(6);
+        let engine = NativeEngine::new(2);
+        let lambda = f.lmax * 0.3;
+        let m_star = solve(&f, lambda, 1e-12);
+        let prob = Problem::new(&f.store, f.loss, lambda);
+        let mut timers = PhaseTimers::default();
+        let ev = prob.eval(&m_star, &engine, &mut timers);
+        let grad = prob.grad(&m_star, &ev.k);
+        let (d_val, _) = prob.dual(&ev.margins, &ev.k, &mut timers);
+        let gap = (ev.p - d_val).max(0.0);
+
+        let scale = m_star.norm().max(1.0);
+        assert!(dgb(&m_star, gap, lambda).r < 1e-4 * scale);
+        let (s_pgb, _) = pgb(&m_star, &grad, lambda);
+        assert!(s_pgb.r < 1e-4 * scale, "PGB radius {}", s_pgb.r);
+        // GB radius does NOT vanish in general (Thm 3.4 discussion)
+        let s_gb = gb(&m_star, &grad, lambda);
+        assert!(s_gb.r >= s_pgb.r);
+    }
+}

@@ -1,0 +1,304 @@
+//! General-form range extension (paper §4 + Appendix K.1).
+//!
+//! Every sphere the paper derives can be written with a center affine in
+//! `1/λ` and a squared radius quadratic in `1/λ`:
+//!
+//!   Q(λ)  = A + B·(1/λ),        r²(λ) = a + b·(1/λ) + c·(1/λ²).
+//!
+//! Appendix K.1 gives the coefficients for GB, DGB, RPB and RRPB. The
+//! R-side sphere rule `⟨H,Q⟩ − r‖H‖ > c_r` is then equivalent to the
+//! intersection of one linear and one quadratic inequality in `u = 1/λ`
+//! (§4), which this module solves in closed form — so a *range of λ* can
+//! be certified for **any** of those bounds, not only RRPB (Thm 4.1 is
+//! recovered as a special case, which the tests assert).
+//!
+//! With `hq(u) = ⟨H,A⟩ + ⟨H,B⟩·u =: p + q·u` and threshold `c`:
+//!
+//!   R-rule  ⟺  p + q·u − c > 0   ∧  (p + q·u − c)² > ‖H‖²(a + b·u + c₂u²)
+//!   L-rule  ⟺  c − p − q·u > 0   ∧  (c − p − q·u)² > ‖H‖²(a + b·u + c₂u²)
+//!
+//! Both reduce to: linear side condition ∧ quadratic `αu² + βu + γ > 0`.
+
+use super::range::LambdaRange;
+
+/// Sphere family with center `A + B/λ` and radius² `a + b/λ + c/λ²`,
+/// pre-contracted against one triplet: `p = ⟨H,A⟩`, `q = ⟨H,B⟩`.
+#[derive(Clone, Copy, Debug)]
+pub struct RangeForm {
+    pub p: f64,
+    pub q: f64,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// `‖H‖_F²`
+    pub hn_sq: f64,
+}
+
+impl RangeForm {
+    /// DGB coefficients (Appendix K.1) for a *fixed* primal/dual reference
+    /// `(M, α)`: center = M (no 1/λ part), radius² = ‖M‖² + 2·L/λ + K²/λ²
+    /// where `L = Σ(ℓ + ℓ*)` and `K = ‖Σ α_t H_t + Γ‖`.
+    pub fn dgb(hm: f64, m_norm_sq: f64, l_sum: f64, k_norm: f64, hn: f64) -> RangeForm {
+        RangeForm {
+            p: hm,
+            q: 0.0,
+            a: m_norm_sq,
+            b: 2.0 * l_sum,
+            c: k_norm * k_norm,
+            hn_sq: hn * hn,
+        }
+    }
+
+    /// GB coefficients (Appendix K.1) for a fixed reference `M` with loss
+    /// subgradient aggregate `Ξ = Σ Ξ_t` (note `∇P = Ξ + λM`):
+    /// center = M/2 − Ξ/(2λ), radius² = ‖M‖²/4 + ⟨Ξ,M⟩/(2λ) + ‖Ξ‖²/(4λ²).
+    pub fn gb(hm: f64, hxi: f64, m_norm_sq: f64, xi_m: f64, xi_norm_sq: f64, hn: f64) -> RangeForm {
+        RangeForm {
+            p: 0.5 * hm,
+            q: -0.5 * hxi,
+            a: 0.25 * m_norm_sq,
+            b: 0.5 * xi_m,
+            c: 0.25 * xi_norm_sq,
+            hn_sq: hn * hn,
+        }
+    }
+
+    /// RRPB coefficients for the λ ≤ λ₀ branch (Appendix K.1):
+    /// center = M₀/2 + (λ₀/2)·M₀/λ,
+    /// radius = −‖M₀‖/2 + (λ₀‖M₀‖/2 + λ₀ε)/λ  (nonnegative on the branch).
+    /// The radius is affine in u, so radius² has
+    /// a = ‖M₀‖²/4, b = −‖M₀‖·(λ₀‖M₀‖/2 + λ₀ε), c = (λ₀‖M₀‖/2 + λ₀ε)².
+    pub fn rrpb_low(hm0: f64, m0_norm: f64, eps: f64, lambda0: f64, hn: f64) -> RangeForm {
+        let s = lambda0 * m0_norm / 2.0 + lambda0 * eps;
+        RangeForm {
+            p: 0.5 * hm0,
+            q: 0.5 * lambda0 * hm0,
+            a: 0.25 * m0_norm * m0_norm,
+            b: -m0_norm * s,
+            c: s * s,
+            hn_sq: hn * hn,
+        }
+    }
+}
+
+/// Solve `αu² + βu + γ > 0` for `u > 0`, returning up to two open
+/// u-intervals (ascending).
+fn quad_positive(alpha: f64, beta: f64, gamma: f64) -> Vec<(f64, f64)> {
+    const INF: f64 = f64::INFINITY;
+    if alpha.abs() < 1e-300 {
+        if beta.abs() < 1e-300 {
+            return if gamma > 0.0 { vec![(0.0, INF)] } else { vec![] };
+        }
+        let root = -gamma / beta;
+        return if beta > 0.0 {
+            vec![(root.max(0.0), INF)]
+        } else if root > 0.0 {
+            vec![(0.0, root)]
+        } else {
+            vec![]
+        };
+    }
+    let disc = beta * beta - 4.0 * alpha * gamma;
+    if disc <= 0.0 {
+        return if alpha > 0.0 { vec![(0.0, INF)] } else { vec![] };
+    }
+    let sq = disc.sqrt();
+    let (r1, r2) = {
+        let x1 = (-beta - sq) / (2.0 * alpha);
+        let x2 = (-beta + sq) / (2.0 * alpha);
+        (x1.min(x2), x1.max(x2))
+    };
+    if alpha > 0.0 {
+        // positive outside the roots
+        let mut out = Vec::new();
+        if r1 > 0.0 {
+            out.push((0.0, r1));
+        }
+        out.push((r2.max(0.0), INF));
+        out
+    } else {
+        // positive between the roots
+        if r2 <= 0.0 {
+            vec![]
+        } else {
+            vec![(r1.max(0.0), r2)]
+        }
+    }
+}
+
+fn intersect(a: (f64, f64), b: (f64, f64)) -> Option<(f64, f64)> {
+    let lo = a.0.max(b.0);
+    let hi = a.1.min(b.1);
+    (lo < hi).then_some((lo, hi))
+}
+
+/// λ ranges certifying the R-rule (`min > c_r`) for the sphere family.
+/// Returns intervals in λ (converted from u = 1/λ), merged & ascending.
+pub fn general_r_range(f: &RangeForm, c_r: f64) -> Vec<LambdaRange> {
+    solve(f, c_r, true)
+}
+
+/// λ ranges certifying the L-rule (`max < c_l`).
+pub fn general_l_range(f: &RangeForm, c_l: f64) -> Vec<LambdaRange> {
+    solve(f, c_l, false)
+}
+
+fn solve(f: &RangeForm, thr: f64, r_side: bool) -> Vec<LambdaRange> {
+    // signed margin s(u) = ±(p + q·u − thr) must be positive
+    let (s0, s1) = if r_side {
+        (f.p - thr, f.q)
+    } else {
+        (thr - f.p, -f.q)
+    };
+    // linear side condition s0 + s1·u > 0 on u > 0
+    let side: (f64, f64) = if s1.abs() < 1e-300 {
+        if s0 > 0.0 {
+            (0.0, f64::INFINITY)
+        } else {
+            return vec![];
+        }
+    } else {
+        let root = -s0 / s1;
+        if s1 > 0.0 {
+            (root.max(0.0), f64::INFINITY)
+        } else if root > 0.0 {
+            (0.0, root)
+        } else {
+            return vec![];
+        }
+    };
+    // quadratic condition s(u)² − hn²·r²(u) > 0
+    let alpha = s1 * s1 - f.hn_sq * f.c;
+    let beta = 2.0 * s0 * s1 - f.hn_sq * f.b;
+    let gamma = s0 * s0 - f.hn_sq * f.a;
+    let mut out = Vec::new();
+    for qi in quad_positive(alpha, beta, gamma) {
+        if let Some((ulo, uhi)) = intersect(qi, side) {
+            // u = 1/λ: (ulo, uhi) -> λ ∈ (1/uhi, 1/ulo)
+            let lo = if uhi.is_infinite() { 0.0 } else { 1.0 / uhi };
+            let hi = if ulo <= 0.0 { f64::INFINITY } else { 1.0 / ulo };
+            if lo < hi {
+                out.push(LambdaRange { lo, hi });
+            }
+        }
+    }
+    out.sort_by(|x, y| x.lo.partial_cmp(&y.lo).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::screening::bounds::rrpb;
+    use crate::screening::range::r_range;
+    use crate::util::quickcheck::forall;
+    use crate::util::rng::Pcg64;
+
+    fn random_case(rng: &mut Pcg64) -> (Mat, Mat, f64, f64) {
+        let d = 2 + rng.below(4);
+        let mut base = Mat::from_fn(d, d, |_, _| rng.normal());
+        base.symmetrize();
+        let m0 = crate::linalg::psd_project(&base).scaled(rng.uniform() * 2.0 + 0.1);
+        let a: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..d).map(|_| rng.normal() * rng.uniform()).collect();
+        let h = Mat::outer(&a).sub(&Mat::outer(&b));
+        let eps = rng.uniform() * 0.01;
+        let l0 = rng.uniform() * 10.0 + 0.5;
+        (m0, h, eps, l0)
+    }
+
+    /// On the λ ≤ λ₀ branch, the general solver must reproduce Thm 4.1's
+    /// closed form (our specialized `r_range`).
+    #[test]
+    fn recovers_thm41_below_lambda0() {
+        forall("general-vs-thm41", 64, |rng| {
+            let (m0, h, eps, l0) = random_case(rng);
+            let (hm, hn, mn) = (m0.dot(&h), h.norm(), m0.norm());
+            let special = r_range(hm, hn, mn, eps, l0, 1.0);
+            let form = RangeForm::rrpb_low(hm, mn, eps, l0, hn);
+            let general = general_r_range(&form, 1.0);
+            // compare membership on a grid of λ ≤ λ₀
+            for k in 1..=30 {
+                let lam = l0 * k as f64 / 30.0;
+                let want = special.contains(lam) && lam <= l0;
+                let got = general.iter().any(|r| r.contains(lam)) && lam <= l0;
+                if want != got {
+                    let near = (lam - special.lo).abs() < 1e-6 * l0
+                        || (lam - special.hi).abs() < 1e-6 * l0;
+                    if !near {
+                        return Err(format!(
+                            "λ={lam}: thm41={want} general={got} (special {special:?}, general {general:?})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The general ranges must match brute-force rule evaluation for the
+    /// RRPB sphere on its valid branch.
+    #[test]
+    fn matches_bruteforce_rrpb() {
+        forall("general-range-brute", 48, |rng| {
+            let (m0, h, eps, l0) = random_case(rng);
+            let (hm, hn, mn) = (m0.dot(&h), h.norm(), m0.norm());
+            let form = RangeForm::rrpb_low(hm, mn, eps, l0, hn);
+            let ranges = general_r_range(&form, 1.0);
+            for k in 1..=30 {
+                let lam = l0 * k as f64 / 30.0; // λ ≤ λ₀ branch only
+                let s = rrpb(&m0, eps, l0, lam);
+                let fires = s.q.dot(&h) - s.r * h.norm() > 1.0;
+                let inside = ranges.iter().any(|r| r.contains(lam));
+                if fires != inside {
+                    let near = ranges.iter().any(|r| {
+                        (lam - r.lo).abs() < 1e-6 * l0 || (lam - r.hi).abs() < 1e-6 * l0
+                    });
+                    if !near {
+                        return Err(format!("λ={lam}: fires={fires} inside={inside}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quad_positive_cases() {
+        // upward parabola with two positive roots -> outside intervals
+        let v = quad_positive(1.0, -3.0, 2.0); // roots 1, 2
+        assert_eq!(v.len(), 2);
+        assert!((v[0].1 - 1.0).abs() < 1e-12 && (v[1].0 - 2.0).abs() < 1e-12);
+        // downward parabola -> between roots
+        let v = quad_positive(-1.0, 3.0, -2.0);
+        assert_eq!(v.len(), 1);
+        assert!((v[0].0 - 1.0).abs() < 1e-12 && (v[0].1 - 2.0).abs() < 1e-12);
+        // no real roots, positive leading -> everywhere
+        assert_eq!(quad_positive(1.0, 0.0, 1.0), vec![(0.0, f64::INFINITY)]);
+        // linear fallback
+        assert_eq!(quad_positive(0.0, 1.0, -1.0), vec![(1.0, f64::INFINITY)]);
+        // constant negative -> empty
+        assert!(quad_positive(0.0, 0.0, -1.0).is_empty());
+    }
+
+    /// DGB range form: at u = 1/λ₀ with an exact reference the radius
+    /// must equal the DGB radius and the rule match direct evaluation.
+    #[test]
+    fn dgb_form_consistent_at_reference() {
+        let mut rng = Pcg64::seed(9);
+        let (m0, h, _, l0) = random_case(&mut rng);
+        let (hm, hn) = (m0.dot(&h), h.norm());
+        // synthetic loss aggregates
+        let l_sum = 3.7;
+        let k_norm = 2.2;
+        let form = RangeForm::dgb(hm, m0.norm_sq(), l_sum, k_norm, hn);
+        // radius² at λ: direct formula
+        let lam = l0 * 0.8;
+        let r_sq = form.a + form.b / lam + form.c / (lam * lam);
+        let fires = hm - r_sq.max(0.0).sqrt() * hn > 1.0;
+        let ranges = general_r_range(&form, 1.0);
+        let inside = ranges.iter().any(|r| r.contains(lam));
+        assert_eq!(fires, inside);
+    }
+}

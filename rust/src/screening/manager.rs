@@ -1,0 +1,493 @@
+//! Screening orchestration: build the configured sphere from solver state,
+//! evaluate the configured rule over all active triplets, return the
+//! screened id lists.
+//!
+//! Cost structure follows the paper's §3.3 analysis:
+//! - DGB's center is the iterate itself ⇒ `⟨H_t,Q⟩` *reuses* the margins
+//!   already computed for the objective (no extra kernel pass);
+//! - RPB/RRPB centers are scalar multiples of the fixed reference `M₀` ⇒
+//!   one margins pass per λ, cached and reused across dynamic screenings;
+//! - GB/PGB/CDGB centers move with the iterate ⇒ one fresh margins pass
+//!   per screening invocation (the extra inner-product cost the paper
+//!   attributes to PGB);
+//! - the SDLS rule additionally pays per-triplet eigen work.
+
+use super::bounds::{self, Sphere};
+use super::rules::{self, Decision};
+use super::sdls::{self, SdlsQuery};
+use super::{BoundKind, RuleKind, ScreeningConfig};
+use crate::linalg::psd_split;
+use crate::runtime::Engine;
+use crate::solver::{Problem, ScreenCtx};
+use crate::util::timer::PhaseTimers;
+
+/// Reference solution for the regularization-path bounds.
+#[derive(Clone, Debug)]
+pub struct RefSolution {
+    pub m0: crate::linalg::Mat,
+    pub lambda0: f64,
+    /// `‖M₀* − M₀‖ ≤ ε` certificate (from the λ₀ duality gap, Thm 3.5)
+    pub eps: f64,
+}
+
+/// Cumulative screening statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ScreeningStats {
+    pub calls: usize,
+    pub screened_l: usize,
+    pub screened_r: usize,
+    /// total triplet-rule evaluations
+    pub rule_evals: usize,
+}
+
+/// Stateful screening engine for one regularization-path run.
+pub struct ScreeningManager {
+    pub cfg: ScreeningConfig,
+    reference: Option<RefSolution>,
+    /// `⟨H_t, M₀⟩` for every triplet id (cached at `set_reference`)
+    ref_margins: Vec<f64>,
+    pub stats: ScreeningStats,
+}
+
+impl ScreeningManager {
+    pub fn new(cfg: ScreeningConfig) -> ScreeningManager {
+        ScreeningManager {
+            cfg,
+            reference: None,
+            ref_margins: Vec::new(),
+            stats: ScreeningStats::default(),
+        }
+    }
+
+    /// Install the reference solution (previous λ on the path). Computes
+    /// and caches `⟨H_t, M₀⟩` for all triplets — one margins pass.
+    pub fn set_reference(
+        &mut self,
+        m0: crate::linalg::Mat,
+        lambda0: f64,
+        eps: f64,
+        store: &crate::triplet::TripletStore,
+        engine: &dyn Engine,
+    ) {
+        let mut margins = vec![0.0; store.len()];
+        engine.margins(&m0, &store.a, &store.b, &mut margins);
+        self.reference = Some(RefSolution { m0, lambda0, eps });
+        self.ref_margins = margins;
+    }
+
+    pub fn reference(&self) -> Option<&RefSolution> {
+        self.reference.as_ref()
+    }
+
+    /// Build the configured sphere from the current solver state.
+    /// Returns None when prerequisites are missing (e.g. RPB without a
+    /// reference) — the caller then skips screening.
+    pub fn build_sphere(
+        &self,
+        problem: &Problem,
+        ctx: &ScreenCtx,
+        engine: &dyn Engine,
+    ) -> Option<Sphere> {
+        let lambda = problem.lambda;
+        Some(match self.cfg.bound {
+            BoundKind::Gb => bounds::gb(ctx.m, ctx.grad, lambda),
+            BoundKind::Pgb => bounds::pgb(ctx.m, ctx.grad, lambda).0,
+            BoundKind::Dgb => bounds::dgb(ctx.m, ctx.gap, lambda),
+            BoundKind::Cdgb => {
+                // gap at the dual iterate M_λ(α) = [K]_+/λ: one extra
+                // primal evaluation (Thm 3.6 discussion)
+                let center = ctx.k_plus.scaled(1.0 / lambda);
+                let mut scratch = PhaseTimers::default();
+                let ev = problem.eval(&center, engine, &mut scratch);
+                bounds::cdgb(ctx.k_plus, ev.p - ctx.d, lambda)
+            }
+            BoundKind::Rpb => {
+                let r = self.reference.as_ref()?;
+                bounds::rpb(&r.m0, r.lambda0, lambda)
+            }
+            BoundKind::Rrpb => {
+                let r = self.reference.as_ref()?;
+                bounds::rrpb(&r.m0, r.eps, r.lambda0, lambda)
+            }
+        })
+    }
+
+    /// `⟨H_t, Q⟩` for all active triplets, exploiting center structure.
+    fn center_margins(
+        &self,
+        sphere: &Sphere,
+        problem: &Problem,
+        ctx: &ScreenCtx,
+        engine: &dyn Engine,
+    ) -> Vec<f64> {
+        match self.cfg.bound {
+            BoundKind::Dgb => ctx.margins.to_vec(),
+            BoundKind::Rpb | BoundKind::Rrpb => {
+                let r = self.reference.as_ref().expect("checked in build_sphere");
+                let scale = (r.lambda0 + problem.lambda) / (2.0 * problem.lambda);
+                problem
+                    .active_idx()
+                    .iter()
+                    .map(|&t| scale * self.ref_margins[t])
+                    .collect()
+            }
+            _ => {
+                let mut hq = vec![0.0; problem.active_idx().len()];
+                engine.margins(&sphere.q, problem.active_a(), problem.active_b(), &mut hq);
+                hq
+            }
+        }
+    }
+
+    /// Run one screening pass; returns `(new_l, new_r)` triplet ids.
+    pub fn screen(
+        &mut self,
+        problem: &Problem,
+        ctx: &ScreenCtx,
+        engine: &dyn Engine,
+    ) -> (Vec<usize>, Vec<usize>) {
+        let Some(sphere) = self.build_sphere(problem, ctx, engine) else {
+            return (vec![], vec![]);
+        };
+        self.stats.calls += 1;
+        let hq = self.center_margins(&sphere, problem, ctx, engine);
+        let thr_l = problem.loss.l_threshold();
+        let thr_r = problem.loss.r_threshold();
+        let hn = problem.active_h_norm();
+        let ids = problem.active_idx();
+        self.stats.rule_evals += ids.len();
+
+        let mut new_l = Vec::new();
+        let mut new_r = Vec::new();
+        match self.cfg.rule {
+            RuleKind::Sphere => {
+                for (k, &t) in ids.iter().enumerate() {
+                    match rules::sphere_rule(hq[k], hn[k], sphere.r, thr_l, thr_r) {
+                        Decision::ScreenL => new_l.push(t),
+                        Decision::ScreenR => new_r.push(t),
+                        Decision::None => {}
+                    }
+                }
+            }
+            RuleKind::Linear => {
+                // supporting hyperplane of the PSD cone (§3.1.3): prefer
+                // P = −[Q^GB]_− from the projection of the gradient-step
+                // point M − ∇P̃/(2λ) — the halfspace Fig 3(a) shows is
+                // tighter than PGB; fall back to the optimizer's own
+                // pre-projection split, then to the plain sphere rule.
+                let mut gb_center = ctx.m.clone();
+                gb_center.axpy(-0.5 / problem.lambda, ctx.grad);
+                let gb_split = psd_split(&gb_center);
+                let p = if gb_split.minus_norm_sq > 1e-24 {
+                    Some(gb_split.minus.scaled(-1.0))
+                } else {
+                    ctx.pre_split.map(|s| s.minus.scaled(-1.0))
+                };
+                match p {
+                    Some(p) if p.norm_sq() > 0.0 => {
+                        let mut hp = vec![0.0; ids.len()];
+                        engine.margins(&p, problem.active_a(), problem.active_b(), &mut hp);
+                        let pq = p.dot(&sphere.q);
+                        let pn_sq = p.norm_sq();
+                        for (k, &t) in ids.iter().enumerate() {
+                            match rules::linear_rule(
+                                hq[k], hn[k], hp[k], pq, pn_sq, sphere.r, thr_l, thr_r,
+                            ) {
+                                Decision::ScreenL => new_l.push(t),
+                                Decision::ScreenR => new_r.push(t),
+                                Decision::None => {}
+                            }
+                        }
+                    }
+                    _ => {
+                        for (k, &t) in ids.iter().enumerate() {
+                            match rules::sphere_rule(hq[k], hn[k], sphere.r, thr_l, thr_r) {
+                                Decision::ScreenL => new_l.push(t),
+                                Decision::ScreenR => new_r.push(t),
+                                Decision::None => {}
+                            }
+                        }
+                    }
+                }
+            }
+            RuleKind::SemiDefinite => {
+                // sphere decision is implied by the SDLS decision (smaller
+                // feasible set) — run it first, SDLS only on the undecided;
+                // per-triplet dual ascents are independent → parallel
+                let r_sq = sphere.r * sphere.r;
+                let q_norm_sq = sphere.q.norm_sq();
+                // anchor margins for non-PSD centers: X0 = [Q]_+ must be
+                // inside the sphere for the anchor argument to hold
+                let anchor = if sphere.psd_center {
+                    None
+                } else {
+                    let split = psd_split(&sphere.q);
+                    if split.minus_norm_sq.sqrt() <= sphere.r {
+                        let mut hx0 = vec![0.0; ids.len()];
+                        engine.margins(&split.plus, problem.active_a(), problem.active_b(), &mut hx0);
+                        Some(hx0)
+                    } else {
+                        None // no certified anchor: SDLS cannot conclude
+                    }
+                };
+                let sphere_ref = &sphere;
+                let anchor_ref = &anchor;
+                let hq_ref = &hq;
+                let max_iter = self.cfg.sdls_max_iter;
+                let workers = crate::util::parallel::default_threads();
+                let chunks = crate::util::parallel::par_ranges(ids.len(), workers, |range| {
+                    let mut l = Vec::new();
+                    let mut r = Vec::new();
+                    for k in range {
+                        let t = ids[k];
+                        match rules::sphere_rule(hq_ref[k], hn[k], sphere_ref.r, thr_l, thr_r) {
+                            Decision::ScreenL => {
+                                l.push(t);
+                                continue;
+                            }
+                            Decision::ScreenR => {
+                                r.push(t);
+                                continue;
+                            }
+                            Decision::None => {}
+                        }
+                        let hx0 = if sphere_ref.psd_center {
+                            hq_ref[k]
+                        } else {
+                            match anchor_ref {
+                                Some(v) => v[k],
+                                None => continue,
+                            }
+                        };
+                        let query = SdlsQuery {
+                            q: &sphere_ref.q,
+                            q_norm_sq,
+                            psd_center: sphere_ref.psd_center,
+                            r_sq,
+                            a: problem.active_a().row(k),
+                            b: problem.active_b().row(k),
+                            hq: hq_ref[k],
+                            hn: hn[k],
+                            hx0,
+                        };
+                        if sdls::sdls_screens_r(&query, thr_r, max_iter) {
+                            r.push(t);
+                        } else if sdls::sdls_screens_l(&query, thr_l, max_iter) {
+                            l.push(t);
+                        }
+                    }
+                    (l, r)
+                });
+                for (l, r) in chunks {
+                    new_l.extend(l);
+                    new_r.extend(r);
+                }
+            }
+        }
+        self.stats.screened_l += new_l.len();
+        self.stats.screened_r += new_r.len();
+        (new_l, new_r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::Mat;
+    use crate::loss::Loss;
+    use crate::runtime::NativeEngine;
+    use crate::solver::{Solver, SolverConfig};
+    use crate::triplet::TripletStore;
+    use crate::util::rng::Pcg64;
+
+    struct Fix {
+        store: TripletStore,
+        loss: Loss,
+        lmax: f64,
+        engine: NativeEngine,
+    }
+
+    fn fix(seed: u64) -> Fix {
+        let mut rng = Pcg64::seed(seed);
+        let ds = synthetic::gaussian_mixture("g", 45, 4, 3, 2.6, &mut rng);
+        let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+        let loss = Loss::smoothed_hinge(0.05);
+        let engine = NativeEngine::new(2);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        Fix {
+            store,
+            loss,
+            lmax,
+            engine,
+        }
+    }
+
+    fn exact_solution(f: &Fix, lambda: f64) -> Mat {
+        let mut prob = Problem::new(&f.store, f.loss, lambda);
+        let (m, st) = Solver::new(SolverConfig {
+            tol: 1e-12,
+            tol_relative: false,
+            max_iters: 50_000,
+            ..Default::default()
+        })
+        .solve(&mut prob, &f.engine, Mat::zeros(4, 4), None);
+        assert!(st.converged);
+        m
+    }
+
+    /// The master safety test: for every bound × rule, run the solver with
+    /// screening and verify each screened triplet against the true optimum
+    /// membership (margins at a 1e-12-gap solution).
+    #[test]
+    fn all_bound_rule_combinations_are_safe() {
+        let f = fix(1);
+        let lambda = f.lmax * 0.15;
+        let m_star = exact_solution(&f, lambda);
+        let mut true_margins = vec![0.0; f.store.len()];
+        f.engine
+            .margins(&m_star, &f.store.a, &f.store.b, &mut true_margins);
+
+        for bound in [
+            BoundKind::Gb,
+            BoundKind::Pgb,
+            BoundKind::Dgb,
+            BoundKind::Cdgb,
+            BoundKind::Rrpb,
+            BoundKind::Rpb,
+        ] {
+            for rule in [RuleKind::Sphere, RuleKind::Linear, RuleKind::SemiDefinite] {
+                let mut mgr = ScreeningManager::new(ScreeningConfig::new(bound, rule));
+                if bound.needs_reference() {
+                    // reference: solve at a larger λ0 accurately
+                    let l0 = lambda / 0.8;
+                    let m0 = exact_solution(&f, l0);
+                    mgr.set_reference(m0, l0, 1e-9, &f.store, &f.engine);
+                }
+                let mut prob = Problem::new(&f.store, f.loss, lambda);
+                let engine = &f.engine;
+                let mut cb = |p: &Problem, ctx: &ScreenCtx| mgr.screen(p, ctx, engine);
+                let solver = Solver::new(SolverConfig {
+                    tol: 1e-10,
+                    tol_relative: false,
+                    ..Default::default()
+                });
+                let (m, stats) = solver.solve(&mut prob, &f.engine, Mat::zeros(4, 4), Some(&mut cb));
+                assert!(stats.converged, "{bound:?}/{rule:?} did not converge");
+                // solution must match unscreened optimum
+                let diff = m.sub(&m_star).max_abs();
+                assert!(
+                    diff < 1e-4 * (1.0 + m_star.max_abs()),
+                    "{bound:?}/{rule:?}: solution drifted by {diff}"
+                );
+                // every screened triplet is truly in L*/R*
+                for t in 0..f.store.len() {
+                    match prob.status().get(t) {
+                        crate::triplet::TripletStatus::ScreenedL => assert!(
+                            true_margins[t] < f.loss.l_threshold() + 1e-6,
+                            "{bound:?}/{rule:?}: t={t} screened L but margin {}",
+                            true_margins[t]
+                        ),
+                        crate::triplet::TripletStatus::ScreenedR => assert!(
+                            true_margins[t] > f.loss.r_threshold() - 1e-6,
+                            "{bound:?}/{rule:?}: t={t} screened R but margin {}",
+                            true_margins[t]
+                        ),
+                        crate::triplet::TripletStatus::Active => {}
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dgb_reuses_objective_margins() {
+        // center_margins for DGB must be exactly ctx.margins
+        let f = fix(2);
+        let lambda = f.lmax * 0.3;
+        let mut prob = Problem::new(&f.store, f.loss, lambda);
+        let mut timers = PhaseTimers::default();
+        let m = Mat::identity(4).scaled(0.01);
+        let ev = prob.eval(&m, &f.engine, &mut timers);
+        let grad = prob.grad(&m, &ev.k);
+        let (d_val, split) = prob.dual(&ev.margins, &ev.k, &mut timers);
+        let ctx = ScreenCtx {
+            m: &m,
+            grad: &grad,
+            p: ev.p,
+            d: d_val,
+            gap: ev.p - d_val,
+            k_plus: &split.plus,
+            pre_split: None,
+            margins: &ev.margins,
+            iter: 0,
+        };
+        let mgr = ScreeningManager::new(ScreeningConfig::new(BoundKind::Dgb, RuleKind::Sphere));
+        let sphere = mgr.build_sphere(&prob, &ctx, &f.engine).unwrap();
+        let hq = mgr.center_margins(&sphere, &prob, &ctx, &f.engine);
+        assert_eq!(hq, ev.margins);
+        let _ = &mut prob;
+    }
+
+    #[test]
+    fn rpb_without_reference_skips() {
+        let f = fix(3);
+        let mut mgr = ScreeningManager::new(ScreeningConfig::new(BoundKind::Rpb, RuleKind::Sphere));
+        let prob = Problem::new(&f.store, f.loss, f.lmax * 0.5);
+        let m = Mat::zeros(4, 4);
+        let grad = Mat::zeros(4, 4);
+        let kp = Mat::zeros(4, 4);
+        let margins = vec![0.0; prob.active_idx().len()];
+        let ctx = ScreenCtx {
+            m: &m,
+            grad: &grad,
+            p: 0.0,
+            d: 0.0,
+            gap: 0.0,
+            k_plus: &kp,
+            pre_split: None,
+            margins: &margins,
+            iter: 0,
+        };
+        let (l, r) = mgr.screen(&prob, &ctx, &f.engine);
+        assert!(l.is_empty() && r.is_empty());
+        assert_eq!(mgr.stats.calls, 0);
+    }
+
+    #[test]
+    fn tighter_bounds_screen_no_less() {
+        // With identical reference state, PGB (⊆ GB) must screen at least
+        // as many triplets as GB under the sphere rule.
+        let f = fix(4);
+        let lambda = f.lmax * 0.2;
+        // moderately accurate iterate
+        let mut prob = Problem::new(&f.store, f.loss, lambda);
+        let (m, _) = Solver::new(SolverConfig {
+            tol: 1e-4,
+            tol_relative: false,
+            ..Default::default()
+        })
+        .solve(&mut prob, &f.engine, Mat::zeros(4, 4), None);
+        let mut timers = PhaseTimers::default();
+        let ev = prob.eval(&m, &f.engine, &mut timers);
+        let grad = prob.grad(&m, &ev.k);
+        let (d_val, split) = prob.dual(&ev.margins, &ev.k, &mut timers);
+        let ctx = ScreenCtx {
+            m: &m,
+            grad: &grad,
+            p: ev.p,
+            d: d_val,
+            gap: ev.p - d_val,
+            k_plus: &split.plus,
+            pre_split: None,
+            margins: &ev.margins,
+            iter: 0,
+        };
+        let count = |bound: BoundKind| {
+            let mut mgr = ScreeningManager::new(ScreeningConfig::new(bound, RuleKind::Sphere));
+            let (l, r) = mgr.screen(&prob, &ctx, &f.engine);
+            l.len() + r.len()
+        };
+        assert!(count(BoundKind::Pgb) >= count(BoundKind::Gb));
+    }
+}

@@ -1,0 +1,109 @@
+//! Safe triplet screening (paper §3–§4).
+//!
+//! Two-step structure exactly as in the paper:
+//!
+//! 1. **Sphere bound** (§3.2) — a hypersphere `B(Q, r)` guaranteed to
+//!    contain the optimal `M*`, built from the current solver state:
+//!    GB / PGB (gradient-based, Thm 3.2/3.3), DGB / CDGB (duality-gap,
+//!    Thm 3.5/3.6), RPB / RRPB (regularization path, Thm 3.7/3.10).
+//! 2. **Screening rule** (§3.1) — per triplet, bound `⟨X, H_t⟩` over `B`
+//!    (optionally intersected with the PSD cone or its linear relaxation)
+//!    and compare against the loss thresholds:
+//!       max < 1−γ ⟹ t ∈ L*  (α* = 1)      min > 1 ⟹ t ∈ R*  (α* = 0).
+//!
+//! Plus the range-based extension (§4): intervals of λ on which a rule is
+//! guaranteed to keep firing, so the path driver can skip rule evaluation
+//! altogether.
+
+pub mod bounds;
+pub mod general_range;
+mod manager;
+pub mod range;
+pub mod rules;
+pub mod sdls;
+
+pub use bounds::Sphere;
+pub use manager::{RefSolution, ScreeningManager, ScreeningStats};
+pub use range::{l_range, r_range, LambdaRange};
+
+/// Which sphere bound to construct (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundKind {
+    /// Gradient Bound (Thm 3.2)
+    Gb,
+    /// Projected Gradient Bound (Thm 3.3)
+    Pgb,
+    /// Duality Gap Bound (Thm 3.5)
+    Dgb,
+    /// Constrained Duality Gap Bound (Thm 3.6)
+    Cdgb,
+    /// Regularization Path Bound (Thm 3.7; requires the previous-λ optimum)
+    Rpb,
+    /// Relaxed Regularization Path Bound (Thm 3.10)
+    Rrpb,
+}
+
+impl BoundKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BoundKind::Gb => "GB",
+            BoundKind::Pgb => "PGB",
+            BoundKind::Dgb => "DGB",
+            BoundKind::Cdgb => "CDGB",
+            BoundKind::Rpb => "RPB",
+            BoundKind::Rrpb => "RRPB",
+        }
+    }
+
+    /// Bounds that need a reference solution from a previous λ.
+    pub fn needs_reference(&self) -> bool {
+        matches!(self, BoundKind::Rpb | BoundKind::Rrpb)
+    }
+}
+
+/// Which screening rule to evaluate on the sphere (paper §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleKind {
+    /// plain sphere rule (§3.1.1, eq. (5))
+    Sphere,
+    /// sphere ∩ halfspace relaxation of the PSD cone (§3.1.3, Thm 3.1)
+    Linear,
+    /// sphere ∩ PSD cone via SDLS dual ascent (§3.1.2)
+    SemiDefinite,
+}
+
+impl RuleKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleKind::Sphere => "sphere",
+            RuleKind::Linear => "linear",
+            RuleKind::SemiDefinite => "semidefinite",
+        }
+    }
+}
+
+/// Full screening configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ScreeningConfig {
+    pub bound: BoundKind,
+    pub rule: RuleKind,
+    /// max SDLS dual-ascent iterations per triplet
+    pub sdls_max_iter: usize,
+}
+
+impl ScreeningConfig {
+    pub fn new(bound: BoundKind, rule: RuleKind) -> ScreeningConfig {
+        ScreeningConfig {
+            bound,
+            rule,
+            sdls_max_iter: 12,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self.rule {
+            RuleKind::Sphere => self.bound.name().to_string(),
+            _ => format!("{}+{}", self.bound.name(), self.rule.name()),
+        }
+    }
+}

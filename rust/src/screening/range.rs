@@ -1,0 +1,197 @@
+//! Range-based extension (paper §4, Thm 4.1): intervals of λ on which a
+//! triplet's screening rule is guaranteed to keep holding, evaluated from
+//! one RRPB reference solution `M₀` (accuracy ε) at λ₀.
+//!
+//! For the R-rule with threshold `c_r` (paper: 2 = 2·c_r with c_r = 1) the
+//! sphere rule under the RRPB sphere becomes, after clearing 2λ:
+//!
+//!   λ ≤ λ₀:  (λ+λ₀)·hm − (λ₀−λ)·mn·hn − 2λ₀ε·hn > 2λ·c_r
+//!   λ ≥ λ₀:  (λ+λ₀)·hm − (λ−λ₀)·mn·hn − 2λε·hn  > 2λ·c_r
+//!
+//! with `hm = ⟨H,M₀⟩`, `hn = ‖H‖`, `mn = ‖M₀‖` — linear in λ, so each side
+//! yields a closed-form endpoint (Appendix K.2). The L-side (threshold
+//! `c_l = 1−γ`, rule `hq + r·hn < c_l`) follows by the same algebra; the
+//! paper derives only the R-side, the L-side is our §8 extension and is
+//! verified against brute-force rule evaluation in the tests.
+
+/// A (possibly empty / half-open) λ interval `(lo, hi)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LambdaRange {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl LambdaRange {
+    pub const EMPTY: LambdaRange = LambdaRange {
+        lo: f64::INFINITY,
+        hi: f64::NEG_INFINITY,
+    };
+
+    pub fn is_empty(&self) -> bool {
+        !(self.lo < self.hi)
+    }
+
+    pub fn contains(&self, lambda: f64) -> bool {
+        self.lo < lambda && lambda < self.hi
+    }
+}
+
+/// R-side range (Thm 4.1): λ interval on which the RRPB sphere rule
+/// certifies `t ∈ R*`. `c_r` is the zero-part threshold (1 for both
+/// losses). Returns EMPTY when the validity condition fails.
+pub fn r_range(hm: f64, hn: f64, mn: f64, eps: f64, lambda0: f64, c_r: f64) -> LambdaRange {
+    // λ ≤ λ₀ branch: λ·(hm + mn·hn − 2c_r) > λ₀·(mn·hn − hm + 2ε·hn)
+    let denom_a = hm + mn * hn - 2.0 * c_r;
+    if denom_a <= 0.0 {
+        // Thm 4.1 validity condition (⟨H,M₀⟩ − 2 + ‖H‖‖M₀‖ > 0) fails:
+        // the rule cannot hold anywhere below λ₀ — and the λ ≥ λ₀ branch
+        // needs the rule at λ₀ itself, which this also excludes.
+        return LambdaRange::EMPTY;
+    }
+    let lo = lambda0 * (mn * hn - hm + 2.0 * eps * hn) / denom_a;
+    // λ ≥ λ₀ branch: λ·(mn·hn − hm + 2ε·hn + 2c_r) < λ₀·(mn·hn + hm)
+    let denom_b = mn * hn - hm + 2.0 * eps * hn + 2.0 * c_r;
+    let hi = if denom_b > 0.0 {
+        lambda0 * (mn * hn + hm) / denom_b
+    } else {
+        f64::INFINITY // cannot happen for c_r > 0 by Cauchy–Schwarz, kept safe
+    };
+    LambdaRange { lo, hi }
+}
+
+/// L-side range (our extension of Thm 4.1): λ interval on which the RRPB
+/// sphere rule certifies `t ∈ L*`. `c_l = 1 − γ`.
+pub fn l_range(hm: f64, hn: f64, mn: f64, eps: f64, lambda0: f64, c_l: f64) -> LambdaRange {
+    if c_l <= 0.0 {
+        return LambdaRange::EMPTY;
+    }
+    // λ ≤ λ₀ branch: (λ+λ₀)hm + (λ₀−λ)mn·hn + 2λ₀ε·hn < 2λ·c_l
+    //   ⇔ λ·(hm − mn·hn − 2c_l) < −λ₀·(hm + mn·hn + 2ε·hn)
+    // coefficient is < 0 (hm ≤ mn·hn by C-S, c_l > 0), so dividing flips:
+    let denom_a = mn * hn - hm + 2.0 * c_l;
+    debug_assert!(denom_a > 0.0);
+    let lo = lambda0 * (hm + mn * hn + 2.0 * eps * hn) / denom_a;
+    // λ ≥ λ₀ branch: λ·(hm + mn·hn + 2ε·hn − 2c_l) < λ₀·(mn·hn − hm)
+    let denom_b = hm + mn * hn + 2.0 * eps * hn - 2.0 * c_l;
+    let hi = if denom_b > 0.0 {
+        lambda0 * (mn * hn - hm) / denom_b
+    } else {
+        f64::INFINITY // rule holds for every λ ≥ λ₀
+    };
+    LambdaRange { lo, hi }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::screening::bounds::rrpb;
+    use crate::util::quickcheck::forall;
+    use crate::util::rng::Pcg64;
+
+    /// Brute-force check: does the RRPB sphere rule fire at λ?
+    fn rule_fires_r(m0: &Mat, h: &Mat, eps: f64, l0: f64, l: f64, c_r: f64) -> bool {
+        let s = rrpb(m0, eps, l0, l);
+        s.q.dot(h) - s.r * h.norm() > c_r
+    }
+
+    fn rule_fires_l(m0: &Mat, h: &Mat, eps: f64, l0: f64, l: f64, c_l: f64) -> bool {
+        let s = rrpb(m0, eps, l0, l);
+        s.q.dot(h) + s.r * h.norm() < c_l
+    }
+
+    fn random_case(rng: &mut Pcg64) -> (Mat, Mat, f64, f64) {
+        let d = 2 + rng.below(4);
+        let mut base = Mat::from_fn(d, d, |_, _| rng.normal());
+        base.symmetrize();
+        let m0 = crate::linalg::psd_project(&base).scaled(rng.uniform() * 2.0 + 0.1);
+        let a: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..d).map(|_| rng.normal() * rng.uniform()).collect();
+        let h = Mat::outer(&a).sub(&Mat::outer(&b));
+        let eps = rng.uniform() * 0.01;
+        let l0 = rng.uniform() * 10.0 + 0.5;
+        (m0, h, eps, l0)
+    }
+
+    #[test]
+    fn r_range_matches_bruteforce() {
+        forall("r-range", 64, |rng| {
+            let (m0, h, eps, l0) = random_case(rng);
+            let (hm, hn, mn) = (m0.dot(&h), h.norm(), m0.norm());
+            let range = r_range(hm, hn, mn, eps, l0, 1.0);
+            // sample λ across (0.05 λ₀, 20 λ₀): range membership must
+            // exactly match direct rule evaluation
+            for k in 1..=40 {
+                let l = l0 * 0.05 * k as f64;
+                let fires = rule_fires_r(&m0, &h, eps, l0, l, 1.0);
+                let inside = range.contains(l);
+                if fires != inside {
+                    // boundary ties allowed within float tolerance
+                    let near = (l - range.lo).abs() < 1e-6 * l0.max(range.lo.abs())
+                        || (l - range.hi).abs() < 1e-6 * l0.max(range.hi.abs());
+                    if !near {
+                        return Err(format!(
+                            "λ={l}: fires={fires} inside={inside} range={range:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn l_range_matches_bruteforce() {
+        forall("l-range", 64, |rng| {
+            let (m0, h, eps, l0) = random_case(rng);
+            let (hm, hn, mn) = (m0.dot(&h), h.norm(), m0.norm());
+            let c_l = 0.95;
+            let range = l_range(hm, hn, mn, eps, l0, c_l);
+            for k in 1..=40 {
+                let l = l0 * 0.05 * k as f64;
+                let fires = rule_fires_l(&m0, &h, eps, l0, l, c_l);
+                let inside = range.contains(l);
+                if fires != inside {
+                    let near = (l - range.lo).abs() < 1e-6 * l0.max(range.lo.abs())
+                        || (l - range.hi).abs() < 1e-6 * l0.max(range.hi.abs());
+                    if !near {
+                        return Err(format!(
+                            "λ={l}: fires={fires} inside={inside} range={range:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_range_when_validity_fails() {
+        // hm + mn·hn ≤ 2: denominator nonpositive → EMPTY
+        let r = r_range(0.1, 1.0, 1.0, 0.0, 5.0, 1.0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn wider_eps_shrinks_ranges() {
+        let (hm, hn, mn, l0) = (8.0, 2.0, 3.0, 4.0);
+        let tight = r_range(hm, hn, mn, 0.0, l0, 1.0);
+        let loose = r_range(hm, hn, mn, 0.1, l0, 1.0);
+        assert!(!tight.is_empty());
+        assert!(loose.lo >= tight.lo);
+        assert!(loose.hi <= tight.hi);
+        let tight_l = l_range(0.01, hn, mn, 0.0, l0, 0.95);
+        let loose_l = l_range(0.01, hn, mn, 0.1, l0, 0.95);
+        assert!(loose_l.lo >= tight_l.lo);
+        assert!(loose_l.hi <= tight_l.hi);
+    }
+
+    #[test]
+    fn range_contains_semantics() {
+        let r = LambdaRange { lo: 1.0, hi: 2.0 };
+        assert!(r.contains(1.5));
+        assert!(!r.contains(1.0));
+        assert!(!r.contains(2.0));
+        assert!(LambdaRange::EMPTY.is_empty());
+    }
+}

@@ -1,0 +1,244 @@
+//! Active-set heuristic (paper §5.3, following Weinberger & Saul [1]).
+//!
+//! Only triplets with positive loss (margin below the zero-part threshold,
+//! plus a small buffer) are kept in the working set; gradients are
+//! computed over the working set alone. Every `refresh_every` inner
+//! iterations the full margins are recomputed: the working set is
+//! refreshed, safe screening (if attached) runs, and overall optimality is
+//! certified by the duality gap over the *full* reduced problem — the
+//! heuristic never compromises the final optimality guarantee.
+
+use super::pgd::{ScreenCtx, SolveStats, SolverConfig};
+use super::problem::Problem;
+use crate::linalg::{psd_split, Mat, PsdSplit};
+use crate::runtime::Engine;
+use crate::util::timer::PhaseTimers;
+
+/// Active-set wrapper around the PGD inner loop.
+pub struct ActiveSetSolver {
+    pub cfg: SolverConfig,
+    /// inner PGD iterations between full refreshes (paper: 10)
+    pub refresh_every: usize,
+    /// margin slack for working-set membership: keep t if
+    /// `margin_t ≤ r_threshold + buffer`
+    pub buffer: f64,
+}
+
+impl ActiveSetSolver {
+    pub fn new(cfg: SolverConfig) -> ActiveSetSolver {
+        ActiveSetSolver {
+            cfg,
+            refresh_every: 10,
+            buffer: 0.1,
+        }
+    }
+
+    /// Minimize P̃ with the active-set heuristic.
+    pub fn solve(
+        &self,
+        problem: &mut Problem,
+        engine: &dyn Engine,
+        m0: Mat,
+        mut screen: Option<&mut dyn FnMut(&Problem, &ScreenCtx) -> (Vec<usize>, Vec<usize>)>,
+    ) -> (Mat, SolveStats) {
+        let mut stats = SolveStats::default();
+        let mut timers = PhaseTimers::default();
+        let lambda = problem.lambda;
+
+        let mut m = timers.eig.time(|| psd_split(&m0)).plus;
+        let mut pre_split: Option<PsdSplit> = None;
+        let mut inner_iters = 0usize;
+
+        'outer: for _round in 0..(self.cfg.max_iters / self.refresh_every.max(1) + 2) {
+            // ---- full evaluation over all (unscreened) active triplets ----
+            let ev = problem.eval(&m, engine, &mut timers);
+            let grad = problem.grad(&m, &ev.k);
+            let (d_val, split) = problem.dual(&ev.margins, &ev.k, &mut timers);
+            let gap = ev.p - d_val;
+            let scale = if self.cfg.tol_relative {
+                ev.p.abs().max(1.0)
+            } else {
+                1.0
+            };
+            if gap <= self.cfg.tol * scale {
+                stats.converged = true;
+                stats.p = ev.p;
+                stats.gap = gap;
+                break 'outer;
+            }
+            if inner_iters >= self.cfg.max_iters {
+                stats.p = ev.p;
+                stats.gap = gap;
+                break 'outer;
+            }
+
+            // ---- safe screening at the refresh point ----
+            if let Some(cb) = screen.as_deref_mut() {
+                let ctx = ScreenCtx {
+                    m: &m,
+                    grad: &grad,
+                    p: ev.p,
+                    d: d_val,
+                    gap,
+                    k_plus: &split.plus,
+                    pre_split: pre_split.as_ref(),
+                    margins: &ev.margins,
+                    iter: inner_iters,
+                };
+                let t0 = std::time::Instant::now();
+                let (new_l, new_r) = cb(problem, &ctx);
+                timers.screening.add(t0.elapsed());
+                if !new_l.is_empty() || !new_r.is_empty() {
+                    stats.screen_l += new_l.len();
+                    stats.screen_r += new_r.len();
+                    problem.apply_screening(&new_l, &new_r);
+                    continue 'outer; // re-evaluate on the reduced problem
+                }
+            }
+
+            // ---- working-set selection on fresh full margins ----
+            let threshold = problem.loss.r_threshold() + self.buffer;
+            let w_local: Vec<usize> = ev
+                .margins
+                .iter()
+                .enumerate()
+                .filter(|(_, &mg)| mg <= threshold)
+                .map(|(k, _)| k)
+                .collect();
+            if w_local.is_empty() {
+                // nothing active: P̃ is quadratic + linear; one exact step
+                // M = [H_L]_+ / λ
+                m = timers.eig.time(|| psd_split(problem.h_l())).plus;
+                m.scale(1.0 / lambda);
+                inner_iters += 1;
+                continue 'outer;
+            }
+            let a_w = problem.active_a().select_rows(&w_local);
+            let b_w = problem.active_b().select_rows(&w_local);
+
+            // ---- inner PGD on the working subproblem ----
+            let mut margins_w = vec![0.0; w_local.len()];
+            let eval_w = |m: &Mat, margins_w: &mut Vec<f64>, timers: &mut PhaseTimers| -> Mat {
+                let (_, g) = timers
+                    .compute
+                    .time(|| engine.step(m, &a_w, &b_w, problem.loss.gamma, margins_w));
+                let mut k = g;
+                k.axpy(1.0, problem.h_l());
+                let mut grad = m.scaled(lambda);
+                grad.axpy(-1.0, &k);
+                grad
+            };
+            let mut grad_w = eval_w(&m, &mut margins_w, &mut timers);
+            let mut prev: Option<(Mat, Mat)> = None;
+            for _ in 0..self.refresh_every {
+                let eta = match &prev {
+                    Some((pm, pg)) => {
+                        let dm = m.sub(pm);
+                        let dg = grad_w.sub(pg);
+                        let dm_dg = dm.dot(&dg);
+                        let dg_dg = dg.norm_sq();
+                        if dm_dg > 1e-300 && dg_dg > 1e-300 {
+                            0.5 * (dm_dg / dg_dg + dm.norm_sq() / dm_dg).abs()
+                        } else {
+                            1.0 / lambda
+                        }
+                    }
+                    None => 1.0 / lambda,
+                };
+                let mut a_pre = m.clone();
+                a_pre.axpy(-eta, &grad_w);
+                let split = timers.eig.time(|| psd_split(&a_pre));
+                let m_next = split.plus.clone();
+                pre_split = Some(split);
+                let grad_next = eval_w(&m_next, &mut margins_w, &mut timers);
+                prev = Some((
+                    std::mem::replace(&mut m, m_next),
+                    std::mem::replace(&mut grad_w, grad_next),
+                ));
+                inner_iters += 1;
+            }
+        }
+        stats.iters = inner_iters;
+        stats.timers = timers;
+        (m, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::loss::Loss;
+    use crate::solver::Solver;
+    use crate::triplet::TripletStore;
+    use crate::util::rng::Pcg64;
+
+    fn setup(seed: u64) -> TripletStore {
+        let mut rng = Pcg64::seed(seed);
+        let ds = synthetic::gaussian_mixture("g", 50, 4, 2, 2.8, &mut rng);
+        TripletStore::from_dataset(&ds, 3, &mut rng)
+    }
+
+    #[test]
+    fn matches_plain_pgd_solution() {
+        let store = setup(1);
+        let loss = Loss::smoothed_hinge(0.05);
+        let engine = crate::runtime::NativeEngine::new(2);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        let lambda = lmax * 0.05;
+        let cfg = SolverConfig {
+            tol: 1e-9,
+            ..Default::default()
+        };
+
+        let mut p1 = Problem::new(&store, loss, lambda);
+        let (m1, s1) = Solver::new(cfg.clone()).solve(&mut p1, &engine, Mat::zeros(4, 4), None);
+        assert!(s1.converged);
+
+        let mut p2 = Problem::new(&store, loss, lambda);
+        let (m2, s2) = ActiveSetSolver::new(cfg).solve(&mut p2, &engine, Mat::zeros(4, 4), None);
+        assert!(s2.converged, "{s2:?}");
+        // both solutions are within sqrt(2·gap/λ) of M*; allow their sum
+        let bound = 2.0 * (2.0 * (s1.gap.max(s2.gap)).max(1e-9) / lambda).sqrt();
+        let diff = m1.sub(&m2).max_abs();
+        assert!(diff < bound.max(1e-4), "diff {diff} > bound {bound}");
+    }
+
+    #[test]
+    fn certifies_full_gap() {
+        let store = setup(2);
+        let loss = Loss::smoothed_hinge(0.05);
+        let engine = crate::runtime::NativeEngine::new(2);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        let mut prob = Problem::new(&store, loss, lmax * 0.2);
+        let cfg = SolverConfig {
+            tol: 1e-8,
+            ..Default::default()
+        };
+        let (m, stats) = ActiveSetSolver::new(cfg).solve(&mut prob, &engine, Mat::zeros(4, 4), None);
+        assert!(stats.converged);
+        // independent gap audit at the returned m
+        let mut timers = PhaseTimers::default();
+        let ev = prob.eval(&m, &engine, &mut timers);
+        let (d, _) = prob.dual(&ev.margins, &ev.k, &mut timers);
+        assert!(ev.p - d <= 1e-7 * ev.p.abs().max(1.0));
+    }
+
+    #[test]
+    fn large_lambda_all_alpha_one_converges() {
+        // near λ_max everything sits in the linear part; working set = all
+        let store = setup(3);
+        let loss = Loss::smoothed_hinge(0.05);
+        let engine = crate::runtime::NativeEngine::new(2);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        let mut prob = Problem::new(&store, loss, lmax * 2.0);
+        let (m, stats) =
+            ActiveSetSolver::new(SolverConfig::default()).solve(&mut prob, &engine, Mat::zeros(4, 4), None);
+        assert!(stats.converged);
+        // closed form: M* = [ΣH]_+ / λ
+        let ones = vec![1.0; store.len()];
+        let sum_h = engine.wgram(&store.a, &store.b, &ones);
+        let want = crate::linalg::psd_project(&sum_h).scaled(1.0 / prob.lambda);
+        assert!(m.sub(&want).max_abs() < 1e-5 * (1.0 + want.max_abs()));
+    }
+}

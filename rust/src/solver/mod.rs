@@ -1,0 +1,13 @@
+//! RTLM optimization: the reduced problem, projected gradient descent with
+//! Barzilai–Borwein steps, duality-gap certification, and the active-set
+//! heuristic (paper §5.3).
+
+mod active_set;
+mod dual_ascent;
+mod pgd;
+mod problem;
+
+pub use active_set::ActiveSetSolver;
+pub use dual_ascent::{solve_dual, DualConfig, DualStats};
+pub use pgd::{ScreenCtx, SolveStats, Solver, SolverConfig};
+pub use problem::{EvalOut, Problem};

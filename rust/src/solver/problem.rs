@@ -1,0 +1,351 @@
+//! The (possibly screened) RTLM problem instance.
+//!
+//! After screening fixes subsets `L̂ ⊆ L*` (α* = 1) and `R̂ ⊆ R*` (α* = 0),
+//! the reduced primal (paper §3) is
+//!
+//!   P̃_λ(M) = Σ_{t ∈ active} ℓ(⟨M,H_t⟩) + (λ/2)‖M‖_F²
+//!           + (1 − γ/2)|L̂| − ⟨M, Σ_{t∈L̂} H_t⟩ ,
+//!
+//! which shares its optimum with the full problem. This struct owns the
+//! screening status, the compacted active-triplet arrays the engines
+//! consume, and the cached screened-L aggregate `H_L = Σ_{L̂} H_t`.
+
+use crate::linalg::{psd_split, Mat, PsdSplit};
+use crate::loss::Loss;
+use crate::runtime::Engine;
+use crate::triplet::{StatusVec, TripletStore};
+use crate::util::timer::PhaseTimers;
+
+/// Output of one objective/gradient evaluation at `M`.
+#[derive(Clone, Debug)]
+pub struct EvalOut {
+    /// reduced primal value P̃_λ(M)
+    pub p: f64,
+    /// `K = Σ_t α_t H_t` over active ∪ L̂ (α = 1 on L̂);
+    /// `∇P̃ = λM − K`.
+    pub k: Mat,
+    /// margins `⟨M, H_t⟩` for active triplets, aligned with `active_idx`
+    pub margins: Vec<f64>,
+}
+
+/// One RTLM problem: store + loss + λ + screening state.
+pub struct Problem<'a> {
+    pub store: &'a TripletStore,
+    pub loss: Loss,
+    pub lambda: f64,
+    status: StatusVec,
+    // ---- compacted active set (rebuilt on status change) ----
+    active_idx: Vec<usize>,
+    a_act: Mat,
+    b_act: Mat,
+    hn_act: Vec<f64>,
+    // ---- screened-L aggregates ----
+    h_l: Mat,
+    n_l: usize,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(store: &'a TripletStore, loss: Loss, lambda: f64) -> Problem<'a> {
+        assert!(lambda > 0.0, "lambda must be positive");
+        let n = store.len();
+        let mut p = Problem {
+            store,
+            loss,
+            lambda,
+            status: StatusVec::new(n),
+            active_idx: Vec::new(),
+            a_act: Mat::zeros(0, store.d),
+            b_act: Mat::zeros(0, store.d),
+            hn_act: Vec::new(),
+            h_l: Mat::zeros(store.d, store.d),
+            n_l: 0,
+        };
+        p.rebuild_compaction();
+        p
+    }
+
+    /// Change λ keeping the screening state *reset* (each λ must re-derive
+    /// its own guarantees; the range-based extension carries them instead).
+    pub fn reset_for_lambda(&mut self, lambda: f64) {
+        assert!(lambda > 0.0);
+        self.lambda = lambda;
+        self.status.reset();
+        self.h_l = Mat::zeros(self.store.d, self.store.d);
+        self.n_l = 0;
+        self.rebuild_compaction();
+    }
+
+    pub fn status(&self) -> &StatusVec {
+        &self.status
+    }
+
+    pub fn d(&self) -> usize {
+        self.store.d
+    }
+
+    pub fn n_screened_l(&self) -> usize {
+        self.n_l
+    }
+
+    /// Active-triplet view (compacted, aligned with eval margins).
+    pub fn active_idx(&self) -> &[usize] {
+        &self.active_idx
+    }
+
+    pub fn active_a(&self) -> &Mat {
+        &self.a_act
+    }
+
+    pub fn active_b(&self) -> &Mat {
+        &self.b_act
+    }
+
+    /// `‖H_t‖_F` for active triplets (aligned with `active_idx`).
+    pub fn active_h_norm(&self) -> &[f64] {
+        &self.hn_act
+    }
+
+    /// `H_L = Σ_{t ∈ L̂} H_t`.
+    pub fn h_l(&self) -> &Mat {
+        &self.h_l
+    }
+
+    /// Apply screening decisions (triplet ids). Updates `H_L`
+    /// incrementally and rebuilds the compacted arrays once.
+    pub fn apply_screening(&mut self, new_l: &[usize], new_r: &[usize]) {
+        if new_l.is_empty() && new_r.is_empty() {
+            return;
+        }
+        for &t in new_l {
+            if self.status.get(t) == crate::triplet::TripletStatus::Active {
+                self.status.screen_l(t);
+                // H_L += H_t (rank-2 update)
+                let (ra, rb) = (self.store.a.row(t), self.store.b.row(t));
+                for i in 0..self.store.d {
+                    let (ai, bi) = (ra[i], rb[i]);
+                    let row = self.h_l.row_mut(i);
+                    for j in 0..self.store.d {
+                        row[j] += ai * ra[j] - bi * rb[j];
+                    }
+                }
+                self.n_l += 1;
+            }
+        }
+        for &t in new_r {
+            self.status.screen_r(t);
+        }
+        self.rebuild_compaction();
+    }
+
+    fn rebuild_compaction(&mut self) {
+        self.active_idx = self.status.active_indices();
+        self.a_act = self.store.a.select_rows(&self.active_idx);
+        self.b_act = self.store.b.select_rows(&self.active_idx);
+        self.hn_act = self
+            .active_idx
+            .iter()
+            .map(|&t| self.store.h_norm[t])
+            .collect();
+    }
+
+    /// Constant part of P̃ contributed by L̂: `(1 − γ/2)|L̂|`.
+    fn l_const(&self) -> f64 {
+        (1.0 - self.loss.gamma / 2.0) * self.n_l as f64
+    }
+
+    /// Evaluate P̃, K = Σ α_t H_t and margins at `M`.
+    pub fn eval(&self, m: &Mat, engine: &dyn Engine, timers: &mut PhaseTimers) -> EvalOut {
+        let n_act = self.active_idx.len();
+        let mut margins = vec![0.0; n_act];
+        let (loss_sum, g) = timers
+            .compute
+            .time(|| engine.step(m, &self.a_act, &self.b_act, self.loss.gamma, &mut margins));
+        let mut k = g;
+        k.axpy(1.0, &self.h_l);
+        let p = loss_sum + self.l_const() - m.dot(&self.h_l)
+            + 0.5 * self.lambda * m.norm_sq();
+        EvalOut { p, k, margins }
+    }
+
+    /// `∇P̃(M) = λM − K`.
+    pub fn grad(&self, m: &Mat, k: &Mat) -> Mat {
+        let mut g = m.scaled(self.lambda);
+        g.axpy(-1.0, k);
+        g
+    }
+
+    /// Dual value D̃(α) and `[K]_+` at the dual-feasible point induced by
+    /// the active margins (α = −ℓ'(m_t); fixed 1 / 0 on L̂ / R̂).
+    ///
+    /// Returns `(d_val, k_split)`; the dual iterate is
+    /// `M_λ(α) = [K]_+ / λ` (used by CDGB).
+    pub fn dual(
+        &self,
+        margins: &[f64],
+        k: &Mat,
+        timers: &mut PhaseTimers,
+    ) -> (f64, PsdSplit) {
+        debug_assert_eq!(margins.len(), self.active_idx.len());
+        let gamma = self.loss.gamma;
+        let mut alpha_sq = 0.0;
+        let mut alpha_sum = 0.0;
+        for &m in margins {
+            let a = self.loss.alpha(m);
+            alpha_sq += a * a;
+            alpha_sum += a;
+        }
+        alpha_sq += self.n_l as f64; // α = 1 on L̂
+        alpha_sum += self.n_l as f64;
+        let split = timers.eig.time(|| psd_split(k));
+        let d_val =
+            -0.5 * gamma * alpha_sq + alpha_sum - split.plus.norm_sq() / (2.0 * self.lambda);
+        (d_val, split)
+    }
+
+    /// Exact λ_max: above it the all-α=1 solution `M = [ΣH]_+/λ` remains
+    /// optimal (every margin stays below the loss's linear-part threshold).
+    /// `λ_max = max_t ⟨H_t, [Σ_s H_s]_+⟩ / (1 − γ)`.
+    pub fn lambda_max(store: &TripletStore, loss: &Loss, engine: &dyn Engine) -> f64 {
+        let ones = vec![1.0; store.len()];
+        let sum_h = engine.wgram(&store.a, &store.b, &ones);
+        let plus = psd_split(&sum_h).plus;
+        let mut hq = vec![0.0; store.len()];
+        engine.margins(&plus, &store.a, &store.b, &mut hq);
+        let max_hq = hq.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let denom = (1.0 - loss.gamma).max(1e-12);
+        (max_hq / denom).max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::runtime::NativeEngine;
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (TripletStore, Loss) {
+        let mut rng = Pcg64::seed(3);
+        let ds = synthetic::gaussian_mixture("g", 40, 4, 2, 2.5, &mut rng);
+        let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+        (store, Loss::smoothed_hinge(0.05))
+    }
+
+    /// Brute-force P_λ over ALL triplets (no screening) for cross-checks.
+    fn full_primal(store: &TripletStore, loss: &Loss, lambda: f64, m: &Mat) -> f64 {
+        let mut p = 0.5 * lambda * m.norm_sq();
+        for t in 0..store.len() {
+            let margin = m.dot(&store.h_mat(t));
+            p += loss.value(margin);
+        }
+        p
+    }
+
+    #[test]
+    fn eval_matches_bruteforce_unscreened() {
+        let (store, loss) = setup();
+        let lambda = 10.0;
+        let prob = Problem::new(&store, loss, lambda);
+        let engine = NativeEngine::new(2);
+        let mut rng = Pcg64::seed(9);
+        let mut b = Mat::from_fn(4, 4, |_, _| rng.normal());
+        b = b.matmul(&b.transpose()).scaled(0.05); // PSD iterate
+        let mut timers = PhaseTimers::default();
+        let out = prob.eval(&b, &engine, &mut timers);
+        let want = full_primal(&store, &loss, lambda, &b);
+        assert!((out.p - want).abs() < 1e-8 * (1.0 + want.abs()));
+    }
+
+    #[test]
+    fn eval_invariant_under_safe_screening() {
+        // Fixing truly-L triplets into L̂ and truly-R into R̂ must keep
+        // P̃(M) == P(M) at a point where those conditions hold.
+        let (store, loss) = setup();
+        let lambda = 5.0;
+        let engine = NativeEngine::new(2);
+        let mut rng = Pcg64::seed(11);
+        let mut b = Mat::from_fn(4, 4, |_, _| rng.normal());
+        b = b.matmul(&b.transpose()).scaled(0.02);
+
+        let mut prob = Problem::new(&store, loss, lambda);
+        let mut timers = PhaseTimers::default();
+        let full = prob.eval(&b, &engine, &mut timers);
+
+        // classify by the margins at b itself (so the fixture is exact at b)
+        let mut margins_all = vec![0.0; store.len()];
+        engine.margins(&b, &store.a, &store.b, &mut margins_all);
+        let new_l: Vec<usize> = (0..store.len())
+            .filter(|&t| margins_all[t] < loss.l_threshold() - 1e-9)
+            .collect();
+        let new_r: Vec<usize> = (0..store.len())
+            .filter(|&t| margins_all[t] > loss.r_threshold() + 1e-9)
+            .collect();
+        prob.apply_screening(&new_l, &new_r);
+        assert!(prob.status().n_active() < store.len());
+
+        let reduced = prob.eval(&b, &engine, &mut timers);
+        assert!(
+            (reduced.p - full.p).abs() < 1e-8 * (1.0 + full.p.abs()),
+            "P̃ = {} vs P = {}",
+            reduced.p,
+            full.p
+        );
+        // gradients must agree too
+        let g_full = prob.grad(&b, &full.k);
+        let g_red = prob.grad(&b, &reduced.k);
+        assert!(g_full.sub(&g_red).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn weak_duality_holds() {
+        let (store, loss) = setup();
+        let prob = Problem::new(&store, loss, 20.0);
+        let engine = NativeEngine::new(2);
+        let mut timers = PhaseTimers::default();
+        let mut rng = Pcg64::seed(13);
+        for _ in 0..5 {
+            let mut b = Mat::from_fn(4, 4, |_, _| rng.normal());
+            b = b.matmul(&b.transpose()).scaled(rng.uniform() * 0.1);
+            let out = prob.eval(&b, &engine, &mut timers);
+            let (d, _) = prob.dual(&out.margins, &out.k, &mut timers);
+            assert!(d <= out.p + 1e-8, "D={d} > P={}", out.p);
+        }
+    }
+
+    #[test]
+    fn lambda_max_pins_all_alpha_one() {
+        let (store, loss) = setup();
+        let engine = NativeEngine::new(2);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        // at λ slightly above λ_max, M = [ΣH]_+/λ has every margin < 1-γ
+        let lambda = lmax * 1.01;
+        let ones = vec![1.0; store.len()];
+        let sum_h = engine.wgram(&store.a, &store.b, &ones);
+        let m = crate::linalg::psd_project(&sum_h).scaled(1.0 / lambda);
+        let mut margins = vec![0.0; store.len()];
+        engine.margins(&m, &store.a, &store.b, &mut margins);
+        for (t, &mg) in margins.iter().enumerate() {
+            assert!(
+                mg <= loss.l_threshold() + 1e-9,
+                "t={t}: margin {mg} above 1-gamma at lambda_max*1.01"
+            );
+        }
+        // and at λ somewhat below, at least one margin exceeds it
+        let lambda = lmax * 0.5;
+        let m = crate::linalg::psd_project(&sum_h).scaled(1.0 / lambda);
+        engine.margins(&m, &store.a, &store.b, &mut margins);
+        assert!(margins.iter().any(|&mg| mg > loss.l_threshold()));
+    }
+
+    #[test]
+    fn reset_for_lambda_clears_screening() {
+        let (store, loss) = setup();
+        let mut prob = Problem::new(&store, loss, 5.0);
+        prob.apply_screening(&[0, 1], &[2]);
+        assert_eq!(prob.status().n_active(), store.len() - 3);
+        prob.reset_for_lambda(2.0);
+        assert_eq!(prob.status().n_active(), store.len());
+        assert_eq!(prob.lambda, 2.0);
+        assert_eq!(prob.h_l().max_abs(), 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Triplet set construction and bookkeeping.
+
+mod status;
+mod store;
+
+pub use status::{StatusVec, TripletStatus};
+pub use store::TripletStore;

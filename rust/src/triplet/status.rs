@@ -1,0 +1,183 @@
+//! Per-triplet screening status bookkeeping.
+//!
+//! Screening fixes a triplet's optimal dual variable (paper eq. (4)):
+//! `ScreenedL` ⇒ α* = 1 (loss pinned to the linear part), `ScreenedR` ⇒
+//! α* = 0 (loss pinned to the zero part). `Active` triplets remain in the
+//! reduced problem.
+
+/// Screening status of one triplet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TripletStatus {
+    /// Still in the reduced optimization problem.
+    Active,
+    /// Proven `(i,j,l) ∈ L*` (α* = 1).
+    ScreenedL,
+    /// Proven `(i,j,l) ∈ R*` (α* = 0).
+    ScreenedR,
+}
+
+/// Status vector with cached counts and a compaction of active indices.
+#[derive(Clone, Debug)]
+pub struct StatusVec {
+    status: Vec<TripletStatus>,
+    n_l: usize,
+    n_r: usize,
+    /// bumped on every transition; consumers cache against it
+    version: u64,
+}
+
+impl StatusVec {
+    pub fn new(n: usize) -> StatusVec {
+        StatusVec {
+            status: vec![TripletStatus::Active; n],
+            n_l: 0,
+            n_r: 0,
+            version: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.status.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.status.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, t: usize) -> TripletStatus {
+        self.status[t]
+    }
+
+    pub fn n_screened_l(&self) -> usize {
+        self.n_l
+    }
+
+    pub fn n_screened_r(&self) -> usize {
+        self.n_r
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.len() - self.n_l - self.n_r
+    }
+
+    /// Fraction of triplets screened (the paper's "screening rate").
+    pub fn screening_rate(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            (self.n_l + self.n_r) as f64 / self.len() as f64
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Transition a triplet to ScreenedL. Screening decisions are
+    /// monotone within one λ solve; re-screening an already-screened
+    /// triplet is a no-op, and L→R / R→L transitions panic (they would
+    /// mean an unsafe rule fired).
+    pub fn screen_l(&mut self, t: usize) {
+        match self.status[t] {
+            TripletStatus::Active => {
+                self.status[t] = TripletStatus::ScreenedL;
+                self.n_l += 1;
+                self.version += 1;
+            }
+            TripletStatus::ScreenedL => {}
+            TripletStatus::ScreenedR => panic!("triplet {t}: R -> L transition (unsafe rule)"),
+        }
+    }
+
+    pub fn screen_r(&mut self, t: usize) {
+        match self.status[t] {
+            TripletStatus::Active => {
+                self.status[t] = TripletStatus::ScreenedR;
+                self.n_r += 1;
+                self.version += 1;
+            }
+            TripletStatus::ScreenedR => {}
+            TripletStatus::ScreenedL => panic!("triplet {t}: L -> R transition (unsafe rule)"),
+        }
+    }
+
+    /// Reset every triplet to Active (new λ without warm screening carry).
+    pub fn reset(&mut self) {
+        self.status.fill(TripletStatus::Active);
+        self.n_l = 0;
+        self.n_r = 0;
+        self.version += 1;
+    }
+
+    /// Indices of active triplets (compaction order = triplet order).
+    pub fn active_indices(&self) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&t| self.status[t] == TripletStatus::Active)
+            .collect()
+    }
+
+    /// Indices currently screened into L.
+    pub fn screened_l_indices(&self) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&t| self.status[t] == TripletStatus::ScreenedL)
+            .collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = TripletStatus> + '_ {
+        self.status.iter().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_track_transitions() {
+        let mut s = StatusVec::new(5);
+        assert_eq!(s.n_active(), 5);
+        s.screen_l(0);
+        s.screen_r(3);
+        s.screen_r(4);
+        assert_eq!(s.n_screened_l(), 1);
+        assert_eq!(s.n_screened_r(), 2);
+        assert_eq!(s.n_active(), 2);
+        assert!((s.screening_rate() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rescreening_is_noop() {
+        let mut s = StatusVec::new(2);
+        s.screen_l(0);
+        let v = s.version();
+        s.screen_l(0);
+        assert_eq!(s.version(), v);
+        assert_eq!(s.n_screened_l(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsafe rule")]
+    fn conflicting_transition_panics() {
+        let mut s = StatusVec::new(1);
+        s.screen_l(0);
+        s.screen_r(0);
+    }
+
+    #[test]
+    fn active_indices_order() {
+        let mut s = StatusVec::new(6);
+        s.screen_r(1);
+        s.screen_l(4);
+        assert_eq!(s.active_indices(), vec![0, 2, 3, 5]);
+        assert_eq!(s.screened_l_indices(), vec![4]);
+    }
+
+    #[test]
+    fn reset_restores_active() {
+        let mut s = StatusVec::new(3);
+        s.screen_r(0);
+        s.reset();
+        assert_eq!(s.n_active(), 3);
+    }
+}

@@ -1,0 +1,218 @@
+//! The triplet store: difference vectors and per-triplet constants.
+//!
+//! A triplet `(i, j, l)` (same-class pair `i, j`; different-class `l`)
+//! defines `H_ijl = (x_i−x_l)(x_i−x_l)^T − (x_i−x_j)(x_i−x_j)^T`. We never
+//! materialize `H`: storing `a_t = x_i−x_l` (rows of `A`) and
+//! `b_t = x_i−x_j` (rows of `B`) is enough for every quantity in the paper:
+//!
+//!   ⟨M, H_t⟩   = a^T M a − b^T M b            (margins kernel)
+//!   Σ w_t H_t  = A^T diag(w) A − B^T diag(w) B (wgram kernel)
+//!   ‖H_t‖_F²   = ‖a‖⁴ + ‖b‖⁴ − 2(a·b)²        (precomputed here)
+
+use crate::data::{neighbors, Dataset};
+use crate::linalg::Mat;
+use crate::util::{parallel, rng::Pcg64};
+
+/// Immutable triplet set for one learning problem.
+#[derive(Clone, Debug)]
+pub struct TripletStore {
+    /// rows: `x_i − x_l` (different-class differences)
+    pub a: Mat,
+    /// rows: `x_i − x_j` (same-class differences)
+    pub b: Mat,
+    /// `‖H_t‖_F` per triplet
+    pub h_norm: Vec<f64>,
+    /// original (i, j, l) indices
+    pub idx: Vec<(u32, u32, u32)>,
+    /// feature dimension
+    pub d: usize,
+}
+
+impl TripletStore {
+    /// Build triplets following the paper's protocol (§5, after [21]):
+    /// for each anchor `x_i`, take its `k` nearest same-class neighbors
+    /// `x_j` and `k` nearest different-class neighbors `x_l`, forming k²
+    /// triplets per anchor. `k = usize::MAX` enumerates all pairs. `rng`
+    /// is unused today (generation is deterministic) but kept in the
+    /// signature for subsampling strategies.
+    pub fn from_dataset(ds: &Dataset, k: usize, _rng: &mut Pcg64) -> TripletStore {
+        let (same, diff) = neighbors(ds, k);
+        let mut idx = Vec::new();
+        for i in 0..ds.n() {
+            for &j in &same[i] {
+                for &l in &diff[i] {
+                    idx.push((i as u32, j as u32, l as u32));
+                }
+            }
+        }
+        Self::from_indices(ds, idx)
+    }
+
+    /// Build from explicit (i, j, l) triplets.
+    pub fn from_indices(ds: &Dataset, idx: Vec<(u32, u32, u32)>) -> TripletStore {
+        let d = ds.d();
+        let t = idx.len();
+        let mut a = Mat::zeros(t, d);
+        let mut b = Mat::zeros(t, d);
+        for (r, &(i, j, l)) in idx.iter().enumerate() {
+            debug_assert_eq!(ds.y[i as usize], ds.y[j as usize], "j must share i's class");
+            debug_assert_ne!(ds.y[i as usize], ds.y[l as usize], "l must differ in class");
+            let (xi, xj, xl) = (
+                ds.x.row(i as usize),
+                ds.x.row(j as usize),
+                ds.x.row(l as usize),
+            );
+            let ra = a.row_mut(r);
+            for c in 0..d {
+                ra[c] = xi[c] - xl[c];
+            }
+            let rb = b.row_mut(r);
+            for c in 0..d {
+                rb[c] = xi[c] - xj[c];
+            }
+        }
+        let h_norm = Self::compute_h_norms(&a, &b);
+        TripletStore {
+            a,
+            b,
+            h_norm,
+            idx,
+            d,
+        }
+    }
+
+    /// `‖H_t‖_F = sqrt(‖a‖⁴ + ‖b‖⁴ − 2 (a·b)²)` — exact, O(d) per triplet.
+    fn compute_h_norms(a: &Mat, b: &Mat) -> Vec<f64> {
+        let t = a.rows();
+        let workers = parallel::default_threads();
+        let mut out = vec![0.0; t];
+        parallel::par_fill(&mut out, workers, |range, chunk| {
+            for (k, r) in range.enumerate() {
+                let (ra, rb) = (a.row(r), b.row(r));
+                let (mut na, mut nb, mut ab) = (0.0, 0.0, 0.0);
+                for c in 0..ra.len() {
+                    na += ra[c] * ra[c];
+                    nb += rb[c] * rb[c];
+                    ab += ra[c] * rb[c];
+                }
+                // fl. rounding can push the radicand a hair below 0
+                chunk[k] = (na * na + nb * nb - 2.0 * ab * ab).max(0.0).sqrt();
+            }
+        });
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// `Σ_t H_t` over a subset of triplets (used for λ_max and for the
+    /// screened-L fixed gradient term). O(|subset|·d²) via two rank-k
+    /// accumulations.
+    pub fn sum_h(&self, subset: impl Iterator<Item = usize>) -> Mat {
+        let mut g = Mat::zeros(self.d, self.d);
+        for t in subset {
+            let (ra, rb) = (self.a.row(t), self.b.row(t));
+            for i in 0..self.d {
+                let (ai, bi) = (ra[i], rb[i]);
+                let grow = g.row_mut(i);
+                for j in 0..self.d {
+                    grow[j] += ai * ra[j] - bi * rb[j];
+                }
+            }
+        }
+        g
+    }
+
+    /// Explicit `H_t` (tests / tiny problems only).
+    pub fn h_mat(&self, t: usize) -> Mat {
+        Mat::outer(self.a.row(t)).sub(&Mat::outer(self.b.row(t)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn toy_store() -> (Dataset, TripletStore) {
+        let mut rng = Pcg64::seed(1);
+        let ds = synthetic::gaussian_mixture("g", 60, 5, 3, 2.5, &mut rng);
+        let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+        (ds, store)
+    }
+
+    #[test]
+    fn triplet_count_matches_k_squared() {
+        let (ds, store) = toy_store();
+        // every anchor has >= 3 same-class and >= 3 diff-class neighbors
+        assert_eq!(store.len(), ds.n() * 9);
+    }
+
+    #[test]
+    fn difference_vectors_correct() {
+        let (ds, store) = toy_store();
+        for t in (0..store.len()).step_by(37) {
+            let (i, j, l) = store.idx[t];
+            for c in 0..ds.d() {
+                assert_eq!(
+                    store.a[(t, c)],
+                    ds.x[(i as usize, c)] - ds.x[(l as usize, c)]
+                );
+                assert_eq!(
+                    store.b[(t, c)],
+                    ds.x[(i as usize, c)] - ds.x[(j as usize, c)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn h_norm_matches_explicit_frobenius() {
+        let (_, store) = toy_store();
+        for t in (0..store.len()).step_by(53) {
+            let h = store.h_mat(t);
+            assert!(
+                (store.h_norm[t] - h.norm()).abs() < 1e-9 * (1.0 + h.norm()),
+                "t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn sum_h_matches_explicit() {
+        let (_, store) = toy_store();
+        let take: Vec<usize> = (0..store.len()).step_by(11).collect();
+        let got = store.sum_h(take.iter().copied());
+        let mut want = Mat::zeros(store.d, store.d);
+        for &t in &take {
+            want.axpy(1.0, &store.h_mat(t));
+        }
+        assert!(got.sub(&want).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn labels_respected() {
+        let (ds, store) = toy_store();
+        for &(i, j, l) in &store.idx {
+            assert_eq!(ds.y[i as usize], ds.y[j as usize]);
+            assert_ne!(ds.y[i as usize], ds.y[l as usize]);
+        }
+    }
+
+    #[test]
+    fn h_trace_is_norm_difference() {
+        // tr(H) = ‖a‖² − ‖b‖²
+        let (_, store) = toy_store();
+        for t in (0..store.len()).step_by(41) {
+            let h = store.h_mat(t);
+            let na: f64 = store.a.row(t).iter().map(|x| x * x).sum();
+            let nb: f64 = store.b.row(t).iter().map(|x| x * x).sum();
+            assert!((h.trace() - (na - nb)).abs() < 1e-10);
+        }
+    }
+}

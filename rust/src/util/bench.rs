@@ -1,0 +1,168 @@
+//! Micro-benchmark harness (criterion stand-in).
+//!
+//! Warms up, then runs timed iterations until both a minimum iteration
+//! count and a minimum measurement window are reached; reports mean /
+//! best / throughput. Used by the `benches/` targets (built with
+//! `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub best: Duration,
+    /// optional items-per-iteration for throughput reporting
+    pub items: Option<u64>,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        let mean_s = self.mean.as_secs_f64();
+        let mut s = format!(
+            "{:<44} {:>12} {:>12}  x{}",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.best),
+            self.iters
+        );
+        if let Some(items) = self.items {
+            let thr = items as f64 / mean_s;
+            s.push_str(&format!("  {:>12}/s", fmt_count(thr)));
+        }
+        s
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}µs", s * 1e6)
+    }
+}
+
+fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner with shared config.
+pub struct Bench {
+    pub min_iters: u64,
+    pub min_time: Duration,
+    pub warmup: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_iters: 5,
+            min_time: Duration::from_millis(300),
+            warmup: Duration::from_millis(100),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench {
+            min_iters: 2,
+            min_time: Duration::from_millis(50),
+            warmup: Duration::from_millis(10),
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`, preventing the result from being optimized away via the
+    /// returned value sink.
+    pub fn run<T>(&mut self, name: &str, items: Option<u64>, mut f: impl FnMut() -> T) {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut iters = 0u64;
+        let mut best = Duration::MAX;
+        let t0 = Instant::now();
+        while iters < self.min_iters || t0.elapsed() < self.min_time {
+            let it0 = Instant::now();
+            std::hint::black_box(f());
+            let dt = it0.elapsed();
+            best = best.min(dt);
+            iters += 1;
+            if iters > 1_000_000 {
+                break;
+            }
+        }
+        let mean = t0.elapsed() / iters.max(1) as u32;
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean,
+            best,
+            items,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    pub fn header() {
+        println!(
+            "{:<44} {:>12} {:>12}  iters  throughput",
+            "benchmark", "mean", "best"
+        );
+        println!("{}", "-".repeat(96));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench {
+            min_iters: 3,
+            min_time: Duration::from_millis(1),
+            warmup: Duration::from_millis(1),
+            results: vec![],
+        };
+        b.run("spin", Some(1000), || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters >= 3);
+        assert!(b.results()[0].report().contains("spin"));
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert!(fmt_duration(Duration::from_secs(2)).contains('s'));
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+        assert_eq!(fmt_count(2_500_000.0), "2.50M");
+    }
+}

@@ -1,0 +1,263 @@
+//! TOML-subset configuration files (DESIGN.md §7).
+//!
+//! Grammar: `[section]` headers, `key = value` pairs, `#` comments.
+//! Values: strings ("…"), numbers, booleans, and flat arrays. Keys are
+//! addressed as `section.key`; CLI `--set section.key=value` overrides
+//! win over file values.
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration: flat `section.key -> value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    fn parse(text: &str) -> Result<Value, String> {
+        let t = text.trim();
+        if t.is_empty() {
+            return Err("empty value".into());
+        }
+        if let Some(inner) = t.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            return Ok(Value::Str(inner.to_string()));
+        }
+        if t == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if t == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(inner) = t.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let items: Result<Vec<Value>, String> = inner
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(Value::parse)
+                .collect();
+            return Ok(Value::Arr(items?));
+        }
+        t.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| format!("cannot parse value {t:?}"))
+    }
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // keep '#' inside quoted strings
+                Some(pos) if !raw[..pos].matches('"').count().is_multiple_of(2) => raw,
+                Some(pos) => &raw[..pos],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value =
+                Value::parse(value).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.values.insert(full_key, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a `--set section.key=value` style override.
+    pub fn set(&mut self, assignment: &str) -> Result<(), String> {
+        let (key, value) = assignment
+            .split_once('=')
+            .ok_or_else(|| format!("override {assignment:?} needs key=value"))?;
+        self.values
+            .insert(key.trim().to_string(), Value::parse(value)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => format!("{v:?}"),
+            None => default.to_string(),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            Some(Value::Num(x)) => *x,
+            _ => default,
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
+            Some(Value::Num(x)) => *x as usize,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// Build a [`crate::path::PathConfig`] from a config (+ CLI overrides
+/// already applied). Missing keys fall back to the library defaults.
+pub fn path_config(cfg: &Config) -> crate::path::PathConfig {
+    use crate::loss::Loss;
+    use crate::screening::{BoundKind, RuleKind, ScreeningConfig};
+    let gamma = cfg.f64_or("loss.gamma", 0.05);
+    let loss = if gamma > 0.0 {
+        Loss::smoothed_hinge(gamma)
+    } else {
+        Loss::hinge()
+    };
+    let bound = match cfg.str_or("screening.bound", "RRPB").to_ascii_uppercase().as_str() {
+        "NONE" => None,
+        "GB" => Some(BoundKind::Gb),
+        "PGB" => Some(BoundKind::Pgb),
+        "DGB" => Some(BoundKind::Dgb),
+        "CDGB" => Some(BoundKind::Cdgb),
+        "RPB" => Some(BoundKind::Rpb),
+        _ => Some(BoundKind::Rrpb),
+    };
+    let rule = match cfg.str_or("screening.rule", "sphere").to_ascii_lowercase().as_str() {
+        "linear" => RuleKind::Linear,
+        "semidefinite" | "sdls" => RuleKind::SemiDefinite,
+        _ => RuleKind::Sphere,
+    };
+    crate::path::PathConfig {
+        loss,
+        rho: cfg.f64_or("path.rho", 0.9),
+        max_steps: cfg.usize_or("path.max_steps", 100),
+        stop_ratio: cfg.f64_or("path.stop_ratio", 0.01),
+        lambda_min: cfg.get("path.lambda_min").and_then(|v| match v {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }),
+        solver: crate::solver::SolverConfig {
+            tol: cfg.f64_or("solver.tol", 1e-6),
+            tol_relative: cfg.bool_or("solver.tol_relative", true),
+            max_iters: cfg.usize_or("solver.max_iters", 20_000),
+            screen_every: cfg.usize_or("solver.screen_every", 10),
+            gap_every: cfg.usize_or("solver.gap_every", 1),
+        },
+        screening: bound.map(|b| ScreeningConfig::new(b, rule)),
+        secondary_screening: None,
+        active_set: cfg.bool_or("path.active_set", false),
+        range_screening: cfg.bool_or("path.range_screening", false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[path]
+rho = 0.9
+max_steps = 40     # dense enough
+active_set = true
+
+[solver]
+tol = 1e-7
+tol_relative = false
+
+[screening]
+bound = "PGB"
+rule = "sphere"
+
+[data]
+datasets = ["segment", "wine"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.f64_or("path.rho", 0.0), 0.9);
+        assert_eq!(c.usize_or("path.max_steps", 0), 40);
+        assert!(c.bool_or("path.active_set", false));
+        assert_eq!(c.str_or("screening.bound", ""), "PGB");
+        match c.get("data.datasets") {
+            Some(Value::Arr(items)) => {
+                assert_eq!(items[0], Value::Str("segment".into()));
+                assert_eq!(items[1], Value::Str("wine".into()));
+            }
+            other => panic!("bad array: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("path.rho=0.99").unwrap();
+        c.set("solver.tol=1e-9").unwrap();
+        assert_eq!(c.f64_or("path.rho", 0.0), 0.99);
+        assert_eq!(c.f64_or("solver.tol", 0.0), 1e-9);
+    }
+
+    #[test]
+    fn builds_path_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let pc = path_config(&c);
+        assert_eq!(pc.rho, 0.9);
+        assert!(pc.active_set);
+        assert!(!pc.solver.tol_relative);
+        assert_eq!(pc.solver.tol, 1e-7);
+        assert_eq!(
+            pc.screening.map(|s| s.bound),
+            Some(crate::screening::BoundKind::Pgb)
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = ").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let c = Config::parse("# only comments\n\n[a]\nk = 1 # trailing\n").unwrap();
+        assert_eq!(c.f64_or("a.k", 0.0), 1.0);
+    }
+}

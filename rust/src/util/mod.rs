@@ -1,0 +1,15 @@
+//! Zero-dependency substrate utilities.
+//!
+//! The build environment is fully offline with only the `xla` and `anyhow`
+//! crates vendored, so the conveniences a production crate would normally
+//! pull in (rand, rayon, serde_json, clap, criterion, proptest) are
+//! implemented here from scratch — each in its own small module.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod parallel;
+pub mod quickcheck;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,149 @@
+//! Scoped fork-join parallelism over index ranges (rayon stand-in).
+//!
+//! All parallel loops in the crate go through [`par_ranges`]: the range
+//! `[0, n)` is split into one contiguous chunk per worker, each worker runs
+//! the closure on its chunk, and results are collected in chunk order —
+//! deterministic regardless of scheduling.
+
+/// Number of workers to use: respects `TS_THREADS`, defaults to the number
+/// of available cores capped at 16 (the workloads here stop scaling past
+/// that on the triplet sizes we run).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("TS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// Split `[0, n)` into at most `workers` contiguous ranges of near-equal
+/// length (the first `n % workers` ranges are one longer).
+pub fn split_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    let workers = workers.max(1).min(n.max(1));
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        if len == 0 {
+            break;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f` over chunks of `[0, n)` in parallel; returns per-chunk results
+/// in chunk order. `f` must be `Sync` (called from many threads).
+pub fn par_ranges<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let ranges = split_ranges(n, workers);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(&f).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| scope.spawn(|| f(r)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Parallel in-place map over disjoint mutable chunks of `out`, where chunk
+/// `c` covers rows `[ranges[c])` and the closure fills its slice.
+pub fn par_fill<T, F>(out: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    let n = out.len();
+    let ranges = split_ranges(n, workers);
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(r.clone(), out);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut offset = 0;
+        for r in ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            debug_assert_eq!(offset, r.start);
+            offset += r.len();
+            let fr = &f;
+            scope.spawn(move || fr(r, head));
+            rest = tail;
+        }
+    });
+}
+
+/// Parallel sum-reduction of per-chunk `f` results.
+pub fn par_sum<F>(n: usize, workers: usize, f: F) -> f64
+where
+    F: Fn(std::ops::Range<usize>) -> f64 + Sync,
+{
+    par_ranges(n, workers, f).into_iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_range_exactly() {
+        for n in [0usize, 1, 5, 16, 17, 1000] {
+            for w in [1usize, 2, 3, 8, 64] {
+                let rs = split_ranges(n, w);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_sum_matches_serial() {
+        let xs: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+        let serial: f64 = xs.iter().sum();
+        for w in [1, 2, 4, 7] {
+            let par = par_sum(xs.len(), w, |r| xs[r].iter().sum());
+            assert!((par - serial).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn par_fill_writes_every_cell() {
+        let mut out = vec![0usize; 1003];
+        par_fill(&mut out, 4, |r, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = r.start + k;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn par_ranges_order_is_chunk_order() {
+        let res = par_ranges(100, 7, |r| r.start);
+        let mut sorted = res.clone();
+        sorted.sort_unstable();
+        assert_eq!(res, sorted);
+    }
+}

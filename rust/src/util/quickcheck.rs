@@ -1,0 +1,80 @@
+//! Mini property-testing framework (proptest stand-in).
+//!
+//! A property runs against `cases` randomly generated inputs; on failure it
+//! reports the case index and the seed that reproduces it, so a failing run
+//! can be replayed deterministically with `TS_QC_SEED`.
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases per property (override with `TS_QC_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("TS_QC_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("TS_QC_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5eed_cafe)
+}
+
+/// Check `prop(rng)` for `cases` independent generators; panic with a
+/// reproducible seed on the first failure. `prop` returns `Err(msg)` to
+/// fail, `Ok(())` to pass.
+pub fn forall<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Pcg64) -> Result<(), String>,
+{
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0.wrapping_add(case as u64);
+        let mut rng = Pcg64::seed(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case}/{cases} \
+                 (replay with TS_QC_SEED={seed} TS_QC_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are close (relative + absolute tolerance), with a
+/// useful error payload for `forall`.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64, what: &str) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let bound = atol + rtol * a.abs().max(b.abs());
+    if diff <= bound || (a.is_nan() && b.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (|Δ|={diff:.3e} > {bound:.3e})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add-commutes", 32, |rng| {
+            let (a, b) = (rng.normal(), rng.normal());
+            close(a + b, b + a, 0.0, 0.0, "a+b")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        forall("always-fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0, "x").is_ok());
+        assert!(close(1.0, 1.1, 1e-9, 0.0, "x").is_err());
+        assert!(close(0.0, 1e-12, 0.0, 1e-9, "x").is_ok());
+    }
+}

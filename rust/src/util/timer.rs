@@ -1,0 +1,115 @@
+//! Timing utilities: stopwatch accumulators for the per-phase cost
+//! breakdowns the paper's tables report (solver vs screening-eval time).
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: `start`/`stop` pairs add up.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+    laps: u64,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+            self.laps += 1;
+        }
+    }
+
+    /// Time a closure, accumulating its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.total += t0.elapsed();
+        self.laps += 1;
+        out
+    }
+
+    /// Add an externally measured duration as one lap.
+    pub fn add(&mut self, d: Duration) {
+        self.total += d;
+        self.laps += 1;
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+}
+
+/// Per-phase cost breakdown of one solve.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    /// margin/gradient kernel evaluations
+    pub compute: Stopwatch,
+    /// eigendecompositions (PSD projections)
+    pub eig: Stopwatch,
+    /// screening-rule evaluation (the quantity Table 4 parenthesizes)
+    pub screening: Stopwatch,
+    /// everything, wall clock
+    pub total: Stopwatch,
+}
+
+impl PhaseTimers {
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        self.compute.total += other.compute.total;
+        self.compute.laps += other.compute.laps;
+        self.eig.total += other.eig.total;
+        self.eig.laps += other.eig.laps;
+        self.screening.total += other.screening.total;
+        self.screening.laps += other.screening.laps;
+        self.total.total += other.total.total;
+        self.total.laps += other.total.laps;
+    }
+}
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_laps() {
+        let mut sw = Stopwatch::new();
+        for _ in 0..3 {
+            sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        }
+        assert_eq!(sw.laps(), 3);
+        assert!(sw.secs() >= 0.006);
+    }
+
+    #[test]
+    fn start_stop_pairs() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(1));
+        sw.stop();
+        assert!(sw.secs() > 0.0);
+        assert_eq!(sw.laps(), 1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = PhaseTimers::default();
+        let mut b = PhaseTimers::default();
+        a.compute.time(|| std::thread::sleep(Duration::from_millis(1)));
+        b.compute.time(|| std::thread::sleep(Duration::from_millis(1)));
+        let before = a.compute.secs();
+        a.merge(&b);
+        assert!(a.compute.secs() > before);
+        assert_eq!(a.compute.laps(), 2);
+    }
+}

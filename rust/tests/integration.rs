@@ -1,0 +1,153 @@
+//! Cross-module integration: data → triplets → solver → screening → path
+//! → evaluation, on the native engine (PJRT covered in runtime_pjrt.rs).
+
+use triplet_screen::data::{accuracy, knn_classify, parse_libsvm};
+use triplet_screen::linalg::Mat;
+use triplet_screen::loss::Loss;
+use triplet_screen::path::{PathConfig, RegPath};
+use triplet_screen::prelude::*;
+use triplet_screen::solver::{ActiveSetSolver, Problem, Solver, SolverConfig};
+
+#[test]
+fn metric_learning_improves_knn_on_xor() {
+    let mut rng = Pcg64::seed(1);
+    let ds = synthetic::xor_blobs(420, 6, &mut rng);
+    let (train, test) = ds.split(0.7, &mut rng);
+    let engine = NativeEngine::new(0);
+    let store = TripletStore::from_dataset(&train, 4, &mut rng);
+    let loss = Loss::smoothed_hinge(0.05);
+    let lmax = Problem::lambda_max(&store, &loss, &engine);
+    let mut prob = Problem::new(&store, loss, lmax * 0.01);
+    let (m, st) = Solver::new(SolverConfig::default()).solve(
+        &mut prob,
+        &engine,
+        Mat::zeros(6, 6),
+        None,
+    );
+    assert!(st.converged);
+    let acc_e = accuracy(&knn_classify(&train, &test, 5, &Mat::identity(6)), &test.y);
+    let acc_m = accuracy(&knn_classify(&train, &test, 5, &m), &test.y);
+    assert!(
+        acc_m >= acc_e - 0.02,
+        "learned metric much worse than euclidean: {acc_m} vs {acc_e}"
+    );
+    // the metric must suppress the pure-noise dimensions (2..)
+    let diag = m.diag();
+    let signal = diag[0] + diag[1];
+    let noise: f64 = diag[2..].iter().sum();
+    assert!(signal > noise, "diag(M)={diag:?}");
+}
+
+#[test]
+fn libsvm_to_path_pipeline() {
+    // synthesize a LIBSVM file in-memory, parse it, and run a short path
+    let mut rng = Pcg64::seed(2);
+    let ds = synthetic::gaussian_mixture("g", 60, 5, 2, 3.0, &mut rng);
+    let mut text = String::new();
+    for i in 0..ds.n() {
+        text.push_str(&format!("{}", if ds.y[i] == 0 { -1 } else { 1 }));
+        for j in 0..ds.d() {
+            text.push_str(&format!(" {}:{}", j + 1, ds.x[(i, j)]));
+        }
+        text.push('\n');
+    }
+    let mut parsed = parse_libsvm(&text, 0).unwrap();
+    assert_eq!(parsed.n(), 60);
+    parsed.standardize();
+    let store = TripletStore::from_dataset(&parsed, 3, &mut rng);
+    let engine = NativeEngine::new(0);
+    let cfg = PathConfig {
+        max_steps: 5,
+        screening: Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere)),
+        ..Default::default()
+    };
+    let res = RegPath::new(cfg).run(&store, &engine);
+    assert!(res.steps.iter().all(|s| s.converged));
+}
+
+#[test]
+fn active_set_with_screening_full_stack() {
+    let mut rng = Pcg64::seed(3);
+    let ds = synthetic::analogue("iris-small", &mut rng);
+    let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+    let engine = NativeEngine::new(0);
+    let loss = Loss::smoothed_hinge(0.05);
+    let lmax = Problem::lambda_max(&store, &loss, &engine);
+    let lambda = lmax * 0.05;
+
+    let mut plain = Problem::new(&store, loss, lambda);
+    let (m_ref, _) = Solver::new(SolverConfig {
+        tol: 1e-9,
+        ..Default::default()
+    })
+    .solve(&mut plain, &engine, Mat::zeros(store.d, store.d), None);
+
+    let mut mgr = triplet_screen::screening::ScreeningManager::new(ScreeningConfig::new(
+        BoundKind::Dgb,
+        RuleKind::Sphere,
+    ));
+    let engine_ref: &dyn Engine = &engine;
+    let mut cb = |p: &Problem, ctx: &triplet_screen::solver::ScreenCtx| {
+        mgr.screen(p, ctx, engine_ref)
+    };
+    let mut prob = Problem::new(&store, loss, lambda);
+    let (m, st) = ActiveSetSolver::new(SolverConfig {
+        tol: 1e-9,
+        ..Default::default()
+    })
+    .solve(&mut prob, &engine, Mat::zeros(store.d, store.d), Some(&mut cb));
+    assert!(st.converged);
+    assert!(m.sub(&m_ref).max_abs() < 1e-3 * (1.0 + m_ref.max_abs()));
+    assert!(prob.status().screening_rate() > 0.0);
+}
+
+#[test]
+fn pca_preprocessing_pipeline() {
+    let mut rng = Pcg64::seed(4);
+    let ds = synthetic::gaussian_mixture("g", 120, 20, 3, 3.0, &mut rng);
+    let reduced = ds.pca(5);
+    assert_eq!(reduced.d(), 5);
+    let store = TripletStore::from_dataset(&reduced, 3, &mut rng);
+    let engine = NativeEngine::new(0);
+    let loss = Loss::smoothed_hinge(0.05);
+    let lmax = Problem::lambda_max(&store, &loss, &engine);
+    let mut prob = Problem::new(&store, loss, lmax * 0.1);
+    let (_, st) = Solver::new(SolverConfig::default()).solve(
+        &mut prob,
+        &engine,
+        Mat::zeros(5, 5),
+        None,
+    );
+    assert!(st.converged);
+}
+
+#[test]
+fn paper_protocol_subsample_trials_are_deterministic() {
+    // the experiment harness protocol: 90% subsample per trial, seeded
+    let opts = triplet_screen::coordinator::experiments::ExpOptions {
+        scale: 0.3,
+        seed: 11,
+        ..Default::default()
+    };
+    let mut rng1 = Pcg64::seed(opts.seed);
+    let s1 = triplet_screen::coordinator::experiments::build_store("iris", &opts, &mut rng1);
+    let mut rng2 = Pcg64::seed(opts.seed);
+    let s2 = triplet_screen::coordinator::experiments::build_store("iris", &opts, &mut rng2);
+    assert_eq!(s1.len(), s2.len());
+    assert_eq!(s1.idx, s2.idx);
+}
+
+#[test]
+fn report_tables_roundtrip_to_disk() {
+    use triplet_screen::coordinator::report::Table;
+    let mut t = Table::new("integration", &["col"]);
+    t.row(vec!["val".into()]);
+    let md = t.to_markdown();
+    assert!(md.contains("integration"));
+    let json = t.to_json().to_string_pretty();
+    let parsed = triplet_screen::util::json::parse(&json).unwrap();
+    assert_eq!(
+        parsed.get("title").and_then(|j| j.as_str()),
+        Some("integration")
+    );
+}

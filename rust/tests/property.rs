@@ -1,0 +1,215 @@
+//! Property-based tests (mini-quickcheck) on the coordinator's invariants:
+//! duality, screening-rule soundness, bound containment, spectral algebra —
+//! randomized over problem geometry.
+
+use triplet_screen::linalg::{psd_project, psd_split, sym_eig, Mat};
+use triplet_screen::loss::Loss;
+use triplet_screen::prelude::*;
+use triplet_screen::screening::bounds;
+use triplet_screen::solver::{Problem, Solver, SolverConfig};
+use triplet_screen::util::quickcheck::{close, forall};
+use triplet_screen::util::rng::Pcg64 as Rng;
+use triplet_screen::util::timer::PhaseTimers;
+
+fn random_store(rng: &mut Rng) -> TripletStore {
+    let n = 24 + rng.below(24);
+    let d = 2 + rng.below(4);
+    let classes = 2 + rng.below(2);
+    let sep = 1.5 + rng.uniform() * 2.0;
+    let ds = synthetic::gaussian_mixture("p", n, d, classes, sep, rng);
+    TripletStore::from_dataset(&ds, 2, rng)
+}
+
+#[test]
+fn weak_duality_everywhere() {
+    // P(M) >= D(α(M)) for arbitrary PSD iterates and λ
+    forall("weak-duality", 24, |rng| {
+        let store = random_store(rng);
+        let engine = NativeEngine::new(1);
+        let loss = if rng.uniform() < 0.5 {
+            Loss::smoothed_hinge(0.01 + rng.uniform())
+        } else {
+            Loss::hinge()
+        };
+        let lambda = 0.1 + rng.uniform() * 100.0;
+        let prob = Problem::new(&store, loss, lambda);
+        let mut m = Mat::from_fn(store.d, store.d, |_, _| rng.normal());
+        m.symmetrize();
+        let m = psd_project(&m).scaled(rng.uniform());
+        let mut timers = PhaseTimers::default();
+        let ev = prob.eval(&m, &engine, &mut timers);
+        let (d_val, _) = prob.dual(&ev.margins, &ev.k, &mut timers);
+        if d_val <= ev.p + 1e-8 * (1.0 + ev.p.abs()) {
+            Ok(())
+        } else {
+            Err(format!("D={d_val} > P={}", ev.p))
+        }
+    });
+}
+
+#[test]
+fn gb_and_dgb_contain_solution() {
+    // bound containment at random reference accuracy
+    forall("bound-containment", 10, |rng| {
+        let store = random_store(rng);
+        let engine = NativeEngine::new(1);
+        let loss = Loss::smoothed_hinge(0.05);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        let lambda = lmax * (0.02 + rng.uniform() * 0.5);
+
+        // near-exact optimum
+        let mut prob = Problem::new(&store, loss, lambda);
+        let (m_star, st) = Solver::new(SolverConfig {
+            tol: 1e-11,
+            tol_relative: false,
+            max_iters: 30_000,
+            ..Default::default()
+        })
+        .solve(&mut prob, &engine, Mat::zeros(store.d, store.d), None);
+        if !st.converged {
+            return Ok(()); // skip pathological draws
+        }
+        // m_star itself is only sqrt(2·gap/λ)-accurate: allow that slack
+        let star_err = (2.0 * st.gap.max(0.0) / lambda).sqrt();
+        // rough iterate
+        let mut prob2 = Problem::new(&store, loss, lambda);
+        let iters = 5 + rng.below(40);
+        let (m_rough, _) = Solver::new(SolverConfig {
+            tol: 1e-16,
+            tol_relative: false,
+            max_iters: iters,
+            screen_every: 0,
+            ..Default::default()
+        })
+        .solve(&mut prob2, &engine, Mat::zeros(store.d, store.d), None);
+        let mut timers = PhaseTimers::default();
+        let ev = prob2.eval(&m_rough, &engine, &mut timers);
+        let grad = prob2.grad(&m_rough, &ev.k);
+        let (d_val, _) = prob2.dual(&ev.margins, &ev.k, &mut timers);
+
+        let check = |name: &str, q: &Mat, r: f64| -> Result<(), String> {
+            let dist = m_star.sub(q).norm();
+            if dist <= r + star_err + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("{name} violated: dist {dist} > r {r} + {star_err}"))
+            }
+        };
+        let s_gb = bounds::gb(&m_rough, &grad, lambda);
+        check("GB", &s_gb.q, s_gb.r)?;
+        let (s_pgb, _) = bounds::pgb(&m_rough, &grad, lambda);
+        check("PGB", &s_pgb.q, s_pgb.r)?;
+        let s_dgb = bounds::dgb(&m_rough, ev.p - d_val, lambda);
+        check("DGB", &s_dgb.q, s_dgb.r)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn margins_linear_in_matrix() {
+    // margins(aM1 + bM2) = a·margins(M1) + b·margins(M2)
+    forall("margin-linearity", 24, |rng| {
+        let store = random_store(rng);
+        let engine = NativeEngine::new(1);
+        let d = store.d;
+        let mk = |rng: &mut Rng| {
+            let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+            m.symmetrize();
+            m
+        };
+        let (m1, m2) = (mk(rng), mk(rng));
+        let (a, b) = (rng.normal(), rng.normal());
+        let mut comb = m1.scaled(a);
+        comb.axpy(b, &m2);
+        let n = store.len();
+        let (mut o1, mut o2, mut oc) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        engine.margins(&m1, &store.a, &store.b, &mut o1);
+        engine.margins(&m2, &store.a, &store.b, &mut o2);
+        engine.margins(&comb, &store.a, &store.b, &mut oc);
+        for t in 0..n {
+            close(oc[t], a * o1[t] + b * o2[t], 1e-9, 1e-9, "linearity")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cauchy_schwarz_on_h_norms() {
+    // |<H_t, M>| <= ||H_t||_F ||M||_F — the inequality every sphere rule
+    // relies on, with our cached ||H||
+    forall("h-norm-cs", 24, |rng| {
+        let store = random_store(rng);
+        let engine = NativeEngine::new(1);
+        let d = store.d;
+        let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+        m.symmetrize();
+        let mut margins = vec![0.0; store.len()];
+        engine.margins(&m, &store.a, &store.b, &mut margins);
+        let mn = m.norm();
+        for t in 0..store.len() {
+            if margins[t].abs() > store.h_norm[t] * mn * (1.0 + 1e-9) + 1e-9 {
+                return Err(format!(
+                    "t={t}: |{}| > {} * {}",
+                    margins[t], store.h_norm[t], mn
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spectral_identities() {
+    forall("spectral", 32, |rng| {
+        let d = 2 + rng.below(8);
+        let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+        m.symmetrize();
+        let e = sym_eig(&m);
+        // eigenvalue sum/trace and norm identities
+        close(e.values.iter().sum::<f64>(), m.trace(), 1e-9, 1e-9, "trace")?;
+        close(
+            e.values.iter().map(|v| v * v).sum::<f64>(),
+            m.norm_sq(),
+            1e-9,
+            1e-9,
+            "norm",
+        )?;
+        // split orthogonality
+        let s = psd_split(&m);
+        close(s.plus.dot(&s.minus), 0.0, 0.0, 1e-7, "orthogonal split")?;
+        // Moreau: ||M||² = ||M+||² + ||M-||²
+        close(
+            m.norm_sq(),
+            s.plus.norm_sq() + s.minus.norm_sq(),
+            1e-9,
+            1e-9,
+            "moreau",
+        )
+    });
+}
+
+#[test]
+fn lambda_max_is_boundary() {
+    // at λ ≥ λ_max the all-ones dual is optimal (gap ~ 0); below it is not
+    forall("lambda-max", 8, |rng| {
+        let store = random_store(rng);
+        let engine = NativeEngine::new(1);
+        let loss = Loss::smoothed_hinge(0.05);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        let check = |lambda: f64| -> f64 {
+            let prob = Problem::new(&store, loss, lambda);
+            let ones = vec![1.0; store.len()];
+            let sum_h = engine.wgram(&store.a, &store.b, &ones);
+            let m = psd_project(&sum_h).scaled(1.0 / lambda);
+            let mut timers = PhaseTimers::default();
+            let ev = prob.eval(&m, &engine, &mut timers);
+            let (d_val, _) = prob.dual(&ev.margins, &ev.k, &mut timers);
+            (ev.p - d_val) / ev.p.abs().max(1.0)
+        };
+        let above = check(lmax * 1.001);
+        if above > 1e-9 {
+            return Err(format!("gap {above} above lambda_max"));
+        }
+        Ok(())
+    });
+}

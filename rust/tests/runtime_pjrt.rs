@@ -1,0 +1,182 @@
+//! PJRT integration: the AOT artifacts (L1 Pallas kernels lowered through
+//! the L2 JAX model into HLO text) must produce the same numbers as the
+//! native rust engine, to f64 round-off, through the real
+//! `xla`-crate / PJRT-CPU execution path.
+//!
+//! Requires `make artifacts`. Tests are skipped (with a loud message)
+//! when the artifacts directory is missing so `cargo test` stays green
+//! in a fresh checkout.
+
+use triplet_screen::linalg::Mat;
+use triplet_screen::loss::Loss;
+use triplet_screen::path::{PathConfig, RegPath};
+use triplet_screen::prelude::*;
+use triplet_screen::runtime::Engine;
+use triplet_screen::solver::{Problem, SolverConfig};
+
+fn pjrt() -> Option<PjrtEngine> {
+    match PjrtEngine::from_default_dir() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP pjrt tests: {err:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn rand_inputs(rng: &mut Pcg64, n: usize, d: usize) -> (Mat, Mat, Mat) {
+    let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+    m.symmetrize();
+    let a = Mat::from_fn(n, d, |_, _| rng.normal());
+    let b = Mat::from_fn(n, d, |_, _| rng.normal());
+    (m, a, b)
+}
+
+#[test]
+fn margins_match_native_across_dims_and_padding() {
+    let Some(engine) = pjrt() else { return };
+    let native = NativeEngine::new(0);
+    let mut rng = Pcg64::seed(1);
+    // n values chosen to exercise: exact block, padding, multi-dispatch
+    for d in [4usize, 19, 68] {
+        for n in [1usize, 511, 8192, 9000] {
+            if !engine.supports_dim(d) {
+                continue;
+            }
+            let (m, a, b) = rand_inputs(&mut rng, n, d);
+            let mut got = vec![0.0; n];
+            let mut want = vec![0.0; n];
+            engine.margins(&m, &a, &b, &mut got);
+            native.margins(&m, &a, &b, &mut want);
+            for t in 0..n {
+                assert!(
+                    (got[t] - want[t]).abs() <= 1e-9 * (1.0 + want[t].abs()),
+                    "d={d} n={n} t={t}: pjrt {} vs native {}",
+                    got[t],
+                    want[t]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wgram_matches_native() {
+    let Some(engine) = pjrt() else { return };
+    let native = NativeEngine::new(0);
+    let mut rng = Pcg64::seed(2);
+    for (d, n) in [(4usize, 300usize), (19, 8192), (32, 10000)] {
+        if !engine.supports_dim(d) {
+            continue;
+        }
+        let (_, a, b) = rand_inputs(&mut rng, n, d);
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let got = engine.wgram(&a, &b, &w);
+        let want = native.wgram(&a, &b, &w);
+        let err = got.sub(&want).max_abs();
+        assert!(
+            err <= 1e-8 * (1.0 + want.max_abs()),
+            "d={d} n={n}: wgram err {err}"
+        );
+    }
+}
+
+#[test]
+fn fused_step_matches_native() {
+    let Some(engine) = pjrt() else { return };
+    let native = NativeEngine::new(0);
+    let mut rng = Pcg64::seed(3);
+    for (d, n, gamma) in [(19usize, 700usize, 0.05), (19, 8192, 0.5), (68, 1000, 0.05)] {
+        if !engine.supports_dim(d) {
+            continue;
+        }
+        let (m, a, b) = rand_inputs(&mut rng, n, d);
+        // scale M down so margins straddle the loss thresholds
+        let m = m.scaled(0.05);
+        let mut got_m = vec![0.0; n];
+        let mut want_m = vec![0.0; n];
+        let (got_l, got_g) = engine.step(&m, &a, &b, gamma, &mut got_m);
+        let (want_l, want_g) = native.step(&m, &a, &b, gamma, &mut want_m);
+        assert!(
+            (got_l - want_l).abs() <= 1e-8 * (1.0 + want_l.abs()),
+            "loss: {got_l} vs {want_l}"
+        );
+        let gerr = got_g.sub(&want_g).max_abs();
+        assert!(gerr <= 1e-8 * (1.0 + want_g.max_abs()), "grad err {gerr}");
+        for t in 0..n {
+            assert!((got_m[t] - want_m[t]).abs() <= 1e-9 * (1.0 + want_m[t].abs()));
+        }
+    }
+}
+
+#[test]
+fn solver_converges_on_pjrt_engine() {
+    let Some(engine) = pjrt() else { return };
+    let mut rng = Pcg64::seed(4);
+    let ds = synthetic::analogue("iris", &mut rng);
+    let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+    if !engine.supports_dim(store.d) {
+        return;
+    }
+    let loss = Loss::smoothed_hinge(0.05);
+    let lmax = Problem::lambda_max(&store, &loss, &engine);
+    let mut prob = Problem::new(&store, loss, lmax * 0.1);
+    let (m_pjrt, stats) = Solver::new(SolverConfig::default()).solve(
+        &mut prob,
+        &engine,
+        Mat::zeros(store.d, store.d),
+        None,
+    );
+    assert!(stats.converged, "{stats:?}");
+
+    // must match the native-engine solution
+    let native = NativeEngine::new(0);
+    let mut prob_n = Problem::new(&store, loss, lmax * 0.1);
+    let (m_native, stats_n) = Solver::new(SolverConfig::default()).solve(
+        &mut prob_n,
+        &native,
+        Mat::zeros(store.d, store.d),
+        None,
+    );
+    assert!(stats_n.converged);
+    let diff = m_pjrt.sub(&m_native).max_abs();
+    assert!(
+        diff <= 1e-4 * (1.0 + m_native.max_abs()),
+        "engines disagree: {diff}"
+    );
+}
+
+#[test]
+fn screened_path_on_pjrt_engine() {
+    let Some(engine) = pjrt() else { return };
+    let mut rng = Pcg64::seed(5);
+    let ds = synthetic::analogue("wine", &mut rng);
+    let store = TripletStore::from_dataset(&ds, 5, &mut rng);
+    if !engine.supports_dim(store.d) {
+        return;
+    }
+    let cfg = PathConfig {
+        max_steps: 6,
+        screening: Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere)),
+        range_screening: true,
+        solver: SolverConfig {
+            tol: 1e-6,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let res = RegPath::new(cfg.clone()).run(&store, &engine);
+    assert!(res.steps.iter().all(|s| s.converged));
+    // cross-engine objective agreement
+    let native = NativeEngine::new(0);
+    let res_n = RegPath::new(cfg).run(&store, &native);
+    for (a, b) in res.steps.iter().zip(&res_n.steps) {
+        assert!(
+            (a.p - b.p).abs() <= 1e-5 * (1.0 + b.p.abs()),
+            "λ={}: pjrt P={} native P={}",
+            a.lambda,
+            a.p,
+            b.p
+        );
+    }
+}
