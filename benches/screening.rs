@@ -3,6 +3,12 @@
 //! range extension — the §Perf L3 numbers behind the paper's §3.3 cost
 //! analysis.
 //!
+//! Also runs a short screened regularization path and emits per-λ
+//! pipeline telemetry (active-set size, screening calls, rule
+//! evaluations, screening latency) as JSON — printed after the table and
+//! written to `target/screening_bench.json` — so future PRs have a
+//! machine-readable perf baseline.
+//!
 //! Run: `cargo bench --bench screening` (add `-- --quick` for short runs).
 
 use triplet_screen::linalg::Mat;
@@ -11,6 +17,7 @@ use triplet_screen::prelude::*;
 use triplet_screen::screening::{bounds, l_range, r_range, rules, sdls};
 use triplet_screen::solver::{Problem, Solver, SolverConfig};
 use triplet_screen::util::bench::Bench;
+use triplet_screen::util::json::Json;
 use triplet_screen::util::timer::PhaseTimers;
 
 fn main() {
@@ -122,4 +129,71 @@ fn main() {
         }
         count
     });
+
+    // ---- pipeline telemetry: screened path, per-λ JSON baseline ----
+    let path_cfg = PathConfig {
+        rho: 0.9,
+        max_steps: if quick { 8 } else { 20 },
+        solver: SolverConfig {
+            tol: 1e-6,
+            ..Default::default()
+        },
+        screening: Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere)),
+        range_screening: true,
+        ..Default::default()
+    };
+    let res = RegPath::new(path_cfg).run(&store, &engine);
+    let steps_json: Vec<Json> = res
+        .steps
+        .iter()
+        .map(|s| {
+            let active = store.len() - s.screened_l - s.screened_r;
+            let ms_per_call = if s.screen_calls > 0 {
+                s.screen_time * 1e3 / s.screen_calls as f64
+            } else {
+                0.0
+            };
+            Json::obj(vec![
+                ("lambda", Json::Num(s.lambda)),
+                ("iters", Json::Num(s.iters as f64)),
+                ("active_after", Json::Num(active as f64)),
+                ("rate_final", Json::Num(s.rate_final)),
+                ("range_screened", Json::Num(s.range_screened as f64)),
+                ("screen_calls", Json::Num(s.screen_calls as f64)),
+                ("rule_evals", Json::Num(s.rule_evals as f64)),
+                ("screen_seconds", Json::Num(s.screen_time)),
+                ("screen_ms_per_call", Json::Num(ms_per_call)),
+                ("wall_seconds", Json::Num(s.wall)),
+            ])
+        })
+        .collect();
+    let stats = res.screening_stats.clone().unwrap_or_default();
+    let naive_floor = store.len() * res.steps.len();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("screening-path".into())),
+        ("dataset", Json::Str("segment-small".into())),
+        ("triplets", Json::Num(store.len() as f64)),
+        ("path_steps", Json::Num(res.steps.len() as f64)),
+        ("total_rule_evals", Json::Num(stats.rule_evals as f64)),
+        ("total_skipped", Json::Num(stats.skipped as f64)),
+        ("naive_rule_evals", Json::Num(naive_floor as f64)),
+        ("total_wall_seconds", Json::Num(res.total_wall)),
+        ("steps", Json::Arr(steps_json)),
+    ]);
+    println!("\nscreening-path telemetry (JSON):");
+    println!("{}", doc.to_string_compact());
+    let _ = std::fs::create_dir_all("target");
+    match std::fs::write("target/screening_bench.json", doc.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote target/screening_bench.json"),
+        Err(e) => eprintln!("could not write target/screening_bench.json: {e}"),
+    }
+    // the workset acceptance bound: never revisit a retired triplet.
+    // Checked after emitting the telemetry so a regression still leaves
+    // the numbers needed to debug it.
+    assert!(
+        stats.rule_evals < naive_floor,
+        "pipeline regression: rule_evals {} >= |T|*steps {}",
+        stats.rule_evals,
+        naive_floor
+    );
 }

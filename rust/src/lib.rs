@@ -23,8 +23,15 @@
 //! - **Layer 3 (runtime, this crate)** — the coordinator: regularization
 //!   path driver, projected-gradient solver, screening engine, triplet
 //!   bookkeeping, datasets, experiments. Artifacts are loaded and executed
-//!   through the PJRT C API ([`runtime::PjrtEngine`]); a pure-rust
+//!   through the PJRT C API ([`runtime::PjrtEngine`], behind the `pjrt`
+//!   feature; an offline stub is compiled otherwise); a pure-rust
 //!   [`runtime::NativeEngine`] provides the oracle/baseline.
+//!
+//! The screening hot path runs as a blocked, parallel, incremental
+//! pipeline over a compacted active workset
+//! ([`triplet::ActiveWorkset`]) — screened triplets are permanently
+//! retired in O(d) and every kernel/rule pass is O(|active|), never
+//! O(|T|); see `screening` module docs for the cost table.
 //!
 //! Python never runs at request time: after `make artifacts` the binaries
 //! are self-contained.

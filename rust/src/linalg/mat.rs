@@ -81,6 +81,31 @@ impl Mat {
         out
     }
 
+    /// Overwrite row `dst` with row `src` in place (no-op when equal).
+    pub fn copy_row_within(&mut self, src: usize, dst: usize) {
+        if src == dst {
+            return;
+        }
+        let c = self.cols;
+        self.data.copy_within(src * c..(src + 1) * c, dst * c);
+    }
+
+    /// Drop every row past the first `n` (keeps the allocation).
+    pub fn truncate_rows(&mut self, n: usize) {
+        assert!(n <= self.rows, "truncate_rows past end");
+        self.data.truncate(n * self.cols);
+        self.rows = n;
+    }
+
+    /// Remove row `i` by moving the last row into its slot (O(cols)).
+    /// The workset compaction primitive: order is not preserved.
+    pub fn swap_remove_row(&mut self, i: usize) {
+        assert!(i < self.rows, "swap_remove_row past end");
+        let last = self.rows - 1;
+        self.copy_row_within(last, i);
+        self.truncate_rows(last);
+    }
+
     pub fn transpose(&self) -> Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
@@ -308,6 +333,20 @@ mod tests {
         let s = m.select_rows(&[3, 1]);
         assert_eq!(s.row(0), &[30.0, 31.0]);
         assert_eq!(s.row(1), &[10.0, 11.0]);
+    }
+
+    #[test]
+    fn swap_remove_row_compacts() {
+        let mut m = Mat::from_fn(4, 3, |i, j| (i * 10 + j) as f64);
+        m.swap_remove_row(1);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(m.row(1), &[30.0, 31.0, 32.0]); // last row moved in
+        assert_eq!(m.row(2), &[20.0, 21.0, 22.0]);
+        // removing the last row is a plain truncation
+        m.swap_remove_row(2);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[30.0, 31.0, 32.0]);
     }
 
     #[test]

@@ -6,11 +6,21 @@
 //! *dynamic screening* every `screen_every` solver iterations, and the
 //! range-based extension (§4) that screens without rule evaluation while
 //! λ stays inside a triplet's certified interval.
+//!
+//! The driver owns the screening pipeline state that crosses λ steps:
+//! after each solve it gathers the reference margins `⟨H_t, M₀⟩` **once**
+//! (one full-store kernel pass shared by every RPB/RRPB manager and the
+//! range extension — previously each consumer paid its own pass) and
+//! installs them into the next λ's [`Problem`] workset as a row-aligned
+//! lane, so the manager's per-call cost is O(|active|) with no per-id
+//! gather. Per-λ screening-call counts and rule-evaluation counts are
+//! recorded in [`PathStep`] so benches and CI can assert that the
+//! pipeline never revisits retired triplets.
 
 use crate::linalg::{psd_split, Mat};
 use crate::loss::Loss;
 use crate::runtime::Engine;
-use crate::screening::{l_range, r_range, ScreeningConfig, ScreeningManager};
+use crate::screening::{l_range, r_range, ScreeningConfig, ScreeningManager, ScreeningStats};
 use crate::solver::{ActiveSetSolver, Problem, ScreenCtx, Solver, SolverConfig};
 use crate::triplet::TripletStore;
 
@@ -74,6 +84,11 @@ pub struct PathStep {
     pub screened_r: usize,
     /// triplets fixed by the range extension before any rule evaluation
     pub range_screened: usize,
+    /// screening-manager invocations during this λ solve
+    pub screen_calls: usize,
+    /// triplet-rule evaluations actually performed during this λ solve
+    /// (retired triplets are never revisited, memoized ones are skipped)
+    pub rule_evals: usize,
     /// wall-clock seconds for this λ
     pub wall: f64,
     /// seconds spent evaluating screening rules (Table 4's parentheses)
@@ -89,7 +104,14 @@ pub struct PathResult {
     pub lambda_max: f64,
     pub total_wall: f64,
     pub m_final: Mat,
+    /// cumulative stats summed over all screening managers (primary +
+    /// secondary), so per-step `screen_calls`/`rule_evals` deltas always
+    /// add up to these totals; None when screening is off
+    pub screening_stats: Option<ScreeningStats>,
 }
+
+/// Screening reference carried across λ steps: `(‖M₀‖, λ₀, ε, ⟨H_t,M₀⟩)`.
+type RefState = (f64, f64, f64, Vec<f64>);
 
 /// The regularization-path coordinator.
 pub struct RegPath {
@@ -115,20 +137,26 @@ impl RegPath {
 
         let mut manager = self.cfg.screening.map(ScreeningManager::new);
         let mut manager2 = self.cfg.secondary_screening.map(ScreeningManager::new);
-        for mgr in [manager.as_mut(), manager2.as_mut()].into_iter().flatten() {
-            if mgr.cfg.bound.needs_reference() {
-                // λ_max solution is exact: ε = 0 reference
-                mgr.set_reference(m_warm.clone(), lambda_max, 0.0, store, engine);
-            }
-        }
-        // RRPB reference state for the range extension
-        let mut range_ref: Option<(Mat, f64, f64, Vec<f64>)> = if self.cfg.range_screening {
+        let needs_ref = [manager.as_ref(), manager2.as_ref()]
+            .into_iter()
+            .flatten()
+            .any(|m| m.cfg.bound.needs_reference());
+        // One margins pass per λ feeds every consumer of the reference:
+        // the RPB/RRPB managers, the workset lane, the range extension.
+        let needs_margins = needs_ref || self.cfg.range_screening;
+
+        let mut ref_state: Option<RefState> = None;
+        if needs_margins {
+            // λ_max solution is exact: ε = 0 reference
             let mut hm = vec![0.0; store.len()];
             engine.margins(&m_warm, &store.a, &store.b, &mut hm);
-            Some((m_warm.clone(), lambda_max, 0.0, hm))
-        } else {
-            None
-        };
+            for mgr in [manager.as_mut(), manager2.as_mut()].into_iter().flatten() {
+                if mgr.cfg.bound.needs_reference() {
+                    mgr.set_reference_with_margins(m_warm.clone(), lambda_max, 0.0, hm.clone());
+                }
+            }
+            ref_state = Some((m_warm.norm(), lambda_max, 0.0, hm));
+        }
 
         let mut steps: Vec<PathStep> = Vec::new();
         let mut lambda = lambda_max;
@@ -145,25 +173,44 @@ impl RegPath {
             let t_step = std::time::Instant::now();
             let mut problem = Problem::new(store, loss, lambda);
 
+            // thread the reference margins into the workset lane so the
+            // manager reads them contiguously (compacted in lockstep);
+            // the lane carries the reference's identity tag, so managers
+            // only accept it while it matches their current reference
+            if needs_ref {
+                let tag = [manager.as_ref(), manager2.as_ref()]
+                    .into_iter()
+                    .flatten()
+                    .filter(|m| m.cfg.bound.needs_reference())
+                    .find_map(|m| m.reference_margins().map(|(_, tag)| tag));
+                if let (Some(tag), Some((_, _, _, hm))) = (tag, &ref_state) {
+                    problem.install_ref_margins(hm, tag);
+                }
+            }
+
             // ---- range-based screening (no rule evaluation) ----
             let mut range_screened = 0usize;
-            if let Some((m0, l0, eps, hm)) = &range_ref {
-                let mn = m0.norm();
-                let mut rl = Vec::new();
-                let mut rr = Vec::new();
-                for t in 0..store.len() {
-                    let hn = store.h_norm[t];
-                    if r_range(hm[t], hn, mn, *eps, *l0, loss.r_threshold()).contains(lambda) {
-                        rr.push(t);
-                    } else if l_range(hm[t], hn, mn, *eps, *l0, loss.l_threshold())
-                        .contains(lambda)
-                    {
-                        rl.push(t);
+            if self.cfg.range_screening {
+                if let Some((mn, l0, eps, hm)) = &ref_state {
+                    let mut rl = Vec::new();
+                    let mut rr = Vec::new();
+                    for t in 0..store.len() {
+                        let hn = store.h_norm[t];
+                        if r_range(hm[t], hn, *mn, *eps, *l0, loss.r_threshold()).contains(lambda)
+                        {
+                            rr.push(t);
+                        } else if l_range(hm[t], hn, *mn, *eps, *l0, loss.l_threshold())
+                            .contains(lambda)
+                        {
+                            rl.push(t);
+                        }
                     }
+                    let (nl, nr) = problem.apply_screening(&rl, &rr);
+                    range_screened = nl + nr;
                 }
-                range_screened = rl.len() + rr.len();
-                problem.apply_screening(&rl, &rr);
             }
+
+            let stats_before = screening_totals(manager.as_ref(), manager2.as_ref());
 
             // ---- solve with dynamic screening ----
             let mut rate_regpath = problem.status().screening_rate();
@@ -221,6 +268,7 @@ impl RegPath {
                     )
                 }
             };
+            let stats_after = screening_totals(manager.as_ref(), manager2.as_ref());
 
             let wall = t_step.elapsed().as_secs_f64();
             let loss_term = stats.p - 0.5 * lambda * m_sol.norm_sq();
@@ -238,21 +286,24 @@ impl RegPath {
                 screened_l: problem.status().n_screened_l(),
                 screened_r: problem.status().n_screened_r(),
                 range_screened,
+                screen_calls: stats_after.0 - stats_before.0,
+                rule_evals: stats_after.1 - stats_before.1,
                 wall,
                 screen_time: stats.timers.screening.secs(),
                 compute_time: stats.timers.compute.secs(),
             });
 
-            // ---- update references for the next λ ----
-            for mgr in [manager.as_mut(), manager2.as_mut()].into_iter().flatten() {
-                if mgr.cfg.bound.needs_reference() {
-                    mgr.set_reference(m_sol.clone(), lambda, eps, store, engine);
-                }
-            }
-            if self.cfg.range_screening {
+            // ---- update the reference for the next λ (one margins pass
+            //      shared by managers, lane and range extension) ----
+            if needs_margins {
                 let mut hm = vec![0.0; store.len()];
                 engine.margins(&m_sol, &store.a, &store.b, &mut hm);
-                range_ref = Some((m_sol.clone(), lambda, eps, hm));
+                for mgr in [manager.as_mut(), manager2.as_mut()].into_iter().flatten() {
+                    if mgr.cfg.bound.needs_reference() {
+                        mgr.set_reference_with_margins(m_sol.clone(), lambda, eps, hm.clone());
+                    }
+                }
+                ref_state = Some((m_sol.norm(), lambda, eps, hm));
             }
             m_warm = m_sol;
 
@@ -268,13 +319,41 @@ impl RegPath {
             prev_loss_term = Some(loss_term);
         }
 
+        // aggregate across both managers so the per-step deltas (which
+        // already sum both) reconcile with the cumulative totals
+        let screening_stats = manager.map(|m1| {
+            let mut s = m1.stats;
+            if let Some(m2) = manager2 {
+                s.calls += m2.stats.calls;
+                s.screened_l += m2.stats.screened_l;
+                s.screened_r += m2.stats.screened_r;
+                s.rule_evals += m2.stats.rule_evals;
+                s.skipped += m2.stats.skipped;
+            }
+            s
+        });
         PathResult {
             steps,
             lambda_max,
             total_wall: t_total.elapsed().as_secs_f64(),
             m_final: m_warm,
+            screening_stats,
         }
     }
+}
+
+/// Cumulative `(calls, rule_evals)` across both managers.
+fn screening_totals(
+    m1: Option<&ScreeningManager>,
+    m2: Option<&ScreeningManager>,
+) -> (usize, usize) {
+    let mut calls = 0;
+    let mut evals = 0;
+    for m in [m1, m2].into_iter().flatten() {
+        calls += m.stats.calls;
+        evals += m.stats.rule_evals;
+    }
+    (calls, evals)
 }
 
 #[cfg(test)]
@@ -308,12 +387,14 @@ mod tests {
         let engine = NativeEngine::new(2);
         let res = RegPath::new(base_cfg()).run(&store, &engine);
         assert!(!res.steps.is_empty());
+        assert!(res.screening_stats.is_none());
         // λ strictly decreasing, loss term non-increasing (more fitting)
         for w in res.steps.windows(2) {
             assert!(w[1].lambda < w[0].lambda);
             assert!(w[1].loss_term <= w[0].loss_term * (1.0 + 1e-6));
         }
         assert!(res.steps.iter().all(|s| s.converged));
+        assert!(res.steps.iter().all(|s| s.screen_calls == 0 && s.rule_evals == 0));
     }
 
     #[test]
@@ -338,8 +419,12 @@ mod tests {
                 b.p
             );
         }
-        // screening did something
+        // screening did something, and the stats plumbing is consistent
         assert!(screened.steps.iter().any(|s| s.rate_final > 0.0));
+        let stats = screened.screening_stats.expect("stats for screened run");
+        assert!(stats.calls > 0);
+        let per_step: usize = screened.steps.iter().map(|s| s.rule_evals).sum();
+        assert_eq!(stats.rule_evals, per_step, "per-step deltas must sum to totals");
     }
 
     #[test]
@@ -389,5 +474,28 @@ mod tests {
         cfg.stop_ratio = 0.5; // aggressive: stop as soon as returns diminish
         let res = RegPath::new(cfg).run(&store, &engine);
         assert!(res.steps.len() < 500, "stop criterion never fired");
+    }
+
+    #[test]
+    fn pipeline_never_revisits_retired_triplets() {
+        // The acceptance bound: over a full path with the workset pipeline
+        // and the range extension, total rule evaluations stay strictly
+        // below |T| × steps (the naive per-λ full-scan floor). Same store
+        // as `range_screening_is_safe_and_counts`, which asserts the range
+        // extension fires — each range-retired triplet is never evaluated.
+        let store = small_store(3);
+        let engine = NativeEngine::new(2);
+        let mut cfg = base_cfg();
+        cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        cfg.range_screening = true;
+        let res = RegPath::new(cfg).run(&store, &engine);
+        let stats = res.screening_stats.expect("screened run");
+        let naive_floor = store.len() * res.steps.len();
+        assert!(
+            stats.rule_evals < naive_floor,
+            "rule_evals {} >= |T|*steps {}",
+            stats.rule_evals,
+            naive_floor
+        );
     }
 }

@@ -13,6 +13,12 @@
 //! exactly that on the real artifacts.
 
 mod native;
+// The real PJRT engine needs the vendored `xla` + `anyhow` crates; offline
+// builds compile an API-identical stub whose constructors fail cleanly.
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 mod pjrt;
 
 pub use native::NativeEngine;

@@ -1,0 +1,108 @@
+//! Offline stand-in for the PJRT engine.
+//!
+//! The real engine (`pjrt.rs`, behind the `pjrt` cargo feature) needs the
+//! vendored `xla` + `anyhow` crates, which the offline build environment
+//! does not ship. This stub keeps the public API identical so every call
+//! site compiles unchanged: construction always fails with a descriptive
+//! error, and callers take their documented fallback path (tests skip,
+//! examples and binaries fall back to [`super::NativeEngine`]).
+
+use super::{Engine, StepOut};
+use crate::linalg::Mat;
+use std::path::{Path, PathBuf};
+
+/// Environment variable overriding the artifacts directory.
+pub const ARTIFACTS_DIR_ENV: &str = "TS_ARTIFACTS_DIR";
+
+/// Default artifacts directory (relative to the working directory).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var(ARTIFACTS_DIR_ENV)
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Error returned by every stub constructor.
+#[derive(Debug, Clone)]
+pub struct PjrtUnavailable {
+    dir: PathBuf,
+}
+
+impl std::fmt::Display for PjrtUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PJRT support not compiled in (build with `--features pjrt` and the \
+             vendored xla/anyhow crates); artifacts dir was {:?}",
+            self.dir
+        )
+    }
+}
+
+impl std::error::Error for PjrtUnavailable {}
+
+/// Stub engine: can never be constructed.
+pub struct PjrtEngine {
+    _never: std::convert::Infallible,
+    dir: PathBuf,
+}
+
+impl PjrtEngine {
+    /// Always fails: the `pjrt` feature is off in this build.
+    pub fn from_dir(dir: impl AsRef<Path>) -> Result<PjrtEngine, PjrtUnavailable> {
+        Err(PjrtUnavailable {
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Always fails: the `pjrt` feature is off in this build.
+    pub fn from_default_dir() -> Result<PjrtEngine, PjrtUnavailable> {
+        Self::from_dir(default_artifacts_dir())
+    }
+
+    pub fn supports_dim(&self, _d: usize) -> bool {
+        false
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+
+    fn margins(&self, _mat: &Mat, _a: &Mat, _b: &Mat, _out: &mut [f64]) {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+
+    fn wgram(&self, _a: &Mat, _b: &Mat, _w: &[f64]) -> Mat {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+
+    fn step(
+        &self,
+        _mat: &Mat,
+        _a: &Mat,
+        _b: &Mat,
+        _gamma: f64,
+        _margins_out: &mut [f64],
+    ) -> StepOut {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_always_fails_with_readable_error() {
+        let err = PjrtEngine::from_default_dir().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "unhelpful error: {msg}");
+        let err2 = PjrtEngine::from_dir("/tmp/x").unwrap_err();
+        assert!(format!("{err2}").contains("/tmp/x"));
+    }
+}

@@ -1,16 +1,28 @@
 //! Screening orchestration: build the configured sphere from solver state,
-//! evaluate the configured rule over all active triplets, return the
-//! screened id lists.
+//! evaluate the configured rule over the **active workset** in cache-sized
+//! parallel blocks, return the screened id lists.
 //!
-//! Cost structure follows the paper's §3.3 analysis:
+//! Cost structure follows the paper's §3.3 analysis, tightened by the
+//! workset pipeline:
+//! - every pass is O(|active|), never O(|T|): the compacted workset rows
+//!   are handed to the engine directly and retired ids are never revisited;
 //! - DGB's center is the iterate itself ⇒ `⟨H_t,Q⟩` *reuses* the margins
 //!   already computed for the objective (no extra kernel pass);
 //! - RPB/RRPB centers are scalar multiples of the fixed reference `M₀` ⇒
-//!   one margins pass per λ, cached and reused across dynamic screenings;
+//!   the reference margins are gathered **once per λ** (path driver) into
+//!   the workset's row-aligned lane and only scaled here; because the
+//!   sphere is *constant* during one λ solve, a triplet observed not to
+//!   fire is memoized (`no_fire`) and skipped on every later dynamic call;
 //! - GB/PGB/CDGB centers move with the iterate ⇒ one fresh margins pass
 //!   per screening invocation (the extra inner-product cost the paper
 //!   attributes to PGB);
-//! - the SDLS rule additionally pays per-triplet eigen work.
+//! - the SDLS rule additionally pays per-triplet eigen work, so the plain
+//!   sphere rule pre-filters and SDLS runs only on the undecided.
+//!
+//! Rule evaluation fans out across `util::parallel` workers in blocks of
+//! [`RULE_BLOCK`] triplets; per-triplet lanes (`hq`, `‖H‖`, `hp`, `hx0`)
+//! live in reusable scratch buffers, so a screening call allocates only
+//! the returned decision lists.
 
 use super::bounds::{self, Sphere};
 use super::rules::{self, Decision};
@@ -19,7 +31,13 @@ use super::{BoundKind, RuleKind, ScreeningConfig};
 use crate::linalg::psd_split;
 use crate::runtime::Engine;
 use crate::solver::{Problem, ScreenCtx};
+use crate::util::parallel;
 use crate::util::timer::PhaseTimers;
+
+/// Rule-evaluation block size: per-triplet lanes for one block
+/// (`hq` + `hn` + decision ids) stay L2-resident while a worker streams
+/// its contiguous group of blocks.
+const RULE_BLOCK: usize = 4096;
 
 /// Reference solution for the regularization-path bounds.
 #[derive(Clone, Debug)]
@@ -30,22 +48,66 @@ pub struct RefSolution {
     pub eps: f64,
 }
 
+/// Process-unique manager ids for lane tagging (see `lane_tag`).
+static MANAGER_NONCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
 /// Cumulative screening statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ScreeningStats {
     pub calls: usize,
     pub screened_l: usize,
     pub screened_r: usize,
-    /// total triplet-rule evaluations
+    /// total triplet-rule evaluations actually performed
     pub rule_evals: usize,
+    /// evaluations avoided by the fixed-sphere no-fire memo
+    pub skipped: usize,
+}
+
+/// Reusable per-call scratch lanes (grown once, reused across calls).
+#[derive(Default)]
+struct Scratch {
+    /// `⟨H_t, Q⟩` for active rows
+    hq: Vec<f64>,
+    /// `⟨H_t, P⟩` for the linear rule's support plane
+    hp: Vec<f64>,
+    /// `⟨H_t, X₀⟩` anchor margins for SDLS with non-PSD centers
+    hx0: Vec<f64>,
+}
+
+/// Identity of a fixed (iterate-independent) sphere: RPB/RRPB spheres
+/// depend only on (reference, λ, loss), so rule outcomes are memoizable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct FixedKey {
+    lambda_bits: u64,
+    gamma_bits: u64,
+    ref_version: u64,
+}
+
+/// Per-block rule-evaluation outcome (merged serially in block order).
+struct BlockOut {
+    l: Vec<usize>,
+    r: Vec<usize>,
+    /// ids proven not to fire under a fixed sphere (memo candidates)
+    cleared: Vec<usize>,
+    evals: usize,
 }
 
 /// Stateful screening engine for one regularization-path run.
 pub struct ScreeningManager {
     pub cfg: ScreeningConfig,
     reference: Option<RefSolution>,
-    /// `⟨H_t, M₀⟩` for every triplet id (cached at `set_reference`)
+    /// `⟨H_t, M₀⟩` for every triplet id (id-indexed fallback; the path
+    /// driver additionally installs these into the workset lane)
     ref_margins: Vec<f64>,
+    /// bumped on `set_reference`, part of the fixed-sphere memo key
+    ref_version: u64,
+    /// process-unique id; combined with `ref_version` it forms the lane
+    /// tag, so a lane can never collide across managers or references
+    manager_nonce: u64,
+    fixed_key: Option<FixedKey>,
+    /// id-indexed: proven non-firing under the current fixed sphere
+    no_fire: Vec<bool>,
+    scratch: Scratch,
     pub stats: ScreeningStats,
 }
 
@@ -55,8 +117,24 @@ impl ScreeningManager {
             cfg,
             reference: None,
             ref_margins: Vec::new(),
+            ref_version: 0,
+            manager_nonce: MANAGER_NONCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            fixed_key: None,
+            no_fire: Vec::new(),
+            scratch: Scratch::default(),
             stats: ScreeningStats::default(),
         }
+    }
+
+    /// Tag identifying this manager's *current* reference: unique per
+    /// (manager, reference installation). A workset lane installed under
+    /// this tag is guaranteed to hold exactly this reference's margins —
+    /// a lane from any other manager or any older reference never
+    /// matches, so stale margins can never feed the rules. A manager
+    /// whose tag is not the one installed simply falls back to its own
+    /// id-indexed gather (correct, marginally slower).
+    fn lane_tag(&self) -> u64 {
+        (self.manager_nonce << 24) ^ self.ref_version
     }
 
     /// Install the reference solution (previous λ on the path). Computes
@@ -71,12 +149,36 @@ impl ScreeningManager {
     ) {
         let mut margins = vec![0.0; store.len()];
         engine.margins(&m0, &store.a, &store.b, &mut margins);
+        self.set_reference_with_margins(m0, lambda0, eps, margins);
+    }
+
+    /// Install the reference together with precomputed `⟨H_t, M₀⟩` margins
+    /// (id-indexed over the full store) — lets the path driver share one
+    /// margins pass between managers and the range extension.
+    pub fn set_reference_with_margins(
+        &mut self,
+        m0: crate::linalg::Mat,
+        lambda0: f64,
+        eps: f64,
+        margins: Vec<f64>,
+    ) {
         self.reference = Some(RefSolution { m0, lambda0, eps });
         self.ref_margins = margins;
+        self.ref_version += 1;
+        self.fixed_key = None;
     }
 
     pub fn reference(&self) -> Option<&RefSolution> {
         self.reference.as_ref()
+    }
+
+    /// Full-store `⟨H_t, M₀⟩` margins of the current reference together
+    /// with its identity tag (for the path driver to install as the
+    /// workset's row-aligned lane via `Problem::install_ref_margins`).
+    pub fn reference_margins(&self) -> Option<(&[f64], u64)> {
+        self.reference
+            .as_ref()
+            .map(|_| (self.ref_margins.as_slice(), self.lane_tag()))
     }
 
     /// Build the configured sphere from the current solver state.
@@ -112,31 +214,44 @@ impl ScreeningManager {
         })
     }
 
-    /// `⟨H_t, Q⟩` for all active triplets, exploiting center structure.
+    /// Fill the scratch `hq` lane with `⟨H_t, Q⟩` for all active rows,
+    /// exploiting center structure, and return it.
     fn center_margins(
-        &self,
+        &mut self,
         sphere: &Sphere,
         problem: &Problem,
         ctx: &ScreenCtx,
         engine: &dyn Engine,
-    ) -> Vec<f64> {
+    ) -> &[f64] {
+        let n = problem.active_idx().len();
+        self.scratch.hq.resize(n, 0.0);
         match self.cfg.bound {
-            BoundKind::Dgb => ctx.margins.to_vec(),
+            BoundKind::Dgb => self.scratch.hq.copy_from_slice(ctx.margins),
             BoundKind::Rpb | BoundKind::Rrpb => {
                 let r = self.reference.as_ref().expect("checked in build_sphere");
                 let scale = (r.lambda0 + problem.lambda) / (2.0 * problem.lambda);
-                problem
-                    .active_idx()
-                    .iter()
-                    .map(|&t| scale * self.ref_margins[t])
-                    .collect()
+                if let Some(lane) = problem.active_ref_margins(self.lane_tag()) {
+                    // row-aligned lane installed by the path driver for
+                    // exactly this reference (tag-checked): contiguous
+                    // scale, no per-id gather
+                    for (dst, &m0) in self.scratch.hq.iter_mut().zip(lane) {
+                        *dst = scale * m0;
+                    }
+                } else {
+                    let ref_margins = &self.ref_margins;
+                    for (dst, &t) in self.scratch.hq.iter_mut().zip(problem.active_idx()) {
+                        *dst = scale * ref_margins[t];
+                    }
+                }
             }
-            _ => {
-                let mut hq = vec![0.0; problem.active_idx().len()];
-                engine.margins(&sphere.q, problem.active_a(), problem.active_b(), &mut hq);
-                hq
-            }
+            _ => engine.margins(
+                &sphere.q,
+                problem.active_a(),
+                problem.active_b(),
+                &mut self.scratch.hq,
+            ),
         }
+        &self.scratch.hq
     }
 
     /// Run one screening pass; returns `(new_l, new_r)` triplet ids.
@@ -150,140 +265,173 @@ impl ScreeningManager {
             return (vec![], vec![]);
         };
         self.stats.calls += 1;
-        let hq = self.center_margins(&sphere, problem, ctx, engine);
+        let n = problem.active_idx().len();
+        self.center_margins(&sphere, problem, ctx, engine);
+
         let thr_l = problem.loss.l_threshold();
         let thr_r = problem.loss.r_threshold();
-        let hn = problem.active_h_norm();
-        let ids = problem.active_idx();
-        self.stats.rule_evals += ids.len();
 
-        let mut new_l = Vec::new();
-        let mut new_r = Vec::new();
-        match self.cfg.rule {
-            RuleKind::Sphere => {
-                for (k, &t) in ids.iter().enumerate() {
-                    match rules::sphere_rule(hq[k], hn[k], sphere.r, thr_l, thr_r) {
-                        Decision::ScreenL => new_l.push(t),
-                        Decision::ScreenR => new_r.push(t),
-                        Decision::None => {}
-                    }
-                }
+        // Fixed-sphere memo: RPB/RRPB spheres do not move during one λ
+        // solve, so with an iterate-independent rule a triplet evaluated
+        // to Decision::None can never fire later under the same key. The
+        // linear rule's support plane tracks the iterate, so it stays out.
+        let fixed = matches!(self.cfg.bound, BoundKind::Rpb | BoundKind::Rrpb)
+            && self.cfg.rule != RuleKind::Linear;
+        if fixed {
+            let key = FixedKey {
+                lambda_bits: problem.lambda.to_bits(),
+                gamma_bits: problem.loss.gamma.to_bits(),
+                ref_version: self.ref_version,
+            };
+            if self.fixed_key != Some(key) {
+                self.fixed_key = Some(key);
+                self.no_fire.clear();
+                self.no_fire.resize(problem.status().len(), false);
             }
-            RuleKind::Linear => {
-                // supporting hyperplane of the PSD cone (§3.1.3): prefer
-                // P = −[Q^GB]_− from the projection of the gradient-step
-                // point M − ∇P̃/(2λ) — the halfspace Fig 3(a) shows is
-                // tighter than PGB; fall back to the optimizer's own
-                // pre-projection split, then to the plain sphere rule.
-                let mut gb_center = ctx.m.clone();
-                gb_center.axpy(-0.5 / problem.lambda, ctx.grad);
-                let gb_split = psd_split(&gb_center);
-                let p = if gb_split.minus_norm_sq > 1e-24 {
-                    Some(gb_split.minus.scaled(-1.0))
-                } else {
-                    ctx.pre_split.map(|s| s.minus.scaled(-1.0))
-                };
-                match p {
-                    Some(p) if p.norm_sq() > 0.0 => {
-                        let mut hp = vec![0.0; ids.len()];
-                        engine.margins(&p, problem.active_a(), problem.active_b(), &mut hp);
-                        let pq = p.dot(&sphere.q);
-                        let pn_sq = p.norm_sq();
-                        for (k, &t) in ids.iter().enumerate() {
-                            match rules::linear_rule(
-                                hq[k], hn[k], hp[k], pq, pn_sq, sphere.r, thr_l, thr_r,
-                            ) {
-                                Decision::ScreenL => new_l.push(t),
-                                Decision::ScreenR => new_r.push(t),
-                                Decision::None => {}
-                            }
-                        }
-                    }
-                    _ => {
-                        for (k, &t) in ids.iter().enumerate() {
-                            match rules::sphere_rule(hq[k], hn[k], sphere.r, thr_l, thr_r) {
-                                Decision::ScreenL => new_l.push(t),
-                                Decision::ScreenR => new_r.push(t),
-                                Decision::None => {}
-                            }
-                        }
-                    }
-                }
-            }
-            RuleKind::SemiDefinite => {
-                // sphere decision is implied by the SDLS decision (smaller
-                // feasible set) — run it first, SDLS only on the undecided;
-                // per-triplet dual ascents are independent → parallel
-                let r_sq = sphere.r * sphere.r;
-                let q_norm_sq = sphere.q.norm_sq();
-                // anchor margins for non-PSD centers: X0 = [Q]_+ must be
-                // inside the sphere for the anchor argument to hold
-                let anchor = if sphere.psd_center {
-                    None
-                } else {
-                    let split = psd_split(&sphere.q);
-                    if split.minus_norm_sq.sqrt() <= sphere.r {
-                        let mut hx0 = vec![0.0; ids.len()];
-                        engine.margins(&split.plus, problem.active_a(), problem.active_b(), &mut hx0);
-                        Some(hx0)
-                    } else {
-                        None // no certified anchor: SDLS cannot conclude
-                    }
-                };
-                let sphere_ref = &sphere;
-                let anchor_ref = &anchor;
-                let hq_ref = &hq;
-                let max_iter = self.cfg.sdls_max_iter;
-                let workers = crate::util::parallel::default_threads();
-                let chunks = crate::util::parallel::par_ranges(ids.len(), workers, |range| {
-                    let mut l = Vec::new();
-                    let mut r = Vec::new();
-                    for k in range {
-                        let t = ids[k];
-                        match rules::sphere_rule(hq_ref[k], hn[k], sphere_ref.r, thr_l, thr_r) {
-                            Decision::ScreenL => {
-                                l.push(t);
-                                continue;
-                            }
-                            Decision::ScreenR => {
-                                r.push(t);
-                                continue;
-                            }
-                            Decision::None => {}
-                        }
-                        let hx0 = if sphere_ref.psd_center {
-                            hq_ref[k]
-                        } else {
-                            match anchor_ref {
-                                Some(v) => v[k],
-                                None => continue,
-                            }
-                        };
-                        let query = SdlsQuery {
-                            q: &sphere_ref.q,
-                            q_norm_sq,
-                            psd_center: sphere_ref.psd_center,
-                            r_sq,
-                            a: problem.active_a().row(k),
-                            b: problem.active_b().row(k),
-                            hq: hq_ref[k],
-                            hn: hn[k],
-                            hx0,
-                        };
-                        if sdls::sdls_screens_r(&query, thr_r, max_iter) {
-                            r.push(t);
-                        } else if sdls::sdls_screens_l(&query, thr_l, max_iter) {
-                            l.push(t);
-                        }
-                    }
-                    (l, r)
-                });
-                for (l, r) in chunks {
-                    new_l.extend(l);
-                    new_r.extend(r);
+        }
+
+        // Linear-rule support plane (one margins pass with P): prefer
+        // P = −[Q^GB]_− from the projection of the gradient-step point
+        // M − ∇P̃/(2λ) — the halfspace Fig 3(a) shows is tighter than PGB;
+        // fall back to the optimizer's own pre-projection split, then to
+        // the plain sphere rule.
+        let mut lin: Option<(f64, f64)> = None; // (⟨P,Q⟩, ‖P‖²)
+        if self.cfg.rule == RuleKind::Linear {
+            let mut gb_center = ctx.m.clone();
+            gb_center.axpy(-0.5 / problem.lambda, ctx.grad);
+            let gb_split = psd_split(&gb_center);
+            let p = if gb_split.minus_norm_sq > 1e-24 {
+                Some(gb_split.minus.scaled(-1.0))
+            } else {
+                ctx.pre_split.map(|s| s.minus.scaled(-1.0))
+            };
+            if let Some(p) = p {
+                if p.norm_sq() > 0.0 {
+                    self.scratch.hp.resize(n, 0.0);
+                    engine.margins(
+                        &p,
+                        problem.active_a(),
+                        problem.active_b(),
+                        &mut self.scratch.hp,
+                    );
+                    lin = Some((p.dot(&sphere.q), p.norm_sq()));
                 }
             }
         }
+
+        // SDLS anchor margins for non-PSD centers: X₀ = [Q]_+ must lie
+        // inside the sphere for the anchor argument to hold.
+        let mut sdls_anchor_ok = true;
+        if self.cfg.rule == RuleKind::SemiDefinite && !sphere.psd_center {
+            let split = psd_split(&sphere.q);
+            if split.minus_norm_sq.sqrt() <= sphere.r {
+                self.scratch.hx0.resize(n, 0.0);
+                engine.margins(
+                    &split.plus,
+                    problem.active_a(),
+                    problem.active_b(),
+                    &mut self.scratch.hx0,
+                );
+            } else {
+                sdls_anchor_ok = false; // no certified anchor: SDLS cannot conclude
+            }
+        }
+
+        // ---- blocked, parallel rule evaluation ----
+        let ids = problem.active_idx();
+        let hn = problem.active_h_norm();
+        let hq: &[f64] = &self.scratch.hq;
+        let hp: &[f64] = &self.scratch.hp;
+        let hx0: &[f64] = &self.scratch.hx0;
+        let no_fire: &[bool] = &self.no_fire;
+        let rule = self.cfg.rule;
+        let max_iter = self.cfg.sdls_max_iter;
+        let q_norm_sq = sphere.q.norm_sq();
+        let r_sq = sphere.r * sphere.r;
+        let sphere_ref = &sphere;
+        let workers = parallel::default_threads();
+
+        let blocks = parallel::par_blocks(n, RULE_BLOCK, workers, |range| {
+            let mut out = BlockOut {
+                l: Vec::new(),
+                r: Vec::new(),
+                cleared: Vec::new(),
+                evals: 0,
+            };
+            for k in range {
+                let t = ids[k];
+                if fixed && no_fire[t] {
+                    continue; // proven non-firing under this sphere
+                }
+                out.evals += 1;
+                let decision = match rule {
+                    RuleKind::Sphere => {
+                        rules::sphere_rule(hq[k], hn[k], sphere_ref.r, thr_l, thr_r)
+                    }
+                    RuleKind::Linear => match lin {
+                        Some((pq, pn_sq)) => rules::linear_rule(
+                            hq[k], hn[k], hp[k], pq, pn_sq, sphere_ref.r, thr_l, thr_r,
+                        ),
+                        None => rules::sphere_rule(hq[k], hn[k], sphere_ref.r, thr_l, thr_r),
+                    },
+                    RuleKind::SemiDefinite => {
+                        // sphere decision is implied by the SDLS decision
+                        // (smaller feasible set) — pre-filter, SDLS only
+                        // on the undecided
+                        let pre = rules::sphere_rule(hq[k], hn[k], sphere_ref.r, thr_l, thr_r);
+                        if pre != Decision::None || !sdls_anchor_ok {
+                            pre
+                        } else {
+                            let anchor = if sphere_ref.psd_center { hq[k] } else { hx0[k] };
+                            let query = SdlsQuery {
+                                q: &sphere_ref.q,
+                                q_norm_sq,
+                                psd_center: sphere_ref.psd_center,
+                                r_sq,
+                                a: problem.active_a().row(k),
+                                b: problem.active_b().row(k),
+                                hq: hq[k],
+                                hn: hn[k],
+                                hx0: anchor,
+                            };
+                            if sdls::sdls_screens_r(&query, thr_r, max_iter) {
+                                Decision::ScreenR
+                            } else if sdls::sdls_screens_l(&query, thr_l, max_iter) {
+                                Decision::ScreenL
+                            } else {
+                                Decision::None
+                            }
+                        }
+                    }
+                };
+                match decision {
+                    Decision::ScreenL => out.l.push(t),
+                    Decision::ScreenR => out.r.push(t),
+                    Decision::None => {
+                        if fixed {
+                            out.cleared.push(t);
+                        }
+                    }
+                }
+            }
+            out
+        });
+
+        let mut new_l = Vec::new();
+        let mut new_r = Vec::new();
+        let mut evals = 0usize;
+        let mut cleared = Vec::new();
+        for b in blocks {
+            new_l.extend(b.l);
+            new_r.extend(b.r);
+            cleared.extend(b.cleared);
+            evals += b.evals;
+        }
+        for t in cleared {
+            self.no_fire[t] = true;
+        }
+        self.stats.rule_evals += evals;
+        self.stats.skipped += n - evals;
         self.stats.screened_l += new_l.len();
         self.stats.screened_r += new_r.len();
         (new_l, new_r)
@@ -422,10 +570,10 @@ mod tests {
             margins: &ev.margins,
             iter: 0,
         };
-        let mgr = ScreeningManager::new(ScreeningConfig::new(BoundKind::Dgb, RuleKind::Sphere));
+        let mut mgr = ScreeningManager::new(ScreeningConfig::new(BoundKind::Dgb, RuleKind::Sphere));
         let sphere = mgr.build_sphere(&prob, &ctx, &f.engine).unwrap();
         let hq = mgr.center_margins(&sphere, &prob, &ctx, &f.engine);
-        assert_eq!(hq, ev.margins);
+        assert_eq!(hq, &ev.margins[..]);
         let _ = &mut prob;
     }
 
@@ -489,5 +637,68 @@ mod tests {
             l.len() + r.len()
         };
         assert!(count(BoundKind::Pgb) >= count(BoundKind::Gb));
+    }
+
+    #[test]
+    fn fixed_sphere_memo_skips_reevaluation() {
+        // Under RRPB (fixed sphere within one λ) the second screening call
+        // on the same problem must evaluate zero rules — every surviving
+        // triplet is memoized as non-firing — and return nothing new.
+        let f = fix(5);
+        let l0 = f.lmax * 0.3;
+        let lambda = l0 * 0.8;
+        let m0 = exact_solution(&f, l0);
+        let mut mgr = ScreeningManager::new(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        mgr.set_reference(m0, l0, 1e-9, &f.store, &f.engine);
+
+        let mut prob = Problem::new(&f.store, f.loss, lambda);
+        let mut timers = PhaseTimers::default();
+        let m = Mat::zeros(4, 4);
+        let ev = prob.eval(&m, &f.engine, &mut timers);
+        let grad = prob.grad(&m, &ev.k);
+        let (d_val, split) = prob.dual(&ev.margins, &ev.k, &mut timers);
+        let ctx = ScreenCtx {
+            m: &m,
+            grad: &grad,
+            p: ev.p,
+            d: d_val,
+            gap: ev.p - d_val,
+            k_plus: &split.plus,
+            pre_split: None,
+            margins: &ev.margins,
+            iter: 0,
+        };
+        let (l1, r1) = mgr.screen(&prob, &ctx, &f.engine);
+        let evals_first = mgr.stats.rule_evals;
+        assert_eq!(evals_first, f.store.len(), "first call evaluates all active");
+        prob.apply_screening(&l1, &r1);
+
+        // second call at the same λ with the same reference: zero evals
+        let ev2 = prob.eval(&m, &f.engine, &mut timers);
+        let grad2 = prob.grad(&m, &ev2.k);
+        let (d2, split2) = prob.dual(&ev2.margins, &ev2.k, &mut timers);
+        let ctx2 = ScreenCtx {
+            m: &m,
+            grad: &grad2,
+            p: ev2.p,
+            d: d2,
+            gap: ev2.p - d2,
+            k_plus: &split2.plus,
+            pre_split: None,
+            margins: &ev2.margins,
+            iter: 1,
+        };
+        let (l2, r2) = mgr.screen(&prob, &ctx2, &f.engine);
+        assert!(l2.is_empty() && r2.is_empty());
+        assert_eq!(mgr.stats.rule_evals, evals_first, "memoized call re-evaluated rules");
+        assert_eq!(mgr.stats.skipped, prob.active_idx().len());
+
+        // a new reference invalidates the memo
+        if !prob.active_idx().is_empty() {
+            let m0b = exact_solution(&f, l0 * 0.999);
+            mgr.set_reference(m0b, l0 * 0.999, 1e-9, &f.store, &f.engine);
+            let (_, _) = mgr.screen(&prob, &ctx2, &f.engine);
+            assert!(mgr.stats.rule_evals > evals_first, "memo not invalidated");
+        }
     }
 }

@@ -14,6 +14,43 @@
 //! Plus the range-based extension (§4): intervals of λ on which a rule is
 //! guaranteed to keep firing, so the path driver can skip rule evaluation
 //! altogether.
+//!
+//! ## Workset pipeline (architecture)
+//!
+//! Screening only pays for itself if the rules cost less than the solver
+//! passes they save (§3.3), so the hot path is organized as a **blocked,
+//! parallel, incremental pipeline** over a compacted active workset
+//! ([`crate::triplet::ActiveWorkset`]):
+//!
+//! - the [`crate::solver::Problem`] owns a swap-remove arena that
+//!   *permanently retires* screened ids and keeps every per-triplet lane
+//!   (`a`/`b` rows, `‖H‖_F`, RPB/RRPB reference margins) contiguous;
+//! - [`ScreeningManager::screen`] evaluates the configured rule in
+//!   cache-sized blocks fanned out across `util::parallel` workers, with
+//!   batched `Engine::margins` calls over only the active rows and
+//!   reusable scratch lanes instead of per-call allocations;
+//! - the path driver gathers the RPB/RRPB reference margins **once per λ**
+//!   (one full-store kernel pass shared with the range extension) and
+//!   installs them as a workset lane that compacts in lockstep;
+//! - RPB/RRPB spheres are constant within one λ solve, so triplets proven
+//!   not to fire are memoized (`no_fire`) and skipped by every later
+//!   dynamic-screening call.
+//!
+//! ### Per-call cost, before → after
+//!
+//! | phase                   | before (full-store scan)   | after (workset pipeline)                     |
+//! |-------------------------|----------------------------|----------------------------------------------|
+//! | margins pass with `Q`   | O(T·d²)                    | O(active·d²), batched                        |
+//! | RPB/RRPB center margins | O(T·d²) per manager per λ  | one shared pass per λ + O(active) scale      |
+//! | rule evaluation         | O(T) every call            | O(active) first call, O(new) after (memo)    |
+//! | applying a decision     | O(T·d) full recompaction   | O(d) swap-remove (+O(d²) `H_L` update for L) |
+//! | buffers                 | fresh `Vec`s per call      | reusable scratch lanes                       |
+//!
+//! (T = total triplets, active = currently unscreened.)
+//! `ScreeningStats::rule_evals` counts evaluations actually performed and
+//! `skipped` the memo hits; over a screened path `rule_evals` stays
+//! strictly below `T × path_steps` (asserted by `benches/screening.rs`
+//! and `rust/tests/workset_safety.rs`).
 
 pub mod bounds;
 pub mod general_range;

@@ -89,10 +89,12 @@ impl ActiveSetSolver {
                 let (new_l, new_r) = cb(problem, &ctx);
                 timers.screening.add(t0.elapsed());
                 if !new_l.is_empty() || !new_r.is_empty() {
-                    stats.screen_l += new_l.len();
-                    stats.screen_r += new_r.len();
-                    problem.apply_screening(&new_l, &new_r);
-                    continue 'outer; // re-evaluate on the reduced problem
+                    let (nl, nr) = problem.apply_screening(&new_l, &new_r);
+                    stats.screen_l += nl;
+                    stats.screen_r += nr;
+                    if nl + nr > 0 {
+                        continue 'outer; // re-evaluate on the reduced problem
+                    }
                 }
             }
 

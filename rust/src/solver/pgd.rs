@@ -165,13 +165,17 @@ impl Solver {
                     let (new_l, new_r) = cb(problem, &ctx);
                     timers.screening.add(t0.elapsed());
                     if !new_l.is_empty() || !new_r.is_empty() {
-                        stats.screen_l += new_l.len();
-                        stats.screen_r += new_r.len();
-                        problem.apply_screening(&new_l, &new_r);
-                        // the active set changed: recompute at the same m
-                        ev = problem.eval(&m, engine, &mut timers);
-                        grad = problem.grad(&m, &ev.k);
-                        prev = None; // BB history refers to the old objective
+                        // the workset reports what was *newly* retired, so a
+                        // redundant decision list costs no extra eval pass
+                        let (nl, nr) = problem.apply_screening(&new_l, &new_r);
+                        stats.screen_l += nl;
+                        stats.screen_r += nr;
+                        if nl + nr > 0 {
+                            // the active set changed: recompute at the same m
+                            ev = problem.eval(&m, engine, &mut timers);
+                            grad = problem.grad(&m, &ev.k);
+                            prev = None; // BB history refers to the old objective
+                        }
                     }
                 }
             }

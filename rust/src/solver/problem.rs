@@ -7,13 +7,18 @@
 //!           + (1 − γ/2)|L̂| − ⟨M, Σ_{t∈L̂} H_t⟩ ,
 //!
 //! which shares its optimum with the full problem. This struct owns the
-//! screening status, the compacted active-triplet arrays the engines
-//! consume, and the cached screened-L aggregate `H_L = Σ_{L̂} H_t`.
+//! screening status, the compacted [`ActiveWorkset`] the engines and the
+//! screening rules consume, and the cached screened-L aggregate
+//! `H_L = Σ_{L̂} H_t`.
+//!
+//! Screening a triplet costs O(d) (workset swap-remove) plus the O(d²)
+//! rank-2 `H_L` update for L-side decisions — the old O(|T|·d) full
+//! recompaction per `apply_screening` call is gone.
 
 use crate::linalg::{psd_split, Mat, PsdSplit};
 use crate::loss::Loss;
 use crate::runtime::Engine;
-use crate::triplet::{StatusVec, TripletStore};
+use crate::triplet::{ActiveWorkset, StatusVec, TripletStore};
 use crate::util::timer::PhaseTimers;
 
 /// Output of one objective/gradient evaluation at `M`.
@@ -34,11 +39,9 @@ pub struct Problem<'a> {
     pub loss: Loss,
     pub lambda: f64,
     status: StatusVec,
-    // ---- compacted active set (rebuilt on status change) ----
-    active_idx: Vec<usize>,
-    a_act: Mat,
-    b_act: Mat,
-    hn_act: Vec<f64>,
+    /// compacted active set (swap-remove arena, permanently retires
+    /// screened ids; see `triplet::workset`)
+    workset: ActiveWorkset,
     // ---- screened-L aggregates ----
     h_l: Mat,
     n_l: usize,
@@ -48,20 +51,15 @@ impl<'a> Problem<'a> {
     pub fn new(store: &'a TripletStore, loss: Loss, lambda: f64) -> Problem<'a> {
         assert!(lambda > 0.0, "lambda must be positive");
         let n = store.len();
-        let mut p = Problem {
+        Problem {
             store,
             loss,
             lambda,
             status: StatusVec::new(n),
-            active_idx: Vec::new(),
-            a_act: Mat::zeros(0, store.d),
-            b_act: Mat::zeros(0, store.d),
-            hn_act: Vec::new(),
+            workset: ActiveWorkset::full(store),
             h_l: Mat::zeros(store.d, store.d),
             n_l: 0,
-        };
-        p.rebuild_compaction();
-        p
+        }
     }
 
     /// Change λ keeping the screening state *reset* (each λ must re-derive
@@ -70,9 +68,9 @@ impl<'a> Problem<'a> {
         assert!(lambda > 0.0);
         self.lambda = lambda;
         self.status.reset();
+        self.workset = ActiveWorkset::full(self.store);
         self.h_l = Mat::zeros(self.store.d, self.store.d);
         self.n_l = 0;
-        self.rebuild_compaction();
     }
 
     pub fn status(&self) -> &StatusVec {
@@ -87,22 +85,44 @@ impl<'a> Problem<'a> {
         self.n_l
     }
 
-    /// Active-triplet view (compacted, aligned with eval margins).
+    /// The compacted active workset (read-only view).
+    pub fn workset(&self) -> &ActiveWorkset {
+        &self.workset
+    }
+
+    /// Active-triplet ids (compaction row order, aligned with eval margins).
     pub fn active_idx(&self) -> &[usize] {
-        &self.active_idx
+        self.workset.ids()
     }
 
     pub fn active_a(&self) -> &Mat {
-        &self.a_act
+        self.workset.a()
     }
 
     pub fn active_b(&self) -> &Mat {
-        &self.b_act
+        self.workset.b()
     }
 
     /// `‖H_t‖_F` for active triplets (aligned with `active_idx`).
     pub fn active_h_norm(&self) -> &[f64] {
-        &self.hn_act
+        self.workset.h_norm()
+    }
+
+    /// Install the `⟨H_t, M₀⟩` reference-margin lane (id-indexed over the
+    /// full store) into the workset, tagged with the identity of the
+    /// reference it came from (`ScreeningManager::reference_margins`). The
+    /// path driver calls this once per λ after gathering the RPB/RRPB
+    /// reference margins; the lane is then compacted in lockstep as
+    /// triplets retire, so the screening manager reads a contiguous
+    /// row-aligned slice instead of gathering by id.
+    pub fn install_ref_margins(&mut self, full: &[f64], tag: u64) {
+        self.workset.install_ref_margins(full, tag);
+    }
+
+    /// Row-aligned reference margins — only when the installed lane's tag
+    /// matches `tag`, so a stale lane can never feed a screening rule.
+    pub fn active_ref_margins(&self, tag: u64) -> Option<&[f64]> {
+        self.workset.ref_margins(tag)
     }
 
     /// `H_L = Σ_{t ∈ L̂} H_t`.
@@ -110,15 +130,18 @@ impl<'a> Problem<'a> {
         &self.h_l
     }
 
-    /// Apply screening decisions (triplet ids). Updates `H_L`
-    /// incrementally and rebuilds the compacted arrays once.
-    pub fn apply_screening(&mut self, new_l: &[usize], new_r: &[usize]) {
-        if new_l.is_empty() && new_r.is_empty() {
-            return;
-        }
+    /// Apply screening decisions (triplet ids). Retires each id from the
+    /// workset (O(d) swap-remove) and updates `H_L` incrementally; ids
+    /// that are already screened are ignored. Returns how many triplets
+    /// were *newly* retired on each side, so callers can skip the
+    /// objective re-evaluation when nothing actually changed.
+    pub fn apply_screening(&mut self, new_l: &[usize], new_r: &[usize]) -> (usize, usize) {
+        let mut applied_l = 0usize;
+        let mut applied_r = 0usize;
         for &t in new_l {
             if self.status.get(t) == crate::triplet::TripletStatus::Active {
                 self.status.screen_l(t);
+                self.workset.retire(t);
                 // H_L += H_t (rank-2 update)
                 let (ra, rb) = (self.store.a.row(t), self.store.b.row(t));
                 for i in 0..self.store.d {
@@ -129,23 +152,20 @@ impl<'a> Problem<'a> {
                     }
                 }
                 self.n_l += 1;
+                applied_l += 1;
             }
         }
         for &t in new_r {
-            self.status.screen_r(t);
+            if self.status.get(t) == crate::triplet::TripletStatus::Active {
+                self.status.screen_r(t);
+                self.workset.retire(t);
+                applied_r += 1;
+            } else {
+                // keep the L→R conflict panic of StatusVec (an unsafe rule)
+                self.status.screen_r(t);
+            }
         }
-        self.rebuild_compaction();
-    }
-
-    fn rebuild_compaction(&mut self) {
-        self.active_idx = self.status.active_indices();
-        self.a_act = self.store.a.select_rows(&self.active_idx);
-        self.b_act = self.store.b.select_rows(&self.active_idx);
-        self.hn_act = self
-            .active_idx
-            .iter()
-            .map(|&t| self.store.h_norm[t])
-            .collect();
+        (applied_l, applied_r)
     }
 
     /// Constant part of P̃ contributed by L̂: `(1 − γ/2)|L̂|`.
@@ -155,11 +175,17 @@ impl<'a> Problem<'a> {
 
     /// Evaluate P̃, K = Σ α_t H_t and margins at `M`.
     pub fn eval(&self, m: &Mat, engine: &dyn Engine, timers: &mut PhaseTimers) -> EvalOut {
-        let n_act = self.active_idx.len();
+        let n_act = self.workset.len();
         let mut margins = vec![0.0; n_act];
-        let (loss_sum, g) = timers
-            .compute
-            .time(|| engine.step(m, &self.a_act, &self.b_act, self.loss.gamma, &mut margins));
+        let (loss_sum, g) = timers.compute.time(|| {
+            engine.step(
+                m,
+                self.workset.a(),
+                self.workset.b(),
+                self.loss.gamma,
+                &mut margins,
+            )
+        });
         let mut k = g;
         k.axpy(1.0, &self.h_l);
         let p = loss_sum + self.l_const() - m.dot(&self.h_l)
@@ -185,7 +211,7 @@ impl<'a> Problem<'a> {
         k: &Mat,
         timers: &mut PhaseTimers,
     ) -> (f64, PsdSplit) {
-        debug_assert_eq!(margins.len(), self.active_idx.len());
+        debug_assert_eq!(margins.len(), self.workset.len());
         let gamma = self.loss.gamma;
         let mut alpha_sq = 0.0;
         let mut alpha_sum = 0.0;
@@ -282,6 +308,8 @@ mod tests {
             .collect();
         prob.apply_screening(&new_l, &new_r);
         assert!(prob.status().n_active() < store.len());
+        prob.workset().assert_consistent(&store);
+        assert_eq!(prob.workset().len(), prob.status().n_active());
 
         let reduced = prob.eval(&b, &engine, &mut timers);
         assert!(
@@ -343,9 +371,41 @@ mod tests {
         let mut prob = Problem::new(&store, loss, 5.0);
         prob.apply_screening(&[0, 1], &[2]);
         assert_eq!(prob.status().n_active(), store.len() - 3);
+        assert_eq!(prob.workset().len(), store.len() - 3);
         prob.reset_for_lambda(2.0);
         assert_eq!(prob.status().n_active(), store.len());
+        assert_eq!(prob.workset().len(), store.len());
         assert_eq!(prob.lambda, 2.0);
         assert_eq!(prob.h_l().max_abs(), 0.0);
+    }
+
+    #[test]
+    fn screening_retires_ids_permanently() {
+        let (store, loss) = setup();
+        let mut prob = Problem::new(&store, loss, 5.0);
+        prob.apply_screening(&[4, 9], &[17]);
+        for id in [4usize, 9, 17] {
+            assert!(!prob.workset().is_active(id));
+            assert!(!prob.active_idx().contains(&id));
+        }
+        // re-applying the same decisions is a no-op
+        prob.apply_screening(&[4, 9], &[17]);
+        assert_eq!(prob.status().n_active(), store.len() - 3);
+        prob.workset().assert_consistent(&store);
+    }
+
+    #[test]
+    fn ref_margin_lane_survives_screening() {
+        let (store, loss) = setup();
+        let mut prob = Problem::new(&store, loss, 5.0);
+        let full: Vec<f64> = (0..store.len()).map(|t| t as f64).collect();
+        prob.install_ref_margins(&full, 7);
+        prob.apply_screening(&[0, 5, 6], &[1, 2]);
+        let lane = prob.active_ref_margins(7).unwrap();
+        for (row, &id) in prob.active_idx().iter().enumerate() {
+            assert_eq!(lane[row], id as f64);
+        }
+        // wrong tag: lane invisible (stale-reference protection)
+        assert!(prob.active_ref_margins(8).is_none());
     }
 }

@@ -2,6 +2,8 @@
 
 mod status;
 mod store;
+mod workset;
 
 pub use status::{StatusVec, TripletStatus};
 pub use store::TripletStore;
+pub use workset::ActiveWorkset;

@@ -1,0 +1,245 @@
+//! Compacted active-triplet workset: the screening pipeline's arena.
+//!
+//! Screening is monotone within one λ solve — a triplet that enters L̂ or
+//! R̂ never comes back — so the hot path must never touch a retired
+//! triplet again. The workset keeps every per-triplet quantity the rules
+//! and kernels consume (`a`/`b` difference rows, `‖H‖_F`, the optional
+//! reference margins `⟨H, M₀⟩` for RPB/RRPB) **contiguous** in row order,
+//! and retires a triplet with an O(d) swap-remove instead of the old
+//! O(|T|·d) full-store rebuild:
+//!
+//! ```text
+//!   retire(id):  r = row_of[id]; move last row into r; truncate.
+//! ```
+//!
+//! The `ids` (row → triplet id) and `row_of` (id → row) maps stay exact
+//! inverses throughout, which `assert_consistent` verifies and the
+//! property tests in `util::quickcheck` exercise under arbitrary retire
+//! sequences. Engines receive `a()`/`b()` directly — a margins pass costs
+//! O(|active|·d²), never O(|T|·d²).
+
+use crate::linalg::Mat;
+use crate::triplet::TripletStore;
+
+/// Sentinel marking a retired id in the `row_of` map.
+const RETIRED: u32 = u32::MAX;
+
+/// Swap-remove arena over the active subset of a [`TripletStore`].
+#[derive(Clone, Debug)]
+pub struct ActiveWorkset {
+    /// row → triplet id
+    ids: Vec<usize>,
+    /// triplet id → row (RETIRED once retired)
+    row_of: Vec<u32>,
+    /// compacted difference rows `x_i − x_l`
+    a: Mat,
+    /// compacted difference rows `x_i − x_j`
+    b: Mat,
+    /// compacted `‖H_t‖_F`
+    h_norm: Vec<f64>,
+    /// compacted `⟨H_t, M₀⟩` for the current screening reference, kept in
+    /// lockstep with retires, tagged with the reference identity it was
+    /// gathered from (None until installed)
+    ref_margin: Option<(u64, Vec<f64>)>,
+}
+
+impl ActiveWorkset {
+    /// Fresh workset with every triplet of `store` active.
+    pub fn full(store: &TripletStore) -> ActiveWorkset {
+        let n = store.len();
+        assert!(n < RETIRED as usize, "triplet count exceeds u32 id space");
+        ActiveWorkset {
+            ids: (0..n).collect(),
+            row_of: (0..n as u32).collect(),
+            a: store.a.clone(),
+            b: store.b.clone(),
+            h_norm: store.h_norm.clone(),
+            ref_margin: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Active triplet ids in row order (compaction order, not id order).
+    pub fn ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    pub fn a(&self) -> &Mat {
+        &self.a
+    }
+
+    pub fn b(&self) -> &Mat {
+        &self.b
+    }
+
+    pub fn h_norm(&self) -> &[f64] {
+        &self.h_norm
+    }
+
+    /// Current row of `id`, or None once retired.
+    pub fn row_of(&self, id: usize) -> Option<usize> {
+        match self.row_of[id] {
+            RETIRED => None,
+            r => Some(r as usize),
+        }
+    }
+
+    pub fn is_active(&self, id: usize) -> bool {
+        self.row_of[id] != RETIRED
+    }
+
+    /// Permanently remove `id` from the workset (O(d) swap-remove across
+    /// every lane). Returns false when `id` was already retired.
+    pub fn retire(&mut self, id: usize) -> bool {
+        let row = match self.row_of[id] {
+            RETIRED => return false,
+            r => r as usize,
+        };
+        let last = self.ids.len() - 1;
+        let moved = self.ids[last];
+        let _ = self.ids.swap_remove(row);
+        if row != last {
+            self.row_of[moved] = row as u32;
+        }
+        self.row_of[id] = RETIRED;
+        self.a.swap_remove_row(row);
+        self.b.swap_remove_row(row);
+        let _ = self.h_norm.swap_remove(row);
+        if let Some((_, rm)) = self.ref_margin.as_mut() {
+            let _ = rm.swap_remove(row);
+        }
+        true
+    }
+
+    /// Install the reference-margin lane from an id-indexed full vector
+    /// (`full[t] = ⟨H_t, M₀⟩` for every triplet of the store), tagged with
+    /// the identity of the reference it was gathered from (see
+    /// `ScreeningManager::reference_margins`). The lane is gathered into row
+    /// order and then compacted in lockstep by `retire`; readers must
+    /// present a matching tag, so a lane from a stale reference can never
+    /// feed a screening rule.
+    pub fn install_ref_margins(&mut self, full: &[f64], tag: u64) {
+        debug_assert_eq!(full.len(), self.row_of.len());
+        self.ref_margin = Some((tag, self.ids.iter().map(|&id| full[id]).collect()));
+    }
+
+    /// Row-aligned `⟨H_t, M₀⟩` lane, only when installed for exactly the
+    /// reference identified by `tag`.
+    pub fn ref_margins(&self, tag: u64) -> Option<&[f64]> {
+        match &self.ref_margin {
+            Some((t, rm)) if *t == tag => Some(rm),
+            _ => None,
+        }
+    }
+
+    /// The lane regardless of tag (consistency checks only).
+    pub fn ref_margins_any(&self) -> Option<&[f64]> {
+        self.ref_margin.as_ref().map(|(_, rm)| rm.as_slice())
+    }
+
+    pub fn clear_ref_margins(&mut self) {
+        self.ref_margin = None;
+    }
+
+    /// Exhaustive invariant check against the backing store (tests; O(|T|·d)).
+    pub fn assert_consistent(&self, store: &TripletStore) {
+        assert_eq!(self.row_of.len(), store.len());
+        assert_eq!(self.a.rows(), self.ids.len());
+        assert_eq!(self.b.rows(), self.ids.len());
+        assert_eq!(self.h_norm.len(), self.ids.len());
+        if let Some((_, rm)) = &self.ref_margin {
+            assert_eq!(rm.len(), self.ids.len());
+        }
+        let mut seen = vec![false; store.len()];
+        for (row, &id) in self.ids.iter().enumerate() {
+            assert!(!seen[id], "id {id} appears in two rows");
+            seen[id] = true;
+            assert_eq!(self.row_of[id], row as u32, "row_of out of sync for id {id}");
+            assert_eq!(self.a.row(row), store.a.row(id), "a lane diverged for id {id}");
+            assert_eq!(self.b.row(row), store.b.row(id), "b lane diverged for id {id}");
+            assert_eq!(self.h_norm[row], store.h_norm[id]);
+        }
+        for id in 0..store.len() {
+            if !seen[id] {
+                assert_eq!(self.row_of[id], RETIRED, "retired id {id} still mapped");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg64;
+
+    fn store() -> TripletStore {
+        let mut rng = Pcg64::seed(11);
+        let ds = synthetic::gaussian_mixture("w", 30, 4, 2, 2.5, &mut rng);
+        TripletStore::from_dataset(&ds, 2, &mut rng)
+    }
+
+    #[test]
+    fn full_workset_is_identity_mapping() {
+        let st = store();
+        let ws = ActiveWorkset::full(&st);
+        assert_eq!(ws.len(), st.len());
+        for id in 0..st.len() {
+            assert_eq!(ws.row_of(id), Some(id));
+        }
+        ws.assert_consistent(&st);
+    }
+
+    #[test]
+    fn retire_swaps_last_row_in() {
+        let st = store();
+        let mut ws = ActiveWorkset::full(&st);
+        let n = ws.len();
+        assert!(ws.retire(0));
+        assert_eq!(ws.len(), n - 1);
+        assert_eq!(ws.ids()[0], n - 1); // last id moved into the hole
+        assert_eq!(ws.row_of(n - 1), Some(0));
+        assert_eq!(ws.row_of(0), None);
+        assert!(!ws.is_active(0));
+        // double retire is a no-op
+        assert!(!ws.retire(0));
+        assert_eq!(ws.len(), n - 1);
+        ws.assert_consistent(&st);
+    }
+
+    #[test]
+    fn ref_margin_lane_tracks_retires() {
+        let st = store();
+        let mut ws = ActiveWorkset::full(&st);
+        let full: Vec<f64> = (0..st.len()).map(|t| t as f64 * 1.5).collect();
+        ws.install_ref_margins(&full, 42);
+        for id in [3usize, 0, 7, st.len() - 1, 5] {
+            ws.retire(id);
+        }
+        let rm = ws.ref_margins(42).unwrap();
+        for (row, &id) in ws.ids().iter().enumerate() {
+            assert_eq!(rm[row], id as f64 * 1.5, "lane misaligned at row {row}");
+        }
+        // a mismatched tag must hide the lane entirely
+        assert!(ws.ref_margins(43).is_none());
+        ws.assert_consistent(&st);
+    }
+
+    #[test]
+    fn retire_everything() {
+        let st = store();
+        let mut ws = ActiveWorkset::full(&st);
+        for id in 0..st.len() {
+            assert!(ws.retire(id));
+        }
+        assert!(ws.is_empty());
+        ws.assert_consistent(&st);
+    }
+}

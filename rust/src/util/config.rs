@@ -58,7 +58,7 @@ impl Config {
         for (lineno, raw) in text.lines().enumerate() {
             let line = match raw.find('#') {
                 // keep '#' inside quoted strings
-                Some(pos) if !raw[..pos].matches('"').count().is_multiple_of(2) => raw,
+                Some(pos) if raw[..pos].matches('"').count() % 2 == 1 => raw,
                 Some(pos) => &raw[..pos],
                 None => raw,
             }

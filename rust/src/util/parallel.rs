@@ -88,6 +88,27 @@ where
     });
 }
 
+/// Run `f` over fixed-size blocks of `[0, n)` in parallel, returning the
+/// per-block results in block order. Blocks are assigned to workers in
+/// contiguous groups, so the decomposition is deterministic regardless of
+/// scheduling. The screening pipeline uses this with cache-sized blocks:
+/// each worker streams a handful of contiguous blocks whose per-triplet
+/// lanes (`hq`, `‖H‖`, …) fit in L2, instead of one giant range.
+pub fn par_blocks<T, F>(n: usize, block: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let block = block.max(1);
+    let nblocks = n.div_ceil(block);
+    let per_worker = par_ranges(nblocks, workers, |brange| {
+        brange
+            .map(|bi| f(bi * block..((bi + 1) * block).min(n)))
+            .collect::<Vec<T>>()
+    });
+    per_worker.into_iter().flatten().collect()
+}
+
 /// Parallel sum-reduction of per-chunk `f` results.
 pub fn par_sum<F>(n: usize, workers: usize, f: F) -> f64
 where
@@ -136,6 +157,24 @@ mod tests {
         });
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn par_blocks_covers_in_block_order() {
+        for n in [0usize, 1, 5, 4096, 4097, 10_000] {
+            for (block, w) in [(1usize, 1usize), (7, 3), (4096, 4), (16, 9)] {
+                let out = par_blocks(n, block, w, |r| r);
+                let expect_blocks = n.div_ceil(block);
+                assert_eq!(out.len(), expect_blocks, "n={n} block={block}");
+                let mut next = 0usize;
+                for r in &out {
+                    assert_eq!(r.start, next);
+                    assert!(r.len() <= block && (!r.is_empty() || n == 0));
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+            }
         }
     }
 

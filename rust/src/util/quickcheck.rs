@@ -78,3 +78,218 @@ mod tests {
         assert!(close(0.0, 1e-12, 0.0, 1e-9, "x").is_ok());
     }
 }
+
+/// Cross-module property tests: screening-rule brackets and workset
+/// compaction, randomized over problem geometry. They live here so every
+/// invariant the mini-quickcheck framework protects is exercised from one
+/// place (and `TS_QC_SEED` replays apply uniformly).
+#[cfg(test)]
+mod screening_properties {
+    use super::{close, forall};
+    use crate::linalg::{psd_project, Mat};
+    use crate::screening::rules;
+    use crate::screening::sdls::{self, SdlsQuery};
+    use crate::util::rng::Pcg64;
+
+    struct Case {
+        q: Mat,
+        h: Mat,
+        a: Vec<f64>,
+        b: Vec<f64>,
+        r: f64,
+    }
+
+    /// Random PSD sphere center + triplet H = aaᵀ − bbᵀ.
+    fn random_case(rng: &mut Pcg64) -> Case {
+        let d = 2 + rng.below(4);
+        let mut base = Mat::from_fn(d, d, |_, _| rng.normal());
+        base.symmetrize();
+        let q = psd_project(&base).scaled(rng.uniform() * 2.0 + 0.05);
+        let a: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..d).map(|_| rng.normal() * rng.uniform()).collect();
+        let h = Mat::outer(&a).sub(&Mat::outer(&b));
+        let r = rng.uniform() * 2.0 + 0.01;
+        Case { q, h, a, b, r }
+    }
+
+    /// For every rule, the certified minimum/maximum of `⟨X, H⟩` over the
+    /// rule's feasible set must bracket the center value `⟨H, Q⟩` whenever
+    /// the center is feasible — a rule whose bracket excludes its own
+    /// center would screen unsafely.
+    #[test]
+    fn rule_brackets_contain_center_value() {
+        forall("rule-min-max-bracket", 96, |rng| {
+            let c = random_case(rng);
+            let (hq, hn) = (c.q.dot(&c.h), c.h.norm());
+
+            // sphere rule bracket
+            let (s_min, s_max) = (hq - c.r * hn, hq + c.r * hn);
+            if !(s_min <= hq && hq <= s_max) {
+                return Err(format!("sphere bracket [{s_min}, {s_max}] excludes hq={hq}"));
+            }
+
+            // linear rule bracket, with a halfspace that keeps Q feasible
+            let d = c.q.rows();
+            let mut p = Mat::from_fn(d, d, |_, _| rng.normal());
+            p.symmetrize();
+            if p.dot(&c.q) < 0.0 {
+                p.scale(-1.0); // ⟨P, Q⟩ ≥ 0 ⇒ Q itself satisfies the halfspace
+            }
+            let (hp, pq, pn_sq) = (p.dot(&c.h), p.dot(&c.q), p.norm_sq());
+            let l_min = rules::linear_min(hq, hn, hp, pq, pn_sq, c.r);
+            let l_max = -rules::linear_min(-hq, hn, -hp, pq, pn_sq, c.r);
+            let slack = 1e-9 * (1.0 + hq.abs());
+            if l_min > hq + slack {
+                return Err(format!("linear min {l_min} above feasible hq={hq}"));
+            }
+            if l_max < hq - slack {
+                return Err(format!("linear max {l_max} below feasible hq={hq}"));
+            }
+
+            // SDLS rule: Q ∈ B ∩ PSD with value hq, so a threshold on the
+            // wrong side of hq must never be certified
+            let query = SdlsQuery {
+                q: &c.q,
+                q_norm_sq: c.q.norm_sq(),
+                psd_center: true,
+                r_sq: c.r * c.r,
+                a: &c.a,
+                b: &c.b,
+                hq,
+                hn,
+                hx0: hq,
+            };
+            let c_r = hq + 0.1 * (1.0 + hq.abs());
+            let c_l = hq - 0.1 * (1.0 + hq.abs());
+            if sdls::sdls_screens_r(&query, c_r, 40) {
+                return Err(format!("SDLS screened R past its own center (c={c_r}, hq={hq})"));
+            }
+            if sdls::sdls_screens_l(&query, c_l, 40) {
+                return Err(format!("SDLS screened L past its own center (c={c_l}, hq={hq})"));
+            }
+            Ok(())
+        });
+    }
+
+    /// The sphere-rule bracket is exactly the Cauchy–Schwarz extreme over
+    /// the ball: sampled points inside B(Q, r) never escape it.
+    #[test]
+    fn sphere_bracket_is_sound_under_sampling() {
+        forall("sphere-bracket-sampling", 48, |rng| {
+            let c = random_case(rng);
+            let (hq, hn) = (c.q.dot(&c.h), c.h.norm());
+            let d = c.q.rows();
+            for _ in 0..32 {
+                let mut w = Mat::from_fn(d, d, |_, _| rng.normal());
+                w.symmetrize();
+                let nw = w.norm();
+                if nw > 0.0 {
+                    w.scale(c.r * rng.uniform() / nw);
+                }
+                let x = c.q.add(&w);
+                let v = x.dot(&c.h);
+                let lo = hq - c.r * hn - 1e-9 * (1.0 + v.abs());
+                let hi = hq + c.r * hn + 1e-9 * (1.0 + v.abs());
+                if v < lo || v > hi {
+                    return Err(format!("sampled value {v} outside [{lo}, {hi}]"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// `close` sanity on the rule algebra: mirrored linear_min equals the
+    /// negated max of the mirrored problem.
+    #[test]
+    fn linear_min_mirror_identity() {
+        forall("linear-mirror", 64, |rng| {
+            let c = random_case(rng);
+            let (hq, hn) = (c.q.dot(&c.h), c.h.norm());
+            let d = c.q.rows();
+            let mut p = Mat::from_fn(d, d, |_, _| rng.normal());
+            p.symmetrize();
+            let (hp, pq, pn_sq) = (p.dot(&c.h), p.dot(&c.q), p.norm_sq());
+            let max_via_min = -rules::linear_min(-hq, hn, -hp, pq, pn_sq, c.r);
+            let min_direct = rules::linear_min(hq, hn, hp, pq, pn_sq, c.r);
+            // max of ⟨X,H⟩ ≥ min of ⟨X,H⟩ over the same nonempty set
+            if pq >= 0.0 && max_via_min < min_direct - 1e-9 * (1.0 + min_direct.abs()) {
+                return Err(format!("max {max_via_min} < min {min_direct}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_helper_rejects_nan_mismatch() {
+        assert!(close(f64::NAN, 1.0, 1e-9, 1e-9, "nan-vs-num").is_err());
+    }
+}
+
+#[cfg(test)]
+mod workset_properties {
+    use super::forall;
+    use crate::data::synthetic;
+    use crate::triplet::{ActiveWorkset, TripletStore};
+    use crate::util::rng::Pcg64;
+
+    /// Compaction must preserve the id↔row mapping under arbitrary retire
+    /// sequences (random order, duplicates included), with every lane —
+    /// a/b rows, ‖H‖, the reference-margin lane — staying in lockstep.
+    #[test]
+    fn compaction_preserves_mapping_under_arbitrary_retires() {
+        forall("workset-compaction", 24, |rng| {
+            let n_pts = 16 + rng.below(24);
+            let d = 2 + rng.below(4);
+            let ds = synthetic::gaussian_mixture("w", n_pts, d, 2, 2.0, rng);
+            let store = TripletStore::from_dataset(&ds, 2, rng);
+            let n = store.len();
+            if n == 0 {
+                return Ok(());
+            }
+            let mut ws = ActiveWorkset::full(&store);
+            let lane: Vec<f64> = (0..n).map(|t| (t as f64).sin()).collect();
+            ws.install_ref_margins(&lane, 5);
+
+            let retires = 1 + rng.below(2 * n);
+            let mut expected_active = vec![true; n];
+            for _ in 0..retires {
+                let id = rng.below(n);
+                let was_active = expected_active[id];
+                let did = ws.retire(id);
+                if did != was_active {
+                    return Err(format!(
+                        "retire({id}) returned {did}, expected {was_active}"
+                    ));
+                }
+                expected_active[id] = false;
+
+                // spot-check the mapping after every retire
+                if ws.row_of(id).is_some() {
+                    return Err(format!("retired id {id} still mapped to a row"));
+                }
+                for (row, &rid) in ws.ids().iter().enumerate() {
+                    if ws.row_of(rid) != Some(row) {
+                        return Err(format!("row_of({rid}) != {row} after retiring {id}"));
+                    }
+                }
+            }
+
+            // full invariant audit: rows match the store, lanes aligned
+            ws.assert_consistent(&store);
+            let rm = ws.ref_margins(5).expect("lane installed");
+            for (row, &rid) in ws.ids().iter().enumerate() {
+                if rm[row] != lane[rid] {
+                    return Err(format!("lane misaligned: row {row} id {rid}"));
+                }
+                if !expected_active[rid] {
+                    return Err(format!("id {rid} active in workset but retired"));
+                }
+            }
+            let n_active = expected_active.iter().filter(|&&x| x).count();
+            if ws.len() != n_active {
+                return Err(format!("len {} != expected {n_active}", ws.len()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,221 @@
+//! Workset-pipeline safety battery: screening over the compacted active
+//! workset must be **provably safe in CI**.
+//!
+//! Three guarantees, audited end-to-end:
+//!
+//! 1. **Oracle identity** — for every (bound × rule) combination, solving
+//!    with screening ON yields the same optimum as screening OFF
+//!    (`‖M_screened − M_oracle‖_F < 1e-6`), and every triplet screened
+//!    into L̂/R̂ has the oracle-verified dual variable (α* = 1 for L,
+//!    α* = 0 for R, read off the oracle margins).
+//! 2. **Workset invariants** — after a screened solve the id↔row mapping
+//!    is exact, retired ids are gone for good, and the compacted lanes
+//!    match the backing store row-for-row.
+//! 3. **Rule-evaluation budget** — over a full regularization path the
+//!    pipeline performs strictly fewer rule evaluations than the naive
+//!    `|T| × path_steps` full-scan floor (retired triplets are never
+//!    revisited; fixed-sphere no-fire memoization skips the rest).
+
+use triplet_screen::linalg::Mat;
+use triplet_screen::loss::Loss;
+use triplet_screen::path::{PathConfig, RegPath};
+use triplet_screen::prelude::*;
+use triplet_screen::screening::ScreeningManager;
+use triplet_screen::solver::{Problem, ScreenCtx, Solver, SolverConfig};
+use triplet_screen::triplet::TripletStatus;
+
+fn store(seed: u64) -> TripletStore {
+    let mut rng = Pcg64::seed(seed);
+    let ds = synthetic::gaussian_mixture("g", 45, 4, 3, 2.6, &mut rng);
+    TripletStore::from_dataset(&ds, 3, &mut rng)
+}
+
+/// High-accuracy screening-off solve: the oracle.
+fn solve_oracle(
+    st: &TripletStore,
+    loss: Loss,
+    lambda: f64,
+    engine: &dyn Engine,
+) -> (Mat, f64) {
+    let mut prob = Problem::new(st, loss, lambda);
+    let (m, stats) = Solver::new(SolverConfig {
+        tol: 1e-11,
+        tol_relative: false,
+        max_iters: 100_000,
+        ..Default::default()
+    })
+    .solve(&mut prob, engine, Mat::zeros(st.d, st.d), None);
+    assert!(stats.converged, "oracle solve stalled at gap {:e}", stats.gap);
+    let eps = (2.0 * stats.gap.max(0.0) / lambda).sqrt();
+    (m, eps)
+}
+
+const ALL_BOUNDS: [BoundKind; 6] = [
+    BoundKind::Gb,
+    BoundKind::Pgb,
+    BoundKind::Dgb,
+    BoundKind::Cdgb,
+    BoundKind::Rpb,
+    BoundKind::Rrpb,
+];
+const ALL_RULES: [RuleKind; 3] = [RuleKind::Sphere, RuleKind::Linear, RuleKind::SemiDefinite];
+
+/// Guarantees 1 + 2 for all six bounds × three rules.
+#[test]
+fn oracle_identity_and_workset_invariants_all_combinations() {
+    let st = store(1);
+    let loss = Loss::smoothed_hinge(0.05);
+    let engine = NativeEngine::new(0);
+    let lmax = Problem::lambda_max(&st, &loss, &engine);
+    // λ high enough that the 1e-11 gap certificates keep both solutions
+    // within 5e-7 of M*, so the Frobenius identity below is decisive
+    let lambda = lmax * 0.5;
+    let l0 = lambda / 0.8;
+
+    let (m_oracle, eps_oracle) = solve_oracle(&st, loss, lambda, &engine);
+    let (m_ref, eps_ref) = solve_oracle(&st, loss, l0, &engine);
+    let mut oracle_margins = vec![0.0; st.len()];
+    engine.margins(&m_oracle, &st.a, &st.b, &mut oracle_margins);
+    // membership slack: the reference is only ε-certified, so a screened
+    // triplet's oracle margin may sit within ~ε·‖H‖ of the threshold
+    let hn_max = st.h_norm.iter().cloned().fold(0.0f64, f64::max);
+    let margin_slack = 1e-6 + 4.0 * eps_ref * hn_max;
+
+    for bound in ALL_BOUNDS {
+        for rule in ALL_RULES {
+            let cfg = ScreeningConfig::new(bound, rule);
+            let mut mgr = ScreeningManager::new(cfg);
+            if bound.needs_reference() {
+                // honest certificate: the reference's own duality-gap ε
+                mgr.set_reference(m_ref.clone(), l0, eps_ref, &st, &engine);
+            }
+            let mut prob = Problem::new(&st, loss, lambda);
+            let engine_ref: &dyn Engine = &engine;
+            let mut cb = |p: &Problem, ctx: &ScreenCtx| mgr.screen(p, ctx, engine_ref);
+            let (m, stats) = Solver::new(SolverConfig {
+                tol: 1e-11,
+                tol_relative: false,
+                max_iters: 100_000,
+                ..Default::default()
+            })
+            .solve(&mut prob, &engine, Mat::zeros(st.d, st.d), Some(&mut cb));
+            assert!(stats.converged, "{}: did not converge", cfg.label());
+
+            // 1a. identical optimum, Frobenius norm
+            let eps_scr = (2.0 * stats.gap.max(0.0) / lambda).sqrt();
+            let diff = m.sub(&m_oracle).norm();
+            assert!(
+                diff < 1e-6,
+                "{}: ‖M_screened − M_oracle‖_F = {diff:e} (certificates {eps_oracle:e} + {eps_scr:e})",
+                cfg.label()
+            );
+
+            // 1b. oracle-verified α* for every screened triplet:
+            //     L̂ ⇒ α* = 1 ⇔ oracle margin ≤ 1−γ;  R̂ ⇒ α* = 0 ⇔ margin ≥ 1
+            let mut n_l = 0usize;
+            let mut n_r = 0usize;
+            for t in 0..st.len() {
+                match prob.status().get(t) {
+                    TripletStatus::ScreenedL => {
+                        n_l += 1;
+                        assert!(
+                            oracle_margins[t] < loss.l_threshold() + margin_slack,
+                            "{}: t={t} screened L but oracle margin {} (α* != 1)",
+                            cfg.label(),
+                            oracle_margins[t]
+                        );
+                    }
+                    TripletStatus::ScreenedR => {
+                        n_r += 1;
+                        assert!(
+                            oracle_margins[t] > loss.r_threshold() - margin_slack,
+                            "{}: t={t} screened R but oracle margin {} (α* != 0)",
+                            cfg.label(),
+                            oracle_margins[t]
+                        );
+                    }
+                    TripletStatus::Active => {}
+                }
+            }
+
+            // 2. workset invariants after the screened solve
+            prob.workset().assert_consistent(&st);
+            assert_eq!(prob.workset().len(), st.len() - n_l - n_r);
+            assert_eq!(prob.status().n_screened_l(), n_l);
+            assert_eq!(prob.status().n_screened_r(), n_r);
+            for t in 0..st.len() {
+                let active = prob.status().get(t) == TripletStatus::Active;
+                assert_eq!(
+                    prob.workset().is_active(t),
+                    active,
+                    "{}: workset/status disagree on t={t}",
+                    cfg.label()
+                );
+            }
+        }
+    }
+}
+
+/// Guarantee 3: the pipeline's rule-evaluation budget over a full path.
+#[test]
+fn rule_evaluation_budget_under_naive_floor() {
+    let st = store(2);
+    let engine = NativeEngine::new(0);
+    let mut cfg = PathConfig {
+        max_steps: 12,
+        solver: SolverConfig {
+            tol: 1e-7,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+    cfg.range_screening = true;
+    let res = RegPath::new(cfg).run(&st, &engine);
+    assert!(res.steps.iter().all(|s| s.converged));
+
+    let stats = res.screening_stats.expect("screened run records stats");
+    let naive_floor = st.len() * res.steps.len();
+    assert!(
+        stats.rule_evals < naive_floor,
+        "pipeline revisited retired triplets: rule_evals {} >= |T| x steps {}",
+        stats.rule_evals,
+        naive_floor
+    );
+    // per-step telemetry must add up to the cumulative counters
+    let step_sum: usize = res.steps.iter().map(|s| s.rule_evals).sum();
+    assert_eq!(step_sum, stats.rule_evals);
+    assert!(stats.calls > 0 && stats.skipped > 0, "memo never engaged: {stats:?}");
+    // and the range extension retired triplets that were never evaluated
+    assert!(
+        res.steps.iter().skip(1).any(|s| s.range_screened > 0),
+        "range extension never fired — the strict budget depends on it"
+    );
+}
+
+/// Screening decisions survive a mid-solve λ reset only through the
+/// documented reset path (fresh workset, no stale rows).
+#[test]
+fn reset_rebuilds_a_full_workset() {
+    let st = store(3);
+    let loss = Loss::smoothed_hinge(0.05);
+    let engine = NativeEngine::new(0);
+    let lmax = Problem::lambda_max(&st, &loss, &engine);
+    let mut prob = Problem::new(&st, loss, lmax * 0.2);
+    let lane = vec![1.0; st.len()];
+    prob.install_ref_margins(&lane, 99);
+    prob.apply_screening(&[0, 3, 5], &[1, 2]);
+    assert_eq!(prob.workset().len(), st.len() - 5);
+    assert!(prob.active_ref_margins(99).is_some());
+    assert!(
+        prob.active_ref_margins(98).is_none(),
+        "lane visible under a foreign reference tag"
+    );
+    prob.reset_for_lambda(lmax * 0.1);
+    assert_eq!(prob.workset().len(), st.len());
+    prob.workset().assert_consistent(&st);
+    assert!(
+        prob.workset().ref_margins_any().is_none(),
+        "stale lane survived reset"
+    );
+}
