@@ -130,19 +130,49 @@ fn main() {
         count
     });
 
-    // ---- pipeline telemetry: screened path, per-λ JSON baseline ----
-    let path_cfg = PathConfig {
+    // ---- pipeline telemetry: PR 1-equivalent vs certificate frame ----
+    // Three paths on the same store: naive (no screening, the optimum
+    // oracle), the PR 1 pipeline (workset + memo, frame certificates
+    // off), and the full certificate-frame pipeline (RRPB + DGB/GB
+    // general-form certificates, cert-seeded memo).
+    let max_steps = if quick { 8 } else { 20 };
+    let mk_cfg = |use_frame_certs: bool, range_general: bool| {
+        let mut sc = ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere);
+        sc.use_frame_certs = use_frame_certs;
+        PathConfig {
+            rho: 0.9,
+            max_steps,
+            solver: SolverConfig {
+                tol: 1e-6,
+                ..Default::default()
+            },
+            screening: Some(sc),
+            range_screening: true,
+            range_general,
+            ..Default::default()
+        }
+    };
+    let naive_cfg = PathConfig {
         rho: 0.9,
-        max_steps: if quick { 8 } else { 20 },
+        max_steps,
         solver: SolverConfig {
             tol: 1e-6,
             ..Default::default()
         },
-        screening: Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere)),
-        range_screening: true,
         ..Default::default()
     };
-    let res = RegPath::new(path_cfg).run(&store, &engine);
+    let naive = RegPath::new(naive_cfg).run(&store, &engine);
+    let pr1 = RegPath::new(mk_cfg(false, false)).run(&store, &engine);
+    let res = RegPath::new(mk_cfg(true, true)).run(&store, &engine);
+    // optima identical to the naive path
+    assert_eq!(naive.steps.len(), res.steps.len());
+    for (a, b) in naive.steps.iter().zip(&res.steps) {
+        assert!(
+            (a.p - b.p).abs() < 1e-4 * (1.0 + a.p.abs()),
+            "frame path drifted from naive at λ={}",
+            a.lambda
+        );
+    }
     let steps_json: Vec<Json> = res
         .steps
         .iter()
@@ -159,6 +189,7 @@ fn main() {
                 ("active_after", Json::Num(active as f64)),
                 ("rate_final", Json::Num(s.rate_final)),
                 ("range_screened", Json::Num(s.range_screened as f64)),
+                ("range_pass_work", Json::Num(s.range_pass_work as f64)),
                 ("screen_calls", Json::Num(s.screen_calls as f64)),
                 ("rule_evals", Json::Num(s.rule_evals as f64)),
                 ("screen_seconds", Json::Num(s.screen_time)),
@@ -168,7 +199,12 @@ fn main() {
         })
         .collect();
     let stats = res.screening_stats.clone().unwrap_or_default();
+    let stats_pr1 = pr1.screening_stats.clone().unwrap_or_default();
     let naive_floor = store.len() * res.steps.len();
+    let range_work: usize = res.steps.iter().map(|s| s.range_pass_work).sum();
+    // PR 1's range pass was a full-store interval scan every λ
+    let pr1_range_scan = store.len() * pr1.steps.len();
+    let range_steps = res.steps.iter().filter(|s| s.range_screened > 0).count();
     let doc = Json::obj(vec![
         ("bench", Json::Str("screening-path".into())),
         ("dataset", Json::Str("segment-small".into())),
@@ -176,8 +212,14 @@ fn main() {
         ("path_steps", Json::Num(res.steps.len() as f64)),
         ("total_rule_evals", Json::Num(stats.rule_evals as f64)),
         ("total_skipped", Json::Num(stats.skipped as f64)),
+        ("pr1_rule_evals", Json::Num(stats_pr1.rule_evals as f64)),
         ("naive_rule_evals", Json::Num(naive_floor as f64)),
+        ("range_pass_work_total", Json::Num(range_work as f64)),
+        ("pr1_range_scan_total", Json::Num(pr1_range_scan as f64)),
+        ("range_screened_steps", Json::Num(range_steps as f64)),
         ("total_wall_seconds", Json::Num(res.total_wall)),
+        ("pr1_wall_seconds", Json::Num(pr1.total_wall)),
+        ("naive_wall_seconds", Json::Num(naive.total_wall)),
         ("steps", Json::Arr(steps_json)),
     ]);
     println!("\nscreening-path telemetry (JSON):");
@@ -187,13 +229,30 @@ fn main() {
         Ok(()) => eprintln!("wrote target/screening_bench.json"),
         Err(e) => eprintln!("could not write target/screening_bench.json: {e}"),
     }
-    // the workset acceptance bound: never revisit a retired triplet.
-    // Checked after emitting the telemetry so a regression still leaves
-    // the numbers needed to debug it.
+    // acceptance bounds, checked after emitting the telemetry so a
+    // regression still leaves the numbers needed to debug it:
+    // never revisit a retired triplet ...
     assert!(
         stats.rule_evals < naive_floor,
         "pipeline regression: rule_evals {} >= |T|*steps {}",
         stats.rule_evals,
         naive_floor
+    );
+    // ... certificates beat the PR 1 pipeline on rule evaluations ...
+    assert!(
+        stats.rule_evals < stats_pr1.rule_evals,
+        "certificate regression: rule_evals {} >= PR1 {}",
+        stats.rule_evals,
+        stats_pr1.rule_evals
+    );
+    // ... the schedule sweep beats the per-λ full scan ...
+    assert!(
+        range_work < pr1_range_scan,
+        "range-pass regression: sweep work {range_work} >= full scans {pr1_range_scan}"
+    );
+    // ... and the range extension fires on multiple steps.
+    assert!(
+        range_steps >= 2,
+        "range extension fired on {range_steps} steps (< 2)"
     );
 }

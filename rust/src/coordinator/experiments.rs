@@ -83,6 +83,8 @@ fn base_path_cfg(opts: &ExpOptions, rho: f64) -> PathConfig {
         secondary_screening: None,
         active_set: false,
         range_screening: false,
+        range_general: false,
+        frame_every: 1,
     }
 }
 
@@ -265,7 +267,8 @@ pub fn run_fig5(engine: &dyn Engine, opts: &ExpOptions, dataset: &str) -> (Table
 /// the path; columns: target λ; cell: fraction of triplets screened purely
 /// by the range extension. `eps_accuracy` mirrors the paper's 1e-4 / 1e-6.
 pub fn run_fig6(engine: &dyn Engine, opts: &ExpOptions, dataset: &str, eps_accuracy: f64) -> Table {
-    use crate::screening::{l_range, r_range};
+    use crate::screening::{CertFamilies, ReferenceFrame};
+    use crate::triplet::ActiveWorkset;
     let mut rng = Pcg64::seed(opts.seed);
     let store = build_store(dataset, opts, &mut rng);
     let loss = Loss::smoothed_hinge(0.05);
@@ -274,13 +277,15 @@ pub fn run_fig6(engine: &dyn Engine, opts: &ExpOptions, dataset: &str, eps_accur
     cfg.solver.tol_relative = false;
     cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
 
-    // run the path, collecting (λ0, M0, ε, margins) references
+    // run the path to fix the λ grid
     let res = RegPath::new(cfg.clone()).run(&store, engine);
     let lambdas: Vec<f64> = res.steps.iter().map(|s| s.lambda).collect();
 
-    // re-solve at each λ0 to capture its reference (the path run above
-    // already produced them; re-run cheaply with warm starts)
-    let mut refs: Vec<(f64, crate::linalg::Mat, f64, Vec<f64>)> = Vec::new();
+    // re-solve at each λ0 and build its certificate frame (margins pass
+    // + closed-form λ-intervals happen inside `ReferenceFrame::build`);
+    // each row of the heatmap is then one schedule sweep over the λ grid
+    // instead of a per-cell full-store interval scan
+    let mut refs: Vec<(f64, ReferenceFrame)> = Vec::new();
     {
         let mut warm = crate::linalg::Mat::zeros(store.d, store.d);
         for &l0 in &lambdas {
@@ -288,9 +293,15 @@ pub fn run_fig6(engine: &dyn Engine, opts: &ExpOptions, dataset: &str, eps_accur
             let solver = crate::solver::Solver::new(cfg.solver.clone());
             let (m, st) = solver.solve(&mut prob, engine, warm.clone(), None);
             let eps = (2.0 * st.gap.max(0.0) / l0).sqrt();
-            let mut hm = vec![0.0; store.len()];
-            engine.margins(&m, &store.a, &store.b, &mut hm);
-            refs.push((l0, m.clone(), eps, hm));
+            let frame = ReferenceFrame::build(
+                m.clone(),
+                l0,
+                eps,
+                &store,
+                engine,
+                Some((&loss, CertFamilies::rrpb_only())),
+            );
+            refs.push((l0, frame));
             warm = m;
         }
     }
@@ -309,20 +320,13 @@ pub fn run_fig6(engine: &dyn Engine, opts: &ExpOptions, dataset: &str, eps_accur
             .as_slice()]
         .concat(),
     );
-    for (l0, m0, eps, hm) in &refs {
-        let mn = m0.norm();
+    let ws = ActiveWorkset::full(&store);
+    let (mut rl, mut rr) = (Vec::new(), Vec::new());
+    for (l0, frame) in &refs {
         let mut row = vec![fnum(*l0)];
         for &l in &lambdas {
-            let mut screened = 0usize;
-            for t in 0..store.len() {
-                let hn = store.h_norm[t];
-                if r_range(hm[t], hn, mn, *eps, *l0, loss.r_threshold()).contains(l)
-                    || l_range(hm[t], hn, mn, *eps, *l0, loss.l_threshold()).contains(l)
-                {
-                    screened += 1;
-                }
-            }
-            row.push(fpct(screened as f64 / store.len() as f64));
+            frame.advance(l, &ws, &mut rl, &mut rr);
+            row.push(fpct((rl.len() + rr.len()) as f64 / store.len() as f64));
         }
         table.row(row);
     }

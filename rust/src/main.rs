@@ -7,7 +7,7 @@
 //!
 //! Common options: --dataset <name[-small]> --engine native|pjrt
 //!   --bound GB|PGB|DGB|CDGB|RPB|RRPB --rule sphere|linear|semidefinite
-//!   --k <n> --seed <n> --tol <f> --rho <f> --active-set --range
+//!   --k <n> --seed <n> --tol <f> --rho <f> --active-set --range --range-general
 
 use triplet_screen::coordinator::report::{fnum, fpct, Table};
 use triplet_screen::data::synthetic;
@@ -159,6 +159,7 @@ fn main() {
                     screening: screening_cfg(&args),
                     active_set: args.flag("active-set"),
                     range_screening: args.flag("range"),
+                    range_general: args.flag("range-general"),
                     ..Default::default()
                 }
             };
@@ -186,7 +187,7 @@ fn main() {
                 "usage: triplet-screen <info|train|path> [--dataset NAME] [--engine native|pjrt]\n\
                  \x20  [--bound GB|PGB|DGB|CDGB|RPB|RRPB] [--rule sphere|linear|semidefinite]\n\
                  \x20  [--lambda F] [--rho F] [--tol F] [--k N] [--seed N] [--active-set] [--range]\n\
-                 \x20  [--no-screening] [--libsvm PATH]"
+                 \x20  [--range-general] [--no-screening] [--libsvm PATH]"
             );
             std::process::exit(2);
         }

@@ -7,22 +7,32 @@
 //! range-based extension (§4) that screens without rule evaluation while
 //! λ stays inside a triplet's certified interval.
 //!
-//! The driver owns the screening pipeline state that crosses λ steps:
-//! after each solve it gathers the reference margins `⟨H_t, M₀⟩` **once**
-//! (one full-store kernel pass shared by every RPB/RRPB manager and the
-//! range extension — previously each consumer paid its own pass) and
-//! installs them into the next λ's [`Problem`] workset as a row-aligned
-//! lane, so the manager's per-call cost is O(|active|) with no per-id
-//! gather. Per-λ screening-call counts and rule-evaluation counts are
-//! recorded in [`PathStep`] so benches and CI can assert that the
-//! pipeline never revisits retired triplets.
+//! The λ-crossing state is a single [`ReferenceFrame`] built once per
+//! reference solution and shared (via `Rc`) by every consumer: the
+//! RPB/RRPB managers read `M₀`/`λ₀`/`ε` and the full-store margins lane
+//! from it (one kernel pass per reference — previously each consumer
+//! paid its own), the fresh per-λ [`Problem`] receives the lane through
+//! [`Problem::install_frame`], and the §4 range extension runs as a
+//! **certificate sweep**: the frame derives each triplet's certified
+//! λ-interval once (closed-form RRPB plus, with
+//! [`PathConfig::range_general`], the DGB/GB general forms of Appendix
+//! K.1) and an expiry schedule hands each λ step exactly the triplets
+//! whose certificates cover it — O(entering + expiring) bookkeeping per
+//! step (plus emission of the live ids) instead of
+//! the former O(|T|) interval scan. Per-λ screening-call counts,
+//! rule-evaluation counts and range-pass work are recorded in
+//! [`PathStep`] so benches and CI can assert that the pipeline never
+//! revisits retired triplets.
 
 use crate::linalg::{psd_split, Mat};
 use crate::loss::Loss;
 use crate::runtime::Engine;
-use crate::screening::{l_range, r_range, ScreeningConfig, ScreeningManager, ScreeningStats};
+use crate::screening::{
+    CertFamilies, ReferenceFrame, ScreeningConfig, ScreeningManager, ScreeningStats,
+};
 use crate::solver::{ActiveSetSolver, Problem, ScreenCtx, Solver, SolverConfig};
 use crate::triplet::TripletStore;
+use std::rc::Rc;
 
 /// Path configuration.
 #[derive(Clone, Debug)]
@@ -44,8 +54,27 @@ pub struct PathConfig {
     pub secondary_screening: Option<ScreeningConfig>,
     /// use the active-set heuristic (paper §5.3)
     pub active_set: bool,
-    /// use the range-based extension (§4, RRPB-based)
+    /// use the range-based extension (§4): certified λ-intervals derived
+    /// once per reference, swept by the frame's expiry schedule
     pub range_screening: bool,
+    /// additionally derive DGB and GB general-form certificates
+    /// (Appendix K.1) at each reference — wider λ coverage for one extra
+    /// `wgram` + margins pass per reference; no effect unless
+    /// `range_screening` is on
+    pub range_general: bool,
+    /// rebuild the reference frame every this many λ steps (min 1).
+    /// 1 = the paper's protocol (fresh reference each λ, maximum
+    /// screening power). Larger values amortize the full-store reference
+    /// pass and certificate derivation across steps: in between, the
+    /// *same* frame keeps serving the managers and the range sweep —
+    /// every certificate stays sound for any λ below its reference and
+    /// the expiry schedule does only incremental work per step. (The
+    /// no-fire memo itself is per-λ; under RRPB + sphere rule with
+    /// `ScreeningConfig::use_frame_certs` it is re-seeded from the
+    /// frame's certificates at each crossing without any rule
+    /// evaluation.) The cost is weaker (staler) spheres, so screening
+    /// rates drop on non-refresh steps.
+    pub frame_every: usize,
 }
 
 impl Default for PathConfig {
@@ -61,6 +90,8 @@ impl Default for PathConfig {
             secondary_screening: None,
             active_set: false,
             range_screening: false,
+            range_general: false,
+            frame_every: 1,
         }
     }
 }
@@ -84,6 +115,12 @@ pub struct PathStep {
     pub screened_r: usize,
     /// triplets fixed by the range extension before any rule evaluation
     pub range_screened: usize,
+    /// certificates entering or expiring in the frame's range sweep this
+    /// step — the incremental bookkeeping cost of the range pass (the
+    /// former pipeline paid a full |T| interval scan here; emitting the
+    /// live certificates is additionally proportional to
+    /// `range_screened`, a cost both pipelines share)
+    pub range_pass_work: usize,
     /// screening-manager invocations during this λ solve
     pub screen_calls: usize,
     /// triplet-rule evaluations actually performed during this λ solve
@@ -109,9 +146,6 @@ pub struct PathResult {
     /// add up to these totals; None when screening is off
     pub screening_stats: Option<ScreeningStats>,
 }
-
-/// Screening reference carried across λ steps: `(‖M₀‖, λ₀, ε, ⟨H_t,M₀⟩)`.
-type RefState = (f64, f64, f64, Vec<f64>);
 
 /// The regularization-path coordinator.
 pub struct RegPath {
@@ -141,28 +175,42 @@ impl RegPath {
             .into_iter()
             .flatten()
             .any(|m| m.cfg.bound.needs_reference());
-        // One margins pass per λ feeds every consumer of the reference:
-        // the RPB/RRPB managers, the workset lane, the range extension.
-        let needs_margins = needs_ref || self.cfg.range_screening;
+        // One frame per reference feeds every consumer: the RPB/RRPB
+        // managers, the workset lane, and the certificate range sweep.
+        let needs_frame = needs_ref || self.cfg.range_screening;
+        let cert_families: Option<CertFamilies> = if self.cfg.range_screening {
+            Some(if self.cfg.range_general {
+                CertFamilies::all()
+            } else {
+                CertFamilies::rrpb_only()
+            })
+        } else {
+            None
+        };
 
-        let mut ref_state: Option<RefState> = None;
-        if needs_margins {
+        let mut frame: Option<Rc<ReferenceFrame>> = None;
+        if needs_frame {
             // λ_max solution is exact: ε = 0 reference
-            let mut hm = vec![0.0; store.len()];
-            engine.margins(&m_warm, &store.a, &store.b, &mut hm);
-            for mgr in [manager.as_mut(), manager2.as_mut()].into_iter().flatten() {
-                if mgr.cfg.bound.needs_reference() {
-                    mgr.set_reference_with_margins(m_warm.clone(), lambda_max, 0.0, hm.clone());
-                }
-            }
-            ref_state = Some((m_warm.norm(), lambda_max, 0.0, hm));
+            let fr = Rc::new(ReferenceFrame::build(
+                m_warm.clone(),
+                lambda_max,
+                0.0,
+                store,
+                engine,
+                cert_families.map(|f| (&loss, f)),
+            ));
+            install_frame_on_managers(&fr, manager.as_mut(), manager2.as_mut());
+            frame = Some(fr);
         }
 
         let mut steps: Vec<PathStep> = Vec::new();
         let mut lambda = lambda_max;
         let mut prev_loss_term: Option<f64> = None;
+        // reusable certificate-sweep output buffers
+        let mut range_l: Vec<usize> = Vec::new();
+        let mut range_r: Vec<usize> = Vec::new();
 
-        for _step in 0..self.cfg.max_steps {
+        for step_i in 0..self.cfg.max_steps {
             let lambda_prev = lambda;
             lambda *= self.cfg.rho;
             if let Some(lmin) = self.cfg.lambda_min {
@@ -173,39 +221,27 @@ impl RegPath {
             let t_step = std::time::Instant::now();
             let mut problem = Problem::new(store, loss, lambda);
 
-            // thread the reference margins into the workset lane so the
-            // manager reads them contiguously (compacted in lockstep);
-            // the lane carries the reference's identity tag, so managers
-            // only accept it while it matches their current reference
-            if needs_ref {
-                let tag = [manager.as_ref(), manager2.as_ref()]
-                    .into_iter()
-                    .flatten()
-                    .filter(|m| m.cfg.bound.needs_reference())
-                    .find_map(|m| m.reference_margins().map(|(_, tag)| tag));
-                if let (Some(tag), Some((_, _, _, hm))) = (tag, &ref_state) {
-                    problem.install_ref_margins(hm, tag);
-                }
-            }
-
-            // ---- range-based screening (no rule evaluation) ----
+            // thread the frame into the fresh problem: the reference-
+            // margin lane (compacted in lockstep by retires, tag-checked
+            // by the managers) and the certificate range sweep
             let mut range_screened = 0usize;
-            if self.cfg.range_screening {
-                if let Some((mn, l0, eps, hm)) = &ref_state {
-                    let mut rl = Vec::new();
-                    let mut rr = Vec::new();
-                    for t in 0..store.len() {
-                        let hn = store.h_norm[t];
-                        if r_range(hm[t], hn, *mn, *eps, *l0, loss.r_threshold()).contains(lambda)
-                        {
-                            rr.push(t);
-                        } else if l_range(hm[t], hn, *mn, *eps, *l0, loss.l_threshold())
-                            .contains(lambda)
-                        {
-                            rl.push(t);
-                        }
-                    }
-                    let (nl, nr) = problem.apply_screening(&rl, &rr);
+            let mut range_pass_work = 0usize;
+            if let Some(fr) = &frame {
+                if needs_ref {
+                    problem.install_frame(fr);
+                }
+                if self.cfg.range_screening {
+                    // ---- certificate range pass (no rule evaluation):
+                    //      the expiry schedule emits exactly the active
+                    //      triplets whose certified interval covers λ ----
+                    range_pass_work =
+                        fr.advance(lambda, problem.workset(), &mut range_l, &mut range_r);
+                    let (nl, nr) = problem.apply_screening(&range_l, &range_r);
+                    debug_assert_eq!(
+                        nl + nr,
+                        range_l.len() + range_r.len(),
+                        "range pass revisited retired ids"
+                    );
                     range_screened = nl + nr;
                 }
             }
@@ -286,6 +322,7 @@ impl RegPath {
                 screened_l: problem.status().n_screened_l(),
                 screened_r: problem.status().n_screened_r(),
                 range_screened,
+                range_pass_work,
                 screen_calls: stats_after.0 - stats_before.0,
                 rule_evals: stats_after.1 - stats_before.1,
                 wall,
@@ -293,21 +330,10 @@ impl RegPath {
                 compute_time: stats.timers.compute.secs(),
             });
 
-            // ---- update the reference for the next λ (one margins pass
-            //      shared by managers, lane and range extension) ----
-            if needs_margins {
-                let mut hm = vec![0.0; store.len()];
-                engine.margins(&m_sol, &store.a, &store.b, &mut hm);
-                for mgr in [manager.as_mut(), manager2.as_mut()].into_iter().flatten() {
-                    if mgr.cfg.bound.needs_reference() {
-                        mgr.set_reference_with_margins(m_sol.clone(), lambda, eps, hm.clone());
-                    }
-                }
-                ref_state = Some((m_sol.norm(), lambda, eps, hm));
-            }
             m_warm = m_sol;
 
-            // ---- paper's termination criterion ----
+            // ---- paper's termination criterion (checked before paying
+            //      for the next reference frame) ----
             if let Some(prev) = prev_loss_term {
                 if prev > 0.0 {
                     let ratio = ((prev - loss_term) / prev) * (lambda_prev / (lambda_prev - lambda));
@@ -317,6 +343,27 @@ impl RegPath {
                 }
             }
             prev_loss_term = Some(loss_term);
+
+            // ---- build the next reference frame (one margins pass +
+            //      certificate derivation, shared by every consumer);
+            //      between refreshes the current frame keeps serving —
+            //      its certificates stay sound at every smaller λ.
+            //      Skipped when the schedule guarantees no further step. ----
+            let next_lambda = lambda * self.cfg.rho;
+            let more_steps = step_i + 1 < self.cfg.max_steps
+                && !self.cfg.lambda_min.is_some_and(|lmin| next_lambda < lmin);
+            if needs_frame && more_steps && (step_i + 1) % self.cfg.frame_every.max(1) == 0 {
+                let fr = Rc::new(ReferenceFrame::build(
+                    m_warm.clone(),
+                    lambda,
+                    eps,
+                    store,
+                    engine,
+                    cert_families.map(|f| (&loss, f)),
+                ));
+                install_frame_on_managers(&fr, manager.as_mut(), manager2.as_mut());
+                frame = Some(fr);
+            }
         }
 
         // aggregate across both managers so the per-step deltas (which
@@ -338,6 +385,19 @@ impl RegPath {
             total_wall: t_total.elapsed().as_secs_f64(),
             m_final: m_warm,
             screening_stats,
+        }
+    }
+}
+
+/// Hand the shared frame to every manager whose bound needs a reference.
+fn install_frame_on_managers(
+    frame: &Rc<ReferenceFrame>,
+    m1: Option<&mut ScreeningManager>,
+    m2: Option<&mut ScreeningManager>,
+) {
+    for mgr in [m1, m2].into_iter().flatten() {
+        if mgr.cfg.bound.needs_reference() {
+            mgr.set_frame(frame.clone());
         }
     }
 }
@@ -474,6 +534,82 @@ mod tests {
         cfg.stop_ratio = 0.5; // aggressive: stop as soon as returns diminish
         let res = RegPath::new(cfg).run(&store, &engine);
         assert!(res.steps.len() < 500, "stop criterion never fired");
+    }
+
+    #[test]
+    fn frame_certificates_cut_rule_evals() {
+        // With the certificate frame the RRPB+sphere manager should do
+        // strictly less rule evaluation than the memo-only pipeline, and
+        // the per-step range-pass cost must undercut a full |T| scan in
+        // total (the former pipeline's per-λ price).
+        let store = small_store(3);
+        let engine = NativeEngine::new(2);
+        let mut with = base_cfg();
+        with.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        with.range_screening = true;
+        let r_with = RegPath::new(with).run(&store, &engine);
+
+        let mut without = base_cfg();
+        without.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        let r_without = RegPath::new(without).run(&store, &engine);
+
+        let s_with = r_with.screening_stats.expect("stats");
+        let s_without = r_without.screening_stats.expect("stats");
+        assert!(
+            s_with.rule_evals < s_without.rule_evals,
+            "certificates did not cut rule evals: {} vs {}",
+            s_with.rule_evals,
+            s_without.rule_evals
+        );
+        let range_work: usize = r_with.steps.iter().map(|s| s.range_pass_work).sum();
+        let full_scan = store.len() * r_with.steps.len();
+        assert!(
+            range_work < full_scan,
+            "range sweep {range_work} not below the full-scan floor {full_scan}"
+        );
+    }
+
+    #[test]
+    fn general_range_path_matches_naive() {
+        // DGB/GB general-form certificates on top of RRPB: still safe.
+        let store = small_store(3);
+        let engine = NativeEngine::new(2);
+        let naive = RegPath::new(base_cfg()).run(&store, &engine);
+        let mut cfg = base_cfg();
+        cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        cfg.range_screening = true;
+        cfg.range_general = true;
+        let res = RegPath::new(cfg).run(&store, &engine);
+        assert_eq!(naive.steps.len(), res.steps.len());
+        for (a, b) in naive.steps.iter().zip(&res.steps) {
+            let tol = 1e-4 * a.p.abs().max(1.0);
+            assert!((a.p - b.p).abs() < tol, "general-range path drifted at λ={}", a.lambda);
+        }
+        assert!(
+            res.steps.iter().skip(1).any(|s| s.range_screened > 0),
+            "general-range frame never fired"
+        );
+    }
+
+    #[test]
+    fn multi_step_frame_is_safe() {
+        // frame_every > 1: the same frame (reference, certificates, memo)
+        // serves several λ steps. Spheres are staler, so screening rates
+        // drop, but the optima must not move.
+        let store = small_store(3);
+        let engine = NativeEngine::new(2);
+        let naive = RegPath::new(base_cfg()).run(&store, &engine);
+        let mut cfg = base_cfg();
+        cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        cfg.range_screening = true;
+        cfg.frame_every = 3;
+        let res = RegPath::new(cfg).run(&store, &engine);
+        assert_eq!(naive.steps.len(), res.steps.len());
+        for (a, b) in naive.steps.iter().zip(&res.steps) {
+            let tol = 1e-4 * a.p.abs().max(1.0);
+            assert!((a.p - b.p).abs() < tol, "stale-frame path drifted at λ={}", a.lambda);
+        }
+        assert!(res.steps.iter().all(|s| s.converged));
     }
 
     #[test]

@@ -1,0 +1,536 @@
+//! The λ-crossing **reference frame** (paper §4 + Appendix K.1): one
+//! first-class object owning everything the screening pipeline carries
+//! across regularization-path steps.
+//!
+//! A frame is built once per reference solution `(M₀, λ₀, ε)` and holds:
+//!
+//! - the reference identity (`tag`, process-unique) that keys the workset
+//!   reference-margin lane and the managers' no-fire memos;
+//! - the shared full-store margins lane `⟨H_t, M₀⟩` (one kernel pass,
+//!   consumed by every RPB/RRPB manager and the certificate derivation);
+//! - per-triplet **certified λ-intervals**: ranges of λ on which a
+//!   screening rule provably keeps firing, computed once per reference
+//!   from the closed-form RRPB ranges (Thm 4.1 + the L-side extension)
+//!   and, optionally, the DGB/GB general forms of Appendix K.1
+//!   ([`crate::screening::general_range::RangeForm`]) — the union of all
+//!   certificates per (triplet, side) is kept, merged into disjoint
+//!   intervals;
+//! - an **expiry schedule**: certificates sorted by their upper endpoint
+//!   so a monotonically decreasing λ sweep touches each certificate only
+//!   when it enters coverage and drops it exactly when it expires —
+//!   O(entering + expiring) bookkeeping per step (plus emission of the
+//!   live ids) instead of the former O(|T|) full-store
+//!   interval scan per λ.
+//!
+//! The DGB and GB families are λ-independent certificates: the reference
+//! primal `M₀` is feasible and the dual coefficients `α_t = −ℓ'(⟨M₀,H_t⟩)`
+//! are dual-feasible *for every λ*, so the duality-gap and gradient
+//! spheres evaluated at the reference state remain valid bounds on `M*_λ`
+//! along the whole path (this is exactly what makes the §4 extension work
+//! for every sphere family, not only RRPB).
+
+use super::general_range::{general_l_range, general_r_range, RangeForm};
+use super::range::{l_range, r_range, LambdaRange};
+use crate::linalg::{psd_split, Mat};
+use crate::loss::Loss;
+use crate::runtime::Engine;
+use crate::triplet::{ActiveWorkset, TripletStore};
+use std::cell::RefCell;
+
+/// Process-unique frame identities: a workset lane or a no-fire memo
+/// tagged with a frame's tag can never be confused with state derived
+/// from another frame (another reference, another manager, another run).
+static FRAME_NONCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// Which optimal-set membership a certificate fixes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CertSide {
+    /// `t ∈ L*` (α* = 1)
+    L,
+    /// `t ∈ R*` (α* = 0)
+    R,
+}
+
+/// One certified λ-interval for one triplet: for every `λ ∈ (lo, hi)` the
+/// screening rule fires, so the triplet can be fixed without evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct Certificate {
+    pub id: u32,
+    pub side: CertSide,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// Which sphere families contribute certificates (Appendix K.1).
+#[derive(Clone, Copy, Debug)]
+pub struct CertFamilies {
+    /// closed-form RRPB ranges (Thm 4.1 + L-side) — exact for the sphere
+    /// rule, so they double as the managers' no-fire certificates
+    pub rrpb: bool,
+    /// duality-gap sphere at the reference state (one extra `wgram` +
+    /// eigendecomposition per reference)
+    pub dgb: bool,
+    /// gradient sphere at the reference state (one extra margins pass
+    /// with `K` per reference)
+    pub gb: bool,
+}
+
+impl CertFamilies {
+    pub fn rrpb_only() -> CertFamilies {
+        CertFamilies {
+            rrpb: true,
+            dgb: false,
+            gb: false,
+        }
+    }
+
+    pub fn all() -> CertFamilies {
+        CertFamilies {
+            rrpb: true,
+            dgb: true,
+            gb: true,
+        }
+    }
+}
+
+/// Mutable sweep state of the expiry schedule (interior: the frame is
+/// shared read-only with the screening managers; only the path driver
+/// advances the sweep, strictly monotonically in λ).
+struct Sweep {
+    /// next un-ingested certificate in the `hi`-descending schedule
+    cursor: usize,
+    /// certificates currently covering the sweep position
+    covered: Vec<Certificate>,
+    last_lambda: f64,
+}
+
+/// Screening reference carried across λ steps; see the module docs.
+pub struct ReferenceFrame {
+    m0: Mat,
+    lambda0: f64,
+    eps: f64,
+    m0_norm: f64,
+    tag: u64,
+    /// full-store `⟨H_t, M₀⟩`
+    margins: Vec<f64>,
+    /// loss the certificates were derived against (None = no certificates)
+    gamma: Option<f64>,
+    /// exact per-triplet RRPB sphere-rule intervals (empty unless the
+    /// RRPB family was derived) — `rrpb_l[t]`/`rrpb_r[t]` contain λ iff
+    /// the L-/R-rule fires at λ under this reference
+    rrpb_l: Vec<LambdaRange>,
+    rrpb_r: Vec<LambdaRange>,
+    /// entry schedule: all certificates sorted by `hi`, descending
+    schedule: Vec<Certificate>,
+    sweep: RefCell<Sweep>,
+}
+
+impl ReferenceFrame {
+    /// Build a frame from a reference solution: one full-store margins
+    /// pass, plus O(|T|) closed-form certificate derivation when `certs`
+    /// is given (and one `wgram` + margins pass for the DGB/GB families).
+    pub fn build(
+        m0: Mat,
+        lambda0: f64,
+        eps: f64,
+        store: &TripletStore,
+        engine: &dyn Engine,
+        certs: Option<(&Loss, CertFamilies)>,
+    ) -> ReferenceFrame {
+        let mut margins = vec![0.0; store.len()];
+        engine.margins(&m0, &store.a, &store.b, &mut margins);
+        let m0_norm = m0.norm();
+        let mut frame = ReferenceFrame {
+            m0,
+            lambda0,
+            eps,
+            m0_norm,
+            tag: FRAME_NONCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            margins,
+            gamma: None,
+            rrpb_l: Vec::new(),
+            rrpb_r: Vec::new(),
+            schedule: Vec::new(),
+            sweep: RefCell::new(Sweep {
+                cursor: 0,
+                covered: Vec::new(),
+                last_lambda: f64::INFINITY,
+            }),
+        };
+        if let Some((loss, families)) = certs {
+            frame.derive_certificates(store, engine, loss, families);
+        }
+        frame
+    }
+
+    pub fn m0(&self) -> &Mat {
+        &self.m0
+    }
+
+    pub fn lambda0(&self) -> f64 {
+        self.lambda0
+    }
+
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    pub fn m0_norm(&self) -> f64 {
+        self.m0_norm
+    }
+
+    /// Identity tag keying the workset lane and the no-fire memos.
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    /// Full-store `⟨H_t, M₀⟩` margins (id-indexed).
+    pub fn margins(&self) -> &[f64] {
+        &self.margins
+    }
+
+    /// Total certificates in the expiry schedule.
+    pub fn n_certificates(&self) -> usize {
+        self.schedule.len()
+    }
+
+    /// Whether the frame carries *exact* RRPB sphere-rule intervals for
+    /// `loss` — exact means "the rule fires at λ iff λ is inside", so a
+    /// manager may treat exclusion as a no-fire proof.
+    pub fn has_exact_rrpb(&self, loss: &Loss) -> bool {
+        self.gamma == Some(loss.gamma) && !self.rrpb_r.is_empty()
+    }
+
+    /// Exact RRPB sphere-rule outcome at `lambda` for triplet `t` (only
+    /// meaningful when [`Self::has_exact_rrpb`] holds): the side whose
+    /// rule fires, or None when provably neither does.
+    pub fn rrpb_sphere_decision(&self, t: usize, lambda: f64) -> Option<CertSide> {
+        if self.rrpb_r[t].contains(lambda) {
+            Some(CertSide::R)
+        } else if self.rrpb_l[t].contains(lambda) {
+            Some(CertSide::L)
+        } else {
+            None
+        }
+    }
+
+    /// Advance the certificate sweep to `lambda` (strictly below the
+    /// previous call's λ) and emit the ids certified at `lambda` into
+    /// `out_l`/`out_r`, skipping ids already retired from `active`.
+    /// Returns the number of certificates *entering or expiring* in this
+    /// step — the incremental bookkeeping cost recorded in path
+    /// telemetry. (Emitting the live certificates is additionally
+    /// O(live), proportional to the ids actually handed out, a cost the
+    /// former full-scan pipeline paid on top of its O(|T|) scan too.)
+    pub fn advance(
+        &self,
+        lambda: f64,
+        active: &ActiveWorkset,
+        out_l: &mut Vec<usize>,
+        out_r: &mut Vec<usize>,
+    ) -> usize {
+        out_l.clear();
+        out_r.clear();
+        let mut sw = self.sweep.borrow_mut();
+        debug_assert!(
+            lambda < sw.last_lambda,
+            "frame sweep must move to strictly smaller λ ({} -> {lambda})",
+            sw.last_lambda
+        );
+        sw.last_lambda = lambda;
+        let mut work = 0usize;
+        while sw.cursor < self.schedule.len() && self.schedule[sw.cursor].hi > lambda {
+            let c = self.schedule[sw.cursor];
+            sw.cursor += 1;
+            work += 1;
+            // an interval the sweep jumped over entirely (lo ≥ λ already)
+            // never becomes live
+            if c.lo < lambda {
+                sw.covered.push(c);
+            }
+        }
+        let live_before = sw.covered.len();
+        sw.covered.retain(|c| c.lo < lambda);
+        work += live_before - sw.covered.len(); // expired this step
+        for c in &sw.covered {
+            // soundness net for non-monotone misuse in release builds
+            // (the debug_assert above): never emit outside (lo, hi)
+            if c.hi <= lambda {
+                continue;
+            }
+            let id = c.id as usize;
+            if !active.is_active(id) {
+                continue;
+            }
+            match c.side {
+                CertSide::L => out_l.push(id),
+                CertSide::R => out_r.push(id),
+            }
+        }
+        work
+    }
+
+    /// Derive the certified λ-intervals and build the expiry schedule.
+    fn derive_certificates(
+        &mut self,
+        store: &TripletStore,
+        engine: &dyn Engine,
+        loss: &Loss,
+        fam: CertFamilies,
+    ) {
+        let n = store.len();
+        assert!(n < u32::MAX as usize, "triplet count exceeds certificate id space");
+        self.gamma = Some(loss.gamma);
+        let thr_l = loss.l_threshold();
+        let thr_r = loss.r_threshold();
+
+        // Shared DGB/GB aggregates from the reference state (App K.1).
+        // The dual-feasible α_t = −ℓ'(⟨M₀,H_t⟩) and K = Σ α_t H_t do not
+        // depend on λ, so one wgram (+ one margins pass with K for GB)
+        // certifies the whole path.
+        let mut hk: Vec<f64> = Vec::new();
+        let mut dgb: Option<(f64, f64, f64)> = None; // (‖M₀‖², L_p + L_d, ‖[K]_+‖)
+        let mut gb: Option<(f64, f64, f64)> = None; // (‖M₀‖², ⟨Ξ,M₀⟩, ‖Ξ‖²)
+        if fam.dgb || fam.gb {
+            let alphas: Vec<f64> = self.margins.iter().map(|&m| loss.alpha(m)).collect();
+            let k = engine.wgram(&store.a, &store.b, &alphas);
+            let m_norm_sq = self.m0.norm_sq();
+            if fam.gb {
+                hk = vec![0.0; n];
+                engine.margins(&k, &store.a, &store.b, &mut hk);
+                // Ξ = Σ ℓ'(⟨M₀,H_t⟩)·H_t = −K, so ∇P_λ(M₀) = λM₀ + Ξ
+                gb = Some((m_norm_sq, -k.dot(&self.m0), k.norm_sq()));
+            }
+            if fam.dgb {
+                // full-problem gap at (M₀, α): r²(λ) = ‖M₀‖² + 2L/λ + ‖[K]_+‖²/λ²
+                let l_p: f64 = self.margins.iter().map(|&m| loss.value(m)).sum();
+                let l_d: f64 = alphas.iter().map(|&a| loss.conjugate(a)).sum();
+                let k_plus_norm = psd_split(&k).plus.norm();
+                dgb = Some((m_norm_sq, l_p + l_d, k_plus_norm));
+            }
+        }
+
+        if fam.rrpb {
+            self.rrpb_l.reserve(n);
+            self.rrpb_r.reserve(n);
+        }
+        let mut l_ints: Vec<LambdaRange> = Vec::new();
+        let mut r_ints: Vec<LambdaRange> = Vec::new();
+        for t in 0..n {
+            let (hm, hn) = (self.margins[t], store.h_norm[t]);
+            l_ints.clear();
+            r_ints.clear();
+            if fam.rrpb {
+                let rl = l_range(hm, hn, self.m0_norm, self.eps, self.lambda0, thr_l);
+                let rr = r_range(hm, hn, self.m0_norm, self.eps, self.lambda0, thr_r);
+                self.rrpb_l.push(rl);
+                self.rrpb_r.push(rr);
+                l_ints.push(rl);
+                r_ints.push(rr);
+            }
+            if let Some((mn_sq, l_sum, k_norm)) = dgb {
+                let form = RangeForm::dgb(hm, mn_sq, l_sum, k_norm, hn);
+                l_ints.extend(general_l_range(&form, thr_l));
+                r_ints.extend(general_r_range(&form, thr_r));
+            }
+            if let Some((mn_sq, xi_m, xi_norm_sq)) = gb {
+                let form = RangeForm::gb(hm, -hk[t], mn_sq, xi_m, xi_norm_sq, hn);
+                l_ints.extend(general_l_range(&form, thr_l));
+                r_ints.extend(general_r_range(&form, thr_r));
+            }
+            push_merged(&mut self.schedule, t, CertSide::L, &mut l_ints);
+            push_merged(&mut self.schedule, t, CertSide::R, &mut r_ints);
+        }
+        // entry schedule: upper endpoints descending, so the decreasing-λ
+        // sweep ingests exactly the certificates it has reached
+        self.schedule
+            .sort_by(|a, b| b.hi.partial_cmp(&a.hi).unwrap());
+    }
+}
+
+/// Merge the (individually sound, possibly overlapping) intervals for one
+/// (triplet, side) into disjoint certificates and append them to `out`.
+fn push_merged(out: &mut Vec<Certificate>, id: usize, side: CertSide, ints: &mut Vec<LambdaRange>) {
+    ints.retain(|r| !r.is_empty() && r.hi > 0.0);
+    if ints.is_empty() {
+        return;
+    }
+    ints.sort_by(|a, b| a.lo.partial_cmp(&b.lo).unwrap());
+    let mut cur = ints[0];
+    for r in ints[1..].iter() {
+        if r.lo < cur.hi {
+            // overlapping certified intervals: the union is certified
+            cur.hi = cur.hi.max(r.hi);
+        } else {
+            out.push(Certificate {
+                id: id as u32,
+                side,
+                lo: cur.lo.max(0.0),
+                hi: cur.hi,
+            });
+            cur = *r;
+        }
+    }
+    out.push(Certificate {
+        id: id as u32,
+        side,
+        lo: cur.lo.max(0.0),
+        hi: cur.hi,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::runtime::NativeEngine;
+    use crate::util::rng::Pcg64;
+
+    fn fixture() -> (TripletStore, Mat, NativeEngine) {
+        let mut rng = Pcg64::seed(21);
+        let ds = synthetic::gaussian_mixture("g", 40, 4, 2, 2.6, &mut rng);
+        let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+        let mut base = Mat::from_fn(4, 4, |_, _| rng.normal());
+        base.symmetrize();
+        let m0 = crate::linalg::psd_project(&base).scaled(0.5);
+        (store, m0, NativeEngine::new(2))
+    }
+
+    /// RRPB-only frame: the schedule sweep must emit exactly the ids the
+    /// closed-form intervals contain at every λ of a decreasing grid —
+    /// parity with the former per-λ full-store scan.
+    #[test]
+    fn sweep_matches_direct_interval_checks() {
+        let (store, m0, engine) = fixture();
+        let loss = Loss::smoothed_hinge(0.05);
+        let (l0, eps) = (3.0, 1e-3);
+        let frame = ReferenceFrame::build(
+            m0.clone(),
+            l0,
+            eps,
+            &store,
+            &engine,
+            Some((&loss, CertFamilies::rrpb_only())),
+        );
+        let mut hm = vec![0.0; store.len()];
+        engine.margins(&m0, &store.a, &store.b, &mut hm);
+        let mn = m0.norm();
+        let ws = ActiveWorkset::full(&store);
+        let (mut rl, mut rr) = (Vec::new(), Vec::new());
+        let mut lam = l0;
+        for _ in 0..25 {
+            lam *= 0.9;
+            frame.advance(lam, &ws, &mut rl, &mut rr);
+            for t in 0..store.len() {
+                let hn = store.h_norm[t];
+                let want_r = r_range(hm[t], hn, mn, eps, l0, loss.r_threshold()).contains(lam);
+                let want_l = l_range(hm[t], hn, mn, eps, l0, loss.l_threshold()).contains(lam);
+                assert_eq!(rr.contains(&t), want_r, "R mismatch t={t} λ={lam}");
+                assert_eq!(rl.contains(&t), want_l, "L mismatch t={t} λ={lam}");
+            }
+        }
+    }
+
+    /// Retired ids must never be emitted again, even while their
+    /// certificates are still live.
+    #[test]
+    fn advance_skips_retired_ids() {
+        let (store, m0, engine) = fixture();
+        let loss = Loss::smoothed_hinge(0.05);
+        let frame = ReferenceFrame::build(
+            m0,
+            3.0,
+            1e-3,
+            &store,
+            &engine,
+            Some((&loss, CertFamilies::rrpb_only())),
+        );
+        let mut ws = ActiveWorkset::full(&store);
+        for id in 0..store.len() / 2 {
+            ws.retire(id);
+        }
+        let (mut rl, mut rr) = (Vec::new(), Vec::new());
+        let mut lam = 3.0;
+        for _ in 0..10 {
+            lam *= 0.85;
+            frame.advance(lam, &ws, &mut rl, &mut rr);
+            for &t in rl.iter().chain(rr.iter()) {
+                assert!(ws.is_active(t), "retired id {t} emitted at λ={lam}");
+            }
+        }
+    }
+
+    /// Adding the DGB/GB general-form families can only widen coverage.
+    #[test]
+    fn general_families_only_widen() {
+        let (store, m0, engine) = fixture();
+        let loss = Loss::smoothed_hinge(0.05);
+        let (l0, eps) = (3.0, 1e-3);
+        let narrow = ReferenceFrame::build(
+            m0.clone(),
+            l0,
+            eps,
+            &store,
+            &engine,
+            Some((&loss, CertFamilies::rrpb_only())),
+        );
+        let wide = ReferenceFrame::build(
+            m0,
+            l0,
+            eps,
+            &store,
+            &engine,
+            Some((&loss, CertFamilies::all())),
+        );
+        assert!(wide.n_certificates() >= narrow.n_certificates());
+        let ws = ActiveWorkset::full(&store);
+        let (mut nl, mut nr) = (Vec::new(), Vec::new());
+        let (mut wl, mut wr) = (Vec::new(), Vec::new());
+        let mut lam = l0;
+        for _ in 0..20 {
+            lam *= 0.9;
+            narrow.advance(lam, &ws, &mut nl, &mut nr);
+            wide.advance(lam, &ws, &mut wl, &mut wr);
+            for &t in &nl {
+                assert!(wl.contains(&t), "L coverage lost for t={t} at λ={lam}");
+            }
+            for &t in &nr {
+                assert!(wr.contains(&t), "R coverage lost for t={t} at λ={lam}");
+            }
+        }
+    }
+
+    /// The exact RRPB decision helper agrees with the closed forms.
+    #[test]
+    fn rrpb_decision_matches_ranges() {
+        let (store, m0, engine) = fixture();
+        let loss = Loss::smoothed_hinge(0.05);
+        let frame = ReferenceFrame::build(
+            m0.clone(),
+            2.0,
+            1e-4,
+            &store,
+            &engine,
+            Some((&loss, CertFamilies::rrpb_only())),
+        );
+        assert!(frame.has_exact_rrpb(&loss));
+        assert!(!frame.has_exact_rrpb(&Loss::smoothed_hinge(0.1)));
+        let mut hm = vec![0.0; store.len()];
+        engine.margins(&m0, &store.a, &store.b, &mut hm);
+        let mn = m0.norm();
+        for t in 0..store.len() {
+            for k in 1..=12 {
+                let lam = 2.0 * k as f64 / 12.0;
+                let hn = store.h_norm[t];
+                let want = if r_range(hm[t], hn, mn, 1e-4, 2.0, 1.0).contains(lam) {
+                    Some(CertSide::R)
+                } else if l_range(hm[t], hn, mn, 1e-4, 2.0, 0.95).contains(lam) {
+                    Some(CertSide::L)
+                } else {
+                    None
+                };
+                assert_eq!(frame.rrpb_sphere_decision(t, lam), want);
+            }
+        }
+    }
+}

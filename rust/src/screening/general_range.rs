@@ -264,6 +264,78 @@ mod tests {
         });
     }
 
+    /// The general L-side ranges must match brute-force rule evaluation
+    /// for the RRPB sphere on its valid branch (mirror of
+    /// `matches_bruteforce_rrpb` for `general_l_range`).
+    #[test]
+    fn l_side_matches_bruteforce_rrpb() {
+        forall("general-l-range-brute", 48, |rng| {
+            let (m0, h, eps, l0) = random_case(rng);
+            let (hm, hn, mn) = (m0.dot(&h), h.norm(), m0.norm());
+            let form = RangeForm::rrpb_low(hm, mn, eps, l0, hn);
+            let c_l = 0.95;
+            let ranges = general_l_range(&form, c_l);
+            for k in 1..=30 {
+                let lam = l0 * k as f64 / 30.0; // λ ≤ λ₀ branch only
+                let s = rrpb(&m0, eps, l0, lam);
+                let fires = s.q.dot(&h) + s.r * h.norm() < c_l;
+                let inside = ranges.iter().any(|r| r.contains(lam));
+                if fires != inside {
+                    let near = ranges.iter().any(|r| {
+                        (lam - r.lo).abs() < 1e-6 * l0 || (lam - r.hi).abs() < 1e-6 * l0
+                    });
+                    if !near {
+                        return Err(format!("λ={lam}: fires={fires} inside={inside}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The GB range form must match brute-force evaluation of the GB
+    /// sphere rule at every λ, on both sides: with a λ-independent loss
+    /// aggregate Ξ, ∇P_λ(M₀) = λM₀ + Ξ and the GB sphere built from it
+    /// fires exactly when the general range contains λ.
+    #[test]
+    fn gb_form_matches_bruteforce() {
+        forall("gb-range-brute", 48, |rng| {
+            let (m0, h, _, l0) = random_case(rng);
+            let d = m0.rows();
+            let mut xi = Mat::from_fn(d, d, |_, _| rng.normal());
+            xi.symmetrize();
+            let (hm, hn) = (m0.dot(&h), h.norm());
+            let form = RangeForm::gb(hm, xi.dot(&h), m0.norm_sq(), xi.dot(&m0), xi.norm_sq(), hn);
+            let (c_r, c_l) = (1.0, 0.95);
+            let r_ranges = general_r_range(&form, c_r);
+            let l_ranges = general_l_range(&form, c_l);
+            for k in 1..=40 {
+                let lam = l0 * 0.1 * k as f64;
+                let mut grad = m0.scaled(lam);
+                grad.axpy(1.0, &xi);
+                let s = crate::screening::bounds::gb(&m0, &grad, lam);
+                let hq = s.q.dot(&h);
+                for (fires, ranges, side) in [
+                    (hq - s.r * hn > c_r, &r_ranges, "R"),
+                    (hq + s.r * hn < c_l, &l_ranges, "L"),
+                ] {
+                    let inside = ranges.iter().any(|r| r.contains(lam));
+                    if fires != inside {
+                        let near = ranges.iter().any(|r| {
+                            (lam - r.lo).abs() < 1e-6 * l0 || (lam - r.hi).abs() < 1e-6 * l0
+                        });
+                        if !near {
+                            return Err(format!(
+                                "{side} λ={lam}: fires={fires} inside={inside}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn quad_positive_cases() {
         // upward parabola with two positive roots -> outside intervals

@@ -8,11 +8,15 @@
 //!   are handed to the engine directly and retired ids are never revisited;
 //! - DGB's center is the iterate itself ⇒ `⟨H_t,Q⟩` *reuses* the margins
 //!   already computed for the objective (no extra kernel pass);
-//! - RPB/RRPB centers are scalar multiples of the fixed reference `M₀` ⇒
-//!   the reference margins are gathered **once per λ** (path driver) into
-//!   the workset's row-aligned lane and only scaled here; because the
-//!   sphere is *constant* during one λ solve, a triplet observed not to
-//!   fire is memoized (`no_fire`) and skipped on every later dynamic call;
+//! - RPB/RRPB centers are scalar multiples of the fixed reference `M₀`,
+//!   which lives in a shared [`ReferenceFrame`]: its margins are gathered
+//!   **once per reference** (path driver) into the workset's row-aligned
+//!   lane and only scaled here; because the sphere is *constant* during
+//!   one λ solve, a triplet observed not to fire is memoized (`no_fire`)
+//!   and skipped on every later dynamic call — and when the frame carries
+//!   exact RRPB λ-intervals (`use_frame_certs`), the memo is *pre-seeded*
+//!   from them, so under RRPB + sphere rule a fresh λ step evaluates zero
+//!   rules instead of one pass over the actives;
 //! - GB/PGB/CDGB centers move with the iterate ⇒ one fresh margins pass
 //!   per screening invocation (the extra inner-product cost the paper
 //!   attributes to PGB);
@@ -25,6 +29,7 @@
 //! the returned decision lists.
 
 use super::bounds::{self, Sphere};
+use super::frame::ReferenceFrame;
 use super::rules::{self, Decision};
 use super::sdls::{self, SdlsQuery};
 use super::{BoundKind, RuleKind, ScreeningConfig};
@@ -33,23 +38,12 @@ use crate::runtime::Engine;
 use crate::solver::{Problem, ScreenCtx};
 use crate::util::parallel;
 use crate::util::timer::PhaseTimers;
+use std::rc::Rc;
 
 /// Rule-evaluation block size: per-triplet lanes for one block
 /// (`hq` + `hn` + decision ids) stay L2-resident while a worker streams
 /// its contiguous group of blocks.
 const RULE_BLOCK: usize = 4096;
-
-/// Reference solution for the regularization-path bounds.
-#[derive(Clone, Debug)]
-pub struct RefSolution {
-    pub m0: crate::linalg::Mat,
-    pub lambda0: f64,
-    /// `‖M₀* − M₀‖ ≤ ε` certificate (from the λ₀ duality gap, Thm 3.5)
-    pub eps: f64,
-}
-
-/// Process-unique manager ids for lane tagging (see `lane_tag`).
-static MANAGER_NONCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
 
 /// Cumulative screening statistics.
 #[derive(Clone, Debug, Default)]
@@ -76,11 +70,13 @@ struct Scratch {
 
 /// Identity of a fixed (iterate-independent) sphere: RPB/RRPB spheres
 /// depend only on (reference, λ, loss), so rule outcomes are memoizable.
+/// The reference is identified by its frame tag — process-unique, so a
+/// memo can never survive into a different reference.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 struct FixedKey {
     lambda_bits: u64,
     gamma_bits: u64,
-    ref_version: u64,
+    frame_tag: u64,
 }
 
 /// Per-block rule-evaluation outcome (merged serially in block order).
@@ -95,15 +91,10 @@ struct BlockOut {
 /// Stateful screening engine for one regularization-path run.
 pub struct ScreeningManager {
     pub cfg: ScreeningConfig,
-    reference: Option<RefSolution>,
-    /// `⟨H_t, M₀⟩` for every triplet id (id-indexed fallback; the path
-    /// driver additionally installs these into the workset lane)
-    ref_margins: Vec<f64>,
-    /// bumped on `set_reference`, part of the fixed-sphere memo key
-    ref_version: u64,
-    /// process-unique id; combined with `ref_version` it forms the lane
-    /// tag, so a lane can never collide across managers or references
-    manager_nonce: u64,
+    /// the λ-crossing reference state, shared with the path driver and
+    /// any sibling manager (identity tag, `M₀`/`λ₀`/`ε`, margins lane,
+    /// certified λ-intervals)
+    frame: Option<Rc<ReferenceFrame>>,
     fixed_key: Option<FixedKey>,
     /// id-indexed: proven non-firing under the current fixed sphere
     no_fire: Vec<bool>,
@@ -115,10 +106,7 @@ impl ScreeningManager {
     pub fn new(cfg: ScreeningConfig) -> ScreeningManager {
         ScreeningManager {
             cfg,
-            reference: None,
-            ref_margins: Vec::new(),
-            ref_version: 0,
-            manager_nonce: MANAGER_NONCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            frame: None,
             fixed_key: None,
             no_fire: Vec::new(),
             scratch: Scratch::default(),
@@ -126,19 +114,18 @@ impl ScreeningManager {
         }
     }
 
-    /// Tag identifying this manager's *current* reference: unique per
-    /// (manager, reference installation). A workset lane installed under
-    /// this tag is guaranteed to hold exactly this reference's margins —
-    /// a lane from any other manager or any older reference never
-    /// matches, so stale margins can never feed the rules. A manager
-    /// whose tag is not the one installed simply falls back to its own
-    /// id-indexed gather (correct, marginally slower).
-    fn lane_tag(&self) -> u64 {
-        (self.manager_nonce << 24) ^ self.ref_version
+    /// Install a shared reference frame (the path driver builds one per
+    /// reference solution and hands the same `Rc` to every RPB/RRPB
+    /// manager). Invalidates the fixed-sphere memo: the frame's tag is
+    /// process-unique, so state from another reference can never leak in.
+    pub fn set_frame(&mut self, frame: Rc<ReferenceFrame>) {
+        self.frame = Some(frame);
+        self.fixed_key = None;
     }
 
-    /// Install the reference solution (previous λ on the path). Computes
-    /// and caches `⟨H_t, M₀⟩` for all triplets — one margins pass.
+    /// Convenience for standalone use (tests, single solves): build a
+    /// certificate-free [`ReferenceFrame`] from `m0` (one margins pass)
+    /// and install it.
     pub fn set_reference(
         &mut self,
         m0: crate::linalg::Mat,
@@ -147,38 +134,13 @@ impl ScreeningManager {
         store: &crate::triplet::TripletStore,
         engine: &dyn Engine,
     ) {
-        let mut margins = vec![0.0; store.len()];
-        engine.margins(&m0, &store.a, &store.b, &mut margins);
-        self.set_reference_with_margins(m0, lambda0, eps, margins);
+        let frame = ReferenceFrame::build(m0, lambda0, eps, store, engine, None);
+        self.set_frame(Rc::new(frame));
     }
 
-    /// Install the reference together with precomputed `⟨H_t, M₀⟩` margins
-    /// (id-indexed over the full store) — lets the path driver share one
-    /// margins pass between managers and the range extension.
-    pub fn set_reference_with_margins(
-        &mut self,
-        m0: crate::linalg::Mat,
-        lambda0: f64,
-        eps: f64,
-        margins: Vec<f64>,
-    ) {
-        self.reference = Some(RefSolution { m0, lambda0, eps });
-        self.ref_margins = margins;
-        self.ref_version += 1;
-        self.fixed_key = None;
-    }
-
-    pub fn reference(&self) -> Option<&RefSolution> {
-        self.reference.as_ref()
-    }
-
-    /// Full-store `⟨H_t, M₀⟩` margins of the current reference together
-    /// with its identity tag (for the path driver to install as the
-    /// workset's row-aligned lane via `Problem::install_ref_margins`).
-    pub fn reference_margins(&self) -> Option<(&[f64], u64)> {
-        self.reference
-            .as_ref()
-            .map(|_| (self.ref_margins.as_slice(), self.lane_tag()))
+    /// The installed reference frame, if any.
+    pub fn frame(&self) -> Option<&ReferenceFrame> {
+        self.frame.as_deref()
     }
 
     /// Build the configured sphere from the current solver state.
@@ -204,12 +166,12 @@ impl ScreeningManager {
                 bounds::cdgb(ctx.k_plus, ev.p - ctx.d, lambda)
             }
             BoundKind::Rpb => {
-                let r = self.reference.as_ref()?;
-                bounds::rpb(&r.m0, r.lambda0, lambda)
+                let f = self.frame.as_ref()?;
+                bounds::rpb(f.m0(), f.lambda0(), lambda)
             }
             BoundKind::Rrpb => {
-                let r = self.reference.as_ref()?;
-                bounds::rrpb(&r.m0, r.eps, r.lambda0, lambda)
+                let f = self.frame.as_ref()?;
+                bounds::rrpb(f.m0(), f.eps(), f.lambda0(), lambda)
             }
         })
     }
@@ -228,17 +190,17 @@ impl ScreeningManager {
         match self.cfg.bound {
             BoundKind::Dgb => self.scratch.hq.copy_from_slice(ctx.margins),
             BoundKind::Rpb | BoundKind::Rrpb => {
-                let r = self.reference.as_ref().expect("checked in build_sphere");
-                let scale = (r.lambda0 + problem.lambda) / (2.0 * problem.lambda);
-                if let Some(lane) = problem.active_ref_margins(self.lane_tag()) {
+                let f = self.frame.as_ref().expect("checked in build_sphere");
+                let scale = (f.lambda0() + problem.lambda) / (2.0 * problem.lambda);
+                if let Some(lane) = problem.active_ref_margins(f.tag()) {
                     // row-aligned lane installed by the path driver for
-                    // exactly this reference (tag-checked): contiguous
-                    // scale, no per-id gather
+                    // exactly this frame (tag-checked): contiguous scale,
+                    // no per-id gather
                     for (dst, &m0) in self.scratch.hq.iter_mut().zip(lane) {
                         *dst = scale * m0;
                     }
                 } else {
-                    let ref_margins = &self.ref_margins;
+                    let ref_margins = f.margins();
                     for (dst, &t) in self.scratch.hq.iter_mut().zip(problem.active_idx()) {
                         *dst = scale * ref_margins[t];
                     }
@@ -266,7 +228,6 @@ impl ScreeningManager {
         };
         self.stats.calls += 1;
         let n = problem.active_idx().len();
-        self.center_margins(&sphere, problem, ctx, engine);
 
         let thr_l = problem.loss.l_threshold();
         let thr_r = problem.loss.r_threshold();
@@ -281,14 +242,46 @@ impl ScreeningManager {
             let key = FixedKey {
                 lambda_bits: problem.lambda.to_bits(),
                 gamma_bits: problem.loss.gamma.to_bits(),
-                ref_version: self.ref_version,
+                frame_tag: self.frame.as_ref().map_or(0, |f| f.tag()),
             };
             if self.fixed_key != Some(key) {
                 self.fixed_key = Some(key);
                 self.no_fire.clear();
                 self.no_fire.resize(problem.status().len(), false);
+                // Certificate seeding: the frame's RRPB λ-intervals are
+                // *exact* for the sphere rule (the rule fires at λ iff λ
+                // is inside), so every active triplet whose intervals
+                // exclude this λ is proven non-firing before any rule
+                // runs. After the driver's range pass this covers the
+                // whole workset — the pass below then evaluates nothing.
+                if self.cfg.use_frame_certs
+                    && self.cfg.bound == BoundKind::Rrpb
+                    && self.cfg.rule == RuleKind::Sphere
+                {
+                    if let Some(f) = &self.frame {
+                        if f.has_exact_rrpb(&problem.loss)
+                            && f.margins().len() == problem.status().len()
+                        {
+                            for &t in problem.active_idx() {
+                                if f.rrpb_sphere_decision(t, problem.lambda).is_none() {
+                                    self.no_fire[t] = true;
+                                }
+                            }
+                        }
+                    }
+                }
             }
         }
+        // When the memo (certificate-seeded or accumulated) already
+        // covers every active triplet, skip the margins fill and the
+        // parallel rule dispatch entirely — the certificate fast path
+        // costs O(active) boolean loads, not a kernel pass.
+        if fixed && problem.active_idx().iter().all(|&t| self.no_fire[t]) {
+            self.stats.skipped += n;
+            return (vec![], vec![]);
+        }
+
+        self.center_margins(&sphere, problem, ctx, engine);
 
         // Linear-rule support plane (one margins pass with P): prefer
         // P = −[Q^GB]_− from the projection of the gradient-step point

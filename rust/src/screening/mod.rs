@@ -29,30 +29,40 @@
 //!   cache-sized blocks fanned out across `util::parallel` workers, with
 //!   batched `Engine::margins` calls over only the active rows and
 //!   reusable scratch lanes instead of per-call allocations;
-//! - the path driver gathers the RPB/RRPB reference margins **once per λ**
-//!   (one full-store kernel pass shared with the range extension) and
-//!   installs them as a workset lane that compacts in lockstep;
-//! - RPB/RRPB spheres are constant within one λ solve, so triplets proven
-//!   not to fire are memoized (`no_fire`) and skipped by every later
-//!   dynamic-screening call.
+//! - the λ-crossing state is a first-class [`ReferenceFrame`]: built once
+//!   per reference solution, it owns the identity tag, `M₀`/`λ₀`/`ε`, the
+//!   shared full-store margins lane (installed into the workset, compacts
+//!   in lockstep) and per-triplet **certified λ-intervals** derived from
+//!   the §4 range forms (closed-form RRPB plus, optionally, the DGB/GB
+//!   general forms of Appendix K.1);
+//! - the frame's **expiry schedule** (certificates sorted by interval
+//!   endpoints) makes the per-λ range pass O(entering + expiring)
+//!   bookkeeping (plus emission of the live ids) instead of
+//!   a full-store interval scan, and its exact RRPB intervals pre-seed
+//!   the managers' `no_fire` memo: under RRPB + sphere rule a λ step
+//!   performs **zero** rule evaluations — the certificates already decide
+//!   every triplet.
 //!
 //! ### Per-call cost, before → after
 //!
-//! | phase                   | before (full-store scan)   | after (workset pipeline)                     |
-//! |-------------------------|----------------------------|----------------------------------------------|
-//! | margins pass with `Q`   | O(T·d²)                    | O(active·d²), batched                        |
-//! | RPB/RRPB center margins | O(T·d²) per manager per λ  | one shared pass per λ + O(active) scale      |
-//! | rule evaluation         | O(T) every call            | O(active) first call, O(new) after (memo)    |
-//! | applying a decision     | O(T·d) full recompaction   | O(d) swap-remove (+O(d²) `H_L` update for L) |
-//! | buffers                 | fresh `Vec`s per call      | reusable scratch lanes                       |
+//! | phase                   | before (full-store scan)   | after (workset pipeline + frame)              |
+//! |-------------------------|----------------------------|-----------------------------------------------|
+//! | margins pass with `Q`   | O(T·d²)                    | O(active·d²), batched                         |
+//! | RPB/RRPB center margins | O(T·d²) per manager per λ  | one shared pass per reference + O(active)     |
+//! | range pass per λ        | O(T) interval scan         | O(entering + expiring) sweep + live emission  |
+//! | rule evaluation         | O(T) every call            | 0 for RRPB+sphere (certs); O(active) else     |
+//! | applying a decision     | O(T·d) full recompaction   | O(d) swap-remove (+O(d²) `H_L` update for L)  |
+//! | buffers                 | fresh `Vec`s per call      | reusable scratch lanes                        |
 //!
 //! (T = total triplets, active = currently unscreened.)
 //! `ScreeningStats::rule_evals` counts evaluations actually performed and
 //! `skipped` the memo hits; over a screened path `rule_evals` stays
 //! strictly below `T × path_steps` (asserted by `benches/screening.rs`
-//! and `rust/tests/workset_safety.rs`).
+//! and `rust/tests/workset_safety.rs`, which also oracle-verifies the
+//! certificate-carrying path).
 
 pub mod bounds;
+mod frame;
 pub mod general_range;
 mod manager;
 pub mod range;
@@ -60,7 +70,8 @@ pub mod rules;
 pub mod sdls;
 
 pub use bounds::Sphere;
-pub use manager::{RefSolution, ScreeningManager, ScreeningStats};
+pub use frame::{CertFamilies, CertSide, Certificate, ReferenceFrame};
+pub use manager::{ScreeningManager, ScreeningStats};
 pub use range::{l_range, r_range, LambdaRange};
 
 /// Which sphere bound to construct (paper §3.2).
@@ -126,6 +137,12 @@ pub struct ScreeningConfig {
     pub rule: RuleKind,
     /// max SDLS dual-ascent iterations per triplet
     pub sdls_max_iter: usize,
+    /// pre-seed the no-fire memo from the reference frame's exact RRPB
+    /// λ-intervals (RRPB bound + sphere rule only): a triplet whose
+    /// certificate excludes the current λ provably cannot fire, so the
+    /// rule pass skips it. Off reproduces the PR 1 pipeline (every active
+    /// triplet rule-evaluated once per λ) — kept as a bench baseline.
+    pub use_frame_certs: bool,
 }
 
 impl ScreeningConfig {
@@ -134,6 +151,7 @@ impl ScreeningConfig {
             bound,
             rule,
             sdls_max_iter: 12,
+            use_frame_certs: true,
         }
     }
 

@@ -7,12 +7,26 @@
 //! refreshed, safe screening (if attached) runs, and overall optimality is
 //! certified by the duality gap over the *full* reduced problem — the
 //! heuristic never compromises the final optimality guarantee.
+//!
+//! Refreshes reuse the workset margins lane for selection and cache the
+//! working subproblem by triplet *ids*: rows shift when screening
+//! compacts the workset, ids don't, and the `a`/`b` rows of a given id
+//! never change — so when the selected ids are unchanged (the common
+//! case near convergence) the O(|W|·d) row copies are skipped entirely
+//! (`SolveStats::ws_reuses` counts the savings).
 
 use super::pgd::{ScreenCtx, SolveStats, SolverConfig};
 use super::problem::Problem;
 use crate::linalg::{psd_split, Mat, PsdSplit};
 use crate::runtime::Engine;
 use crate::util::timer::PhaseTimers;
+
+/// Cached working subproblem, keyed by the selected triplet ids.
+struct WsCache {
+    ids: Vec<usize>,
+    a: Mat,
+    b: Mat,
+}
 
 /// Active-set wrapper around the PGD inner loop.
 pub struct ActiveSetSolver {
@@ -48,6 +62,8 @@ impl ActiveSetSolver {
         let mut m = timers.eig.time(|| psd_split(&m0)).plus;
         let mut pre_split: Option<PsdSplit> = None;
         let mut inner_iters = 0usize;
+        let mut cache: Option<WsCache> = None;
+        let mut sel_ids: Vec<usize> = Vec::new();
 
         'outer: for _round in 0..(self.cfg.max_iters / self.refresh_every.max(1) + 2) {
             // ---- full evaluation over all (unscreened) active triplets ----
@@ -115,15 +131,29 @@ impl ActiveSetSolver {
                 inner_iters += 1;
                 continue 'outer;
             }
-            let a_w = problem.active_a().select_rows(&w_local);
-            let b_w = problem.active_b().select_rows(&w_local);
+            // ids — not rows — identify the subproblem: reuse the cached
+            // row copies whenever the selection is unchanged
+            sel_ids.clear();
+            sel_ids.extend(w_local.iter().map(|&k| problem.active_idx()[k]));
+            let reuse = cache.as_ref().is_some_and(|c| c.ids == sel_ids);
+            if reuse {
+                stats.ws_reuses += 1;
+            } else {
+                cache = Some(WsCache {
+                    ids: sel_ids.clone(),
+                    a: problem.active_a().select_rows(&w_local),
+                    b: problem.active_b().select_rows(&w_local),
+                });
+            }
+            let ws = cache.as_ref().expect("cache ensured above");
+            let (a_w, b_w) = (&ws.a, &ws.b);
 
             // ---- inner PGD on the working subproblem ----
             let mut margins_w = vec![0.0; w_local.len()];
             let eval_w = |m: &Mat, margins_w: &mut Vec<f64>, timers: &mut PhaseTimers| -> Mat {
                 let (_, g) = timers
                     .compute
-                    .time(|| engine.step(m, &a_w, &b_w, problem.loss.gamma, margins_w));
+                    .time(|| engine.step(m, a_w, b_w, problem.loss.gamma, margins_w));
                 let mut k = g;
                 k.axpy(1.0, problem.h_l());
                 let mut grad = m.scaled(lambda);
@@ -224,6 +254,33 @@ mod tests {
         let ev = prob.eval(&m, &engine, &mut timers);
         let (d, _) = prob.dual(&ev.margins, &ev.k, &mut timers);
         assert!(ev.p - d <= 1e-7 * ev.p.abs().max(1.0));
+    }
+
+    #[test]
+    fn working_set_cache_reused_on_long_solves() {
+        // Near convergence the margins stabilize, so the selected ids stop
+        // changing and the cached row copies must be reused. Only assert
+        // when the solve actually spans multiple refreshes.
+        let store = setup(4);
+        let loss = Loss::smoothed_hinge(0.05);
+        let engine = crate::runtime::NativeEngine::new(2);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        let mut prob = Problem::new(&store, loss, lmax * 0.05);
+        let cfg = SolverConfig {
+            tol: 1e-10,
+            tol_relative: false,
+            ..Default::default()
+        };
+        let solver = ActiveSetSolver::new(cfg);
+        let (_, stats) = solver.solve(&mut prob, &engine, Mat::zeros(4, 4), None);
+        assert!(stats.converged);
+        if stats.iters > 4 * solver.refresh_every {
+            assert!(
+                stats.ws_reuses > 0,
+                "selection never reused across {} iters",
+                stats.iters
+            );
+        }
     }
 
     #[test]

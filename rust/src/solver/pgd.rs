@@ -74,6 +74,10 @@ pub struct SolveStats {
     pub converged: bool,
     pub screen_l: usize,
     pub screen_r: usize,
+    /// active-set working-subproblem cache hits: refreshes whose selected
+    /// ids were unchanged, so the row copies were reused (see
+    /// [`crate::solver::ActiveSetSolver`]); always 0 for the plain solver
+    pub ws_reuses: usize,
     pub timers: PhaseTimers,
 }
 

@@ -108,13 +108,19 @@ impl<'a> Problem<'a> {
         self.workset.h_norm()
     }
 
-    /// Install the `⟨H_t, M₀⟩` reference-margin lane (id-indexed over the
-    /// full store) into the workset, tagged with the identity of the
-    /// reference it came from (`ScreeningManager::reference_margins`). The
-    /// path driver calls this once per λ after gathering the RPB/RRPB
-    /// reference margins; the lane is then compacted in lockstep as
-    /// triplets retire, so the screening manager reads a contiguous
-    /// row-aligned slice instead of gathering by id.
+    /// Thread a [`crate::screening::ReferenceFrame`] into this problem:
+    /// installs the frame's `⟨H_t, M₀⟩` margins as the workset's
+    /// row-aligned lane under the frame's identity tag. The lane is then
+    /// compacted in lockstep as triplets retire, so every RPB/RRPB
+    /// manager sharing the frame reads a contiguous slice instead of
+    /// gathering by id.
+    pub fn install_frame(&mut self, frame: &crate::screening::ReferenceFrame) {
+        self.workset.install_ref_margins(frame.margins(), frame.tag());
+    }
+
+    /// Low-level lane install (id-indexed over the full store, arbitrary
+    /// tag) — prefer [`Self::install_frame`]; kept for tests and custom
+    /// pipelines.
     pub fn install_ref_margins(&mut self, full: &[f64], tag: u64) {
         self.workset.install_ref_margins(full, tag);
     }

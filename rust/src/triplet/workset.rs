@@ -120,11 +120,12 @@ impl ActiveWorkset {
 
     /// Install the reference-margin lane from an id-indexed full vector
     /// (`full[t] = ⟨H_t, M₀⟩` for every triplet of the store), tagged with
-    /// the identity of the reference it was gathered from (see
-    /// `ScreeningManager::reference_margins`). The lane is gathered into row
-    /// order and then compacted in lockstep by `retire`; readers must
-    /// present a matching tag, so a lane from a stale reference can never
-    /// feed a screening rule.
+    /// the identity of the reference frame it was gathered from (the path
+    /// driver threads it in via `Problem::install_frame`, using
+    /// `ReferenceFrame::tag`). The lane is gathered into row order and
+    /// then compacted in lockstep by `retire`; readers must present a
+    /// matching tag, so a lane from a stale reference can never feed a
+    /// screening rule.
     pub fn install_ref_margins(&mut self, full: &[f64], tag: u64) {
         debug_assert_eq!(full.len(), self.row_of.len());
         self.ref_margin = Some((tag, self.ids.iter().map(|&id| full[id]).collect()));

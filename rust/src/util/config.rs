@@ -184,6 +184,8 @@ pub fn path_config(cfg: &Config) -> crate::path::PathConfig {
         secondary_screening: None,
         active_set: cfg.bool_or("path.active_set", false),
         range_screening: cfg.bool_or("path.range_screening", false),
+        range_general: cfg.bool_or("path.range_general", false),
+        frame_every: cfg.usize_or("path.frame_every", 1).max(1),
     }
 }
 

@@ -20,7 +20,7 @@ use triplet_screen::linalg::Mat;
 use triplet_screen::loss::Loss;
 use triplet_screen::path::{PathConfig, RegPath};
 use triplet_screen::prelude::*;
-use triplet_screen::screening::ScreeningManager;
+use triplet_screen::screening::{CertFamilies, ReferenceFrame, ScreeningManager};
 use triplet_screen::solver::{Problem, ScreenCtx, Solver, SolverConfig};
 use triplet_screen::triplet::TripletStatus;
 
@@ -191,6 +191,147 @@ fn rule_evaluation_budget_under_naive_floor() {
         res.steps.iter().skip(1).any(|s| s.range_screened > 0),
         "range extension never fired — the strict budget depends on it"
     );
+}
+
+/// Certificate-carrying path: a full regularization path with the
+/// general-range frame (RRPB + DGB/GB certificates) must reach the same
+/// optimum as the frame-off path, and every triplet the frame certifies
+/// must have the oracle-verified α* at the λ it was certified for.
+#[test]
+fn certificate_frame_path_and_alpha_star() {
+    let st = store(2);
+    let loss = Loss::smoothed_hinge(0.05);
+    let engine = NativeEngine::new(0);
+
+    // (a) full path, frame on vs off: identical optima
+    let tight = SolverConfig {
+        tol: 1e-11,
+        tol_relative: false,
+        max_iters: 100_000,
+        ..Default::default()
+    };
+    let mut on = PathConfig {
+        max_steps: 12,
+        solver: tight.clone(),
+        ..Default::default()
+    };
+    on.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+    on.range_screening = true;
+    on.range_general = true;
+    let mut off = PathConfig {
+        max_steps: 12,
+        solver: tight,
+        ..Default::default()
+    };
+    off.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+    let r_on = RegPath::new(on).run(&st, &engine);
+    let r_off = RegPath::new(off).run(&st, &engine);
+    assert_eq!(r_on.steps.len(), r_off.steps.len());
+    let diff = r_on.m_final.sub(&r_off.m_final).norm();
+    assert!(diff < 1e-6, "frame on/off optima differ: ‖ΔM‖_F = {diff:e}");
+    assert!(
+        r_on.steps.iter().skip(1).any(|s| s.range_screened > 0),
+        "certificate frame never fired on the path"
+    );
+    let s_on = r_on.screening_stats.expect("stats on");
+    let s_off = r_off.screening_stats.expect("stats off");
+    assert!(
+        s_on.rule_evals < s_off.rule_evals,
+        "frame did not reduce rule evals: {} vs {}",
+        s_on.rule_evals,
+        s_off.rule_evals
+    );
+
+    // (b) oracle-verified α* for every range-screened triplet: sweep a
+    // frame built from an honest (gap-certified) reference and check
+    // each certified id against the exact solution at that λ
+    let lmax = Problem::lambda_max(&st, &loss, &engine);
+    let l0 = lmax * 0.4;
+    let (m0, eps) = solve_oracle(&st, loss, l0, &engine);
+    let frame = ReferenceFrame::build(
+        m0,
+        l0,
+        eps,
+        &st,
+        &engine,
+        Some((&loss, CertFamilies::all())),
+    );
+    let hn_max = st.h_norm.iter().cloned().fold(0.0f64, f64::max);
+    let (mut rl, mut rr) = (Vec::new(), Vec::new());
+    let mut total = 0usize;
+    let mut lam = l0;
+    for _ in 0..6 {
+        lam *= 0.9;
+        let prob = Problem::new(&st, loss, lam);
+        frame.advance(lam, prob.workset(), &mut rl, &mut rr);
+        if rl.is_empty() && rr.is_empty() {
+            continue;
+        }
+        let (m_star, eps_t) = solve_oracle(&st, loss, lam, &engine);
+        let mut om = vec![0.0; st.len()];
+        engine.margins(&m_star, &st.a, &st.b, &mut om);
+        let slack = 1e-6 + 4.0 * (eps + eps_t) * hn_max;
+        for &t in &rl {
+            assert!(
+                om[t] < loss.l_threshold() + slack,
+                "t={t} certified L at λ={lam} but oracle margin {} (α* != 1)",
+                om[t]
+            );
+        }
+        for &t in &rr {
+            assert!(
+                om[t] > loss.r_threshold() - slack,
+                "t={t} certified R at λ={lam} but oracle margin {} (α* != 0)",
+                om[t]
+            );
+        }
+        total += rl.len() + rr.len();
+    }
+    assert!(total > 0, "frame certified nothing over a 6-step sweep");
+}
+
+/// Regression for the old range-extension loop that re-tested every
+/// store id: the certificate sweep must only emit ids that are active in
+/// the presented workset — retired ids are never revisited, even while
+/// their certificates are still live.
+#[test]
+fn range_candidates_subset_of_active_workset() {
+    let st = store(5);
+    let loss = Loss::smoothed_hinge(0.05);
+    let engine = NativeEngine::new(0);
+    let lmax = Problem::lambda_max(&st, &loss, &engine);
+    let l0 = lmax * 0.5;
+    let (m0, eps) = solve_oracle(&st, loss, l0, &engine);
+    let frame = ReferenceFrame::build(
+        m0,
+        l0,
+        eps,
+        &st,
+        &engine,
+        Some((&loss, CertFamilies::all())),
+    );
+    let mut prob = Problem::new(&st, loss, l0 * 0.9);
+    let (mut rl, mut rr) = (Vec::new(), Vec::new());
+    frame.advance(l0 * 0.9, prob.workset(), &mut rl, &mut rr);
+    for &t in rl.iter().chain(rr.iter()) {
+        assert!(prob.workset().is_active(t), "emitted inactive id {t}");
+    }
+    assert!(
+        !(rl.is_empty() && rr.is_empty()),
+        "no certificates at 0.9·λ₀ — fixture too weak"
+    );
+    let (nl, nr) = prob.apply_screening(&rl, &rr);
+    assert_eq!(nl + nr, rl.len() + rr.len(), "range pass handed out retired ids");
+    let retired: Vec<usize> = rl.iter().chain(rr.iter()).cloned().collect();
+
+    // a later sweep against the now partially retired workset must not
+    // re-emit the retired ids, although their certificates may be live
+    frame.advance(l0 * 0.8, prob.workset(), &mut rl, &mut rr);
+    for &t in rl.iter().chain(rr.iter()) {
+        assert!(prob.workset().is_active(t), "range pass revisited retired id {t}");
+        assert!(!retired.contains(&t));
+    }
+    prob.workset().assert_consistent(&st);
 }
 
 /// Screening decisions survive a mid-solve λ reset only through the
