@@ -43,11 +43,15 @@ fn main() {
     let mut bench = if quick { Bench::quick() } else { Bench::default() };
     Bench::header();
 
+    // tiled GEMM/SYRK core (default) vs the scalar reference core, plus
+    // PJRT when artifacts are present — all through the same Engine API
     let native = NativeEngine::new(0);
+    let scalar = NativeEngine::scalar(0);
     let pjrt = PjrtEngine::from_default_dir().ok();
 
     for (d, n) in [(19usize, 8192usize), (64, 8192), (128, 8192), (19, 65536)] {
         bench_engine(&mut bench, &native, n, d);
+        bench_engine(&mut bench, &scalar, n, d);
         if let Some(p) = &pjrt {
             if p.supports_dim(d) {
                 bench_engine(&mut bench, p, n, d);

@@ -97,6 +97,15 @@ impl Mat {
         self.rows = n;
     }
 
+    /// Append a row at the end (O(cols)). The workset *revive* primitive:
+    /// a triplet re-entering the reduced problem is pushed back onto
+    /// every lane.
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
     /// Remove row `i` by moving the last row into its slot (O(cols)).
     /// The workset compaction primitive: order is not preserved.
     pub fn swap_remove_row(&mut self, i: usize) {
@@ -333,6 +342,20 @@ mod tests {
         let s = m.select_rows(&[3, 1]);
         assert_eq!(s.row(0), &[30.0, 31.0]);
         assert_eq!(s.row(1), &[10.0, 11.0]);
+    }
+
+    #[test]
+    fn push_row_appends() {
+        let mut m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f64);
+        m.push_row(&[7.0, 8.0, 9.0]);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.row(2), &[7.0, 8.0, 9.0]);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+        // push after a swap-remove reuses the freed slot
+        m.swap_remove_row(0);
+        m.push_row(&[1.0, 1.0, 1.0]);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.row(2), &[1.0, 1.0, 1.0]);
     }
 
     #[test]

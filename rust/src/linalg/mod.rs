@@ -1,11 +1,14 @@
 //! Dense linear algebra substrate (LAPACK/BLAS stand-in).
 //!
 //! Everything the screening machinery needs: a row-major [`Mat`] with
-//! Frobenius-space operations, a symmetric eigensolver (Householder
-//! tridiagonalization + implicit-shift QL, with a cyclic-Jacobi oracle),
-//! positive-semidefinite cone projections `[·]_+ / [·]_-`, and a Lanczos
-//! minimum-eigenpair solver used by the SDLS screening rule.
+//! Frobenius-space operations, the tiled GEMM/SYRK compute core behind
+//! every engine ([`gemm`]: panel-tiled margins + half-FLOP weighted
+//! SYRK), a symmetric eigensolver (Householder tridiagonalization +
+//! implicit-shift QL, with a cyclic-Jacobi oracle), positive-semidefinite
+//! cone projections `[·]_+ / [·]_-`, and a Lanczos minimum-eigenpair
+//! solver used by the SDLS screening rule.
 
+pub mod gemm;
 mod mat;
 mod sym_eig;
 mod psd;

@@ -4,6 +4,7 @@
 //! `A = A_+ + A_-` with `A_+ = V Λ_+ V^T` (the Frobenius projection onto
 //! the PSD cone) and `A_- = V Λ_- V^T`; `<A_+, A_-> = 0`.
 
+use super::gemm::mirror_upper;
 use super::{sym_eig, Mat};
 
 /// Result of splitting `A` into its PSD and NSD parts.
@@ -25,6 +26,14 @@ pub fn psd_project(a: &Mat) -> Mat {
 }
 
 /// Full split `A = [A]_+ + [A]_-`.
+///
+/// The spectral reconstructions accumulate the **upper triangle only**
+/// and mirror once — half the FLOPs, and the outputs are exactly
+/// symmetric by construction. That bitwise symmetry is load-bearing:
+/// every solver iterate is a `psd_split` output, and the tiled margins
+/// kernel's scalar-order-identical summation (see `linalg::gemm`) holds
+/// precisely for bitwise-symmetric inputs, which keeps the two compute
+/// cores' trajectories identical.
 pub fn psd_split(a: &Mat) -> PsdSplit {
     let e = sym_eig(a);
     let d = e.values.len();
@@ -46,11 +55,13 @@ pub fn psd_split(a: &Mat) -> PsdSplit {
                 continue;
             }
             let w = lk * vik;
-            for j in 0..d {
+            for j in i..d {
                 target[(i, j)] += w * e.vectors[(j, k)];
             }
         }
     }
+    mirror_upper(&mut plus);
+    mirror_upper(&mut minus);
     let min_eig = e.values.first().copied().unwrap_or(0.0);
     PsdSplit {
         plus,

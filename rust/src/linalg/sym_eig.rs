@@ -10,6 +10,16 @@
 //! in the *columns* of `V`.
 
 use super::Mat;
+use crate::util::pool::ScratchPool;
+
+/// Pool of reusable off-diagonal workspace lanes for tred2/tql2. The
+/// sub-diagonal `e` is the decomposition's only true intermediate (`d`
+/// and `v` become the returned values/vectors), yet it used to be
+/// reallocated on every call — and `Problem::dual` → `psd_split` calls
+/// `sym_eig` once per solver iteration, plus once per PSD projection.
+/// Lanes are taken/returned around each decomposition (same capped pool
+/// the engine workers use, see `util::pool`).
+static EIG_SCRATCH: ScratchPool = ScratchPool::new(64);
 
 /// Eigendecomposition result: `a = vectors * diag(values) * vectors^T`.
 #[derive(Clone, Debug)]
@@ -62,9 +72,10 @@ pub fn sym_eig(a: &Mat) -> SymEig {
     let mut v = a.clone();
     v.symmetrize();
     let mut d = vec![0.0; n];
-    let mut e = vec![0.0; n];
+    let mut e = EIG_SCRATCH.take_zeroed(n);
     tred2(&mut v, &mut d, &mut e);
     tql2(&mut v, &mut d, &mut e);
+    EIG_SCRATCH.put(e);
     SymEig {
         values: d,
         vectors: v,

@@ -41,10 +41,12 @@ fn parse_rule(s: &str) -> RuleKind {
 fn make_engine(args: &Args) -> Box<dyn Engine> {
     match args.get_or("engine", "native") {
         "native" => Box::new(NativeEngine::new(args.get_usize("threads", 0))),
+        // scalar reference core: parity oracle / perf baseline
+        "native-scalar" => Box::new(NativeEngine::scalar(args.get_usize("threads", 0))),
         "pjrt" => Box::new(
             PjrtEngine::from_default_dir().expect("loading PJRT artifacts (run `make artifacts`)"),
         ),
-        other => panic!("unknown engine {other:?} (native|pjrt)"),
+        other => panic!("unknown engine {other:?} (native|native-scalar|pjrt)"),
     }
 }
 

@@ -11,18 +11,25 @@
 //! reference solution and shared (via `Rc`) by every consumer: the
 //! RPB/RRPB managers read `M₀`/`λ₀`/`ε` and the full-store margins lane
 //! from it (one kernel pass per reference — previously each consumer
-//! paid its own), the fresh per-λ [`Problem`] receives the lane through
-//! [`Problem::install_frame`], and the §4 range extension runs as a
-//! **certificate sweep**: the frame derives each triplet's certified
-//! λ-interval once (closed-form RRPB plus, with
-//! [`PathConfig::range_general`], the DGB/GB general forms of Appendix
-//! K.1) and an expiry schedule hands each λ step exactly the triplets
-//! whose certificates cover it — O(entering + expiring) bookkeeping per
-//! step (plus emission of the live ids) instead of
-//! the former O(|T|) interval scan. Per-λ screening-call counts,
-//! rule-evaluation counts and range-pass work are recorded in
-//! [`PathStep`] so benches and CI can assert that the pipeline never
-//! revisits retired triplets.
+//! paid its own), and the §4 range extension runs as a **certificate
+//! sweep**: the frame derives each triplet's certified λ-interval once
+//! (closed-form RRPB plus, with [`PathConfig::range_general`], the
+//! DGB/GB general forms of Appendix K.1) and an expiry schedule hands
+//! each λ step exactly the triplets whose certificates cover it —
+//! O(entering + expiring) bookkeeping per step (plus emission of the
+//! live ids) instead of the former O(|T|) interval scan.
+//!
+//! The [`Problem`] itself is **persistent across λ steps**: built once,
+//! it crosses each boundary through [`Problem::retarget_lambda`] with
+//! the frame's coverage sets — certificate-covered triplets stay retired
+//! (their workset rows are never re-copied), only un-covered screened
+//! triplets are revived, and the per-step revive count is recorded as
+//! [`PathStep::rebuild_rows_copied`] (the former pipeline's from-scratch
+//! rebuild copied all |T| rows per step). The reference-margin lane is
+//! re-installed through [`Problem::install_frame`] after every
+//! retarget. Per-λ screening-call counts, rule-evaluation counts and
+//! range-pass work are recorded in [`PathStep`] so benches and CI can
+//! assert that the pipeline never revisits retired triplets.
 
 use crate::linalg::{psd_split, Mat};
 use crate::loss::Loss;
@@ -113,7 +120,12 @@ pub struct PathStep {
     pub rate_final: f64,
     pub screened_l: usize,
     pub screened_r: usize,
-    /// triplets fixed by the range extension before any rule evaluation
+    /// triplets whose membership is certificate-fixed at this λ before
+    /// any rule evaluation: the frame's full coverage set — ids newly
+    /// retired this step plus ids kept retired across the crossing.
+    /// Same quantity the pre-persistent pipeline reported (its fresh
+    /// per-λ problem re-applied the whole coverage set each step), so
+    /// the telemetry stays comparable across PR baselines.
     pub range_screened: usize,
     /// certificates entering or expiring in the frame's range sweep this
     /// step — the incremental bookkeeping cost of the range pass (the
@@ -121,6 +133,12 @@ pub struct PathStep {
     /// live certificates is additionally proportional to
     /// `range_screened`, a cost both pipelines share)
     pub range_pass_work: usize,
+    /// workset rows copied while crossing into this λ — revived triplets
+    /// whose previous-λ decision was not re-certified. The persistent
+    /// problem's proof-of-work: the former pipeline rebuilt the problem
+    /// from scratch each step, copying all |T| rows; certificate-covered
+    /// triplets are now never re-copied
+    pub rebuild_rows_copied: usize,
     /// screening-manager invocations during this λ solve
     pub screen_calls: usize,
     /// triplet-rule evaluations actually performed during this λ solve
@@ -206,9 +224,14 @@ impl RegPath {
         let mut steps: Vec<PathStep> = Vec::new();
         let mut lambda = lambda_max;
         let mut prev_loss_term: Option<f64> = None;
-        // reusable certificate-sweep output buffers
-        let mut range_l: Vec<usize> = Vec::new();
-        let mut range_r: Vec<usize> = Vec::new();
+        // The problem is built ONCE and carried across every λ step:
+        // `retarget_lambda` keeps the compacted workset and the screened
+        // sets alive, so certificate-covered triplets are never re-copied
+        // (the former per-step `Problem::new` cloned all |T| rows).
+        let mut problem = Problem::new(store, loss, lambda_max);
+        // reusable certificate-coverage buffers
+        let mut cover_l: Vec<usize> = Vec::new();
+        let mut cover_r: Vec<usize> = Vec::new();
 
         for step_i in 0..self.cfg.max_steps {
             let lambda_prev = lambda;
@@ -219,30 +242,30 @@ impl RegPath {
                 }
             }
             let t_step = std::time::Instant::now();
-            let mut problem = Problem::new(store, loss, lambda);
 
-            // thread the frame into the fresh problem: the reference-
-            // margin lane (compacted in lockstep by retires, tag-checked
-            // by the managers) and the certificate range sweep
-            let mut range_screened = 0usize;
+            // ---- certificate coverage at the new λ (no rule
+            //      evaluation): the expiry schedule emits every triplet
+            //      whose certified interval covers λ ----
+            cover_l.clear();
+            cover_r.clear();
             let mut range_pass_work = 0usize;
-            if let Some(fr) = &frame {
-                if needs_ref {
-                    problem.install_frame(fr);
+            if self.cfg.range_screening {
+                if let Some(fr) = &frame {
+                    range_pass_work = fr.advance_covered(lambda, &mut cover_l, &mut cover_r);
                 }
-                if self.cfg.range_screening {
-                    // ---- certificate range pass (no rule evaluation):
-                    //      the expiry schedule emits exactly the active
-                    //      triplets whose certified interval covers λ ----
-                    range_pass_work =
-                        fr.advance(lambda, problem.workset(), &mut range_l, &mut range_r);
-                    let (nl, nr) = problem.apply_screening(&range_l, &range_r);
-                    debug_assert_eq!(
-                        nl + nr,
-                        range_l.len() + range_r.len(),
-                        "range pass revisited retired ids"
-                    );
-                    range_screened = nl + nr;
+            }
+            let range_screened = cover_l.len() + cover_r.len();
+
+            // ---- persistent cross-λ retarget: covered triplets stay
+            //      retired (zero copies), everything else re-enters ----
+            let retarget = problem.retarget_lambda(lambda, &cover_l, &cover_r);
+
+            // thread the frame into the retargeted problem: the
+            // reference-margin lane (compacted in lockstep by retires,
+            // tag-checked by the managers) is re-installed per λ
+            if needs_ref {
+                if let Some(fr) = &frame {
+                    problem.install_frame(fr);
                 }
             }
 
@@ -323,6 +346,7 @@ impl RegPath {
                 screened_r: problem.status().n_screened_r(),
                 range_screened,
                 range_pass_work,
+                rebuild_rows_copied: retarget.rows_copied,
                 screen_calls: stats_after.0 - stats_before.0,
                 rule_evals: stats_after.1 - stats_before.1,
                 wall,
@@ -455,6 +479,9 @@ mod tests {
         }
         assert!(res.steps.iter().all(|s| s.converged));
         assert!(res.steps.iter().all(|s| s.screen_calls == 0 && s.rule_evals == 0));
+        // nothing is ever screened, so the persistent problem crosses
+        // every λ without copying a single row
+        assert!(res.steps.iter().all(|s| s.rebuild_rows_copied == 0));
     }
 
     #[test]
@@ -610,6 +637,61 @@ mod tests {
             assert!((a.p - b.p).abs() < tol, "stale-frame path drifted at λ={}", a.lambda);
         }
         assert!(res.steps.iter().all(|s| s.converged));
+    }
+
+    #[test]
+    fn persistent_problem_copies_strictly_less_than_rebuilds() {
+        // The tentpole telemetry: crossing λ with `retarget_lambda` must
+        // copy strictly fewer rows than the former rebuild-from-scratch
+        // pipeline (|T| per step), with or without certificates.
+        let store = small_store(3);
+        let engine = NativeEngine::new(2);
+        for range_screening in [false, true] {
+            let mut cfg = base_cfg();
+            cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+            cfg.range_screening = range_screening;
+            let res = RegPath::new(cfg).run(&store, &engine);
+            assert!(res.steps.iter().all(|s| s.converged));
+            let copied: usize = res.steps.iter().map(|s| s.rebuild_rows_copied).sum();
+            let from_scratch = store.len() * res.steps.len();
+            assert!(
+                copied < from_scratch,
+                "range={range_screening}: copied {copied} rows >= rebuild floor {from_scratch}"
+            );
+            // a revive can only be of a triplet screened at the previous
+            // λ, so per-step copies never exceed |T|
+            assert!(res.steps.iter().all(|s| s.rebuild_rows_copied <= store.len()));
+        }
+    }
+
+    #[test]
+    fn certificates_suppress_recopies() {
+        // With the certificate frame on, covered triplets must stay
+        // retired across crossings: total copies with certificates are
+        // no more than without them (where every screened triplet is
+        // revived every step).
+        let store = small_store(3);
+        let engine = NativeEngine::new(2);
+        let mk = |range: bool| {
+            let mut cfg = base_cfg();
+            cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+            cfg.range_screening = range;
+            RegPath::new(cfg).run(&store, &engine)
+        };
+        let with_certs = mk(true);
+        let without = mk(false);
+        let c_with: usize = with_certs.steps.iter().map(|s| s.rebuild_rows_copied).sum();
+        let c_without: usize = without.steps.iter().map(|s| s.rebuild_rows_copied).sum();
+        assert!(
+            c_with <= c_without,
+            "certificates increased row copies: {c_with} > {c_without}"
+        );
+        // and the certificate path actually kept some triplet retired
+        // across at least one crossing (covered ⇒ not re-copied)
+        assert!(
+            with_certs.steps.iter().skip(1).any(|s| s.range_screened > s.rebuild_rows_copied),
+            "no crossing kept a covered triplet retired"
+        );
     }
 
     #[test]

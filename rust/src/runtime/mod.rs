@@ -3,14 +3,22 @@
 //! [`Engine`] abstracts the three hot operations (margins, weighted gram,
 //! fused step). Two implementations:
 //!
-//! - [`NativeEngine`] — pure-rust f64, threaded. The correctness oracle
-//!   and the fallback for dimensions without compiled artifacts.
+//! - [`NativeEngine`] — pure-rust f64, threaded. Routes every FLOP
+//!   through the tiled GEMM/SYRK core in [`crate::linalg::gemm`]
+//!   ([`KernelCore::Tiled`], the default); the original scalar core
+//!   ([`KernelCore::Scalar`], via [`NativeEngine::scalar`]) is kept as
+//!   the parity oracle and perf baseline, and as the fallback for
+//!   dimensions without compiled artifacts.
 //! - [`PjrtEngine`] — loads the AOT artifacts (`artifacts/*.hlo.txt`,
 //!   lowered from the L2 JAX model wrapping the L1 Pallas kernels) and
-//!   executes them through the PJRT C API via the `xla` crate.
+//!   executes them through the PJRT C API via the `xla` crate. Its
+//!   dispatch keeps the same grid-accumulator structure and row-block
+//!   geometry as the native panels ([`crate::linalg::gemm::PANEL_ROWS`]),
+//!   so native-vs-PJRT comparisons measure the backend, not the blocking.
 //!
 //! Both must agree to f64 round-off; `rust/tests/runtime_pjrt.rs` checks
-//! exactly that on the real artifacts.
+//! exactly that on the real artifacts, and `rust/tests/kernel_parity.rs`
+//! checks the tiled core against the scalar reference.
 
 mod native;
 // The real PJRT engine needs the vendored `xla` + `anyhow` crates, which
@@ -27,7 +35,7 @@ mod pjrt;
 #[path = "pjrt_stub.rs"]
 mod pjrt;
 
-pub use native::NativeEngine;
+pub use native::{KernelCore, NativeEngine};
 pub use pjrt::{PjrtEngine, ARTIFACTS_DIR_ENV};
 
 use crate::linalg::Mat;

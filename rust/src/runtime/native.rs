@@ -1,24 +1,77 @@
 //! Pure-rust reference engine (threaded f64).
 //!
-//! Each worker processes a contiguous block of triplets: margins via a
-//! per-row `M a` matvec (M stays L2-resident for d ≤ a few hundred), the
-//! fused step additionally accumulates a worker-local `Σ α_t H_t` that is
-//! reduced at the end — matching the Pallas kernel's grid-accumulator
-//! structure exactly, which keeps native-vs-PJRT comparisons meaningful.
+//! Each worker processes a contiguous block of triplets and accumulates a
+//! worker-local gradient that is reduced at the end — matching the Pallas
+//! kernel's grid-accumulator structure exactly, which keeps
+//! native-vs-PJRT comparisons meaningful.
+//!
+//! Two interchangeable compute cores share that scaffold
+//! ([`KernelCore`]):
+//!
+//! - **Tiled** (the default): routes every FLOP through
+//!   [`crate::linalg::gemm`] — panel-tiled GEMM margins
+//!   ([`gemm::PANEL_ROWS`] rows per tile, `M` L2-resident, each streamed
+//!   `M` row reused across the whole panel from L1) and the
+//!   upper-triangle weighted SYRK (half the FLOPs of the rank-1
+//!   reference, mirrored once after the reduction).
+//! - **Scalar**: the original per-row matvec + full rank-1 update
+//!   reference, kept as the parity oracle
+//!   (`rust/tests/kernel_parity.rs`) and the perf baseline
+//!   (`benches/screening.rs` asserts the tiled core beats it).
+//!
+//! Worker scratch (the `M·x` lane, the panel `Y` tile, the per-panel α
+//! lane) comes from a reusable [`ScratchPool`] instead of per-call
+//! `vec![0.0; d]` allocations: after warm-up a kernel call allocates
+//! nothing but its output. Every lane taken here is fully overwritten
+//! before it is read (`matvec` fills `tmp`, `quad_forms_panel` zeroes
+//! its panel, `alpha[k]` is assigned before `wsyrk_upper` reads it), so
+//! the non-zeroing `take` is sound.
 
 use super::{Engine, StepOut};
-use crate::linalg::Mat;
+use crate::linalg::{gemm, Mat};
 use crate::loss::Loss;
 use crate::util::parallel;
+use crate::util::pool::ScratchPool;
+
+/// Which compute core a [`NativeEngine`] routes its kernels through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelCore {
+    /// per-row matvec margins + full rank-1 gradient updates (the
+    /// original scalar reference; parity oracle and perf baseline)
+    Scalar,
+    /// panel-tiled GEMM margins + upper-triangle weighted SYRK
+    /// (`linalg::gemm`)
+    Tiled,
+}
 
 /// Native engine; `threads = 0` means auto.
 pub struct NativeEngine {
     threads: usize,
+    core: KernelCore,
+    scratch: ScratchPool,
 }
 
 impl NativeEngine {
+    /// Default engine: tiled compute core.
     pub fn new(threads: usize) -> NativeEngine {
-        NativeEngine { threads }
+        NativeEngine::with_core(threads, KernelCore::Tiled)
+    }
+
+    /// The original scalar core — parity oracle and perf baseline.
+    pub fn scalar(threads: usize) -> NativeEngine {
+        NativeEngine::with_core(threads, KernelCore::Scalar)
+    }
+
+    pub fn with_core(threads: usize, core: KernelCore) -> NativeEngine {
+        NativeEngine {
+            threads,
+            core,
+            scratch: ScratchPool::default(),
+        }
+    }
+
+    pub fn core(&self) -> KernelCore {
+        self.core
     }
 
     fn workers(&self) -> usize {
@@ -48,7 +101,10 @@ fn row_quad(mat: &Mat, x: &[f64], tmp: &mut [f64]) -> f64 {
 
 impl Engine for NativeEngine {
     fn name(&self) -> &'static str {
-        "native"
+        match self.core {
+            KernelCore::Tiled => "native",
+            KernelCore::Scalar => "native-scalar",
+        }
     }
 
     fn margins(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64]) {
@@ -56,30 +112,49 @@ impl Engine for NativeEngine {
         debug_assert_eq!(a.cols(), d);
         debug_assert_eq!(a.rows(), out.len());
         debug_assert_eq!(b.rows(), out.len());
-        parallel::par_fill(out, self.workers(), |range, chunk| {
-            let mut tmp = vec![0.0; d];
-            for (k, t) in range.enumerate() {
-                chunk[k] = row_quad(mat, a.row(t), &mut tmp) - row_quad(mat, b.row(t), &mut tmp);
-            }
-        });
+        let workers = self.workers();
+        match self.core {
+            KernelCore::Scalar => parallel::par_fill(out, workers, |range, chunk| {
+                let mut tmp = self.scratch.take(d);
+                for (k, t) in range.enumerate() {
+                    chunk[k] =
+                        row_quad(mat, a.row(t), &mut tmp) - row_quad(mat, b.row(t), &mut tmp);
+                }
+                self.scratch.put(tmp);
+            }),
+            KernelCore::Tiled => parallel::par_fill(out, workers, |range, chunk| {
+                let mut y = self.scratch.take(gemm::PANEL_ROWS * d);
+                gemm::margins_into(mat, a, b, range, chunk, &mut y);
+                self.scratch.put(y);
+            }),
+        }
     }
 
     fn wgram(&self, a: &Mat, b: &Mat, w: &[f64]) -> Mat {
         let (n, d) = (a.rows(), a.cols());
         debug_assert_eq!(w.len(), n);
+        let core = self.core;
         let partials = parallel::par_ranges(n, self.workers(), |range| {
             let mut g = Mat::zeros(d, d);
-            for t in range {
-                let wt = w[t];
-                if wt == 0.0 {
-                    continue;
+            match core {
+                KernelCore::Tiled => {
+                    let w_chunk = &w[range.clone()];
+                    gemm::wsyrk_upper(&mut g, a, b, range, w_chunk);
                 }
-                let (ra, rb) = (a.row(t), b.row(t));
-                for i in 0..d {
-                    let (wai, wbi) = (wt * ra[i], wt * rb[i]);
-                    let grow = g.row_mut(i);
-                    for j in 0..d {
-                        grow[j] += wai * ra[j] - wbi * rb[j];
+                KernelCore::Scalar => {
+                    for t in range {
+                        let wt = w[t];
+                        if wt == 0.0 {
+                            continue;
+                        }
+                        let (ra, rb) = (a.row(t), b.row(t));
+                        for i in 0..d {
+                            let (wai, wbi) = (wt * ra[i], wt * rb[i]);
+                            let grow = g.row_mut(i);
+                            for j in 0..d {
+                                grow[j] += wai * ra[j] - wbi * rb[j];
+                            }
+                        }
                     }
                 }
             }
@@ -89,6 +164,15 @@ impl Engine for NativeEngine {
         for p in partials {
             g.axpy(1.0, &p);
         }
+        // Both cores emit an exactly-symmetric gram from the same upper
+        // triangle: the tiled core never computed the lower half, and
+        // the scalar core's lower half is overwritten by the mirror.
+        // The upper-triangle summands and the reduction order coincide,
+        // so the two cores' outputs are bitwise identical — which is
+        // what lets benches assert identical screening trajectories
+        // across cores. (The scalar core still pays its full-rank-1
+        // inner loop: the perf baseline is untouched.)
+        gemm::mirror_upper(&mut g);
         g
     }
 
@@ -107,7 +191,9 @@ impl Engine for NativeEngine {
         } else {
             Loss::hinge()
         };
-        // one fused pass per worker: margins, loss, alpha, local gram
+        let core = self.core;
+        // one fused pass per worker: margins, loss, alpha, local gram —
+        // the Pallas grid-accumulator structure, per compute core
         let ranges = parallel::split_ranges(n, self.workers());
         let results: Vec<(f64, Mat)> = std::thread::scope(|scope| {
             // split margins_out into per-range chunks
@@ -117,25 +203,50 @@ impl Engine for NativeEngine {
                 let (head, tail) = rest.split_at_mut(range.len());
                 rest = tail;
                 let range = range.clone();
+                let scratch = &self.scratch;
                 handles.push(scope.spawn(move || {
-                    let mut tmp = vec![0.0; d];
                     let mut g = Mat::zeros(d, d);
                     let mut lsum = 0.0;
-                    for (k, t) in range.enumerate() {
-                        let (ra, rb) = (a.row(t), b.row(t));
-                        let m =
-                            row_quad(mat, ra, &mut tmp) - row_quad(mat, rb, &mut tmp);
-                        head[k] = m;
-                        lsum += loss.value(m);
-                        let alpha = loss.alpha(m);
-                        if alpha != 0.0 {
-                            for i in 0..d {
-                                let (wai, wbi) = (alpha * ra[i], alpha * rb[i]);
-                                let grow = g.row_mut(i);
-                                for j in 0..d {
-                                    grow[j] += wai * ra[j] - wbi * rb[j];
+                    match core {
+                        KernelCore::Scalar => {
+                            let mut tmp = scratch.take(d);
+                            for (k, t) in range.enumerate() {
+                                let (ra, rb) = (a.row(t), b.row(t));
+                                let m = row_quad(mat, ra, &mut tmp)
+                                    - row_quad(mat, rb, &mut tmp);
+                                head[k] = m;
+                                lsum += loss.value(m);
+                                let alpha = loss.alpha(m);
+                                if alpha != 0.0 {
+                                    for i in 0..d {
+                                        let (wai, wbi) = (alpha * ra[i], alpha * rb[i]);
+                                        let grow = g.row_mut(i);
+                                        for j in 0..d {
+                                            grow[j] += wai * ra[j] - wbi * rb[j];
+                                        }
+                                    }
                                 }
                             }
+                            scratch.put(tmp);
+                        }
+                        KernelCore::Tiled => {
+                            let mut y = scratch.take(gemm::PANEL_ROWS * d);
+                            let mut alpha = scratch.take(gemm::PANEL_ROWS);
+                            let mut p0 = range.start;
+                            while p0 < range.end {
+                                let pr = gemm::PANEL_ROWS.min(range.end - p0);
+                                let off = p0 - range.start;
+                                let chunk = &mut head[off..off + pr];
+                                gemm::margins_into(mat, a, b, p0..p0 + pr, chunk, &mut y);
+                                for (k, &m) in chunk.iter().enumerate() {
+                                    lsum += loss.value(m);
+                                    alpha[k] = loss.alpha(m);
+                                }
+                                gemm::wsyrk_upper(&mut g, a, b, p0..p0 + pr, &alpha[..pr]);
+                                p0 += pr;
+                            }
+                            scratch.put(y);
+                            scratch.put(alpha);
                         }
                     }
                     (lsum, g)
@@ -149,6 +260,10 @@ impl Engine for NativeEngine {
             lsum += l;
             g.axpy(1.0, &p);
         }
+        // mirror for BOTH cores — see the wgram comment: bitwise-equal
+        // symmetric gradients keep the cores' solver trajectories
+        // identical without touching the scalar perf baseline
+        gemm::mirror_upper(&mut g);
         (lsum, g)
     }
 }
@@ -172,11 +287,13 @@ mod tests {
         forall("native-margins", 16, |rng| {
             let (n, d) = (1 + rng.below(200), 1 + rng.below(12));
             let (m, a, b) = rand_inputs(rng, n, d);
-            let mut out = vec![0.0; n];
-            NativeEngine::new(3).margins(&m, &a, &b, &mut out);
-            for t in 0..n {
-                let want = m.quad_form(a.row(t)) - m.quad_form(b.row(t));
-                close(out[t], want, 1e-12, 1e-12, "margin")?;
+            for engine in [NativeEngine::new(3), NativeEngine::scalar(3)] {
+                let mut out = vec![0.0; n];
+                engine.margins(&m, &a, &b, &mut out);
+                for t in 0..n {
+                    let want = m.quad_form(a.row(t)) - m.quad_form(b.row(t));
+                    close(out[t], want, 1e-12, 1e-12, engine.name())?;
+                }
             }
             Ok(())
         });
@@ -188,13 +305,16 @@ mod tests {
             let (n, d) = (1 + rng.below(100), 1 + rng.below(10));
             let (_, a, b) = rand_inputs(rng, n, d);
             let w: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
-            let g = NativeEngine::new(2).wgram(&a, &b, &w);
             let mut want = Mat::zeros(d, d);
             for t in 0..n {
                 want.axpy(w[t], &Mat::outer(a.row(t)));
                 want.axpy(-w[t], &Mat::outer(b.row(t)));
             }
-            close(g.sub(&want).max_abs(), 0.0, 0.0, 1e-10, "wgram")
+            for engine in [NativeEngine::new(2), NativeEngine::scalar(2)] {
+                let g = engine.wgram(&a, &b, &w);
+                close(g.sub(&want).max_abs(), 0.0, 0.0, 1e-10, engine.name())?;
+            }
+            Ok(())
         });
     }
 
@@ -205,19 +325,44 @@ mod tests {
             let (m, a, b) = rand_inputs(rng, n, d);
             let gamma = 0.05;
             let loss = Loss::smoothed_hinge(gamma);
-            let eng = NativeEngine::new(4);
-            let mut margins = vec![0.0; n];
-            let (lsum, g) = eng.step(&m, &a, &b, gamma, &mut margins);
-            let mut margins2 = vec![0.0; n];
-            eng.margins(&m, &a, &b, &mut margins2);
-            for t in 0..n {
-                close(margins[t], margins2[t], 1e-13, 1e-13, "m")?;
+            for eng in [NativeEngine::new(4), NativeEngine::scalar(4)] {
+                let mut margins = vec![0.0; n];
+                let (lsum, g) = eng.step(&m, &a, &b, gamma, &mut margins);
+                let mut margins2 = vec![0.0; n];
+                eng.margins(&m, &a, &b, &mut margins2);
+                for t in 0..n {
+                    close(margins[t], margins2[t], 1e-13, 1e-13, "m")?;
+                }
+                let want_l: f64 = margins2.iter().map(|&m| loss.value(m)).sum();
+                close(lsum, want_l, 1e-11, 1e-11, "loss")?;
+                let alpha: Vec<f64> = margins2.iter().map(|&m| loss.alpha(m)).collect();
+                let want_g = eng.wgram(&a, &b, &alpha);
+                close(g.sub(&want_g).max_abs(), 0.0, 0.0, 1e-10, "grad")?;
             }
-            let want_l: f64 = margins2.iter().map(|&m| loss.value(m)).sum();
-            close(lsum, want_l, 1e-11, 1e-11, "loss")?;
-            let alpha: Vec<f64> = margins2.iter().map(|&m| loss.alpha(m)).collect();
-            let want_g = eng.wgram(&a, &b, &alpha);
-            close(g.sub(&want_g).max_abs(), 0.0, 0.0, 1e-10, "grad")
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_matches_scalar_core() {
+        // cross-core parity on panel-straddling shapes (also covered at
+        // integration level by rust/tests/kernel_parity.rs)
+        forall("native-core-parity", 12, |rng| {
+            let n = 1 + rng.below(3 * gemm::PANEL_ROWS);
+            let d = 1 + rng.below(20);
+            let (m, a, b) = rand_inputs(rng, n, d);
+            let tiled = NativeEngine::new(2);
+            let scalar = NativeEngine::scalar(2);
+            let mut mt = vec![0.0; n];
+            let mut ms = vec![0.0; n];
+            let (lt, gt) = tiled.step(&m, &a, &b, 0.05, &mut mt);
+            let (ls, gs) = scalar.step(&m, &a, &b, 0.05, &mut ms);
+            close(lt, ls, 1e-10, 1e-10, "loss")?;
+            close(gt.sub(&gs).max_abs(), 0.0, 0.0, 1e-10, "grad")?;
+            for t in 0..n {
+                close(mt[t], ms[t], 1e-10, 1e-10, "margin")?;
+            }
+            Ok(())
         });
     }
 
@@ -225,25 +370,52 @@ mod tests {
     fn thread_count_invariance() {
         let mut rng = Pcg64::seed(5);
         let (m, a, b) = rand_inputs(&mut rng, 333, 7);
-        let mut o1 = vec![0.0; 333];
-        let mut o8 = vec![0.0; 333];
-        NativeEngine::new(1).margins(&m, &a, &b, &mut o1);
-        NativeEngine::new(8).margins(&m, &a, &b, &mut o8);
-        for t in 0..333 {
-            assert!((o1[t] - o8[t]).abs() < 1e-12);
+        for mk in [NativeEngine::new as fn(usize) -> NativeEngine, NativeEngine::scalar] {
+            let mut o1 = vec![0.0; 333];
+            let mut o8 = vec![0.0; 333];
+            mk(1).margins(&m, &a, &b, &mut o1);
+            mk(8).margins(&m, &a, &b, &mut o8);
+            for t in 0..333 {
+                assert!((o1[t] - o8[t]).abs() < 1e-12);
+            }
+            let w = vec![0.5; 333];
+            let g1 = mk(1).wgram(&a, &b, &w);
+            let g8 = mk(8).wgram(&a, &b, &w);
+            assert!(g1.sub(&g8).max_abs() < 1e-10);
         }
-        let g1 = NativeEngine::new(1).wgram(&a, &b, &vec![0.5; 333]);
-        let g8 = NativeEngine::new(8).wgram(&a, &b, &vec![0.5; 333]);
-        assert!(g1.sub(&g8).max_abs() < 1e-10);
     }
 
     #[test]
     fn hinge_step_gamma_zero() {
         let mut rng = Pcg64::seed(6);
         let (m, a, b) = rand_inputs(&mut rng, 64, 5);
-        let mut margins = vec![0.0; 64];
-        let (lsum, _) = NativeEngine::new(2).step(&m, &a, &b, 0.0, &mut margins);
-        let want: f64 = margins.iter().map(|&m| (1.0 - m).max(0.0)).sum();
-        assert!((lsum - want).abs() < 1e-10);
+        for eng in [NativeEngine::new(2), NativeEngine::scalar(2)] {
+            let mut margins = vec![0.0; 64];
+            let (lsum, _) = eng.step(&m, &a, &b, 0.0, &mut margins);
+            let want: f64 = margins.iter().map(|&m| (1.0 - m).max(0.0)).sum();
+            assert!((lsum - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn engine_scratch_is_recycled_across_calls() {
+        // after a first call warmed the pool, later calls reuse lanes
+        let eng = NativeEngine::new(2);
+        let mut rng = Pcg64::seed(9);
+        let (m, a, b) = rand_inputs(&mut rng, 100, 6);
+        let mut out = vec![0.0; 100];
+        eng.margins(&m, &a, &b, &mut out);
+        let warmed = eng.scratch.pooled();
+        assert!(warmed > 0, "no lanes returned to the pool");
+        eng.margins(&m, &a, &b, &mut out);
+        assert_eq!(eng.scratch.pooled(), warmed, "pool grew on a warm call");
+    }
+
+    #[test]
+    fn engine_names_distinguish_cores() {
+        assert_eq!(NativeEngine::new(1).name(), "native");
+        assert_eq!(NativeEngine::scalar(1).name(), "native-scalar");
+        assert_eq!(NativeEngine::new(1).core(), KernelCore::Tiled);
+        assert_eq!(NativeEngine::scalar(1).core(), KernelCore::Scalar);
     }
 }

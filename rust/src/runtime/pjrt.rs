@@ -12,6 +12,14 @@
 //! `wgram` artifact gets w = 0 padding, and padded `margins` outputs are
 //! simply dropped. All access is serialized through a mutex — PJRT-CPU
 //! parallelizes internally, and the coordinator's callers are sequential.
+//!
+//! Grid geometry: each dispatch covers a contiguous row block whose
+//! Pallas kernel internally tiles rows in the same
+//! [`crate::linalg::gemm::PANEL_ROWS`]-row panels the native tiled core
+//! uses, accumulating per-block partial gradients that this wrapper
+//! reduces (`g.axpy` per chunk) exactly like the native worker
+//! reduction — so native-vs-PJRT timings compare backends under one
+//! blocking scheme.
 
 use super::{Engine, StepOut};
 use crate::linalg::Mat;

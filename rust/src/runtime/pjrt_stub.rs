@@ -6,6 +6,12 @@
 //! site compiles unchanged: construction always fails with a descriptive
 //! error, and callers take their documented fallback path (tests skip,
 //! examples and binaries fall back to [`super::NativeEngine`]).
+//!
+//! Contract carried by the real engine (and honored by the native tiled
+//! core so comparisons stay meaningful): dispatches are row-blocked with
+//! per-block accumulators reduced at the end — the same grid-accumulator
+//! structure and row-tile geometry as the native panels
+//! ([`crate::linalg::gemm::PANEL_ROWS`] rows per tile).
 
 use super::{Engine, StepOut};
 use crate::linalg::Mat;

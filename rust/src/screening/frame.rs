@@ -229,6 +229,31 @@ impl ReferenceFrame {
         out_l: &mut Vec<usize>,
         out_r: &mut Vec<usize>,
     ) -> usize {
+        self.advance_filtered(lambda, Some(active), out_l, out_r)
+    }
+
+    /// Like [`Self::advance`] but emits **every** live certified id at
+    /// `lambda`, regardless of workset state. The persistent-problem
+    /// retarget ([`crate::solver::Problem::retarget_lambda`]) consumes
+    /// this as the λ's full coverage set: covered ids stay retired across
+    /// the λ crossing (their rows are never re-copied), everything else
+    /// is revived into the reduced problem.
+    pub fn advance_covered(
+        &self,
+        lambda: f64,
+        out_l: &mut Vec<usize>,
+        out_r: &mut Vec<usize>,
+    ) -> usize {
+        self.advance_filtered(lambda, None, out_l, out_r)
+    }
+
+    fn advance_filtered(
+        &self,
+        lambda: f64,
+        active: Option<&ActiveWorkset>,
+        out_l: &mut Vec<usize>,
+        out_r: &mut Vec<usize>,
+    ) -> usize {
         out_l.clear();
         out_r.clear();
         let mut sw = self.sweep.borrow_mut();
@@ -259,7 +284,7 @@ impl ReferenceFrame {
                 continue;
             }
             let id = c.id as usize;
-            if !active.is_active(id) {
+            if active.is_some_and(|ws| !ws.is_active(id)) {
                 continue;
             }
             match c.side {
@@ -496,6 +521,54 @@ mod tests {
             }
             for &t in &nr {
                 assert!(wr.contains(&t), "R coverage lost for t={t} at λ={lam}");
+            }
+        }
+    }
+
+    /// `advance_covered` must emit exactly the filtered sweep's ids plus
+    /// the retired ones — the coverage set the persistent problem keys
+    /// its stay-retired decisions on.
+    #[test]
+    fn advance_covered_supersets_filtered_sweep() {
+        let (store, m0, engine) = fixture();
+        let loss = Loss::smoothed_hinge(0.05);
+        let build = || {
+            ReferenceFrame::build(
+                m0.clone(),
+                3.0,
+                1e-3,
+                &store,
+                &engine,
+                Some((&loss, CertFamilies::rrpb_only())),
+            )
+        };
+        // two identical frames: each owns its own sweep cursor
+        let filtered = build();
+        let covered = build();
+        let mut ws = ActiveWorkset::full(&store);
+        for id in 0..store.len() / 3 {
+            ws.retire(id);
+        }
+        let (mut fl, mut fr) = (Vec::new(), Vec::new());
+        let (mut cl, mut cr) = (Vec::new(), Vec::new());
+        let mut lam = 3.0;
+        for _ in 0..12 {
+            lam *= 0.88;
+            let w1 = filtered.advance(lam, &ws, &mut fl, &mut fr);
+            let w2 = covered.advance_covered(lam, &mut cl, &mut cr);
+            assert_eq!(w1, w2, "sweep bookkeeping diverged at λ={lam}");
+            for &t in fl.iter() {
+                assert!(cl.contains(&t), "filtered L id {t} missing from coverage");
+            }
+            for &t in fr.iter() {
+                assert!(cr.contains(&t), "filtered R id {t} missing from coverage");
+            }
+            // everything extra in the coverage set is a retired id
+            for &t in cl.iter().chain(cr.iter()) {
+                assert!(
+                    ws.is_active(t) || t < store.len() / 3,
+                    "coverage emitted unexpected id {t}"
+                );
             }
         }
     }

@@ -27,6 +27,12 @@
 //! [`RULE_BLOCK`] triplets; per-triplet lanes (`hq`, `‖H‖`, `hp`, `hx0`)
 //! live in reusable scratch buffers, so a screening call allocates only
 //! the returned decision lists.
+//!
+//! Every margins pass a rule needs (GB/PGB/CDGB centers, the linear
+//! rule's support plane, SDLS anchors) goes through the same
+//! [`Engine`] the solver uses — i.e. the tiled GEMM core of
+//! `linalg::gemm` on the native engine — so screening and solving share
+//! one compute core and one tile geometry.
 
 use super::bounds::{self, Sphere};
 use super::frame::ReferenceFrame;

@@ -64,6 +64,9 @@ impl ActiveSetSolver {
         let mut inner_iters = 0usize;
         let mut cache: Option<WsCache> = None;
         let mut sel_ids: Vec<usize> = Vec::new();
+        // reusable inner-loop margins lane (resized per refresh, never
+        // reallocated while the selection size is stable)
+        let mut margins_w: Vec<f64> = Vec::new();
 
         'outer: for _round in 0..(self.cfg.max_iters / self.refresh_every.max(1) + 2) {
             // ---- full evaluation over all (unscreened) active triplets ----
@@ -148,8 +151,10 @@ impl ActiveSetSolver {
             let ws = cache.as_ref().expect("cache ensured above");
             let (a_w, b_w) = (&ws.a, &ws.b);
 
-            // ---- inner PGD on the working subproblem ----
-            let mut margins_w = vec![0.0; w_local.len()];
+            // ---- inner PGD on the working subproblem (margins through
+            //      the same tiled engine core as the full problem) ----
+            margins_w.clear();
+            margins_w.resize(w_local.len(), 0.0);
             let eval_w = |m: &Mat, margins_w: &mut Vec<f64>, timers: &mut PhaseTimers| -> Mat {
                 let (_, g) = timers
                     .compute

@@ -14,6 +14,26 @@
 //! Screening a triplet costs O(d) (workset swap-remove) plus the O(d²)
 //! rank-2 `H_L` update for L-side decisions — the old O(|T|·d) full
 //! recompaction per `apply_screening` call is gone.
+//!
+//! ## Persistent cross-λ lifecycle
+//!
+//! A `Problem` is no longer rebuilt per regularization-path step. The
+//! path driver constructs it once and crosses λ boundaries with
+//! [`Problem::retarget_lambda`], handing it the frame's certificate
+//! coverage at the new λ:
+//!
+//! - a screened triplet whose decision is **re-certified** at the new λ
+//!   stays retired — its rows are *never re-copied*;
+//! - a screened triplet **not** covered is revived (O(d) row append,
+//!   `H_L` rank-2 downdate for L-side) — these revives are the only row
+//!   copies the crossing performs, reported as
+//!   [`RetargetStats::rows_copied`] (a from-scratch rebuild costs |T|);
+//! - active triplets newly covered are retired exactly as a screening
+//!   decision would retire them.
+//!
+//! [`Problem::reset_for_lambda`] remains the certificate-free crossing
+//! (full fresh workset, all guarantees re-derived); `retarget_lambda`
+//! with empty coverage is its allocation-free equivalent.
 
 use crate::linalg::{psd_split, Mat, PsdSplit};
 use crate::loss::Loss;
@@ -33,6 +53,21 @@ pub struct EvalOut {
     pub margins: Vec<f64>,
 }
 
+/// Telemetry of one cross-λ retarget (see [`Problem::retarget_lambda`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RetargetStats {
+    /// rows copied back into the workset — revived triplets are the
+    /// *only* O(d) copies a retarget performs; a from-scratch rebuild
+    /// (`Problem::new` / `reset_for_lambda`) costs |T| of them
+    pub rows_copied: usize,
+    /// previously screened triplets whose decision was not re-certified
+    /// at the new λ and re-entered the reduced problem
+    pub revived: usize,
+    /// coverage decisions newly applied to triplets that were active
+    /// before the call
+    pub newly_screened: usize,
+}
+
 /// One RTLM problem: store + loss + λ + screening state.
 pub struct Problem<'a> {
     pub store: &'a TripletStore,
@@ -45,6 +80,9 @@ pub struct Problem<'a> {
     // ---- screened-L aggregates ----
     h_l: Mat,
     n_l: usize,
+    /// reusable per-id coverage marks for `retarget_lambda`
+    /// (0 = uncovered, 1 = L, 2 = R)
+    retarget_mark: Vec<u8>,
 }
 
 impl<'a> Problem<'a> {
@@ -59,6 +97,7 @@ impl<'a> Problem<'a> {
             workset: ActiveWorkset::full(store),
             h_l: Mat::zeros(store.d, store.d),
             n_l: 0,
+            retarget_mark: Vec::new(),
         }
     }
 
@@ -71,6 +110,73 @@ impl<'a> Problem<'a> {
         self.workset = ActiveWorkset::full(self.store);
         self.h_l = Mat::zeros(self.store.d, self.store.d);
         self.n_l = 0;
+    }
+
+    /// Cross a λ boundary **keeping the problem alive** (see the module
+    /// docs). `cover_l`/`cover_r` are the triplet ids whose membership is
+    /// certified at the *new* λ (the frame's certificate coverage,
+    /// [`crate::screening::ReferenceFrame::advance_covered`]); pass empty
+    /// slices when no certificates exist — every screened triplet is then
+    /// revived, which is the safe certificate-free semantics of
+    /// [`Self::reset_for_lambda`] without the O(|T|·d) rebuild.
+    ///
+    /// Invariants on return:
+    /// - a triplet is retired iff its side is in the coverage sets —
+    ///   decisions from the previous λ never leak into the new one;
+    /// - `H_L = Σ_{t ∈ L̂} H_t` over the new L̂ to f64 rounding (the
+    ///   rank-2 down- and up-dates are the exact mirror of
+    ///   `apply_screening`'s; interleaved cycles accumulate only
+    ///   a-few-ulps residue instead of being rebuilt);
+    /// - the reference-margin lane is dropped whenever a row was revived
+    ///   (the driver re-installs it for the new λ), so a misaligned lane
+    ///   can never feed a rule.
+    pub fn retarget_lambda(
+        &mut self,
+        lambda: f64,
+        cover_l: &[usize],
+        cover_r: &[usize],
+    ) -> RetargetStats {
+        assert!(lambda > 0.0, "lambda must be positive");
+        self.lambda = lambda;
+        let n = self.store.len();
+        self.retarget_mark.clear();
+        self.retarget_mark.resize(n, 0u8);
+        for &t in cover_l {
+            self.retarget_mark[t] = 1;
+        }
+        for &t in cover_r {
+            debug_assert_ne!(self.retarget_mark[t], 1, "id {t} certified both L and R");
+            self.retarget_mark[t] = 2;
+        }
+        let mut st = RetargetStats::default();
+        // 1. revive every screened triplet whose decision is not
+        //    re-certified at the new λ
+        for t in 0..n {
+            let was = self.status.get(t);
+            let keep = match was {
+                crate::triplet::TripletStatus::Active => continue,
+                crate::triplet::TripletStatus::ScreenedL => self.retarget_mark[t] == 1,
+                crate::triplet::TripletStatus::ScreenedR => self.retarget_mark[t] == 2,
+            };
+            if keep {
+                continue; // certificate-covered: stays retired, no copy
+            }
+            if was == crate::triplet::TripletStatus::ScreenedL {
+                // H_L -= H_t: downdate with the same rank-2 kernel the
+                // screen path uses, so the two stay bit-symmetric
+                self.h_l_rank2(t, -1.0);
+                self.n_l -= 1;
+            }
+            self.status.reactivate(t);
+            self.workset.revive(t, self.store);
+            st.rows_copied += 1;
+            st.revived += 1;
+        }
+        // 2. apply the coverage decisions: only newly active ids change
+        //    state (ids kept retired above are no-ops here)
+        let (nl, nr) = self.apply_screening(cover_l, cover_r);
+        st.newly_screened = nl + nr;
+        st
     }
 
     pub fn status(&self) -> &StatusVec {
@@ -148,15 +254,7 @@ impl<'a> Problem<'a> {
             if self.status.get(t) == crate::triplet::TripletStatus::Active {
                 self.status.screen_l(t);
                 self.workset.retire(t);
-                // H_L += H_t (rank-2 update)
-                let (ra, rb) = (self.store.a.row(t), self.store.b.row(t));
-                for i in 0..self.store.d {
-                    let (ai, bi) = (ra[i], rb[i]);
-                    let row = self.h_l.row_mut(i);
-                    for j in 0..self.store.d {
-                        row[j] += ai * ra[j] - bi * rb[j];
-                    }
-                }
+                self.h_l_rank2(t, 1.0); // H_L += H_t
                 self.n_l += 1;
                 applied_l += 1;
             }
@@ -172,6 +270,25 @@ impl<'a> Problem<'a> {
             }
         }
         (applied_l, applied_r)
+    }
+
+    /// `H_L += sign · H_t` — the rank-2 update shared by screening a
+    /// triplet into L̂ (`sign = 1`) and reviving it out (`sign = −1`).
+    /// One kernel for both directions keeps the up- and downdates exact
+    /// mirrors: IEEE negation is exact, so a revive applies the bitwise
+    /// negation of the screen's summands. A single uninterleaved
+    /// screen/revive pair cancels exactly; interleaved cycles leave the
+    /// usual a-few-ulps summation residue (well inside every tolerance
+    /// the oracle identities assert).
+    fn h_l_rank2(&mut self, t: usize, sign: f64) {
+        let (ra, rb) = (self.store.a.row(t), self.store.b.row(t));
+        for i in 0..self.store.d {
+            let (ai, bi) = (sign * ra[i], sign * rb[i]);
+            let row = self.h_l.row_mut(i);
+            for j in 0..self.store.d {
+                row[j] += ai * ra[j] - bi * rb[j];
+            }
+        }
     }
 
     /// Constant part of P̃ contributed by L̂: `(1 − γ/2)|L̂|`.
@@ -398,6 +515,107 @@ mod tests {
         prob.apply_screening(&[4, 9], &[17]);
         assert_eq!(prob.status().n_active(), store.len() - 3);
         prob.workset().assert_consistent(&store);
+    }
+
+    #[test]
+    fn retarget_keeps_covered_revives_the_rest() {
+        let (store, loss) = setup();
+        let mut prob = Problem::new(&store, loss, 5.0);
+        // λ=5 decisions: L = {0, 1}, R = {2, 3}
+        prob.apply_screening(&[0, 1], &[2, 3]);
+        let h_l_before = prob.h_l().clone();
+        assert_eq!(prob.workset().len(), store.len() - 4);
+
+        // new λ certifies only 1 (L) and 3 (R), plus fresh coverage of 6 (R)
+        let st = prob.retarget_lambda(4.0, &[1], &[3, 6]);
+        assert_eq!(prob.lambda, 4.0);
+        // 0 and 2 revived (2 copies); 6 newly screened
+        assert_eq!(st.revived, 2);
+        assert_eq!(st.rows_copied, 2);
+        assert_eq!(st.newly_screened, 1);
+        assert!(prob.workset().is_active(0));
+        assert!(prob.workset().is_active(2));
+        assert!(!prob.workset().is_active(1));
+        assert!(!prob.workset().is_active(3));
+        assert!(!prob.workset().is_active(6));
+        assert_eq!(prob.status().get(1), crate::triplet::TripletStatus::ScreenedL);
+        assert_eq!(prob.status().get(6), crate::triplet::TripletStatus::ScreenedR);
+        assert_eq!(prob.workset().len(), store.len() - 3);
+        prob.workset().assert_consistent(&store);
+
+        // H_L now covers exactly {1}: old H_L minus H_0
+        let mut want = h_l_before;
+        want.axpy(-1.0, &Mat::outer(store.a.row(0)));
+        want.axpy(1.0, &Mat::outer(store.b.row(0)));
+        assert!(prob.h_l().sub(&want).max_abs() < 1e-12);
+        assert_eq!(prob.n_screened_l(), 1);
+    }
+
+    #[test]
+    fn retarget_empty_coverage_equals_reset() {
+        let (store, loss) = setup();
+        let mut prob = Problem::new(&store, loss, 5.0);
+        prob.apply_screening(&[0, 4, 7], &[2, 9]);
+        let st = prob.retarget_lambda(3.0, &[], &[]);
+        assert_eq!(st.revived, 5);
+        assert_eq!(st.rows_copied, 5);
+        assert_eq!(st.newly_screened, 0);
+        assert_eq!(prob.workset().len(), store.len());
+        assert_eq!(prob.status().n_active(), store.len());
+        // interleaved multi-triplet accumulation leaves at most a few
+        // ulps of rounding residue in H_L (only a single uninterleaved
+        // screen/revive pair cancels bitwise)
+        assert!(prob.h_l().max_abs() < 1e-12);
+        prob.workset().assert_consistent(&store);
+    }
+
+    #[test]
+    fn retarget_side_flip_revives_then_retires() {
+        // a triplet screened L at the old λ but certified R at the new λ
+        // must take the revive → retire path, not corrupt H_L
+        let (store, loss) = setup();
+        let mut prob = Problem::new(&store, loss, 5.0);
+        prob.apply_screening(&[0], &[]);
+        let st = prob.retarget_lambda(4.0, &[], &[0]);
+        assert_eq!(st.revived, 1);
+        assert_eq!(st.newly_screened, 1);
+        assert_eq!(prob.status().get(0), crate::triplet::TripletStatus::ScreenedR);
+        assert_eq!(prob.n_screened_l(), 0);
+        assert_eq!(prob.h_l().max_abs(), 0.0);
+        prob.workset().assert_consistent(&store);
+    }
+
+    #[test]
+    fn retarget_eval_matches_fresh_problem() {
+        // the persistent problem after several crossings must evaluate
+        // bit-for-tolerance identically to a fresh problem with the same
+        // screened sets
+        let (store, loss) = setup();
+        let engine = NativeEngine::new(2);
+        let mut rng = Pcg64::seed(17);
+        let mut b = Mat::from_fn(4, 4, |_, _| rng.normal());
+        b = b.matmul(&b.transpose()).scaled(0.02);
+
+        let mut persistent = Problem::new(&store, loss, 6.0);
+        persistent.apply_screening(&[0, 1, 2], &[5, 6]);
+        persistent.retarget_lambda(5.0, &[1, 2], &[6, 8]);
+        persistent.retarget_lambda(4.5, &[2], &[8]);
+
+        let mut fresh = Problem::new(&store, loss, 4.5);
+        fresh.apply_screening(&[2], &[8]);
+
+        let mut timers = PhaseTimers::default();
+        let p_out = persistent.eval(&b, &engine, &mut timers);
+        let f_out = fresh.eval(&b, &engine, &mut timers);
+        assert!(
+            (p_out.p - f_out.p).abs() < 1e-10 * (1.0 + f_out.p.abs()),
+            "persistent P̃ {} vs fresh {}",
+            p_out.p,
+            f_out.p
+        );
+        assert!(p_out.k.sub(&f_out.k).max_abs() < 1e-10);
+        assert_eq!(persistent.workset().len(), fresh.workset().len());
+        persistent.workset().assert_consistent(&store);
     }
 
     #[test]

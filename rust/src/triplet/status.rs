@@ -102,6 +102,26 @@ impl StatusVec {
         }
     }
 
+    /// Return a screened triplet to Active. The persistent-problem
+    /// retarget path: a decision certified at a previous λ does not carry
+    /// to the new λ unless a certificate covers it, so the triplet
+    /// re-enters the reduced problem. No-op on active triplets.
+    pub fn reactivate(&mut self, t: usize) {
+        match self.status[t] {
+            TripletStatus::Active => {}
+            TripletStatus::ScreenedL => {
+                self.status[t] = TripletStatus::Active;
+                self.n_l -= 1;
+                self.version += 1;
+            }
+            TripletStatus::ScreenedR => {
+                self.status[t] = TripletStatus::Active;
+                self.n_r -= 1;
+                self.version += 1;
+            }
+        }
+    }
+
     /// Reset every triplet to Active (new λ without warm screening carry).
     pub fn reset(&mut self) {
         self.status.fill(TripletStatus::Active);
@@ -179,5 +199,23 @@ mod tests {
         s.screen_r(0);
         s.reset();
         assert_eq!(s.n_active(), 3);
+    }
+
+    #[test]
+    fn reactivate_reverses_both_sides() {
+        let mut s = StatusVec::new(4);
+        s.screen_l(0);
+        s.screen_r(1);
+        s.reactivate(0);
+        s.reactivate(1);
+        assert_eq!(s.n_active(), 4);
+        assert_eq!(s.get(0), TripletStatus::Active);
+        assert_eq!(s.get(1), TripletStatus::Active);
+        // no-op on an active triplet, and re-screening works after
+        let v = s.version();
+        s.reactivate(2);
+        assert_eq!(s.version(), v);
+        s.screen_r(0); // L→R across a reactivation is legal (new λ)
+        assert_eq!(s.n_screened_r(), 1);
     }
 }

@@ -118,6 +118,28 @@ impl ActiveWorkset {
         true
     }
 
+    /// Re-admit a retired `id` (O(d) row append from the backing store) —
+    /// the persistent-problem primitive: a triplet screened at a previous
+    /// λ whose certificate does not cover the new λ must rejoin the
+    /// reduced problem. Appends to the end of every lane; the
+    /// reference-margin lane is dropped (the path driver re-installs it
+    /// for the new λ *after* retargeting, so a stale or misaligned lane
+    /// can never feed a screening rule). Returns false when `id` is
+    /// already active.
+    pub fn revive(&mut self, id: usize, store: &TripletStore) -> bool {
+        if self.row_of[id] != RETIRED {
+            return false;
+        }
+        let row = self.ids.len();
+        self.ids.push(id);
+        self.row_of[id] = row as u32;
+        self.a.push_row(store.a.row(id));
+        self.b.push_row(store.b.row(id));
+        self.h_norm.push(store.h_norm[id]);
+        self.ref_margin = None;
+        true
+    }
+
     /// Install the reference-margin lane from an id-indexed full vector
     /// (`full[t] = ⟨H_t, M₀⟩` for every triplet of the store), tagged with
     /// the identity of the reference frame it was gathered from (the path
@@ -241,6 +263,48 @@ mod tests {
             assert!(ws.retire(id));
         }
         assert!(ws.is_empty());
+        ws.assert_consistent(&st);
+    }
+
+    #[test]
+    fn revive_restores_lanes_and_mapping() {
+        let st = store();
+        let mut ws = ActiveWorkset::full(&st);
+        let n = st.len();
+        for id in [0usize, 5, 9, n - 1] {
+            assert!(ws.retire(id));
+        }
+        assert_eq!(ws.len(), n - 4);
+        // revive two of them; rows land at the end, lanes copied back
+        assert!(ws.revive(5, &st));
+        assert!(ws.revive(n - 1, &st));
+        assert_eq!(ws.len(), n - 2);
+        assert!(ws.is_active(5));
+        assert_eq!(ws.row_of(5), Some(n - 4));
+        assert_eq!(ws.a().row(n - 4), st.a.row(5));
+        assert_eq!(ws.b().row(n - 3), st.b.row(n - 1));
+        // revive on an active id is a no-op
+        assert!(!ws.revive(5, &st));
+        assert_eq!(ws.len(), n - 2);
+        ws.assert_consistent(&st);
+        // retire a revived id again: the full cycle stays consistent
+        assert!(ws.retire(5));
+        ws.assert_consistent(&st);
+    }
+
+    #[test]
+    fn revive_drops_stale_ref_margin_lane() {
+        let st = store();
+        let mut ws = ActiveWorkset::full(&st);
+        let lane: Vec<f64> = (0..st.len()).map(|t| t as f64).collect();
+        ws.install_ref_margins(&lane, 1);
+        ws.retire(3);
+        assert!(ws.ref_margins(1).is_some());
+        ws.revive(3, &st);
+        assert!(
+            ws.ref_margins_any().is_none(),
+            "misaligned lane survived a revive"
+        );
         ws.assert_consistent(&st);
     }
 }

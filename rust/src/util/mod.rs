@@ -10,6 +10,7 @@ pub mod cli;
 pub mod config;
 pub mod json;
 pub mod parallel;
+pub mod pool;
 pub mod quickcheck;
 pub mod rng;
 pub mod timer;

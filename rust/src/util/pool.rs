@@ -1,0 +1,127 @@
+//! Reusable f64 scratch-lane pool.
+//!
+//! Hot kernels (`runtime::NativeEngine` workers) and the eigensolver
+//! (`linalg::sym_eig`) need short-lived f64 lanes every call; pooling
+//! them means the steady state allocates nothing. One implementation
+//! serves both the per-engine pool and the process-global eig-workspace
+//! static (`new` is `const`).
+//!
+//! Discipline: `take(len)` hands out a lane of exactly `len` with
+//! *unspecified* contents (recycled data or zeros) for consumers that
+//! fully overwrite before reading — the hot kernels, whose per-call
+//! memset this avoids; `take_zeroed(len)` adds the zero guarantee for
+//! consumers that read before writing every slot. `put` returns the
+//! lane. The pool is LIFO and capped — it can never hold more lanes
+//! than a few full worker complements, so a burst of takers degrades to
+//! plain allocation instead of unbounded growth.
+
+use std::sync::Mutex;
+
+/// Capped LIFO pool of reusable `Vec<f64>` lanes.
+pub struct ScratchPool {
+    bufs: Mutex<Vec<Vec<f64>>>,
+    cap: usize,
+}
+
+impl ScratchPool {
+    /// Pool retaining at most `cap` lanes (const: usable in statics).
+    pub const fn new(cap: usize) -> ScratchPool {
+        ScratchPool {
+            bufs: Mutex::new(Vec::new()),
+            cap,
+        }
+    }
+
+    /// A lane of length `len` with unspecified contents (recycled data
+    /// in the prefix, zeros in any extension) — for consumers that
+    /// fully overwrite before reading. No O(len) memset on the hot
+    /// path.
+    pub fn take(&self, len: usize) -> Vec<f64> {
+        let mut v = self
+            .bufs
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_default();
+        v.truncate(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// A zeroed lane of length `len` — for consumers that may read a
+    /// slot before writing it.
+    pub fn take_zeroed(&self, len: usize) -> Vec<f64> {
+        let mut v = self.take(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// Return a lane to the pool (dropped when the pool is full).
+    pub fn put(&self, v: Vec<f64>) {
+        let mut pool = self.bufs.lock().expect("scratch pool poisoned");
+        if pool.len() < self.cap {
+            pool.push(v);
+        }
+    }
+
+    /// Lanes currently held (introspection for tests/diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.bufs.lock().expect("scratch pool poisoned").len()
+    }
+}
+
+impl Default for ScratchPool {
+    /// Default cap covers a few complements of the ≤16 parallel workers.
+    fn default() -> Self {
+        ScratchPool::new(64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_lanes() {
+        let pool = ScratchPool::default();
+        let mut v = pool.take(8);
+        v[3] = 5.0;
+        pool.put(v);
+        let v2 = pool.take(16);
+        assert_eq!(v2.len(), 16);
+        // extension beyond the recycled capacity is zeroed
+        assert!(v2[8..].iter().all(|&x| x == 0.0));
+        pool.put(v2);
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn take_zeroed_clears_recycled_data() {
+        let pool = ScratchPool::default();
+        let mut v = pool.take(8);
+        v.fill(7.0);
+        pool.put(v);
+        let v2 = pool.take_zeroed(4);
+        assert_eq!(v2.len(), 4);
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled lane not zeroed");
+    }
+
+    #[test]
+    fn cap_bounds_growth() {
+        let pool = ScratchPool::new(3);
+        let lanes: Vec<_> = (0..8).map(|_| pool.take(4)).collect();
+        for v in lanes {
+            pool.put(v);
+        }
+        assert!(pool.pooled() <= 3);
+    }
+
+    #[test]
+    fn const_constructor_works_in_static() {
+        static S: ScratchPool = ScratchPool::new(2);
+        let v = S.take(5);
+        assert_eq!(v.len(), 5);
+        S.put(v);
+        assert_eq!(S.pooled(), 1);
+    }
+}

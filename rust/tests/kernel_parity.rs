@@ -1,0 +1,187 @@
+//! Tiled-vs-scalar compute-core parity battery.
+//!
+//! The panel-tiled GEMM/SYRK core (`linalg::gemm`, routed through
+//! `NativeEngine`'s default `KernelCore::Tiled`) must reproduce the
+//! scalar reference core to f64 round-off (tolerance 1e-10) on arbitrary
+//! shapes — including row counts and dimensions that are **not**
+//! multiples of the panel size — and `Engine::step` must agree across
+//! engines (native vs. the PJRT build when its artifacts are present;
+//! the offline stub cannot be constructed and the cross-engine case then
+//! skips with a message, same protocol as `rust/tests/runtime_pjrt.rs`).
+
+use triplet_screen::linalg::{gemm, Mat};
+use triplet_screen::loss::Loss;
+use triplet_screen::prelude::*;
+use triplet_screen::runtime::{Engine, KernelCore};
+use triplet_screen::util::quickcheck::{close, forall};
+
+const TOL: f64 = 1e-10;
+
+fn rand_inputs(rng: &mut Pcg64, n: usize, d: usize) -> (Mat, Mat, Mat, Vec<f64>) {
+    let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+    m.symmetrize();
+    let a = Mat::from_fn(n, d, |_, _| rng.normal());
+    let b = Mat::from_fn(n, d, |_, _| rng.normal());
+    let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    (m, a, b, w)
+}
+
+#[test]
+fn margins_parity_random_shapes() {
+    forall("parity-margins", 32, |rng| {
+        let d = 1 + rng.below(48);
+        let n = 1 + rng.below(4 * gemm::PANEL_ROWS + 3);
+        let (m, a, b, _) = rand_inputs(rng, n, d);
+        let tiled = NativeEngine::new(1 + rng.below(4));
+        let scalar = NativeEngine::scalar(1 + rng.below(4));
+        let mut ot = vec![0.0; n];
+        let mut os = vec![0.0; n];
+        tiled.margins(&m, &a, &b, &mut ot);
+        scalar.margins(&m, &a, &b, &mut os);
+        for t in 0..n {
+            close(ot[t], os[t], TOL, TOL, "margin")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wgram_parity_random_shapes() {
+    forall("parity-wgram", 32, |rng| {
+        let d = 1 + rng.below(32);
+        let n = 1 + rng.below(300);
+        let (_, a, b, w) = rand_inputs(rng, n, d);
+        let gt = NativeEngine::new(1 + rng.below(4)).wgram(&a, &b, &w);
+        let gs = NativeEngine::scalar(1 + rng.below(4)).wgram(&a, &b, &w);
+        // the SYRK result must be exactly symmetric by construction
+        for i in 0..d {
+            for j in 0..d {
+                if gt[(i, j)] != gt[(j, i)] {
+                    return Err(format!("tiled wgram asymmetric at ({i},{j})"));
+                }
+            }
+        }
+        close(gt.sub(&gs).max_abs(), 0.0, 0.0, TOL, "wgram")
+    });
+}
+
+#[test]
+fn step_parity_random_shapes() {
+    forall("parity-step", 24, |rng| {
+        let d = 1 + rng.below(24);
+        let n = 1 + rng.below(4 * gemm::PANEL_ROWS + 3);
+        let (m, a, b, _) = rand_inputs(rng, n, d);
+        // both loss branches: smoothed hinge and plain hinge (γ = 0)
+        let gamma = if rng.below(3) == 0 { 0.0 } else { 0.05 };
+        let tiled = NativeEngine::new(2);
+        let scalar = NativeEngine::scalar(2);
+        let mut mt = vec![0.0; n];
+        let mut ms = vec![0.0; n];
+        let (lt, gt) = tiled.step(&m, &a, &b, gamma, &mut mt);
+        let (ls, gs) = scalar.step(&m, &a, &b, gamma, &mut ms);
+        close(lt, ls, TOL, TOL, "loss sum")?;
+        close(gt.sub(&gs).max_abs(), 0.0, 0.0, TOL, "gradient")?;
+        for t in 0..n {
+            close(mt[t], ms[t], TOL, TOL, "margin")?;
+        }
+        Ok(())
+    });
+}
+
+/// Explicit panel-boundary shapes: below, at, and just past every tile
+/// edge — the off-by-one surface of the blocked kernels.
+#[test]
+fn panel_boundary_shapes_exact() {
+    let p = gemm::PANEL_ROWS;
+    let mut rng = Pcg64::seed(99);
+    for &n in &[1usize, 2, p - 1, p, p + 1, 2 * p - 1, 2 * p, 2 * p + 1, 3 * p + 7] {
+        for &d in &[1usize, 2, 3, 19] {
+            let (m, a, b, w) = rand_inputs(&mut rng, n, d);
+            let tiled = NativeEngine::new(3);
+            let scalar = NativeEngine::scalar(3);
+            let mut ot = vec![0.0; n];
+            let mut os = vec![0.0; n];
+            tiled.margins(&m, &a, &b, &mut ot);
+            scalar.margins(&m, &a, &b, &mut os);
+            for t in 0..n {
+                assert!(
+                    (ot[t] - os[t]).abs() <= TOL * (1.0 + os[t].abs()),
+                    "n={n} d={d} t={t}: tiled {} vs scalar {}",
+                    ot[t],
+                    os[t]
+                );
+            }
+            let gt = tiled.wgram(&a, &b, &w);
+            let gs = scalar.wgram(&a, &b, &w);
+            assert!(
+                gt.sub(&gs).max_abs() <= TOL * (1.0 + gs.max_abs()),
+                "n={n} d={d}: wgram cores diverge by {}",
+                gt.sub(&gs).max_abs()
+            );
+        }
+    }
+}
+
+/// The tiled core must leave solver results unchanged: one full solve
+/// per core, same optimum.
+#[test]
+fn solver_end_to_end_core_parity() {
+    use triplet_screen::solver::{Problem, Solver, SolverConfig};
+    let mut rng = Pcg64::seed(7);
+    let ds = synthetic::gaussian_mixture("g", 40, 4, 2, 2.6, &mut rng);
+    let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+    let loss = Loss::smoothed_hinge(0.05);
+    let tiled = NativeEngine::new(2);
+    let scalar = NativeEngine::scalar(2);
+    let lmax_t = Problem::lambda_max(&store, &loss, &tiled);
+    let lmax_s = Problem::lambda_max(&store, &loss, &scalar);
+    assert!((lmax_t - lmax_s).abs() <= 1e-10 * (1.0 + lmax_s.abs()));
+    let cfg = SolverConfig {
+        tol: 1e-10,
+        tol_relative: false,
+        ..Default::default()
+    };
+    let mut pt = Problem::new(&store, loss, lmax_t * 0.2);
+    let (mt, st) = Solver::new(cfg.clone()).solve(&mut pt, &tiled, Mat::zeros(4, 4), None);
+    let mut ps = Problem::new(&store, loss, lmax_s * 0.2);
+    let (ms, ss) = Solver::new(cfg).solve(&mut ps, &scalar, Mat::zeros(4, 4), None);
+    assert!(st.converged && ss.converged);
+    let diff = mt.sub(&ms).max_abs();
+    assert!(
+        diff < 1e-6 * (1.0 + ms.max_abs()),
+        "cores converge to different optima: {diff}"
+    );
+}
+
+/// Cross-engine `Engine::step` parity: native (tiled) vs the PJRT
+/// engine. The offline stub's constructors fail by design, in which case
+/// this skips loudly — on a real `--features pjrt` + artifacts build it
+/// enforces 1e-10 agreement.
+#[test]
+fn step_cross_engine_native_vs_pjrt() {
+    let Ok(pjrt) = PjrtEngine::from_default_dir() else {
+        eprintln!(
+            "SKIP kernel_parity cross-engine step: PJRT unavailable \
+             (offline stub or missing artifacts; run `make artifacts` with `--features pjrt`)"
+        );
+        return;
+    };
+    let native = NativeEngine::new(0);
+    assert_eq!(native.core(), KernelCore::Tiled);
+    let mut rng = Pcg64::seed(11);
+    for (n, d) in [(257usize, 4usize), (8192, 19)] {
+        if !pjrt.supports_dim(d) {
+            continue;
+        }
+        let (m, a, b, _) = rand_inputs(&mut rng, n, d);
+        let mut mn = vec![0.0; n];
+        let mut mp = vec![0.0; n];
+        let (ln, gn) = native.step(&m, &a, &b, 0.05, &mut mn);
+        let (lp, gp) = pjrt.step(&m, &a, &b, 0.05, &mut mp);
+        assert!((ln - lp).abs() <= TOL * (1.0 + ln.abs()), "loss: {ln} vs {lp}");
+        assert!(gn.sub(&gp).max_abs() <= TOL * (1.0 + gn.max_abs()));
+        for t in 0..n {
+            assert!((mn[t] - mp[t]).abs() <= TOL * (1.0 + mn[t].abs()));
+        }
+    }
+}
