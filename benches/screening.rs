@@ -13,6 +13,11 @@
 //! run **asserts** the tiled core beats the scalar baseline while
 //! leaving screening behavior untouched (identical rule-eval counts).
 //!
+//! PR 4 adds the streamed-mining telemetry (`stream_*` fields: candidates
+//! mined, rejected at admission, peak workset rows — schema in
+//! `rust/docs/BENCH_SCHEMA.md`) and asserts the streamed path matches the
+//! materialized optima while its workset peaks strictly below |T|.
+//!
 //! Run: `cargo bench --bench screening` (add `-- --quick` for short runs).
 
 use triplet_screen::linalg::{gemm, Mat};
@@ -204,6 +209,13 @@ fn main() {
         ..Default::default()
     };
     let naive = RegPath::new(naive_cfg.clone()).run(&store, &engine);
+    // streamed source (PR 4): exhaustive mining + screen-on-admission
+    // over the SAME candidate universe — candidates provably inactive at
+    // the current λ are rejected before a single row is copied, so the
+    // workset must peak strictly below |T|
+    let mut miner = TripletMiner::new(&ds, 5, MiningStrategy::Exhaustive, 4096);
+    let streamed =
+        RegPath::new(mk_cfg(true, true)).run_source(TripletSource::Streamed(&mut miner), &engine);
     // screening-off path on the scalar core: the kernel-time comparison
     // runs over the FULL workset every step (milliseconds of kernel
     // time per step), so the tiled-vs-scalar gate below measures the
@@ -270,6 +282,20 @@ fn main() {
     // former rebuild-from-scratch pipeline (|T| rows per λ step)
     let rebuild_rows: usize = res.steps.iter().map(|s| s.rebuild_rows_copied).sum();
     let rebuild_from_scratch = store.len() * res.steps.len();
+    // streamed-admission telemetry (PR 4)
+    let stream = streamed.stream.clone().expect("streamed run records a summary");
+    let stream_stats = streamed.screening_stats.clone().unwrap_or_default();
+    let stream_admitted_per_step: Vec<Json> = streamed
+        .steps
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("lambda", Json::Num(s.lambda)),
+                ("admitted", Json::Num(s.admitted as f64)),
+                ("workset_rows", Json::Num(s.workset_rows as f64)),
+            ])
+        })
+        .collect();
     let doc = Json::obj(vec![
         ("bench", Json::Str("screening-path".into())),
         ("dataset", Json::Str("segment-small".into())),
@@ -296,6 +322,35 @@ fn main() {
         ("total_wall_seconds", Json::Num(res.total_wall)),
         ("pr1_wall_seconds", Json::Num(pr1.total_wall)),
         ("naive_wall_seconds", Json::Num(naive.total_wall)),
+        ("stream_candidate_universe", Json::Num(stream.candidates as f64)),
+        (
+            "stream_candidates_mined",
+            Json::Num(stream_stats.adm_candidates as f64),
+        ),
+        (
+            "stream_rejected_at_admission_l",
+            Json::Num(stream_stats.adm_rejected_l as f64),
+        ),
+        (
+            "stream_rejected_at_admission_r",
+            Json::Num(stream_stats.adm_rejected_r as f64),
+        ),
+        (
+            "stream_admitted_rows",
+            Json::Num(stream.admitted_rows as f64),
+        ),
+        (
+            "stream_peak_workset_rows",
+            Json::Num(stream.peak_workset_rows as f64),
+        ),
+        ("stream_pending_end", Json::Num(stream.pending_end as f64)),
+        (
+            "stream_external_l_end",
+            Json::Num(stream.external_l_end as f64),
+        ),
+        ("stream_rule_evals", Json::Num(stream_stats.rule_evals as f64)),
+        ("stream_wall_seconds", Json::Num(streamed.total_wall)),
+        ("stream_steps", Json::Arr(stream_admitted_per_step)),
         ("steps", Json::Arr(steps_json)),
     ]);
     println!("\nscreening-path telemetry (JSON):");
@@ -359,5 +414,40 @@ fn main() {
         rebuild_rows < rebuild_from_scratch,
         "persistent-problem regression: {rebuild_rows} rows copied >= \
          rebuild-from-scratch floor {rebuild_from_scratch}"
+    );
+    // ---- PR 4 acceptance: streaming admission bounds memory ----
+    // the streamed path solves the same problem ...
+    assert_eq!(
+        streamed.steps.len(),
+        res.steps.len(),
+        "streamed path walked a different λ grid"
+    );
+    for (a, b) in streamed.steps.iter().zip(&res.steps) {
+        assert!(
+            (a.p - b.p).abs() < 1e-4 * (1.0 + b.p.abs()),
+            "streamed path drifted from materialized at λ={}",
+            b.lambda
+        );
+    }
+    // ... every candidate is either an admitted row or a row-less
+    // pending certificate ...
+    assert_eq!(stream.candidates, store.len());
+    assert_eq!(
+        stream.admitted_rows + stream.pending_end,
+        stream.candidates,
+        "candidate conservation violated"
+    );
+    // ... the admission screen rejected candidates without allocation ...
+    assert!(
+        stream_stats.adm_rejected() > 0,
+        "no admission-time rejection over the whole path"
+    );
+    // ... and the workset peaked STRICTLY below |T|: screening bounded
+    // memory, not just compute
+    assert!(
+        stream.peak_workset_rows < store.len(),
+        "streamed workset peaked at {} rows >= |T| = {}",
+        stream.peak_workset_rows,
+        store.len()
     );
 }

@@ -7,13 +7,18 @@ use crate::util::rng::Pcg64;
 /// contiguous class ids `0..n_classes`.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// dataset name (reporting)
     pub name: String,
+    /// `n × d` feature matrix, rows are instances
     pub x: Mat,
+    /// contiguous class ids, aligned with the rows of `x`
     pub y: Vec<usize>,
+    /// number of class ids (`max(y) + 1`)
     pub n_classes: usize,
 }
 
 impl Dataset {
+    /// Wrap features + labels (labels must be contiguous class ids).
     pub fn new(name: impl Into<String>, x: Mat, y: Vec<usize>) -> Dataset {
         assert_eq!(x.rows(), y.len(), "feature/label length mismatch");
         let n_classes = y.iter().copied().max().map_or(0, |m| m + 1);
@@ -25,10 +30,12 @@ impl Dataset {
         }
     }
 
+    /// Number of instances.
     pub fn n(&self) -> usize {
         self.x.rows()
     }
 
+    /// Feature dimension.
     pub fn d(&self) -> usize {
         self.x.cols()
     }

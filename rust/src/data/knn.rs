@@ -165,6 +165,87 @@ mod tests {
     }
 
     #[test]
+    fn singleton_class_has_no_same_neighbors() {
+        // one lone instance of class 1: its same-class list must be
+        // empty (not panic), and it still has different-class neighbors —
+        // the miner then simply generates zero triplets for that anchor
+        let x = Mat::from_rows(4, 1, vec![0.0, 1.0, 2.0, 10.0]);
+        let ds = Dataset::new("singleton", x, vec![0, 0, 0, 1]);
+        let (same, diff) = neighbors(&ds, 3);
+        assert!(same[3].is_empty());
+        assert_eq!(diff[3].len(), 3);
+        assert_eq!(same[0].len(), 2);
+        assert_eq!(diff[0], vec![3]);
+    }
+
+    #[test]
+    fn single_class_dataset_has_no_diff_neighbors() {
+        // all instances share one class: every diff list is empty and
+        // the triplet universe is empty — neighbors must stay well-defined
+        let x = Mat::from_rows(3, 2, vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+        let ds = Dataset::new("mono", x, vec![0, 0, 0]);
+        let (same, diff) = neighbors(&ds, 5);
+        for i in 0..3 {
+            assert!(diff[i].is_empty(), "anchor {i} found a diff neighbor");
+            assert_eq!(same[i].len(), 2);
+        }
+    }
+
+    #[test]
+    fn empty_class_id_is_tolerated() {
+        // labels {0, 2}: class 1 exists in the id space but has no
+        // instances — neighbor queries and class counts must not panic
+        let x = Mat::from_rows(4, 1, vec![0.0, 1.0, 5.0, 6.0]);
+        let ds = Dataset::new("gap", x, vec![0, 0, 2, 2]);
+        assert_eq!(ds.n_classes, 3);
+        assert_eq!(ds.class_counts(), vec![2, 0, 2]);
+        let (same, diff) = neighbors(&ds, 2);
+        assert_eq!(same[0], vec![1]);
+        assert_eq!(diff[0], vec![2, 3]);
+        // classification against a vote table spanning the empty class
+        let pred = knn_classify(&ds, &ds, 1, &Mat::identity(1));
+        assert_eq!(pred, ds.y);
+    }
+
+    #[test]
+    fn duplicate_points_tie_safely() {
+        // exact duplicates produce zero distances and ties: selection
+        // must not panic, lists have the right lengths, and every
+        // returned neighbor has the required class relation
+        let x = Mat::from_rows(6, 1, vec![1.0, 1.0, 1.0, 4.0, 4.0, 4.0]);
+        let ds = Dataset::new("dups", x, vec![0, 0, 0, 1, 1, 1]);
+        let (same, diff) = neighbors(&ds, 2);
+        for i in 0..6 {
+            assert_eq!(same[i].len(), 2, "anchor {i}");
+            assert_eq!(diff[i].len(), 2, "anchor {i}");
+            for &j in &same[i] {
+                assert_ne!(j, i);
+                assert_eq!(ds.y[j], ds.y[i]);
+            }
+            for &l in &diff[i] {
+                assert_ne!(ds.y[l], ds.y[i]);
+            }
+        }
+        // duplicates of the anchor are its nearest same-class neighbors
+        let mut s0 = same[0].clone();
+        s0.sort_unstable();
+        assert_eq!(s0, vec![1, 2]);
+    }
+
+    #[test]
+    fn k_larger_than_any_class_truncates_everywhere() {
+        // k beyond both class sizes: lists clamp to what exists, the
+        // miner's pair counts follow suit
+        let x = Mat::from_rows(5, 1, vec![0.0, 1.0, 2.0, 9.0, 10.0]);
+        let ds = Dataset::new("small", x, vec![0, 0, 0, 1, 1]);
+        let (same, diff) = neighbors(&ds, 50);
+        assert_eq!(same[0].len(), 2);
+        assert_eq!(diff[0].len(), 2);
+        assert_eq!(same[4].len(), 1);
+        assert_eq!(diff[4].len(), 3);
+    }
+
+    #[test]
     fn knn_classifies_separated_blobs() {
         let mut rng = Pcg64::seed(4);
         let ds = synthetic::gaussian_mixture("g", 400, 6, 2, 4.0, &mut rng);

@@ -138,4 +138,59 @@ mod tests {
         assert_eq!(ds.x[(0, 0)], 1e-3);
         assert_eq!(ds.x[(0, 1)], -250.0);
     }
+
+    #[test]
+    fn empty_input_yields_empty_dataset() {
+        // nothing to parse (including comment-only text) must produce a
+        // well-formed empty dataset, not an error or a panic downstream
+        for text in ["", "\n\n", "# only a comment\n"] {
+            let ds = parse_libsvm(text, 0).unwrap();
+            assert_eq!(ds.n(), 0, "text {text:?}");
+            assert_eq!(ds.d(), 0);
+            assert_eq!(ds.n_classes, 0);
+            assert!(ds.class_counts().is_empty());
+        }
+        // a d_hint still fixes the width of the (empty) matrix
+        let ds = parse_libsvm("", 7).unwrap();
+        assert_eq!(ds.d(), 7);
+    }
+
+    #[test]
+    fn label_only_lines_are_zero_rows() {
+        // a line with a label and no features is legal LIBSVM: an
+        // all-zeros instance (common for sparse negatives)
+        let ds = parse_libsvm("1 1:2.0\n2\n1\n", 0).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 1);
+        assert_eq!(ds.x[(1, 0)], 0.0);
+        assert_eq!(ds.x[(2, 0)], 0.0);
+        assert_eq!(ds.y, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn duplicate_feature_index_last_wins() {
+        // repeated index within one line: the later assignment lands
+        // last in the dense fill, so it wins deterministically
+        let ds = parse_libsvm("1 2:5.0 2:7.0\n", 0).unwrap();
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.x[(0, 1)], 7.0);
+    }
+
+    #[test]
+    fn tabs_and_mixed_whitespace_tokenize() {
+        let ds = parse_libsvm("1\t1:1.0\t 2:2.0\n-1  1:3.0\n", 0).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.x[(0, 1)], 2.0);
+        assert_eq!(ds.x[(1, 0)], 3.0);
+        assert_eq!(ds.y, vec![0, 1]);
+    }
+
+    #[test]
+    fn single_class_file_parses_with_one_class() {
+        // every label identical: one class id, no panic in n_classes —
+        // the miner then produces an empty candidate universe
+        let ds = parse_libsvm("3 1:1\n3 1:2\n3 1:3\n", 0).unwrap();
+        assert_eq!(ds.n_classes, 1);
+        assert_eq!(ds.y, vec![0, 0, 0]);
+    }
 }

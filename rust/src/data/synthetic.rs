@@ -114,9 +114,13 @@ pub fn xor_blobs(n: usize, d: usize, rng: &mut Pcg64) -> Dataset {
 /// Registry entry for a paper dataset analogue.
 #[derive(Clone, Copy, Debug)]
 pub struct AnalogueSpec {
+    /// registry key (the paper's dataset name, `-small` variants included)
     pub name: &'static str,
+    /// feature dimension
     pub d: usize,
+    /// instance count
     pub n: usize,
+    /// class count
     pub n_classes: usize,
     /// neighborhood size used for triplet generation in the paper (Table 1/3);
     /// `usize::MAX` encodes the paper's "∞" (all pairs).

@@ -13,6 +13,7 @@ pub struct Mat {
 }
 
 impl Mat {
+    /// All-zeros `rows × cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat {
             rows,
@@ -21,6 +22,7 @@ impl Mat {
         }
     }
 
+    /// The `n × n` identity.
     pub fn identity(n: usize) -> Mat {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -29,11 +31,13 @@ impl Mat {
         m
     }
 
+    /// Wrap a row-major buffer (length must be `rows · cols`).
     pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
         Mat { rows, cols, data }
     }
 
+    /// Build elementwise from `f(i, j)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -49,25 +53,32 @@ impl Mat {
         Mat::from_fn(x.len(), x.len(), |i, j| x[i] * x[j])
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
+    /// Whether `rows == cols`.
     pub fn is_square(&self) -> bool {
         self.rows == self.cols
     }
 
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
+    /// Row `i` as a mutable slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
+    /// The whole row-major buffer.
     pub fn as_slice(&self) -> &[f64] {
         &self.data
     }
+    /// The whole row-major buffer, mutable.
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data
     }
@@ -115,6 +126,7 @@ impl Mat {
         self.truncate_rows(last);
     }
 
+    /// `Aᵀ` (new allocation).
     pub fn transpose(&self) -> Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
@@ -143,24 +155,45 @@ impl Mat {
             .sum()
     }
 
+    /// Squared Frobenius norm.
     pub fn norm_sq(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum()
     }
 
+    /// Frobenius norm.
     pub fn norm(&self) -> f64 {
         self.norm_sq().sqrt()
     }
 
+    /// `self *= s` in place.
     pub fn scale(&mut self, s: f64) {
         for x in &mut self.data {
             *x *= s;
         }
     }
 
+    /// `s · self` (new allocation).
     pub fn scaled(&self, s: f64) -> Mat {
         let mut out = self.clone();
         out.scale(s);
         out
+    }
+
+    /// `self += sign · (a aᵀ − b bᵀ)` — the rank-2 triplet update shared
+    /// by the screened-L aggregate `H_L` and the streaming pipeline's
+    /// external L̂ mass. One kernel for both directions keeps up- and
+    /// downdates exact mirrors (IEEE negation is exact), so a single
+    /// uninterleaved add/remove pair cancels bitwise.
+    pub fn add_h_outer(&mut self, a: &[f64], b: &[f64], sign: f64) {
+        let d = self.cols;
+        debug_assert!(self.rows == d && a.len() == d && b.len() == d);
+        for i in 0..d {
+            let (ai, bi) = (sign * a[i], sign * b[i]);
+            let row = self.row_mut(i);
+            for j in 0..d {
+                row[j] += ai * a[j] - bi * b[j];
+            }
+        }
     }
 
     /// `self += s * other`.
@@ -171,12 +204,14 @@ impl Mat {
         }
     }
 
+    /// `self + other` (new allocation).
     pub fn add(&self, other: &Mat) -> Mat {
         let mut out = self.clone();
         out.axpy(1.0, other);
         out
     }
 
+    /// `self − other` (new allocation).
     pub fn sub(&self, other: &Mat) -> Mat {
         let mut out = self.clone();
         out.axpy(-1.0, other);
@@ -244,15 +279,18 @@ impl Mat {
         out
     }
 
+    /// Largest absolute entry (∞-norm over elements).
     pub fn max_abs(&self) -> f64 {
         self.data.iter().fold(0.0f64, |m, x| m.max(x.abs()))
     }
 
+    /// The diagonal as a vector (square matrices only).
     pub fn diag(&self) -> Vec<f64> {
         assert!(self.is_square());
         (0..self.rows).map(|i| self[(i, i)]).collect()
     }
 
+    /// `tr(A)` (square matrices only).
     pub fn trace(&self) -> f64 {
         assert!(self.is_square());
         (0..self.rows).map(|i| self[(i, i)]).sum()

@@ -18,15 +18,18 @@ pub struct Loss {
 }
 
 impl Loss {
+    /// Smoothed hinge with quadratic width `gamma > 0` (paper §2.1).
     pub fn smoothed_hinge(gamma: f64) -> Loss {
         assert!(gamma > 0.0, "smoothed hinge needs gamma > 0");
         Loss { gamma }
     }
 
+    /// The plain hinge (`gamma = 0`).
     pub fn hinge() -> Loss {
         Loss { gamma: 0.0 }
     }
 
+    /// Whether this is the non-smooth hinge.
     pub fn is_hinge(&self) -> bool {
         self.gamma == 0.0
     }

@@ -8,13 +8,20 @@
 //! Common options: --dataset <name[-small]> --engine native|pjrt
 //!   --bound GB|PGB|DGB|CDGB|RPB|RRPB --rule sphere|linear|semidefinite
 //!   --k <n> --seed <n> --tol <f> --rho <f> --active-set --range --range-general
+//!
+//! Streaming (path only): --streamed mines triplets lazily with
+//! screen-on-admission instead of materializing the full store;
+//! --strategy exhaustive|stratified|hard-negative picks the enumeration
+//! order, --batch the mining batch size, --budget caps the candidate
+//! universe (subsampled mining).
 
 use triplet_screen::coordinator::report::{fnum, fpct, Table};
-use triplet_screen::data::synthetic;
+use triplet_screen::data::{synthetic, Dataset};
 use triplet_screen::loss::Loss;
-use triplet_screen::path::{PathConfig, RegPath};
+use triplet_screen::path::{PathConfig, RegPath, TripletSource};
 use triplet_screen::prelude::*;
 use triplet_screen::solver::Problem;
+use triplet_screen::triplet::{MiningStrategy, TripletMiner};
 use triplet_screen::util::cli::Args;
 
 fn parse_bound(s: &str) -> BoundKind {
@@ -50,7 +57,9 @@ fn make_engine(args: &Args) -> Box<dyn Engine> {
     }
 }
 
-fn load_store(args: &Args, rng: &mut Pcg64) -> TripletStore {
+/// Load the dataset named on the command line (or a LIBSVM file) and the
+/// per-anchor neighbor count `k`.
+fn load_dataset(args: &Args, rng: &mut Pcg64) -> (Dataset, usize) {
     let name = args.get_or("dataset", "segment-small");
     let ds = if let Some(path) = args.get("libsvm") {
         let mut ds = triplet_screen::data::read_libsvm(path, args.get_usize("d", 0))
@@ -71,9 +80,23 @@ fn load_store(args: &Args, rng: &mut Pcg64) -> TripletStore {
         ds.d(),
         ds.n_classes
     );
+    (ds, k)
+}
+
+fn load_store(args: &Args, rng: &mut Pcg64) -> TripletStore {
+    let (ds, k) = load_dataset(args, rng);
     let store = TripletStore::from_dataset(&ds, k, rng);
     eprintln!("triplets: {}", store.len());
     store
+}
+
+fn parse_strategy(s: &str) -> MiningStrategy {
+    match s.to_ascii_lowercase().as_str() {
+        "exhaustive" => MiningStrategy::Exhaustive,
+        "stratified" => MiningStrategy::StratifiedByClass,
+        "hard-negative" | "hardnegative" => MiningStrategy::HardNegativeFirst,
+        other => panic!("unknown strategy {other:?} (exhaustive|stratified|hard-negative)"),
+    }
 }
 
 fn screening_cfg(args: &Args) -> Option<ScreeningConfig> {
@@ -138,7 +161,6 @@ fn main() {
         }
         Some("path") => {
             let engine = make_engine(&args);
-            let store = load_store(&args, &mut rng);
             // config file (TOML subset) + --set overrides + CLI flags
             let cfg = if let Some(path) = args.get("config") {
                 let mut file_cfg = triplet_screen::util::config::Config::load(path)
@@ -165,10 +187,29 @@ fn main() {
                     ..Default::default()
                 }
             };
-            let res = RegPath::new(cfg).run(&store, engine.as_ref());
+            let res = if args.flag("streamed") {
+                // streamed source: mine lazily, screen at admission time
+                let (ds, k) = load_dataset(&args, &mut rng);
+                let strategy = parse_strategy(args.get_or("strategy", "exhaustive"));
+                let mut miner =
+                    TripletMiner::new(&ds, k, strategy, args.get_usize("batch", 4096));
+                if let Some(budget) = args.get("budget") {
+                    miner = miner.with_budget(
+                        budget.parse().expect("--budget expects an integer"),
+                    );
+                }
+                eprintln!(
+                    "streamed mining ({strategy:?}): {} candidates",
+                    miner.total_candidates()
+                );
+                RegPath::new(cfg).run_source(TripletSource::Streamed(&mut miner), engine.as_ref())
+            } else {
+                let store = load_store(&args, &mut rng);
+                RegPath::new(cfg).run(&store, engine.as_ref())
+            };
             let mut t = Table::new(
                 format!("regularization path (lambda_max = {})", fnum(res.lambda_max)),
-                &["lambda", "iters", "P", "gap", "rate", "range", "wall_s"],
+                &["lambda", "iters", "P", "gap", "rate", "range", "rows", "wall_s"],
             );
             for s in &res.steps {
                 t.row(vec![
@@ -178,18 +219,32 @@ fn main() {
                     format!("{:.1e}", s.gap),
                     fpct(s.rate_final),
                     s.range_screened.to_string(),
+                    s.workset_rows.to_string(),
                     fnum(s.wall),
                 ]);
             }
             println!("{}", t.to_markdown());
             println!("total wall: {} s", fnum(res.total_wall));
+            if let Some(stream) = &res.stream {
+                println!(
+                    "streamed: candidates={} admitted_rows={} peak_workset_rows={} \
+                     pending_end={} external_L={}",
+                    stream.candidates,
+                    stream.admitted_rows,
+                    stream.peak_workset_rows,
+                    stream.pending_end,
+                    stream.external_l_end
+                );
+            }
         }
         _ => {
             eprintln!(
                 "usage: triplet-screen <info|train|path> [--dataset NAME] [--engine native|pjrt]\n\
                  \x20  [--bound GB|PGB|DGB|CDGB|RPB|RRPB] [--rule sphere|linear|semidefinite]\n\
                  \x20  [--lambda F] [--rho F] [--tol F] [--k N] [--seed N] [--active-set] [--range]\n\
-                 \x20  [--range-general] [--no-screening] [--libsvm PATH]"
+                 \x20  [--range-general] [--no-screening] [--libsvm PATH]\n\
+                 \x20  path --streamed [--strategy exhaustive|stratified|hard-negative]\n\
+                 \x20  [--batch N] [--budget N]"
             );
             std::process::exit(2);
         }

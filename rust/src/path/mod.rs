@@ -35,24 +35,30 @@ use crate::linalg::{psd_split, Mat};
 use crate::loss::Loss;
 use crate::runtime::Engine;
 use crate::screening::{
-    CertFamilies, ReferenceFrame, ScreeningConfig, ScreeningManager, ScreeningStats,
+    Admission, CertFamilies, CertSide, ReferenceFrame, ScreeningConfig, ScreeningManager,
+    ScreeningStats,
 };
-use crate::solver::{ActiveSetSolver, Problem, ScreenCtx, Solver, SolverConfig};
-use crate::triplet::TripletStore;
+use crate::solver::{ActiveSetSolver, Problem, ProblemState, ScreenCtx, Solver, SolverConfig};
+use crate::triplet::{
+    CandidateBatch, PendingCert, PendingPool, StatusVec, TripletMiner, TripletStore,
+};
 use std::rc::Rc;
 
 /// Path configuration.
 #[derive(Clone, Debug)]
 pub struct PathConfig {
+    /// the triplet loss (thresholds + duals)
     pub loss: Loss,
     /// geometric decay λ_t = ρ·λ_{t−1} (paper: 0.9, practical eval 0.99)
     pub rho: f64,
+    /// hard cap on λ steps
     pub max_steps: usize,
     /// paper's termination: relative loss decrease per relative λ decrease
     /// below this ratio stops the path (0.01)
     pub stop_ratio: f64,
     /// optional hard lower bound on λ
     pub lambda_min: Option<f64>,
+    /// inner-solver configuration (tolerance, screening cadence)
     pub solver: SolverConfig,
     /// None = naive optimization (the paper's baseline)
     pub screening: Option<ScreeningConfig>,
@@ -106,19 +112,25 @@ impl Default for PathConfig {
 /// Per-λ outcome record.
 #[derive(Clone, Debug)]
 pub struct PathStep {
+    /// this step's regularization weight
     pub lambda: f64,
+    /// solver iterations spent
     pub iters: usize,
     /// reduced primal at convergence
     pub p: f64,
     /// loss term Σℓ (without the regularizer) — drives path termination
     pub loss_term: f64,
+    /// duality gap at the returned iterate
     pub gap: f64,
+    /// whether the solver hit its gap tolerance
     pub converged: bool,
     /// screening rate right after the first (regularization-path) screening
     pub rate_regpath: f64,
     /// screening rate at convergence (after dynamic screening)
     pub rate_final: f64,
+    /// triplets in L̂ at convergence
     pub screened_l: usize,
+    /// triplets in R̂ at convergence
     pub screened_r: usize,
     /// triplets whose membership is certificate-fixed at this λ before
     /// any rule evaluation: the frame's full coverage set — ids newly
@@ -139,6 +151,16 @@ pub struct PathStep {
     /// from scratch each step, copying all |T| rows; certificate-covered
     /// triplets are now never re-copied
     pub rebuild_rows_copied: usize,
+    /// candidates admitted into the workset while crossing into this λ
+    /// (streamed source only — a materialized store admits everything up
+    /// front, so this stays 0)
+    pub admitted: usize,
+    /// active workset rows at the start of this λ's solve — after
+    /// certificate retargeting and (streamed) admission. Monotone
+    /// non-increasing during the solve, so this is the step's peak; the
+    /// streamed pipeline's memory proof is the max of this over the path
+    /// staying strictly below |T|
+    pub workset_rows: usize,
     /// screening-manager invocations during this λ solve
     pub screen_calls: usize,
     /// triplet-rule evaluations actually performed during this λ solve
@@ -152,27 +174,82 @@ pub struct PathStep {
     pub compute_time: f64,
 }
 
+/// Outcome summary of a streamed (mined, screen-on-admission) path run.
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    /// size of the candidate universe the miner enumerates — the
+    /// streamed pipeline's |T|
+    pub candidates: usize,
+    /// rows ever admitted into the growable store (its final = peak size)
+    pub admitted_rows: usize,
+    /// row-less admission certificates still pending at path end
+    pub pending_end: usize,
+    /// row-less external L̂ triplets installed at path end
+    pub external_l_end: usize,
+    /// max over steps of [`PathStep::workset_rows`] — the memory bound
+    /// screening enforces (strictly below |T| whenever admission rejects
+    /// anything for the whole path)
+    pub peak_workset_rows: usize,
+    /// the admitted store (safety oracles verify α* per admitted triplet
+    /// against it)
+    pub store: TripletStore,
+    /// final screening status over the admitted store, aligned with
+    /// `store` ids
+    pub final_status: StatusVec,
+}
+
 /// Full path outcome.
 #[derive(Clone, Debug)]
 pub struct PathResult {
+    /// per-λ records, in path order
     pub steps: Vec<PathStep>,
+    /// exact λ_max the path started below
     pub lambda_max: f64,
+    /// wall-clock seconds for the whole path
     pub total_wall: f64,
+    /// the optimum at the final λ
     pub m_final: Mat,
     /// cumulative stats summed over all screening managers (primary +
     /// secondary), so per-step `screen_calls`/`rule_evals` deltas always
     /// add up to these totals; None when screening is off
     pub screening_stats: Option<ScreeningStats>,
+    /// streamed-source outcome; None for a materialized store
+    pub stream: Option<StreamSummary>,
+}
+
+/// Where the path driver gets its triplets.
+pub enum TripletSource<'s, 'd> {
+    /// Fully materialized store — the classic pipeline: all |T| rows are
+    /// resident before the path starts.
+    Materialized(&'s TripletStore),
+    /// Lazily mined candidates with **screen-on-admission**: every
+    /// candidate is tested against the current reference-frame
+    /// certificate before its rows are ever copied, so the workset (and
+    /// the admitted store) peak strictly below |T| — see
+    /// [`RegPath::run_streamed`].
+    Streamed(&'s mut TripletMiner<'d>),
 }
 
 /// The regularization-path coordinator.
 pub struct RegPath {
+    /// the path configuration this coordinator runs
     pub cfg: PathConfig,
 }
 
 impl RegPath {
+    /// Wrap a configuration.
     pub fn new(cfg: PathConfig) -> RegPath {
         RegPath { cfg }
+    }
+
+    /// Run the full path on either triplet source: dispatches to
+    /// [`Self::run`] (materialized) or [`Self::run_streamed`] (mined,
+    /// screen-on-admission).
+    pub fn run_source(&self, source: TripletSource<'_, '_>, engine: &dyn Engine) -> PathResult {
+        match source {
+            TripletSource::Materialized(store) => self.run(store, engine),
+            TripletSource::Streamed(miner) => self.run_streamed(miner, engine),
+        }
     }
 
     /// Run the full path on `store` using `engine` for the kernels.
@@ -268,6 +345,7 @@ impl RegPath {
                     problem.install_frame(fr);
                 }
             }
+            let ws_rows = problem.workset().len();
 
             let stats_before = screening_totals(manager.as_ref(), manager2.as_ref());
 
@@ -347,8 +425,10 @@ impl RegPath {
                 range_screened,
                 range_pass_work,
                 rebuild_rows_copied: retarget.rows_copied,
-                screen_calls: stats_after.0 - stats_before.0,
-                rule_evals: stats_after.1 - stats_before.1,
+                admitted: 0,
+                workset_rows: ws_rows,
+                screen_calls: stats_after.0.saturating_sub(stats_before.0),
+                rule_evals: stats_after.1.saturating_sub(stats_before.1),
                 wall,
                 screen_time: stats.timers.screening.secs(),
                 compute_time: stats.timers.compute.secs(),
@@ -391,15 +471,13 @@ impl RegPath {
         }
 
         // aggregate across both managers so the per-step deltas (which
-        // already sum both) reconcile with the cumulative totals
+        // already sum both) reconcile with the cumulative totals;
+        // saturating, so arbitrarily long paths pin at MAX instead of
+        // wrapping into nonsense telemetry
         let screening_stats = manager.map(|m1| {
             let mut s = m1.stats;
             if let Some(m2) = manager2 {
-                s.calls += m2.stats.calls;
-                s.screened_l += m2.stats.screened_l;
-                s.screened_r += m2.stats.screened_r;
-                s.rule_evals += m2.stats.rule_evals;
-                s.skipped += m2.stats.skipped;
+                s.merge(&m2.stats);
             }
             s
         });
@@ -409,6 +487,400 @@ impl RegPath {
             total_wall: t_total.elapsed().as_secs_f64(),
             m_final: m_warm,
             screening_stats,
+            stream: None,
+        }
+    }
+
+    /// Run the full path on a **streamed** triplet source: candidates are
+    /// mined lazily ([`TripletMiner`]) and screened **at admission time**
+    /// against the current [`ReferenceFrame`] — a candidate the RRPB
+    /// closed forms prove inactive at the current λ is rejected *without
+    /// allocation* (a 24-byte [`PendingCert`] instead of two `d`-vector
+    /// rows), so screening bounds memory, not just compute. The flow per
+    /// λ step:
+    ///
+    /// 1. **admission** — the one full mining sweep (first step, against
+    ///    the exact λ_max reference) plus re-tests of every pending
+    ///    certificate that expired crossing into this λ. L-certified
+    ///    candidates fold their `H_t` into a row-less external L̂ mass
+    ///    ([`Problem::set_external_l`]); R-certified contribute nothing;
+    ///    the undecided are appended to the growable admitted store;
+    /// 2. **coverage** — the frame's expiry schedule emits the admitted
+    ///    ids certified at λ, exactly as in the materialized pipeline;
+    /// 3. **resume** — the persistent problem is rebuilt over the grown
+    ///    store ([`Problem::resume`]: new ids ingested through the revive
+    ///    machinery) and crossed via [`Problem::retarget_lambda`];
+    /// 4. **solve** — warm-started, with the usual dynamic screening.
+    ///
+    /// Prerequisites: a primary screening config with a reference bound
+    /// (RPB/RRPB) — admission cannot prove anything without a reference.
+    /// Certificate coverage is always derived (the streamed pipeline
+    /// subsumes `range_screening`); `range_general` additionally derives
+    /// the DGB/GB families for the coverage sweep.
+    ///
+    /// With [`MiningStrategy::Exhaustive`] and no budget the candidate
+    /// universe equals the materialized store's, so the path reaches the
+    /// same per-λ optima (the `workset_safety` battery asserts
+    /// ‖ΔM‖ < 1e-6 and oracle-verifies α* for every admitted triplet).
+    ///
+    /// [`MiningStrategy::Exhaustive`]: crate::triplet::MiningStrategy::Exhaustive
+    pub fn run_streamed(&self, miner: &mut TripletMiner<'_>, engine: &dyn Engine) -> PathResult {
+        let t_total = std::time::Instant::now();
+        let loss = self.cfg.loss;
+        let scfg = self
+            .cfg
+            .screening
+            .expect("streamed source requires a screening config (RPB or RRPB)");
+        assert!(
+            scfg.bound.needs_reference(),
+            "streamed admission screening needs a reference bound (RPB/RRPB), got {:?}",
+            scfg.bound
+        );
+        let d = miner.d();
+        let mut batch = CandidateBatch::new(d);
+
+        // ---- streaming pre-passes: ΣH and λ_max without |T| rows ----
+        let sum_h = miner.sum_h_streamed(engine, &mut batch);
+        let sum_h_plus = psd_split(&sum_h).plus;
+        let max_hq = miner.max_margin_streamed(&sum_h_plus, engine, &mut batch);
+        let lambda_max = Problem::lambda_max_from_parts(max_hq, &loss);
+        let mut m_warm = sum_h_plus.scaled(1.0 / lambda_max);
+
+        let mut manager = Some(ScreeningManager::new(scfg));
+        let mut manager2 = self.cfg.secondary_screening.map(ScreeningManager::new);
+        // certificates are always derived: the retarget coverage sweep
+        // and the admission screen both live off the frame
+        let cert_families = if self.cfg.range_general {
+            CertFamilies::all()
+        } else {
+            CertFamilies::rrpb_only()
+        };
+
+        // the admitted store: grows as candidates survive admission
+        let mut store = TripletStore::empty(d);
+        // λ_max solution is exact: ε = 0 reference (over the still-empty
+        // admitted store; the initial sweep below screens every candidate
+        // against its M₀/λ₀/ε scalars, which need no per-id state)
+        let mut frame = Rc::new(ReferenceFrame::build(
+            m_warm.clone(),
+            lambda_max,
+            0.0,
+            &store,
+            engine,
+            Some((&loss, cert_families)),
+        ));
+        install_frame_on_managers(&frame, manager.as_mut(), manager2.as_mut());
+        // id-indexed ⟨H, M₀⟩ lane over the admitted store: the frame's
+        // margins, extended with the admission-pass margins of every id
+        // admitted after the frame was built (same reference, same tag)
+        let mut lane: Vec<f64> = frame.margins().to_vec();
+
+        // row-less rejected candidates + the external L̂ mass they carry
+        let mut pending = PendingPool::new();
+        let mut expired: Vec<PendingCert> = Vec::new();
+        let mut retest_idx: Vec<(u32, u32, u32)> = Vec::new();
+        let mut h_ext = Mat::zeros(d, d);
+        let mut n_ext = 0usize;
+        // admission scratch (reused across batches)
+        let mut adm_hm: Vec<f64> = Vec::new();
+        let mut adm_out: Vec<Admission> = Vec::new();
+
+        let mut steps: Vec<PathStep> = Vec::new();
+        let mut lambda = lambda_max;
+        let mut prev_loss_term: Option<f64> = None;
+        let mut state: Option<ProblemState> = None;
+        let mut mined_all = false;
+        let mut cover_l: Vec<usize> = Vec::new();
+        let mut cover_r: Vec<usize> = Vec::new();
+        let mut peak_ws_rows = 0usize;
+
+        for step_i in 0..self.cfg.max_steps {
+            let lambda_prev = lambda;
+            lambda *= self.cfg.rho;
+            if let Some(lmin) = self.cfg.lambda_min {
+                if lambda < lmin {
+                    break;
+                }
+            }
+            let t_step = std::time::Instant::now();
+
+            // ---- 1. screen-on-admission ----
+            let rows_before = store.len();
+            {
+                let mgr = manager.as_mut().expect("primary manager");
+                if !mined_all {
+                    // the one full enumeration: every candidate tested
+                    // against the exact λ_max reference; only the
+                    // undecided ever get rows
+                    miner.reset();
+                    while miner.next_into(&mut batch) {
+                        admit_batch_into(
+                            mgr,
+                            &batch,
+                            lambda,
+                            &loss,
+                            engine,
+                            &mut adm_hm,
+                            &mut adm_out,
+                            &mut store,
+                            &mut lane,
+                            &mut pending,
+                            &mut h_ext,
+                            &mut n_ext,
+                            None,
+                        );
+                    }
+                    mined_all = true;
+                }
+                // certificates that expired crossing into this λ:
+                // re-materialize their rows (O(d) each) and re-test under
+                // the current frame, in batch-sized chunks
+                pending.pop_expired(lambda, &mut expired);
+                for group in expired.chunks(miner.batch_size()) {
+                    retest_idx.clear();
+                    retest_idx.extend(group.iter().map(|r| r.idx));
+                    miner.materialize_into(&retest_idx, &mut batch);
+                    admit_batch_into(
+                        mgr,
+                        &batch,
+                        lambda,
+                        &loss,
+                        engine,
+                        &mut adm_hm,
+                        &mut adm_out,
+                        &mut store,
+                        &mut lane,
+                        &mut pending,
+                        &mut h_ext,
+                        &mut n_ext,
+                        Some(group),
+                    );
+                }
+            }
+            let admitted_this_step = store.len() - rows_before;
+
+            // ---- 2. certificate coverage for admitted ids at λ ----
+            cover_l.clear();
+            cover_r.clear();
+            let range_pass_work = frame.advance_covered(lambda, &mut cover_l, &mut cover_r);
+            let range_screened = cover_l.len() + cover_r.len();
+
+            // ---- 3. resume the persistent problem over the grown store ----
+            let mut problem = match state.take() {
+                None => Problem::new(&store, loss, lambda),
+                Some(st) => Problem::resume(&store, loss, lambda, st),
+            };
+            let retarget = problem.retarget_lambda(lambda, &cover_l, &cover_r);
+            problem.set_external_l(&h_ext, n_ext);
+            problem.install_ref_margins(&lane, frame.tag());
+            let ws_rows = problem.workset().len();
+            peak_ws_rows = peak_ws_rows.max(ws_rows);
+
+            let stats_before = screening_totals(manager.as_ref(), manager2.as_ref());
+
+            // ---- 4. solve with dynamic screening ----
+            let mut rate_regpath = problem.status().screening_rate();
+            let mut first_screen_done = false;
+            let (m_sol, stats) = {
+                let mut cb_mgr = manager.as_mut();
+                let mut cb_mgr2 = manager2.as_mut();
+                let engine_ref = engine;
+                let mut cb = |p: &Problem, ctx: &ScreenCtx| -> (Vec<usize>, Vec<usize>) {
+                    if let Some(m) = cb_mgr.as_deref_mut() {
+                        let mut out = m.screen(p, ctx, engine_ref);
+                        if let Some(m2) = cb_mgr2.as_deref_mut() {
+                            let (l2, r2) = m2.screen(p, ctx, engine_ref);
+                            out.0.extend(l2);
+                            out.1.extend(r2);
+                            out.0.sort_unstable();
+                            out.0.dedup();
+                            out.1.sort_unstable();
+                            out.1.dedup();
+                        }
+                        if !first_screen_done {
+                            let screened: usize = p.status().n_screened_l()
+                                + p.status().n_screened_r()
+                                + out.0.len()
+                                + out.1.len();
+                            rate_regpath = screened as f64 / p.status().len().max(1) as f64;
+                            first_screen_done = true;
+                        }
+                        out
+                    } else {
+                        (vec![], vec![])
+                    }
+                };
+                let mut screen_opt: Option<
+                    &mut dyn FnMut(&Problem, &ScreenCtx) -> (Vec<usize>, Vec<usize>),
+                > = Some(&mut cb);
+                if self.cfg.active_set {
+                    ActiveSetSolver::new(self.cfg.solver.clone()).solve(
+                        &mut problem,
+                        engine,
+                        m_warm.clone(),
+                        screen_opt.take(),
+                    )
+                } else {
+                    Solver::new(self.cfg.solver.clone()).solve(
+                        &mut problem,
+                        engine,
+                        m_warm.clone(),
+                        screen_opt.take(),
+                    )
+                }
+            };
+            let stats_after = screening_totals(manager.as_ref(), manager2.as_ref());
+
+            let wall = t_step.elapsed().as_secs_f64();
+            let loss_term = stats.p - 0.5 * lambda * m_sol.norm_sq();
+            let eps = (2.0 * stats.gap.max(0.0) / lambda).sqrt();
+
+            steps.push(PathStep {
+                lambda,
+                iters: stats.iters,
+                p: stats.p,
+                loss_term,
+                gap: stats.gap,
+                converged: stats.converged,
+                rate_regpath,
+                rate_final: problem.status().screening_rate(),
+                screened_l: problem.status().n_screened_l(),
+                screened_r: problem.status().n_screened_r(),
+                range_screened,
+                range_pass_work,
+                rebuild_rows_copied: retarget.rows_copied,
+                admitted: admitted_this_step,
+                workset_rows: ws_rows,
+                screen_calls: stats_after.0.saturating_sub(stats_before.0),
+                rule_evals: stats_after.1.saturating_sub(stats_before.1),
+                wall,
+                screen_time: stats.timers.screening.secs(),
+                compute_time: stats.timers.compute.secs(),
+            });
+
+            m_warm = m_sol;
+            // release the store borrow so admission can grow it next step
+            state = Some(problem.into_state());
+
+            // ---- paper's termination criterion ----
+            if let Some(prev) = prev_loss_term {
+                if prev > 0.0 {
+                    let ratio =
+                        ((prev - loss_term) / prev) * (lambda_prev / (lambda_prev - lambda));
+                    if ratio < self.cfg.stop_ratio {
+                        break;
+                    }
+                }
+            }
+            prev_loss_term = Some(loss_term);
+
+            // ---- next reference frame, over the admitted store ----
+            let next_lambda = lambda * self.cfg.rho;
+            let more_steps = step_i + 1 < self.cfg.max_steps
+                && !self.cfg.lambda_min.is_some_and(|lmin| next_lambda < lmin);
+            if more_steps && (step_i + 1) % self.cfg.frame_every.max(1) == 0 {
+                frame = Rc::new(ReferenceFrame::build(
+                    m_warm.clone(),
+                    lambda,
+                    eps,
+                    &store,
+                    engine,
+                    Some((&loss, cert_families)),
+                ));
+                install_frame_on_managers(&frame, manager.as_mut(), manager2.as_mut());
+                lane = frame.margins().to_vec();
+            }
+        }
+
+        let final_status = match state {
+            Some(st) => st.into_status(),
+            None => StatusVec::new(store.len()),
+        };
+        let screening_stats = manager.map(|m1| {
+            let mut s = m1.stats;
+            if let Some(m2) = manager2 {
+                s.merge(&m2.stats);
+            }
+            s
+        });
+        PathResult {
+            steps,
+            lambda_max,
+            total_wall: t_total.elapsed().as_secs_f64(),
+            m_final: m_warm,
+            screening_stats,
+            stream: Some(StreamSummary {
+                candidates: miner.total_candidates(),
+                admitted_rows: store.len(),
+                pending_end: pending.len(),
+                external_l_end: n_ext,
+                peak_workset_rows: peak_ws_rows,
+                store,
+                final_status,
+            }),
+        }
+    }
+}
+
+/// Apply one admission batch: test every candidate through the manager
+/// ([`ScreeningManager::admit_batch`]), then act on each decision —
+/// append rows to the admitted store (+ reference-margin lane), fold the
+/// candidate into the external L̂ mass, or record a row-less pending
+/// certificate. `prior` carries the previous records of re-tested
+/// (expired) candidates, row-aligned with the batch, so the external
+/// mass stays exact across side transitions (L→L keeps its mass, L→R/
+/// L→admit removes it, →L adds it).
+#[allow(clippy::too_many_arguments)]
+fn admit_batch_into(
+    mgr: &mut ScreeningManager,
+    batch: &CandidateBatch,
+    lambda: f64,
+    loss: &Loss,
+    engine: &dyn Engine,
+    hm: &mut Vec<f64>,
+    decisions: &mut Vec<Admission>,
+    store: &mut TripletStore,
+    lane: &mut Vec<f64>,
+    pending: &mut PendingPool,
+    h_ext: &mut Mat,
+    n_ext: &mut usize,
+    prior: Option<&[PendingCert]>,
+) {
+    if let Some(p) = prior {
+        debug_assert_eq!(p.len(), batch.len(), "prior records misaligned with batch");
+    }
+    let ok = mgr.admit_batch(batch, lambda, loss, engine, hm, decisions);
+    assert!(ok, "admission requires an installed reference frame");
+    for t in 0..batch.len() {
+        let was_l = prior.is_some_and(|p| p[t].side == CertSide::L);
+        let decision = decisions[t];
+        let now_l = matches!(
+            decision,
+            Admission::Certified {
+                side: CertSide::L,
+                ..
+            }
+        );
+        // external-mass transitions: only L ↔ non-L changes touch H_ext
+        if was_l && !now_l {
+            h_ext.add_h_outer(batch.a.row(t), batch.b.row(t), -1.0);
+            *n_ext -= 1;
+        } else if !was_l && now_l {
+            h_ext.add_h_outer(batch.a.row(t), batch.b.row(t), 1.0);
+            *n_ext += 1;
+        }
+        match decision {
+            Admission::Admit => {
+                store.push(batch.idx[t], batch.a.row(t), batch.b.row(t), batch.h_norm[t]);
+                lane.push(hm[t]);
+            }
+            Admission::Certified { side, expires } => {
+                pending.push(PendingCert {
+                    idx: batch.idx[t],
+                    side,
+                    expires,
+                });
+            }
         }
     }
 }
@@ -443,14 +915,20 @@ fn screening_totals(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synthetic;
+    use crate::data::{synthetic, Dataset};
     use crate::runtime::NativeEngine;
     use crate::screening::{BoundKind, RuleKind};
+    use crate::triplet::MiningStrategy;
     use crate::util::rng::Pcg64;
 
-    fn small_store(seed: u64) -> TripletStore {
+    fn small_dataset(seed: u64) -> Dataset {
         let mut rng = Pcg64::seed(seed);
-        let ds = synthetic::gaussian_mixture("g", 40, 4, 2, 2.6, &mut rng);
+        synthetic::gaussian_mixture("g", 40, 4, 2, 2.6, &mut rng)
+    }
+
+    fn small_store(seed: u64) -> TripletStore {
+        let ds = small_dataset(seed);
+        let mut rng = Pcg64::seed(seed ^ 0x5eed);
         TripletStore::from_dataset(&ds, 3, &mut rng)
     }
 
@@ -692,6 +1170,117 @@ mod tests {
             with_certs.steps.iter().skip(1).any(|s| s.range_screened > s.rebuild_rows_copied),
             "no crossing kept a covered triplet retired"
         );
+    }
+
+    #[test]
+    fn streamed_path_matches_materialized() {
+        // the tentpole parity: exhaustive mining + screen-on-admission
+        // must walk the same λ grid and reach the same per-λ optima as
+        // the materialized pipeline, while keeping the workset strictly
+        // below |T|
+        let ds = small_dataset(3);
+        let store = small_store(3);
+        let engine = NativeEngine::new(2);
+
+        let mut cfg = base_cfg();
+        cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        cfg.range_screening = true;
+        let materialized = RegPath::new(cfg.clone()).run(&store, &engine);
+
+        let mut miner = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 128);
+        let streamed = RegPath::new(cfg).run_source(TripletSource::Streamed(&mut miner), &engine);
+
+        assert!(
+            (streamed.lambda_max - materialized.lambda_max).abs()
+                < 1e-9 * materialized.lambda_max,
+            "λ_max diverged: streamed {} vs materialized {}",
+            streamed.lambda_max,
+            materialized.lambda_max
+        );
+        assert_eq!(streamed.steps.len(), materialized.steps.len());
+        for (s, m) in streamed.steps.iter().zip(&materialized.steps) {
+            assert!((s.lambda - m.lambda).abs() < 1e-9 * m.lambda);
+            let tol = 1e-4 * m.p.abs().max(1.0);
+            assert!(
+                (s.p - m.p).abs() < tol,
+                "λ={}: streamed P={} materialized P={}",
+                m.lambda,
+                s.p,
+                m.p
+            );
+            assert!(s.converged);
+        }
+        let m_tol = 1e-3 * (1.0 + materialized.m_final.max_abs());
+        let diff = streamed.m_final.sub(&materialized.m_final).max_abs();
+        assert!(diff < m_tol, "final M drifted by {diff}");
+
+        // stream accounting: every candidate is either an admitted row
+        // or a row-less pending certificate; the workset peaked strictly
+        // below |T| and the admission screen rejected at least one
+        let summary = streamed.stream.expect("streamed run records a summary");
+        assert!(materialized.stream.is_none());
+        assert_eq!(summary.candidates, store.len());
+        assert_eq!(
+            summary.admitted_rows + summary.pending_end,
+            summary.candidates,
+            "candidate conservation violated"
+        );
+        assert!(summary.external_l_end <= summary.pending_end);
+        assert_eq!(summary.store.len(), summary.admitted_rows);
+        assert_eq!(summary.final_status.len(), summary.store.len());
+        assert!(
+            summary.peak_workset_rows < store.len(),
+            "workset peaked at |T| = {} — admission never screened",
+            store.len()
+        );
+        assert_eq!(
+            summary.peak_workset_rows,
+            streamed.steps.iter().map(|s| s.workset_rows).max().unwrap_or(0)
+        );
+        let stats = streamed.screening_stats.expect("stats");
+        assert!(stats.adm_candidates >= store.len());
+        assert!(stats.adm_rejected() > 0, "no admission-time rejection");
+        assert_eq!(
+            stats.adm_admitted,
+            summary.admitted_rows,
+            "admitted counter disagrees with store growth"
+        );
+        assert!(streamed.steps.iter().any(|s| s.admitted > 0));
+    }
+
+    #[test]
+    fn streamed_budgeted_strategies_run_safely() {
+        // stratified / hard-negative mining with a budget solve a
+        // *subsampled* problem — no parity oracle, but the path must
+        // converge, respect the budget, and keep candidate conservation
+        let ds = small_dataset(4);
+        let engine = NativeEngine::new(2);
+        for strategy in [
+            MiningStrategy::StratifiedByClass,
+            MiningStrategy::HardNegativeFirst,
+        ] {
+            let mut cfg = base_cfg();
+            cfg.max_steps = 6;
+            cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+            let mut miner = TripletMiner::new(&ds, 3, strategy, 64).with_budget(150);
+            let res = RegPath::new(cfg).run_source(TripletSource::Streamed(&mut miner), &engine);
+            assert!(res.steps.iter().all(|s| s.converged), "{strategy:?} stalled");
+            let summary = res.stream.expect("summary");
+            assert_eq!(summary.candidates, 150);
+            assert_eq!(summary.admitted_rows + summary.pending_end, summary.candidates);
+            assert!(summary.peak_workset_rows <= summary.admitted_rows);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "reference bound")]
+    fn streamed_requires_reference_bound() {
+        let ds = small_dataset(5);
+        let engine = NativeEngine::new(1);
+        let mut cfg = base_cfg();
+        cfg.screening = Some(ScreeningConfig::new(BoundKind::Dgb, RuleKind::Sphere));
+        let mut miner = TripletMiner::new(&ds, 2, MiningStrategy::Exhaustive, 32);
+        let _ = RegPath::new(cfg).run_source(TripletSource::Streamed(&mut miner), &engine);
     }
 
     #[test]

@@ -49,6 +49,7 @@ pub type StepOut = (f64, Mat);
 /// Rows of `a`/`b` are the difference vectors `x_i − x_l` / `x_i − x_j`
 /// of the (compacted) triplet set. All matrices are row-major f64.
 pub trait Engine: Sync {
+    /// Engine label for reports (`native`, `native-scalar`, `pjrt`).
     fn name(&self) -> &'static str;
 
     /// `out[t] = a_t^T mat a_t − b_t^T mat b_t` — serves both `⟨M, H_t⟩`

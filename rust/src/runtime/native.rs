@@ -62,6 +62,7 @@ impl NativeEngine {
         NativeEngine::with_core(threads, KernelCore::Scalar)
     }
 
+    /// Engine with an explicit compute core.
     pub fn with_core(threads: usize, core: KernelCore) -> NativeEngine {
         NativeEngine {
             threads,
@@ -70,6 +71,7 @@ impl NativeEngine {
         }
     }
 
+    /// The compute core this engine routes kernels through.
     pub fn core(&self) -> KernelCore {
         self.core
     }

@@ -136,6 +136,7 @@ impl PjrtEngine {
             .all(|e| self.registry.contains_key(&Key { entry: e, d }))
     }
 
+    /// The directory the artifacts were loaded from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
     }

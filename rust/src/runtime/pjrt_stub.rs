@@ -65,10 +65,12 @@ impl PjrtEngine {
         Self::from_dir(default_artifacts_dir())
     }
 
+    /// Always false: no artifacts exist in a stub build.
     pub fn supports_dim(&self, _d: usize) -> bool {
         false
     }
 
+    /// The directory the (unavailable) artifacts were looked up in.
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
     }

@@ -10,7 +10,9 @@ use crate::linalg::{psd_split, Mat, PsdSplit};
 /// A Frobenius-norm ball `{X : ‖X − Q‖_F ≤ r}` containing `M*`.
 #[derive(Clone, Debug)]
 pub struct Sphere {
+    /// center `Q`
     pub q: Mat,
+    /// radius `r ≥ 0`
     pub r: f64,
     /// true when `Q ⪰ O` by construction (enables the cheap min-eig path
     /// in the SDLS rule, §3.1.2)
@@ -18,6 +20,7 @@ pub struct Sphere {
 }
 
 impl Sphere {
+    /// Wrap a center/radius pair (radius must be finite and ≥ 0).
     pub fn new(q: Mat, r: f64, psd_center: bool) -> Sphere {
         debug_assert!(r.is_finite() && r >= 0.0, "radius must be >= 0, got {r}");
         Sphere { q, r, psd_center }

@@ -55,9 +55,13 @@ pub enum CertSide {
 /// screening rule fires, so the triplet can be fixed without evaluation.
 #[derive(Clone, Copy, Debug)]
 pub struct Certificate {
+    /// triplet id within the store the frame was built over
     pub id: u32,
+    /// which optimal-set membership is fixed
     pub side: CertSide,
+    /// interval lower endpoint (exclusive)
     pub lo: f64,
+    /// interval upper endpoint (exclusive)
     pub hi: f64,
 }
 
@@ -76,6 +80,7 @@ pub struct CertFamilies {
 }
 
 impl CertFamilies {
+    /// Only the closed-form RRPB ranges (the cheap default).
     pub fn rrpb_only() -> CertFamilies {
         CertFamilies {
             rrpb: true,
@@ -84,6 +89,8 @@ impl CertFamilies {
         }
     }
 
+    /// RRPB plus the DGB/GB general forms (wider coverage, one extra
+    /// `wgram` + margins pass per reference).
     pub fn all() -> CertFamilies {
         CertFamilies {
             rrpb: true,
@@ -91,6 +98,28 @@ impl CertFamilies {
             gb: true,
         }
     }
+}
+
+/// Admission-time outcome for one candidate triplet that is **not yet in
+/// any store** (streaming pipeline): either provably inactive at the
+/// query λ under the frame's RRPB closed forms — with the λ at which
+/// that proof expires — or undecided, in which case the candidate must
+/// be copied into the workset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Admission {
+    /// No certificate fires: admit the candidate (its rows enter the
+    /// reduced problem).
+    Admit,
+    /// Certified into L*/R* at the query λ: reject without allocation.
+    /// The proof stays valid for every λ above `expires` (the RRPB
+    /// range's lower endpoint), so the candidate needs no re-test until
+    /// the path crosses it.
+    Certified {
+        /// which optimal-set membership is fixed
+        side: CertSide,
+        /// lower endpoint of the certified λ-interval (clamped to ≥ 0)
+        expires: f64,
+    },
 }
 
 /// Mutable sweep state of the expiry schedule (interior: the frame is
@@ -105,6 +134,42 @@ struct Sweep {
 }
 
 /// Screening reference carried across λ steps; see the module docs.
+///
+/// Build one per reference solution and share it (via `Rc`) across every
+/// consumer. The exact λ_max solution makes an ε = 0 reference:
+///
+/// ```
+/// use triplet_screen::prelude::*;
+/// use triplet_screen::linalg::psd_project;
+/// use triplet_screen::screening::{Admission, CertFamilies, ReferenceFrame};
+/// use triplet_screen::solver::Problem;
+/// use triplet_screen::triplet::ActiveWorkset;
+///
+/// let mut rng = Pcg64::seed(7);
+/// let ds = synthetic::gaussian_mixture("doc", 30, 4, 2, 2.5, &mut rng);
+/// let store = TripletStore::from_dataset(&ds, 2, &mut rng);
+/// let engine = NativeEngine::new(1);
+/// let loss = Loss::smoothed_hinge(0.05);
+///
+/// // exact reference at λ_max: M₀ = [ΣH]_+ / λ_max, ε = 0
+/// let lambda0 = Problem::lambda_max(&store, &loss, &engine);
+/// let ones = vec![1.0; store.len()];
+/// let m0 = psd_project(&engine.wgram(&store.a, &store.b, &ones)).scaled(1.0 / lambda0);
+/// let frame = ReferenceFrame::build(
+///     m0, lambda0, 0.0, &store, &engine,
+///     Some((&loss, CertFamilies::rrpb_only())),
+/// );
+///
+/// // certificate sweep: ids provably inactive at 0.9·λ₀, no rule evals
+/// let ws = ActiveWorkset::full(&store);
+/// let (mut cert_l, mut cert_r) = (Vec::new(), Vec::new());
+/// frame.advance(lambda0 * 0.9, &ws, &mut cert_l, &mut cert_r);
+///
+/// // admission query for a candidate the frame has never seen: only the
+/// // scalars ⟨H, M₀⟩ and ‖H‖ are needed
+/// let decision = frame.admission_decision(0.0, 1.0, lambda0 * 0.9, &loss);
+/// assert!(matches!(decision, Admission::Admit | Admission::Certified { .. }));
+/// ```
 pub struct ReferenceFrame {
     m0: Mat,
     lambda0: f64,
@@ -163,18 +228,22 @@ impl ReferenceFrame {
         frame
     }
 
+    /// The reference solution `M₀`.
     pub fn m0(&self) -> &Mat {
         &self.m0
     }
 
+    /// The λ the reference was solved at.
     pub fn lambda0(&self) -> f64 {
         self.lambda0
     }
 
+    /// The reference's accuracy certificate: `‖M₀ − M*_{λ₀}‖_F ≤ ε`.
     pub fn eps(&self) -> f64 {
         self.eps
     }
 
+    /// Cached `‖M₀‖_F`.
     pub fn m0_norm(&self) -> f64 {
         self.m0_norm
     }
@@ -212,6 +281,32 @@ impl ReferenceFrame {
         } else {
             None
         }
+    }
+
+    /// Screen a candidate at admission time from its scalar statistics
+    /// alone: `hm = ⟨H, M₀⟩` and `hn = ‖H‖_F`. The closed-form RRPB
+    /// ranges (Thm 4.1 + the L-side extension) need no per-triplet frame
+    /// state, so this works for ids the frame has **never seen** — the
+    /// miner's not-yet-admitted candidates. The reference `(M₀, λ₀, ε)`
+    /// certifies the *full* problem, so the proof is sound for
+    /// candidates outside the current store. R is checked first,
+    /// matching [`Self::rrpb_sphere_decision`]'s precedence.
+    pub fn admission_decision(&self, hm: f64, hn: f64, lambda: f64, loss: &Loss) -> Admission {
+        let rr = r_range(hm, hn, self.m0_norm, self.eps, self.lambda0, loss.r_threshold());
+        if rr.contains(lambda) {
+            return Admission::Certified {
+                side: CertSide::R,
+                expires: rr.lo.max(0.0),
+            };
+        }
+        let rl = l_range(hm, hn, self.m0_norm, self.eps, self.lambda0, loss.l_threshold());
+        if rl.contains(lambda) {
+            return Admission::Certified {
+                side: CertSide::L,
+                expires: rl.lo.max(0.0),
+            };
+        }
+        Admission::Admit
     }
 
     /// Advance the certificate sweep to `lambda` (strictly below the
@@ -571,6 +666,52 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Admission decisions agree with the closed-form ranges — and the
+    /// expiry endpoint is the range's lower bound, so a rejected
+    /// candidate needs no re-test until the path crosses it.
+    #[test]
+    fn admission_decision_matches_ranges() {
+        let (store, m0, engine) = fixture();
+        let loss = Loss::smoothed_hinge(0.05);
+        let (l0, eps) = (2.5, 1e-3);
+        let frame = ReferenceFrame::build(m0.clone(), l0, eps, &store, &engine, None);
+        let mut hm = vec![0.0; store.len()];
+        engine.margins(&m0, &store.a, &store.b, &mut hm);
+        let mn = m0.norm();
+        let mut certified = 0usize;
+        for t in 0..store.len() {
+            let hn = store.h_norm[t];
+            for k in 1..=10 {
+                let lam = l0 * 0.95f64.powi(k);
+                let rr = r_range(hm[t], hn, mn, eps, l0, loss.r_threshold());
+                let rl = l_range(hm[t], hn, mn, eps, l0, loss.l_threshold());
+                let got = frame.admission_decision(hm[t], hn, lam, &loss);
+                if rr.contains(lam) {
+                    assert_eq!(
+                        got,
+                        Admission::Certified {
+                            side: CertSide::R,
+                            expires: rr.lo.max(0.0),
+                        }
+                    );
+                    certified += 1;
+                } else if rl.contains(lam) {
+                    assert_eq!(
+                        got,
+                        Admission::Certified {
+                            side: CertSide::L,
+                            expires: rl.lo.max(0.0),
+                        }
+                    );
+                    certified += 1;
+                } else {
+                    assert_eq!(got, Admission::Admit);
+                }
+            }
+        }
+        assert!(certified > 0, "fixture produced no certified candidates");
     }
 
     /// The exact RRPB decision helper agrees with the closed forms.

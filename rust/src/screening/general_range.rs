@@ -25,10 +25,15 @@ use super::range::LambdaRange;
 /// pre-contracted against one triplet: `p = ⟨H,A⟩`, `q = ⟨H,B⟩`.
 #[derive(Clone, Copy, Debug)]
 pub struct RangeForm {
+    /// `⟨H, A⟩` — the constant part of the center contraction
     pub p: f64,
+    /// `⟨H, B⟩` — the `1/λ` part of the center contraction
     pub q: f64,
+    /// radius² constant coefficient
     pub a: f64,
+    /// radius² `1/λ` coefficient
     pub b: f64,
+    /// radius² `1/λ²` coefficient
     pub c: f64,
     /// `‖H‖_F²`
     pub hn_sq: f64,

@@ -54,13 +54,51 @@ const RULE_BLOCK: usize = 4096;
 /// Cumulative screening statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ScreeningStats {
+    /// screening-manager invocations
     pub calls: usize,
+    /// triplets newly decided into L̂ across all calls
     pub screened_l: usize,
+    /// triplets newly decided into R̂ across all calls
     pub screened_r: usize,
     /// total triplet-rule evaluations actually performed
     pub rule_evals: usize,
     /// evaluations avoided by the fixed-sphere no-fire memo
     pub skipped: usize,
+    /// streaming admission: candidates tested (the initial mining sweep
+    /// plus every certificate-expiry re-test)
+    pub adm_candidates: usize,
+    /// candidates rejected without workset allocation: L-certified, their
+    /// `H_t` folded into the external L̂ mass
+    pub adm_rejected_l: usize,
+    /// candidates rejected without workset allocation: R-certified (they
+    /// contribute nothing to the problem)
+    pub adm_rejected_r: usize,
+    /// candidates admitted into the workset (rows copied)
+    pub adm_admitted: usize,
+}
+
+impl ScreeningStats {
+    /// Saturating accumulation of another counter set — the path-level
+    /// aggregation primitive. Counters are per-call deltas summed over
+    /// arbitrarily long regularization paths (and over sibling managers),
+    /// so the aggregate must saturate instead of wrapping: telemetry may
+    /// pin at `usize::MAX`, never double back to a small number.
+    pub fn merge(&mut self, other: &ScreeningStats) {
+        self.calls = self.calls.saturating_add(other.calls);
+        self.screened_l = self.screened_l.saturating_add(other.screened_l);
+        self.screened_r = self.screened_r.saturating_add(other.screened_r);
+        self.rule_evals = self.rule_evals.saturating_add(other.rule_evals);
+        self.skipped = self.skipped.saturating_add(other.skipped);
+        self.adm_candidates = self.adm_candidates.saturating_add(other.adm_candidates);
+        self.adm_rejected_l = self.adm_rejected_l.saturating_add(other.adm_rejected_l);
+        self.adm_rejected_r = self.adm_rejected_r.saturating_add(other.adm_rejected_r);
+        self.adm_admitted = self.adm_admitted.saturating_add(other.adm_admitted);
+    }
+
+    /// Candidates rejected at admission time on either side.
+    pub fn adm_rejected(&self) -> usize {
+        self.adm_rejected_l.saturating_add(self.adm_rejected_r)
+    }
 }
 
 /// Reusable per-call scratch lanes (grown once, reused across calls).
@@ -96,6 +134,7 @@ struct BlockOut {
 
 /// Stateful screening engine for one regularization-path run.
 pub struct ScreeningManager {
+    /// the bound × rule configuration this manager evaluates
     pub cfg: ScreeningConfig,
     /// the λ-crossing reference state, shared with the path driver and
     /// any sibling manager (identity tag, `M₀`/`λ₀`/`ε`, margins lane,
@@ -105,10 +144,12 @@ pub struct ScreeningManager {
     /// id-indexed: proven non-firing under the current fixed sphere
     no_fire: Vec<bool>,
     scratch: Scratch,
+    /// cumulative counters (rule evaluations, memo skips, admission)
     pub stats: ScreeningStats,
 }
 
 impl ScreeningManager {
+    /// Fresh manager with empty memo/stats.
     pub fn new(cfg: ScreeningConfig) -> ScreeningManager {
         ScreeningManager {
             cfg,
@@ -147,6 +188,55 @@ impl ScreeningManager {
     /// The installed reference frame, if any.
     pub fn frame(&self) -> Option<&ReferenceFrame> {
         self.frame.as_deref()
+    }
+
+    /// Screen-on-admission over one mined batch (streaming pipeline):
+    /// one margins pass with the frame's `M₀` over the batch rows, then
+    /// the closed-form RRPB ranges per candidate
+    /// ([`ReferenceFrame::admission_decision`]). Fills `hm` with
+    /// `⟨H, M₀⟩` (the caller extends the workset reference-margin lane
+    /// with the admitted entries) and `out` with one decision per batch
+    /// row; admission counters land in [`ScreeningStats`]. Returns false
+    /// — leaving both outputs empty — when no reference frame is
+    /// installed (admission cannot prove anything without one).
+    pub fn admit_batch(
+        &mut self,
+        batch: &crate::triplet::CandidateBatch,
+        lambda: f64,
+        loss: &crate::loss::Loss,
+        engine: &dyn Engine,
+        hm: &mut Vec<f64>,
+        out: &mut Vec<super::frame::Admission>,
+    ) -> bool {
+        use super::frame::Admission;
+        use super::CertSide;
+        hm.clear();
+        out.clear();
+        let Some(frame) = self.frame.as_deref() else {
+            return false;
+        };
+        hm.resize(batch.len(), 0.0);
+        if !batch.is_empty() {
+            engine.margins(frame.m0(), &batch.a, &batch.b, hm);
+        }
+        out.reserve(batch.len());
+        for t in 0..batch.len() {
+            let decision = frame.admission_decision(hm[t], batch.h_norm[t], lambda, loss);
+            self.stats.adm_candidates = self.stats.adm_candidates.saturating_add(1);
+            match decision {
+                Admission::Admit => {
+                    self.stats.adm_admitted = self.stats.adm_admitted.saturating_add(1);
+                }
+                Admission::Certified { side: CertSide::L, .. } => {
+                    self.stats.adm_rejected_l = self.stats.adm_rejected_l.saturating_add(1);
+                }
+                Admission::Certified { side: CertSide::R, .. } => {
+                    self.stats.adm_rejected_r = self.stats.adm_rejected_r.saturating_add(1);
+                }
+            }
+            out.push(decision);
+        }
+        true
     }
 
     /// Build the configured sphere from the current solver state.
@@ -545,6 +635,88 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn stats_merge_saturates_instead_of_wrapping() {
+        // the path-level aggregation runs over arbitrarily long paths and
+        // multiple managers — near-ceiling counters must pin at MAX, not
+        // wrap (which would read as a tiny count in telemetry)
+        let mut a = ScreeningStats {
+            calls: usize::MAX - 1,
+            rule_evals: usize::MAX,
+            skipped: 3,
+            adm_candidates: usize::MAX - 2,
+            ..Default::default()
+        };
+        let b = ScreeningStats {
+            calls: 7,
+            rule_evals: 9,
+            skipped: 4,
+            adm_candidates: 5,
+            adm_rejected_l: 2,
+            adm_rejected_r: 1,
+            adm_admitted: 8,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.calls, usize::MAX);
+        assert_eq!(a.rule_evals, usize::MAX);
+        assert_eq!(a.skipped, 7);
+        assert_eq!(a.adm_candidates, usize::MAX);
+        assert_eq!(a.adm_rejected_l, 2);
+        assert_eq!(a.adm_rejected_r, 1);
+        assert_eq!(a.adm_admitted, 8);
+        assert_eq!(
+            ScreeningStats {
+                adm_rejected_l: usize::MAX,
+                adm_rejected_r: 1,
+                ..Default::default()
+            }
+            .adm_rejected(),
+            usize::MAX
+        );
+    }
+
+    #[test]
+    fn admit_batch_splits_batch_and_counts() {
+        // admission over a mined batch must agree candidate-by-candidate
+        // with the frame's closed-form decision, and the stats counters
+        // must add up to the batch size
+        let f = fix(6);
+        let l0 = f.lmax * 0.4;
+        let m0 = exact_solution(&f, l0);
+        let lambda = l0 * 0.8;
+        let mut mgr = ScreeningManager::new(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+
+        // no frame installed: admission refuses to decide
+        let mut rng = crate::util::rng::Pcg64::seed(77);
+        let ds = synthetic::gaussian_mixture("adm", 40, 4, 3, 2.6, &mut rng);
+        let mut miner = crate::triplet::TripletMiner::new(
+            &ds,
+            3,
+            crate::triplet::MiningStrategy::Exhaustive,
+            64,
+        );
+        let mut batch = crate::triplet::CandidateBatch::new(ds.d());
+        assert!(miner.next_into(&mut batch));
+        let (mut hm, mut out) = (Vec::new(), Vec::new());
+        assert!(!mgr.admit_batch(&batch, lambda, &f.loss, &f.engine, &mut hm, &mut out));
+        assert!(hm.is_empty() && out.is_empty());
+        assert_eq!(mgr.stats.adm_candidates, 0);
+
+        // with the frame: decisions match admission_decision, counters add up
+        mgr.set_reference(m0.clone(), l0, 1e-9, &f.store, &f.engine);
+        assert!(mgr.admit_batch(&batch, lambda, &f.loss, &f.engine, &mut hm, &mut out));
+        assert_eq!(out.len(), batch.len());
+        assert_eq!(hm.len(), batch.len());
+        let frame = mgr.frame().expect("frame installed");
+        for t in 0..batch.len() {
+            let want = frame.admission_decision(hm[t], batch.h_norm[t], lambda, &f.loss);
+            assert_eq!(out[t], want, "candidate {t} decision diverged");
+        }
+        assert_eq!(mgr.stats.adm_candidates, batch.len());
+        assert_eq!(mgr.stats.adm_admitted + mgr.stats.adm_rejected(), batch.len());
     }
 
     #[test]

@@ -70,7 +70,7 @@ pub mod rules;
 pub mod sdls;
 
 pub use bounds::Sphere;
-pub use frame::{CertFamilies, CertSide, Certificate, ReferenceFrame};
+pub use frame::{Admission, CertFamilies, CertSide, Certificate, ReferenceFrame};
 pub use manager::{ScreeningManager, ScreeningStats};
 pub use range::{l_range, r_range, LambdaRange};
 
@@ -92,6 +92,7 @@ pub enum BoundKind {
 }
 
 impl BoundKind {
+    /// The paper's name for the bound (table/label rendering).
     pub fn name(&self) -> &'static str {
         match self {
             BoundKind::Gb => "GB",
@@ -121,6 +122,7 @@ pub enum RuleKind {
 }
 
 impl RuleKind {
+    /// Lower-case rule name (CLI/label rendering).
     pub fn name(&self) -> &'static str {
         match self {
             RuleKind::Sphere => "sphere",
@@ -133,7 +135,9 @@ impl RuleKind {
 /// Full screening configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ScreeningConfig {
+    /// which sphere bound to construct (§3.2)
     pub bound: BoundKind,
+    /// which rule to evaluate on it (§3.1)
     pub rule: RuleKind,
     /// max SDLS dual-ascent iterations per triplet
     pub sdls_max_iter: usize,
@@ -146,6 +150,7 @@ pub struct ScreeningConfig {
 }
 
 impl ScreeningConfig {
+    /// Configuration with the default memo/SDLS knobs.
     pub fn new(bound: BoundKind, rule: RuleKind) -> ScreeningConfig {
         ScreeningConfig {
             bound,
@@ -155,6 +160,7 @@ impl ScreeningConfig {
         }
     }
 
+    /// The paper's combination label, e.g. `RRPB` or `PGB+linear`.
     pub fn label(&self) -> String {
         match self.rule {
             RuleKind::Sphere => self.bound.name().to_string(),

@@ -17,20 +17,25 @@
 /// A (possibly empty / half-open) λ interval `(lo, hi)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LambdaRange {
+    /// lower endpoint (exclusive)
     pub lo: f64,
+    /// upper endpoint (exclusive)
     pub hi: f64,
 }
 
 impl LambdaRange {
+    /// The canonical empty interval (`lo > hi`).
     pub const EMPTY: LambdaRange = LambdaRange {
         lo: f64::INFINITY,
         hi: f64::NEG_INFINITY,
     };
 
+    /// Whether no λ satisfies the interval.
     pub fn is_empty(&self) -> bool {
         !(self.lo < self.hi)
     }
 
+    /// Strict interior membership: `lo < λ < hi`.
     pub fn contains(&self, lambda: f64) -> bool {
         self.lo < lambda && lambda < self.hi
     }

@@ -16,13 +16,29 @@
 /// Decision for one triplet.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Decision {
+    /// the rule cannot conclude: the triplet stays active
     None,
+    /// proven `t ∈ L*` (α* = 1)
     ScreenL,
+    /// proven `t ∈ R*` (α* = 0)
     ScreenR,
 }
 
 /// Plain sphere rule (eq. (5) + its R1 twin):
 ///   `hq − r·hn > thr_r` ⟹ R*,  `hq + r·hn < thr_l` ⟹ L*.
+///
+/// The extreme inner products over the sphere are `hq ± r·hn`
+/// (Cauchy–Schwarz), so one comparison per side decides:
+///
+/// ```
+/// use triplet_screen::screening::rules::{sphere_rule, Decision};
+/// // min over the sphere = 2.0 − 0.5·1.0 = 1.5 > 1    ⟹ t ∈ R*
+/// assert_eq!(sphere_rule(2.0, 1.0, 0.5, 0.95, 1.0), Decision::ScreenR);
+/// // max over the sphere = 0.2 + 0.5·1.0 = 0.7 < 0.95 ⟹ t ∈ L*
+/// assert_eq!(sphere_rule(0.2, 1.0, 0.5, 0.95, 1.0), Decision::ScreenL);
+/// // a wide radius straddles both thresholds ⟹ undecided
+/// assert_eq!(sphere_rule(1.0, 1.0, 5.0, 0.95, 1.0), Decision::None);
+/// ```
 #[inline]
 pub fn sphere_rule(hq: f64, hn: f64, r: f64, thr_l: f64, thr_r: f64) -> Decision {
     if hq - r * hn > thr_r {

@@ -26,6 +26,7 @@ use crate::linalg::{min_eigpair, psd_split, Mat};
 pub struct SdlsQuery<'a> {
     /// sphere center
     pub q: &'a Mat,
+    /// cached `‖Q‖_F²`
     pub q_norm_sq: f64,
     /// is `q` PSD by construction? (enables the min-eig fast path)
     pub psd_center: bool,
@@ -33,6 +34,7 @@ pub struct SdlsQuery<'a> {
     pub r_sq: f64,
     /// triplet difference rows: `H = a a^T − b b^T`
     pub a: &'a [f64],
+    /// same-class difference row (the `− b bᵀ` part of `H`)
     pub b: &'a [f64],
     /// `⟨H, Q⟩` (from the margins pass with Q)
     pub hq: f64,

@@ -30,6 +30,7 @@ struct WsCache {
 
 /// Active-set wrapper around the PGD inner loop.
 pub struct ActiveSetSolver {
+    /// inner-solver configuration
     pub cfg: SolverConfig,
     /// inner PGD iterations between full refreshes (paper: 10)
     pub refresh_every: usize,
@@ -39,6 +40,7 @@ pub struct ActiveSetSolver {
 }
 
 impl ActiveSetSolver {
+    /// Wrap a configuration with the paper's refresh/buffer defaults.
     pub fn new(cfg: SolverConfig) -> ActiveSetSolver {
         ActiveSetSolver {
             cfg,
@@ -118,6 +120,18 @@ impl ActiveSetSolver {
             }
 
             // ---- working-set selection on fresh full margins ----
+            // effective screened-L mass: the store-rowed H_L plus the
+            // streaming pipeline's row-less external L̂ mass — the inner
+            // gradient must see both or the subproblem would drift from
+            // the problem the outer gap certifies
+            let h_l_ext: Option<Mat> = if problem.n_external_l() > 0 {
+                let mut h = problem.h_l().clone();
+                h.axpy(1.0, problem.external_h_l());
+                Some(h)
+            } else {
+                None
+            };
+            let h_l_eff: &Mat = h_l_ext.as_ref().unwrap_or(problem.h_l());
             let threshold = problem.loss.r_threshold() + self.buffer;
             let w_local: Vec<usize> = ev
                 .margins
@@ -129,7 +143,7 @@ impl ActiveSetSolver {
             if w_local.is_empty() {
                 // nothing active: P̃ is quadratic + linear; one exact step
                 // M = [H_L]_+ / λ
-                m = timers.eig.time(|| psd_split(problem.h_l())).plus;
+                m = timers.eig.time(|| psd_split(h_l_eff)).plus;
                 m.scale(1.0 / lambda);
                 inner_iters += 1;
                 continue 'outer;
@@ -160,7 +174,7 @@ impl ActiveSetSolver {
                     .compute
                     .time(|| engine.step(m, a_w, b_w, problem.loss.gamma, margins_w));
                 let mut k = g;
-                k.axpy(1.0, problem.h_l());
+                k.axpy(1.0, h_l_eff);
                 let mut grad = m.scaled(lambda);
                 grad.axpy(-1.0, &k);
                 grad

@@ -28,6 +28,7 @@ use crate::util::timer::PhaseTimers;
 pub struct DualConfig {
     /// duality-gap tolerance, relative to max(1, |P|)
     pub tol: f64,
+    /// hard iteration cap
     pub max_iters: usize,
 }
 
@@ -43,11 +44,17 @@ impl Default for DualConfig {
 /// Dual solve outcome.
 #[derive(Clone, Debug, Default)]
 pub struct DualStats {
+    /// ascent iterations performed
     pub iters: usize,
+    /// primal value at the induced `M_λ(α)`
     pub p: f64,
+    /// dual value at the returned α
     pub d: f64,
+    /// `p − d`
     pub gap: f64,
+    /// whether the gap tolerance was reached
     pub converged: bool,
+    /// time spent per phase
     pub timers: PhaseTimers,
 }
 
@@ -72,23 +79,35 @@ pub fn solve_dual(
     let mut grad = vec![0.0; n];
     let mut prev: Option<(Vec<f64>, Vec<f64>)> = None;
 
+    // effective screened-L mass: the store-rowed H_L plus the streaming
+    // pipeline's row-less external L̂ mass (Problem::set_external_l) —
+    // both carry α = 1, so K, D and P must all see them
+    let h_l_ext: Option<crate::linalg::Mat> = if problem.n_external_l() > 0 {
+        let mut h = problem.h_l().clone();
+        h.axpy(1.0, problem.external_h_l());
+        Some(h)
+    } else {
+        None
+    };
+    let h_l_eff: &crate::linalg::Mat = h_l_ext.as_ref().unwrap_or(problem.h_l());
+    let fixed_l = (problem.n_screened_l() + problem.n_external_l()) as f64;
+
     let eval = |alpha: &[f64],
                 margins: &mut [f64],
                 timers: &mut PhaseTimers|
      -> (f64, f64, crate::linalg::Mat) {
-        // K = Σ α H (+ screened-L aggregate), M = [K]_+/λ
+        // K = Σ α H (+ screened-L aggregates), M = [K]_+/λ
         let mut k = timers.compute.time(|| engine.wgram(a_act, b_act, alpha));
-        k.axpy(1.0, problem.h_l());
+        k.axpy(1.0, h_l_eff);
         let split = timers.eig.time(|| psd_split(&k));
         let m = split.plus.scaled(1.0 / lambda);
         timers.compute.time(|| engine.margins(&m, a_act, b_act, margins));
-        // D(α) over active ∪ screened (screened-L: α=1)
-        let n_l = problem.n_screened_l() as f64;
-        let asq: f64 = alpha.iter().map(|a| a * a).sum::<f64>() + n_l;
-        let asum: f64 = alpha.iter().sum::<f64>() + n_l;
+        // D(α) over active ∪ screened (screened-L, rowed or external: α=1)
+        let asq: f64 = alpha.iter().map(|a| a * a).sum::<f64>() + fixed_l;
+        let asum: f64 = alpha.iter().sum::<f64>() + fixed_l;
         let d_val = -0.5 * gamma * asq + asum - split.plus.norm_sq() / (2.0 * lambda);
         // P(M) for the gap
-        let mut p = 0.5 * lambda * m.norm_sq() + (1.0 - gamma / 2.0) * n_l - m.dot(problem.h_l());
+        let mut p = 0.5 * lambda * m.norm_sq() + (1.0 - gamma / 2.0) * fixed_l - m.dot(h_l_eff);
         for &mg in margins.iter() {
             p += problem.loss.value(mg);
         }
@@ -188,6 +207,52 @@ mod tests {
         // primal iterate PSD
         let e = crate::linalg::sym_eig(&m);
         assert!(e.values[0] > -1e-9);
+    }
+
+    #[test]
+    fn external_l_mass_enters_the_dual() {
+        // the row-less external L̂ mass (streaming pipeline) must make
+        // solve_dual behave exactly like screening the same triplets
+        // into L̂ the row-carrying way — same K, same D/P, same M
+        let store = setup(4);
+        let loss = Loss::smoothed_hinge(0.05);
+        let engine = NativeEngine::new(2);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        let lambda = lmax * 0.3;
+        let ext_ids = [0usize, 5, 11];
+
+        let mut with_rows = Problem::new(&store, loss, lambda);
+        with_rows.apply_screening(&ext_ids, &[]);
+
+        let mut small = TripletStore::empty(store.d);
+        for t in 0..store.len() {
+            if !ext_ids.contains(&t) {
+                small.push(store.idx[t], store.a.row(t), store.b.row(t), store.h_norm[t]);
+            }
+        }
+        let mut h_ext = Mat::zeros(store.d, store.d);
+        for &t in &ext_ids {
+            h_ext.add_h_outer(store.a.row(t), store.b.row(t), 1.0);
+        }
+        let mut rowless = Problem::new(&small, loss, lambda);
+        rowless.set_external_l(&h_ext, ext_ids.len());
+
+        let cfg = DualConfig {
+            tol: 1e-8,
+            max_iters: 50_000,
+        };
+        let (m_a, s_a) = solve_dual(&with_rows, &engine, &cfg);
+        let (m_b, s_b) = solve_dual(&rowless, &engine, &cfg);
+        assert_eq!(s_a.converged, s_b.converged);
+        // the two active sets hold the same triplets (different row
+        // order), so the solved problems are identical; both runs are
+        // gap-certified around the same optimum
+        let p_tol = (s_a.gap.max(0.0) + s_b.gap.max(0.0)) + 1e-7 * (1.0 + s_a.p.abs());
+        assert!((s_a.p - s_b.p).abs() < p_tol, "P {} vs {}", s_a.p, s_b.p);
+        assert!((s_a.d - s_b.d).abs() < p_tol, "D {} vs {}", s_a.d, s_b.d);
+        let diff = m_a.sub(&m_b).max_abs();
+        let bound = (2.0 * (s_a.gap.max(0.0) + s_b.gap.max(0.0)) / lambda).sqrt() + 1e-4;
+        assert!(diff < bound.max(1e-3), "M drifted by {diff} (bound {bound})");
     }
 
     #[test]

@@ -10,4 +10,4 @@ mod problem;
 pub use active_set::ActiveSetSolver;
 pub use dual_ascent::{solve_dual, DualConfig, DualStats};
 pub use pgd::{ScreenCtx, SolveStats, Solver, SolverConfig};
-pub use problem::{EvalOut, Problem, RetargetStats};
+pub use problem::{EvalOut, Problem, ProblemState, RetargetStats};

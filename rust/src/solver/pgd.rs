@@ -24,6 +24,7 @@ pub struct SolverConfig {
     /// interpret `tol` relative to max(1, |P̃|) (paper uses absolute 1e-6;
     /// relative is the robust default for synthetic scales)
     pub tol_relative: bool,
+    /// hard iteration cap
     pub max_iters: usize,
     /// dynamic-screening cadence (0 = never; paper: every 10 iterations)
     pub screen_every: usize,
@@ -62,31 +63,41 @@ pub struct ScreenCtx<'s> {
     pub pre_split: Option<&'s PsdSplit>,
     /// margins of active triplets at `m`, aligned with `problem.active_idx()`
     pub margins: &'s [f64],
+    /// solver iteration the screening point was taken at
     pub iter: usize,
 }
 
 /// Outcome statistics of one solve.
 #[derive(Clone, Debug, Default)]
 pub struct SolveStats {
+    /// iterations performed
     pub iters: usize,
+    /// reduced primal at the returned iterate
     pub p: f64,
+    /// duality gap at the returned iterate
     pub gap: f64,
+    /// whether the gap tolerance was reached
     pub converged: bool,
+    /// triplets newly screened into L̂ during this solve
     pub screen_l: usize,
+    /// triplets newly screened into R̂ during this solve
     pub screen_r: usize,
     /// active-set working-subproblem cache hits: refreshes whose selected
     /// ids were unchanged, so the row copies were reused (see
     /// [`crate::solver::ActiveSetSolver`]); always 0 for the plain solver
     pub ws_reuses: usize,
+    /// time spent per phase (compute / eig / screening)
     pub timers: PhaseTimers,
 }
 
 /// Projected-gradient RTLM solver.
 pub struct Solver {
+    /// solver configuration
     pub cfg: SolverConfig,
 }
 
 impl Solver {
+    /// Wrap a configuration.
     pub fn new(cfg: SolverConfig) -> Solver {
         Solver { cfg }
     }

@@ -68,10 +68,46 @@ pub struct RetargetStats {
     pub newly_screened: usize,
 }
 
+/// Everything a [`Problem`] owns besides the store borrow — the
+/// streamed-path handoff: the driver calls [`Problem::into_state`], grows
+/// the backing store with newly admitted triplets, and rebuilds via
+/// [`Problem::resume`], which ingests the new ids through the revive
+/// machinery. All screening decisions, the compacted workset rows and
+/// the `H_L` aggregates survive the crossing untouched.
+pub struct ProblemState {
+    status: StatusVec,
+    workset: ActiveWorkset,
+    h_l: Mat,
+    n_l: usize,
+    ext_h_l: Mat,
+    ext_n_l: usize,
+}
+
+impl ProblemState {
+    /// Ids this state covers (the store length at `into_state` time).
+    pub fn len(&self) -> usize {
+        self.status.len()
+    }
+
+    /// Whether the state covers no ids.
+    pub fn is_empty(&self) -> bool {
+        self.status.is_empty()
+    }
+
+    /// Extract the final per-triplet screening status (diagnostics /
+    /// safety oracles on the streamed path's admitted store).
+    pub fn into_status(self) -> StatusVec {
+        self.status
+    }
+}
+
 /// One RTLM problem: store + loss + λ + screening state.
 pub struct Problem<'a> {
+    /// the backing triplet set (admitted set, for a streamed source)
     pub store: &'a TripletStore,
+    /// the loss defining thresholds and duals
     pub loss: Loss,
+    /// current regularization weight
     pub lambda: f64,
     status: StatusVec,
     /// compacted active set (swap-remove arena, permanently retires
@@ -80,12 +116,23 @@ pub struct Problem<'a> {
     // ---- screened-L aggregates ----
     h_l: Mat,
     n_l: usize,
+    /// external (row-less) L̂ mass: `Σ H_t` and count over triplets the
+    /// admission screen certified into L* that were never copied into
+    /// the store (streaming pipeline). Enters the objective, gradient
+    /// and dual exactly like screened-L triplets; owned bookkeeping-wise
+    /// by the path driver, which re-installs it per λ via
+    /// [`Problem::set_external_l`]. Untouched by `reset_for_lambda` /
+    /// `retarget_lambda`: the problem cannot revive a row-less triplet,
+    /// so dropping the mass silently would be unsafe.
+    ext_h_l: Mat,
+    ext_n_l: usize,
     /// reusable per-id coverage marks for `retarget_lambda`
     /// (0 = uncovered, 1 = L, 2 = R)
     retarget_mark: Vec<u8>,
 }
 
 impl<'a> Problem<'a> {
+    /// Fresh, unscreened problem over every triplet of `store`.
     pub fn new(store: &'a TripletStore, loss: Loss, lambda: f64) -> Problem<'a> {
         assert!(lambda > 0.0, "lambda must be positive");
         let n = store.len();
@@ -97,6 +144,71 @@ impl<'a> Problem<'a> {
             workset: ActiveWorkset::full(store),
             h_l: Mat::zeros(store.d, store.d),
             n_l: 0,
+            ext_h_l: Mat::zeros(store.d, store.d),
+            ext_n_l: 0,
+            retarget_mark: Vec::new(),
+        }
+    }
+
+    /// Tear the problem down to its owned state so the backing store can
+    /// be grown (streaming admission); see [`ProblemState`].
+    pub fn into_state(self) -> ProblemState {
+        ProblemState {
+            status: self.status,
+            workset: self.workset,
+            h_l: self.h_l,
+            n_l: self.n_l,
+            ext_h_l: self.ext_h_l,
+            ext_n_l: self.ext_n_l,
+        }
+    }
+
+    /// Rebuild a problem around a store that may have **grown** since
+    /// [`Self::into_state`] (streaming admission appends rows; existing
+    /// ids never move). Newly appended store ids are ingested as Active
+    /// workset rows through the revive machinery, so admitted candidates
+    /// enter the reduced problem exactly like certificate-expired
+    /// revives. The caller still runs [`Self::retarget_lambda`] to apply
+    /// certificate coverage at the new λ.
+    pub fn resume(
+        store: &'a TripletStore,
+        loss: Loss,
+        lambda: f64,
+        state: ProblemState,
+    ) -> Problem<'a> {
+        assert!(lambda > 0.0, "lambda must be positive");
+        let ProblemState {
+            mut status,
+            mut workset,
+            h_l,
+            n_l,
+            ext_h_l,
+            ext_n_l,
+        } = state;
+        let old_n = status.len();
+        assert!(
+            old_n <= store.len(),
+            "state covers {} ids but the store holds {}",
+            old_n,
+            store.len()
+        );
+        assert_eq!(h_l.rows(), store.d, "state dimension mismatch");
+        status.extend_active(store.len() - old_n);
+        workset.extend_ids(store.len() - old_n);
+        for id in old_n..store.len() {
+            let fresh = workset.revive(id, store);
+            assert!(fresh, "ingested id {id} was already active");
+        }
+        Problem {
+            store,
+            loss,
+            lambda,
+            status,
+            workset,
+            h_l,
+            n_l,
+            ext_h_l,
+            ext_n_l,
             retarget_mark: Vec::new(),
         }
     }
@@ -179,16 +291,37 @@ impl<'a> Problem<'a> {
         st
     }
 
+    /// Per-triplet screening status.
     pub fn status(&self) -> &StatusVec {
         &self.status
     }
 
+    /// Feature dimension.
     pub fn d(&self) -> usize {
         self.store.d
     }
 
+    /// Triplets currently fixed into L̂ **with store rows** (excludes the
+    /// external row-less mass; see [`Self::n_external_l`]).
     pub fn n_screened_l(&self) -> usize {
         self.n_l
+    }
+
+    /// Row-less admission-certified L̂ triplets currently installed.
+    pub fn n_external_l(&self) -> usize {
+        self.ext_n_l
+    }
+
+    /// Install the external (row-less) L̂ mass: `h = Σ H_t` and `n` the
+    /// count over triplets the admission screen certified into L* without
+    /// ever copying their rows (streaming pipeline). Replaces any
+    /// previously installed mass; the path driver owns the bookkeeping
+    /// and re-installs after every certificate transition.
+    pub fn set_external_l(&mut self, h: &Mat, n: usize) {
+        assert_eq!(h.rows(), self.store.d, "external H_L dimension mismatch");
+        assert_eq!(h.cols(), self.store.d, "external H_L dimension mismatch");
+        self.ext_h_l = h.clone();
+        self.ext_n_l = n;
     }
 
     /// The compacted active workset (read-only view).
@@ -201,10 +334,12 @@ impl<'a> Problem<'a> {
         self.workset.ids()
     }
 
+    /// Compacted `x_i − x_l` rows of the active triplets.
     pub fn active_a(&self) -> &Mat {
         self.workset.a()
     }
 
+    /// Compacted `x_i − x_j` rows of the active triplets.
     pub fn active_b(&self) -> &Mat {
         self.workset.b()
     }
@@ -237,9 +372,17 @@ impl<'a> Problem<'a> {
         self.workset.ref_margins(tag)
     }
 
-    /// `H_L = Σ_{t ∈ L̂} H_t`.
+    /// `H_L = Σ_{t ∈ L̂} H_t` over the store-rowed L̂ (excludes the
+    /// external mass; see [`Self::external_h_l`]).
     pub fn h_l(&self) -> &Mat {
         &self.h_l
+    }
+
+    /// The external (row-less) L̂ mass installed by
+    /// [`Self::set_external_l`] — zeros unless the streaming pipeline
+    /// installed one.
+    pub fn external_h_l(&self) -> &Mat {
+        &self.ext_h_l
     }
 
     /// Apply screening decisions (triplet ids). Retires each id from the
@@ -281,19 +424,13 @@ impl<'a> Problem<'a> {
     /// usual a-few-ulps summation residue (well inside every tolerance
     /// the oracle identities assert).
     fn h_l_rank2(&mut self, t: usize, sign: f64) {
-        let (ra, rb) = (self.store.a.row(t), self.store.b.row(t));
-        for i in 0..self.store.d {
-            let (ai, bi) = (sign * ra[i], sign * rb[i]);
-            let row = self.h_l.row_mut(i);
-            for j in 0..self.store.d {
-                row[j] += ai * ra[j] - bi * rb[j];
-            }
-        }
+        self.h_l.add_h_outer(self.store.a.row(t), self.store.b.row(t), sign);
     }
 
-    /// Constant part of P̃ contributed by L̂: `(1 − γ/2)|L̂|`.
+    /// Constant part of P̃ contributed by L̂ (store-rowed + external):
+    /// `(1 − γ/2)|L̂|`.
     fn l_const(&self) -> f64 {
-        (1.0 - self.loss.gamma / 2.0) * self.n_l as f64
+        (1.0 - self.loss.gamma / 2.0) * (self.n_l + self.ext_n_l) as f64
     }
 
     /// Evaluate P̃, K = Σ α_t H_t and margins at `M`.
@@ -311,8 +448,14 @@ impl<'a> Problem<'a> {
         });
         let mut k = g;
         k.axpy(1.0, &self.h_l);
-        let p = loss_sum + self.l_const() - m.dot(&self.h_l)
+        let mut p = loss_sum + self.l_const() - m.dot(&self.h_l)
             + 0.5 * self.lambda * m.norm_sq();
+        if self.ext_n_l > 0 {
+            // row-less admission-certified L̂ mass (streaming pipeline);
+            // gated so the materialized hot path pays nothing
+            k.axpy(1.0, &self.ext_h_l);
+            p -= m.dot(&self.ext_h_l);
+        }
         EvalOut { p, k, margins }
     }
 
@@ -343,8 +486,9 @@ impl<'a> Problem<'a> {
             alpha_sq += a * a;
             alpha_sum += a;
         }
-        alpha_sq += self.n_l as f64; // α = 1 on L̂
-        alpha_sum += self.n_l as f64;
+        let fixed_l = (self.n_l + self.ext_n_l) as f64;
+        alpha_sq += fixed_l; // α = 1 on L̂ (store-rowed and external)
+        alpha_sum += fixed_l;
         let split = timers.eig.time(|| psd_split(k));
         let d_val =
             -0.5 * gamma * alpha_sq + alpha_sum - split.plus.norm_sq() / (2.0 * self.lambda);
@@ -361,6 +505,15 @@ impl<'a> Problem<'a> {
         let mut hq = vec![0.0; store.len()];
         engine.margins(&plus, &store.a, &store.b, &mut hq);
         let max_hq = hq.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Self::lambda_max_from_parts(max_hq, loss)
+    }
+
+    /// The λ_max closed form from its precomputed numerator
+    /// `max_hq = max_t ⟨H_t, [ΣH]_+⟩` — shared with the streamed driver
+    /// ([`crate::triplet::TripletMiner::max_margin_streamed`] computes the
+    /// numerator without materializing the store), so the two pipelines
+    /// can never walk different λ grids because one clamp was edited.
+    pub fn lambda_max_from_parts(max_hq: f64, loss: &Loss) -> f64 {
         let denom = (1.0 - loss.gamma).max(1e-12);
         (max_hq / denom).max(1e-12)
     }
@@ -616,6 +769,96 @@ mod tests {
         assert!(p_out.k.sub(&f_out.k).max_abs() < 1e-10);
         assert_eq!(persistent.workset().len(), fresh.workset().len());
         persistent.workset().assert_consistent(&store);
+    }
+
+    #[test]
+    fn resume_ingests_grown_store_ids_as_active() {
+        // streaming admission: screen some triplets, tear down to state,
+        // grow the store, resume — old decisions survive, new ids are
+        // active, and evaluation matches a fresh problem on the full set
+        let (store, loss) = setup();
+        let engine = NativeEngine::new(2);
+        let keep = store.len() - 6;
+        let mut grown = TripletStore::empty(store.d);
+        for t in 0..keep {
+            grown.push(store.idx[t], store.a.row(t), store.b.row(t), store.h_norm[t]);
+        }
+        let mut prob = Problem::new(&grown, loss, 5.0);
+        prob.apply_screening(&[0, 2], &[4]);
+        let state = prob.into_state();
+        assert_eq!(state.len(), keep);
+        for t in keep..store.len() {
+            grown.push(store.idx[t], store.a.row(t), store.b.row(t), store.h_norm[t]);
+        }
+        let prob = Problem::resume(&grown, loss, 4.0, state);
+        assert_eq!(prob.lambda, 4.0);
+        assert_eq!(prob.status().len(), store.len());
+        assert_eq!(prob.status().n_active(), store.len() - 3);
+        for id in keep..store.len() {
+            assert!(prob.workset().is_active(id), "ingested id {id} not active");
+        }
+        assert!(!prob.workset().is_active(0));
+        prob.workset().assert_consistent(&grown);
+
+        // evaluation parity with a from-scratch problem carrying the
+        // same decisions over the same (full) store
+        let mut fresh = Problem::new(&grown, loss, 4.0);
+        fresh.apply_screening(&[0, 2], &[4]);
+        let mut rng = Pcg64::seed(23);
+        let mut b = Mat::from_fn(4, 4, |_, _| rng.normal());
+        b = b.matmul(&b.transpose()).scaled(0.03);
+        let mut timers = PhaseTimers::default();
+        let p_out = prob.eval(&b, &engine, &mut timers);
+        let f_out = fresh.eval(&b, &engine, &mut timers);
+        assert!((p_out.p - f_out.p).abs() < 1e-10 * (1.0 + f_out.p.abs()));
+        assert!(p_out.k.sub(&f_out.k).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn external_l_mass_matches_screened_l() {
+        // the row-less external L̂ mass must make the objective, gradient
+        // and dual indistinguishable from screening the same triplets
+        // into L̂ the ordinary (row-carrying) way
+        let (store, loss) = setup();
+        let engine = NativeEngine::new(2);
+        let lambda = 5.0;
+        let ext_ids = [1usize, 3, 8];
+
+        // reference: ordinary screened-L problem over the full store
+        let mut with_rows = Problem::new(&store, loss, lambda);
+        with_rows.apply_screening(&ext_ids, &[]);
+
+        // streamed analogue: a store WITHOUT those triplets + external mass
+        let mut small = TripletStore::empty(store.d);
+        for t in 0..store.len() {
+            if !ext_ids.contains(&t) {
+                small.push(store.idx[t], store.a.row(t), store.b.row(t), store.h_norm[t]);
+            }
+        }
+        let mut h_ext = Mat::zeros(store.d, store.d);
+        for &t in &ext_ids {
+            h_ext.add_h_outer(store.a.row(t), store.b.row(t), 1.0);
+        }
+        let mut rowless = Problem::new(&small, loss, lambda);
+        rowless.set_external_l(&h_ext, ext_ids.len());
+        assert_eq!(rowless.n_external_l(), ext_ids.len());
+
+        let mut rng = Pcg64::seed(29);
+        let mut b = Mat::from_fn(4, 4, |_, _| rng.normal());
+        b = b.matmul(&b.transpose()).scaled(0.02);
+        let mut timers = PhaseTimers::default();
+        let a_out = with_rows.eval(&b, &engine, &mut timers);
+        let b_out = rowless.eval(&b, &engine, &mut timers);
+        assert!(
+            (a_out.p - b_out.p).abs() < 1e-9 * (1.0 + a_out.p.abs()),
+            "P̃ with rows {} vs row-less {}",
+            a_out.p,
+            b_out.p
+        );
+        assert!(a_out.k.sub(&b_out.k).max_abs() < 1e-9);
+        let (da, _) = with_rows.dual(&a_out.margins, &a_out.k, &mut timers);
+        let (db, _) = rowless.dual(&b_out.margins, &b_out.k, &mut timers);
+        assert!((da - db).abs() < 1e-9 * (1.0 + da.abs()), "dual {da} vs {db}");
     }
 
     #[test]

@@ -1,0 +1,621 @@
+//! Streaming triplet mining: the candidate set is *generated lazily* from
+//! the k-NN structure instead of materialized up front.
+//!
+//! The paper's central pain point is that "the number of possible triplets
+//! is quite huge even for a small dataset" — the dense [`super::TripletStore`]
+//! costs O(|T|·d) memory before screening ever runs. The miner attacks |T|
+//! from the other end: it enumerates the paper's §5 candidate universe
+//! (for each anchor `x_i`, its `k` nearest same-class neighbors × `k`
+//! nearest different-class instances) in **cache-sized batches**, so the
+//! only per-candidate state that ever becomes resident is
+//!
+//! - a row in the admitted store, for candidates the admission screen
+//!   could *not* decide (they enter the reduced problem), or
+//! - a 24-byte [`PendingCert`] record (id triple + side + expiry λ), for
+//!   candidates the RRPB closed forms proved inactive at the current λ —
+//!   ~100× smaller than the two `d`-vector difference rows for typical d.
+//!
+//! Screening therefore bounds *memory*, not just compute: the path driver
+//! ([`crate::path::RegPath::run_streamed`]) tests every candidate against
+//! the current [`crate::screening::ReferenceFrame`] before a single row is
+//! copied, and the workset peaks at the undecided subset instead of |T|.
+//!
+//! Three [`MiningStrategy`] orders are provided. `Exhaustive` reproduces
+//! the exact candidate set (and enumeration order) of
+//! [`TripletStore::from_dataset`], so the streamed and materialized
+//! pipelines solve the same problem — the safety oracle in
+//! `rust/tests/workset_safety.rs` relies on this. The other two reorder
+//! (and, under a budget, subsample) the universe for the mining use cases
+//! of Poorheravi et al. (arXiv:2009.14244): class-stratified sampling and
+//! hard-negative-first mining.
+
+use crate::data::{neighbors, Dataset};
+use crate::linalg::Mat;
+use crate::runtime::Engine;
+use crate::screening::CertSide;
+use std::collections::BinaryHeap;
+
+/// Candidate enumeration order (and, combined with
+/// [`TripletMiner::with_budget`], subsampling policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MiningStrategy {
+    /// Every same×diff pair per anchor, anchor-major, same-class-neighbor
+    /// major within an anchor — the exact candidate set *and order* of
+    /// [`super::TripletStore::from_dataset`].
+    Exhaustive,
+    /// Anchors interleaved round-robin across classes (class 0's first
+    /// anchor, class 1's first anchor, …, then every class's second
+    /// anchor, …), so a truncated budget samples every class evenly.
+    StratifiedByClass,
+    /// Within each anchor, nearest different-class instances (the hard
+    /// negatives) are enumerated first, so a truncated budget keeps the
+    /// triplets with the smallest negative margin.
+    HardNegativeFirst,
+}
+
+/// One cache-sized batch of mined candidates: the difference rows and
+/// `‖H‖_F` of up to `batch_size` triplets, reusing its buffers across
+/// refills. This is the unit the admission screen
+/// ([`crate::screening::ScreeningManager::admit_batch`]) consumes.
+#[derive(Clone, Debug)]
+pub struct CandidateBatch {
+    /// original `(i, j, l)` instance indices per candidate
+    pub idx: Vec<(u32, u32, u32)>,
+    /// rows `x_i − x_l` (different-class differences)
+    pub a: Mat,
+    /// rows `x_i − x_j` (same-class differences)
+    pub b: Mat,
+    /// `‖H_t‖_F` per candidate
+    pub h_norm: Vec<f64>,
+    /// scratch for assembling one difference row
+    scratch: Vec<f64>,
+}
+
+impl CandidateBatch {
+    /// Empty batch for feature dimension `d`.
+    pub fn new(d: usize) -> CandidateBatch {
+        CandidateBatch {
+            idx: Vec::new(),
+            a: Mat::zeros(0, d),
+            b: Mat::zeros(0, d),
+            h_norm: Vec::new(),
+            scratch: vec![0.0; d],
+        }
+    }
+
+    /// Candidates currently in the batch.
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Whether the batch holds no candidates.
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Drop all candidates, keeping the buffers.
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.a.truncate_rows(0);
+        self.b.truncate_rows(0);
+        self.h_norm.clear();
+    }
+
+    /// Append candidate `(i, j, l)`: O(d) — two difference rows plus the
+    /// exact `‖H‖_F = sqrt(‖a‖⁴ + ‖b‖⁴ − 2(a·b)²)`.
+    pub fn push(&mut self, ds: &Dataset, i: usize, j: usize, l: usize) {
+        debug_assert_eq!(ds.y[i], ds.y[j], "j must share i's class");
+        debug_assert_ne!(ds.y[i], ds.y[l], "l must differ in class");
+        let d = ds.d();
+        let xi = ds.x.row(i);
+        let xl = ds.x.row(l);
+        for c in 0..d {
+            self.scratch[c] = xi[c] - xl[c];
+        }
+        self.a.push_row(&self.scratch);
+        let xj = ds.x.row(j);
+        for c in 0..d {
+            self.scratch[c] = xi[c] - xj[c];
+        }
+        self.b.push_row(&self.scratch);
+        let row = self.a.rows() - 1;
+        let (ra, rb) = (self.a.row(row), self.b.row(row));
+        let (mut na, mut nb, mut ab) = (0.0, 0.0, 0.0);
+        for c in 0..d {
+            na += ra[c] * ra[c];
+            nb += rb[c] * rb[c];
+            ab += ra[c] * rb[c];
+        }
+        // fl. rounding can push the radicand a hair below 0
+        self.h_norm.push((na * na + nb * nb - 2.0 * ab * ab).max(0.0).sqrt());
+        self.idx.push((i as u32, j as u32, l as u32));
+    }
+}
+
+/// Lazy batch generator over the k-NN candidate universe; see the module
+/// docs. Holds the k-NN neighbor lists (O(n·k) memory) and a cursor —
+/// never the candidate rows.
+pub struct TripletMiner<'a> {
+    ds: &'a Dataset,
+    /// per anchor: k nearest same-class neighbor indices
+    same: Vec<Vec<usize>>,
+    /// per anchor: k nearest different-class indices
+    diff: Vec<Vec<usize>>,
+    /// anchor visit order (strategy-dependent)
+    anchor_order: Vec<usize>,
+    strategy: MiningStrategy,
+    batch_size: usize,
+    /// candidate universe size after the optional budget cap
+    total: usize,
+    // ---- enumeration cursor ----
+    a_pos: usize,
+    pair_pos: usize,
+    emitted: usize,
+}
+
+impl<'a> TripletMiner<'a> {
+    /// Build a miner from the dataset's exact k-NN structure (one
+    /// [`neighbors`] pass, the same construction
+    /// [`super::TripletStore::from_dataset`] uses). `batch_size` caps the
+    /// candidates per [`Self::next_into`] refill.
+    pub fn new(
+        ds: &'a Dataset,
+        k: usize,
+        strategy: MiningStrategy,
+        batch_size: usize,
+    ) -> TripletMiner<'a> {
+        assert!(batch_size > 0, "batch_size must be positive");
+        let (same, diff) = neighbors(ds, k);
+        let n = ds.n();
+        let anchor_order: Vec<usize> = match strategy {
+            MiningStrategy::Exhaustive | MiningStrategy::HardNegativeFirst => (0..n).collect(),
+            MiningStrategy::StratifiedByClass => {
+                let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.n_classes];
+                for i in 0..n {
+                    by_class[ds.y[i]].push(i);
+                }
+                let deepest = by_class.iter().map(|c| c.len()).max().unwrap_or(0);
+                let mut order = Vec::with_capacity(n);
+                for round in 0..deepest {
+                    for class in &by_class {
+                        if let Some(&i) = class.get(round) {
+                            order.push(i);
+                        }
+                    }
+                }
+                order
+            }
+        };
+        let total: usize = (0..n).map(|i| same[i].len() * diff[i].len()).sum();
+        TripletMiner {
+            ds,
+            same,
+            diff,
+            anchor_order,
+            strategy,
+            batch_size,
+            total,
+            a_pos: 0,
+            pair_pos: 0,
+            emitted: 0,
+        }
+    }
+
+    /// Cap the candidate universe at `budget` candidates (in enumeration
+    /// order — combine with [`MiningStrategy::StratifiedByClass`] or
+    /// [`MiningStrategy::HardNegativeFirst`] for meaningful subsampling).
+    pub fn with_budget(mut self, budget: usize) -> TripletMiner<'a> {
+        self.total = self.total.min(budget);
+        self
+    }
+
+    /// The backing dataset.
+    pub fn dataset(&self) -> &'a Dataset {
+        self.ds
+    }
+
+    /// Feature dimension.
+    pub fn d(&self) -> usize {
+        self.ds.d()
+    }
+
+    /// Max candidates per [`Self::next_into`] refill.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Size of the candidate universe this miner enumerates (after the
+    /// optional budget cap) — the streamed pipeline's |T|.
+    pub fn total_candidates(&self) -> usize {
+        self.total
+    }
+
+    /// Rewind the enumeration cursor to the first candidate.
+    pub fn reset(&mut self) {
+        self.a_pos = 0;
+        self.pair_pos = 0;
+        self.emitted = 0;
+    }
+
+    /// Same×diff pairs for anchor `i`.
+    fn pair_count(&self, i: usize) -> usize {
+        self.same[i].len() * self.diff[i].len()
+    }
+
+    /// The `p`-th `(j, l)` pair of anchor `i` under the strategy order.
+    fn pair_at(&self, i: usize, p: usize) -> (usize, usize) {
+        match self.strategy {
+            MiningStrategy::HardNegativeFirst => {
+                // negative-major: hardest (nearest) l first
+                let ns = self.same[i].len();
+                (self.same[i][p % ns], self.diff[i][p / ns])
+            }
+            _ => {
+                // same-major: matches TripletStore::from_dataset
+                let nd = self.diff[i].len();
+                (self.same[i][p / nd], self.diff[i][p % nd])
+            }
+        }
+    }
+
+    /// Refill `out` with the next ≤ `batch_size` candidates. Returns
+    /// false (and leaves `out` empty) once the universe is exhausted;
+    /// call [`Self::reset`] to start another pass.
+    pub fn next_into(&mut self, out: &mut CandidateBatch) -> bool {
+        out.clear();
+        while out.len() < self.batch_size && self.emitted < self.total {
+            while self.a_pos < self.anchor_order.len() {
+                let i = self.anchor_order[self.a_pos];
+                if self.pair_pos < self.pair_count(i) {
+                    break;
+                }
+                self.a_pos += 1;
+                self.pair_pos = 0;
+            }
+            if self.a_pos >= self.anchor_order.len() {
+                break;
+            }
+            let i = self.anchor_order[self.a_pos];
+            let (j, l) = self.pair_at(i, self.pair_pos);
+            out.push(self.ds, i, j, l);
+            self.pair_pos += 1;
+            self.emitted += 1;
+        }
+        !out.is_empty()
+    }
+
+    /// Materialize explicit candidate triples into a batch — the
+    /// certificate-expiry re-test path: a row-less [`PendingCert`] whose
+    /// proof lapsed gets its rows recomputed from the dataset in O(d).
+    pub fn materialize_into(&self, idx: &[(u32, u32, u32)], out: &mut CandidateBatch) {
+        out.clear();
+        for &(i, j, l) in idx {
+            out.push(self.ds, i as usize, j as usize, l as usize);
+        }
+    }
+
+    /// `Σ_t H_t` over the whole candidate universe, streamed in batches —
+    /// the λ_max prerequisite without ever materializing |T| rows. Leaves
+    /// the cursor reset.
+    pub fn sum_h_streamed(&mut self, engine: &dyn Engine, batch: &mut CandidateBatch) -> Mat {
+        self.reset();
+        let mut g = Mat::zeros(self.d(), self.d());
+        let mut ones: Vec<f64> = Vec::new();
+        while self.next_into(batch) {
+            ones.resize(batch.len(), 1.0);
+            g.axpy(1.0, &engine.wgram(&batch.a, &batch.b, &ones));
+        }
+        self.reset();
+        g
+    }
+
+    /// `max_t ⟨H_t, P⟩` over the candidate universe, streamed in batches
+    /// (with `P = [Σ H]_+` this is the λ_max numerator — see
+    /// [`crate::solver::Problem::lambda_max`]). Leaves the cursor reset.
+    pub fn max_margin_streamed(
+        &mut self,
+        p: &Mat,
+        engine: &dyn Engine,
+        batch: &mut CandidateBatch,
+    ) -> f64 {
+        self.reset();
+        let mut hq: Vec<f64> = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        while self.next_into(batch) {
+            hq.resize(batch.len(), 0.0);
+            engine.margins(p, &batch.a, &batch.b, &mut hq);
+            best = hq.iter().cloned().fold(best, f64::max);
+        }
+        self.reset();
+        best
+    }
+}
+
+/// One admission-rejected candidate: tracked **row-less** — only its
+/// instance triple, the certified side and the λ at which its certificate
+/// expires (the RRPB range's lower endpoint). While `λ > expires` the
+/// rejection stays proven; once the path crosses `expires` the candidate
+/// must be re-tested (and possibly admitted).
+///
+/// Note on identity: `PartialEq`/`Ord` compare **only `expires`** — they
+/// exist to key the [`PendingPool`] expiry heap, not to identify
+/// candidates. Two records for different triplets with equal expiry
+/// compare equal; use `idx` for identity.
+#[derive(Clone, Copy, Debug)]
+pub struct PendingCert {
+    /// original `(i, j, l)` instance indices
+    pub idx: (u32, u32, u32),
+    /// which optimal-set membership the certificate fixed
+    pub side: CertSide,
+    /// certificate lower endpoint: the proof holds for every λ > expires
+    pub expires: f64,
+}
+
+impl PartialEq for PendingCert {
+    fn eq(&self, other: &Self) -> bool {
+        self.expires.total_cmp(&other.expires) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for PendingCert {}
+
+impl PartialOrd for PendingCert {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for PendingCert {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.expires.total_cmp(&other.expires)
+    }
+}
+
+/// Expiry queue over [`PendingCert`] records: a max-heap on `expires`, so
+/// a monotonically decreasing λ sweep pops exactly the certificates whose
+/// proof lapsed — the streaming analogue of the
+/// [`crate::screening::ReferenceFrame`] expiry schedule, for candidates
+/// that never got rows.
+#[derive(Clone, Debug, Default)]
+pub struct PendingPool {
+    heap: BinaryHeap<PendingCert>,
+}
+
+impl PendingPool {
+    /// Empty pool.
+    pub fn new() -> PendingPool {
+        PendingPool::default()
+    }
+
+    /// Records currently pending.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no records are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Track a new row-less rejection.
+    pub fn push(&mut self, rec: PendingCert) {
+        self.heap.push(rec);
+    }
+
+    /// Pop every record whose certificate no longer covers `lambda`
+    /// (`expires ≥ lambda`) into `out` (cleared first). The caller
+    /// re-tests them against the current reference frame.
+    pub fn pop_expired(&mut self, lambda: f64, out: &mut Vec<PendingCert>) {
+        out.clear();
+        while let Some(top) = self.heap.peek() {
+            if top.expires >= lambda {
+                out.push(self.heap.pop().expect("peeked"));
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::runtime::NativeEngine;
+    use crate::triplet::TripletStore;
+    use crate::util::rng::Pcg64;
+
+    fn fixture() -> (Dataset, TripletStore) {
+        let mut rng = Pcg64::seed(31);
+        let ds = synthetic::gaussian_mixture("m", 48, 5, 3, 2.5, &mut rng);
+        let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+        (ds, store)
+    }
+
+    #[test]
+    fn exhaustive_matches_materialized_store() {
+        let (ds, store) = fixture();
+        let mut miner = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 64);
+        assert_eq!(miner.total_candidates(), store.len());
+        let mut batch = CandidateBatch::new(ds.d());
+        let mut idx = Vec::new();
+        let mut row = 0usize;
+        while miner.next_into(&mut batch) {
+            assert!(batch.len() <= 64);
+            for t in 0..batch.len() {
+                assert_eq!(batch.a.row(t), store.a.row(row), "a row {row}");
+                assert_eq!(batch.b.row(t), store.b.row(row), "b row {row}");
+                assert!((batch.h_norm[t] - store.h_norm[row]).abs() < 1e-12);
+                row += 1;
+            }
+            idx.extend_from_slice(&batch.idx);
+        }
+        assert_eq!(idx, store.idx, "candidate set/order diverged");
+    }
+
+    #[test]
+    fn second_pass_after_reset_is_identical() {
+        let (ds, _) = fixture();
+        let mut miner = TripletMiner::new(&ds, 2, MiningStrategy::Exhaustive, 50);
+        let mut batch = CandidateBatch::new(ds.d());
+        let mut first = Vec::new();
+        while miner.next_into(&mut batch) {
+            first.extend_from_slice(&batch.idx);
+        }
+        // exhausted: further calls yield nothing until reset
+        assert!(!miner.next_into(&mut batch));
+        miner.reset();
+        let mut second = Vec::new();
+        while miner.next_into(&mut batch) {
+            second.extend_from_slice(&batch.idx);
+        }
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn strategies_enumerate_the_same_universe() {
+        let (ds, store) = fixture();
+        for strategy in [
+            MiningStrategy::StratifiedByClass,
+            MiningStrategy::HardNegativeFirst,
+        ] {
+            let mut miner = TripletMiner::new(&ds, 3, strategy, 37);
+            assert_eq!(miner.total_candidates(), store.len());
+            let mut batch = CandidateBatch::new(ds.d());
+            let mut seen = Vec::new();
+            while miner.next_into(&mut batch) {
+                seen.extend_from_slice(&batch.idx);
+            }
+            let mut want = store.idx.clone();
+            seen.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(seen, want, "{strategy:?} changed the candidate set");
+        }
+    }
+
+    #[test]
+    fn stratified_order_interleaves_classes() {
+        let (ds, _) = fixture();
+        let miner = TripletMiner::new(&ds, 3, MiningStrategy::StratifiedByClass, 16);
+        // the first n_classes anchors must cover n_classes distinct classes
+        let mut classes: Vec<usize> = miner.anchor_order[..ds.n_classes]
+            .iter()
+            .map(|&i| ds.y[i])
+            .collect();
+        classes.sort_unstable();
+        classes.dedup();
+        assert_eq!(classes.len(), ds.n_classes);
+    }
+
+    #[test]
+    fn hard_negative_first_orders_negatives_outermost() {
+        let (ds, _) = fixture();
+        let mut miner = TripletMiner::new(&ds, 3, MiningStrategy::HardNegativeFirst, 1_000_000);
+        let mut batch = CandidateBatch::new(ds.d());
+        assert!(miner.next_into(&mut batch));
+        // within one anchor, the first |same| candidates all use the
+        // anchor's nearest different-class instance
+        let anchor = batch.idx[0].0;
+        let a = anchor as usize;
+        let ns = miner.same[a].len();
+        let hardest = miner.diff[a][0] as u32;
+        for t in 0..ns {
+            assert_eq!(batch.idx[t].0, anchor);
+            assert_eq!(batch.idx[t].2, hardest, "candidate {t} not hardest-negative");
+        }
+    }
+
+    #[test]
+    fn budget_truncates_enumeration() {
+        let (ds, store) = fixture();
+        let mut miner = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 32).with_budget(70);
+        assert_eq!(miner.total_candidates(), 70.min(store.len()));
+        let mut batch = CandidateBatch::new(ds.d());
+        let mut count = 0;
+        while miner.next_into(&mut batch) {
+            count += batch.len();
+        }
+        assert_eq!(count, miner.total_candidates());
+    }
+
+    #[test]
+    fn materialize_into_matches_store_rows() {
+        let (ds, store) = fixture();
+        let miner = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 8);
+        let picks: Vec<(u32, u32, u32)> =
+            (0..store.len()).step_by(17).map(|t| store.idx[t]).collect();
+        let mut batch = CandidateBatch::new(ds.d());
+        miner.materialize_into(&picks, &mut batch);
+        assert_eq!(batch.len(), picks.len());
+        for (k, t) in (0..store.len()).step_by(17).enumerate() {
+            assert_eq!(batch.a.row(k), store.a.row(t));
+            assert_eq!(batch.b.row(k), store.b.row(t));
+            assert!((batch.h_norm[k] - store.h_norm[t]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn streamed_sum_h_and_max_margin_match_store() {
+        let (ds, store) = fixture();
+        let engine = NativeEngine::new(2);
+        let mut miner = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 53);
+        let mut batch = CandidateBatch::new(ds.d());
+        let streamed = miner.sum_h_streamed(&engine, &mut batch);
+        let ones = vec![1.0; store.len()];
+        let dense = engine.wgram(&store.a, &store.b, &ones);
+        let scale = 1.0 + dense.max_abs();
+        assert!(
+            streamed.sub(&dense).max_abs() < 1e-9 * scale,
+            "streamed ΣH diverged"
+        );
+
+        let p = crate::linalg::psd_split(&dense).plus;
+        let got = miner.max_margin_streamed(&p, &engine, &mut batch);
+        let mut hq = vec![0.0; store.len()];
+        engine.margins(&p, &store.a, &store.b, &mut hq);
+        let want = hq.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!((got - want).abs() < 1e-9 * (1.0 + want.abs()));
+    }
+
+    #[test]
+    fn pending_pool_pops_in_expiry_order() {
+        let mut pool = PendingPool::new();
+        for (e, side) in [
+            (0.5, CertSide::L),
+            (0.9, CertSide::R),
+            (0.1, CertSide::R),
+            (0.7, CertSide::L),
+        ] {
+            pool.push(PendingCert {
+                idx: (0, 1, 2),
+                side,
+                expires: e,
+            });
+        }
+        let mut out = Vec::new();
+        pool.pop_expired(0.8, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].expires, 0.9);
+        pool.pop_expired(0.3, &mut out);
+        let exp: Vec<f64> = out.iter().map(|r| r.expires).collect();
+        assert_eq!(exp, vec![0.7, 0.5]);
+        assert_eq!(pool.len(), 1);
+        // λ equal to the endpoint: contains() is strict, so it expires too
+        pool.pop_expired(0.1, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn anchors_without_pairs_are_skipped() {
+        // single-class dataset: no different-class instances, so the
+        // candidate universe is empty and the miner terminates cleanly
+        let x = Mat::from_rows(4, 2, vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let ds = Dataset::new("mono", x, vec![0, 0, 0, 0]);
+        let mut miner = TripletMiner::new(&ds, 2, MiningStrategy::Exhaustive, 8);
+        assert_eq!(miner.total_candidates(), 0);
+        let mut batch = CandidateBatch::new(ds.d());
+        assert!(!miner.next_into(&mut batch));
+        assert!(batch.is_empty());
+    }
+}

@@ -1,9 +1,21 @@
 //! Triplet set construction and bookkeeping.
+//!
+//! Two ways to obtain a triplet set:
+//!
+//! - [`TripletStore::from_dataset`] materializes the full k-NN candidate
+//!   universe up front (the classic pipeline);
+//! - [`TripletMiner`] enumerates the same universe **lazily** in
+//!   cache-sized [`CandidateBatch`]es so the path driver can screen each
+//!   candidate *at admission time* and only copy the undecided ones into
+//!   a growable store — see `miner` module docs and
+//!   [`crate::path::TripletSource`].
 
+mod miner;
 mod status;
 mod store;
 mod workset;
 
+pub use miner::{CandidateBatch, MiningStrategy, PendingCert, PendingPool, TripletMiner};
 pub use status::{StatusVec, TripletStatus};
 pub use store::TripletStore;
 pub use workset::ActiveWorkset;

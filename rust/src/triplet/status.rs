@@ -27,6 +27,7 @@ pub struct StatusVec {
 }
 
 impl StatusVec {
+    /// All-Active status vector over `n` triplets.
     pub fn new(n: usize) -> StatusVec {
         StatusVec {
             status: vec![TripletStatus::Active; n],
@@ -36,27 +37,33 @@ impl StatusVec {
         }
     }
 
+    /// Total triplets tracked.
     pub fn len(&self) -> usize {
         self.status.len()
     }
 
+    /// Whether no triplets are tracked.
     pub fn is_empty(&self) -> bool {
         self.status.is_empty()
     }
 
+    /// Status of triplet `t`.
     #[inline]
     pub fn get(&self, t: usize) -> TripletStatus {
         self.status[t]
     }
 
+    /// Triplets currently fixed into L̂.
     pub fn n_screened_l(&self) -> usize {
         self.n_l
     }
 
+    /// Triplets currently fixed into R̂.
     pub fn n_screened_r(&self) -> usize {
         self.n_r
     }
 
+    /// Triplets still in the reduced problem.
     pub fn n_active(&self) -> usize {
         self.len() - self.n_l - self.n_r
     }
@@ -70,6 +77,7 @@ impl StatusVec {
         }
     }
 
+    /// Monotone change counter (bumped on every transition).
     pub fn version(&self) -> u64 {
         self.version
     }
@@ -90,6 +98,8 @@ impl StatusVec {
         }
     }
 
+    /// Transition a triplet to ScreenedR (see [`Self::screen_l`] for the
+    /// monotonicity rules).
     pub fn screen_r(&mut self, t: usize) {
         match self.status[t] {
             TripletStatus::Active => {
@@ -122,6 +132,18 @@ impl StatusVec {
         }
     }
 
+    /// Append `n_new` Active entries — the streaming-admission primitive:
+    /// the id space grows as candidates are admitted to the backing
+    /// store; existing decisions are untouched.
+    pub fn extend_active(&mut self, n_new: usize) {
+        if n_new == 0 {
+            return;
+        }
+        let total = self.status.len() + n_new;
+        self.status.resize(total, TripletStatus::Active);
+        self.version += 1;
+    }
+
     /// Reset every triplet to Active (new λ without warm screening carry).
     pub fn reset(&mut self) {
         self.status.fill(TripletStatus::Active);
@@ -144,6 +166,7 @@ impl StatusVec {
             .collect()
     }
 
+    /// Iterate statuses in id order.
     pub fn iter(&self) -> impl Iterator<Item = TripletStatus> + '_ {
         self.status.iter().copied()
     }
@@ -199,6 +222,25 @@ mod tests {
         s.screen_r(0);
         s.reset();
         assert_eq!(s.n_active(), 3);
+    }
+
+    #[test]
+    fn extend_active_grows_without_touching_decisions() {
+        let mut s = StatusVec::new(3);
+        s.screen_l(0);
+        s.screen_r(2);
+        let v = s.version();
+        s.extend_active(2);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.n_active(), 3);
+        assert_eq!(s.get(0), TripletStatus::ScreenedL);
+        assert_eq!(s.get(3), TripletStatus::Active);
+        assert_eq!(s.get(4), TripletStatus::Active);
+        assert!(s.version() > v);
+        // zero-growth is a no-op (version unchanged)
+        let v2 = s.version();
+        s.extend_active(0);
+        assert_eq!(s.version(), v2);
     }
 
     #[test]

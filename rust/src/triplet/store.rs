@@ -81,6 +81,34 @@ impl TripletStore {
         }
     }
 
+    /// Empty growable store for feature dimension `d` — the streaming
+    /// pipeline's admitted set, grown one [`Self::push`] at a time as
+    /// candidates survive the admission screen.
+    pub fn empty(d: usize) -> TripletStore {
+        TripletStore {
+            a: Mat::zeros(0, d),
+            b: Mat::zeros(0, d),
+            h_norm: Vec::new(),
+            idx: Vec::new(),
+            d,
+        }
+    }
+
+    /// Append one admitted triplet in O(d) — the streaming pipeline's
+    /// only write path. `a_row`/`b_row` are the `x_i−x_l` / `x_i−x_j`
+    /// differences and `h_norm` the precomputed `‖H‖_F` (the miner's
+    /// [`crate::triplet::CandidateBatch`] carries all three). Ids are
+    /// assigned densely in push order, so every id handed out earlier
+    /// stays valid.
+    pub fn push(&mut self, idx: (u32, u32, u32), a_row: &[f64], b_row: &[f64], h_norm: f64) {
+        assert_eq!(a_row.len(), self.d, "a row width mismatch");
+        assert_eq!(b_row.len(), self.d, "b row width mismatch");
+        self.a.push_row(a_row);
+        self.b.push_row(b_row);
+        self.h_norm.push(h_norm);
+        self.idx.push(idx);
+    }
+
     /// `‖H_t‖_F = sqrt(‖a‖⁴ + ‖b‖⁴ − 2 (a·b)²)` — exact, O(d) per triplet.
     fn compute_h_norms(a: &Mat, b: &Mat) -> Vec<f64> {
         let t = a.rows();
@@ -102,10 +130,12 @@ impl TripletStore {
         out
     }
 
+    /// Number of triplets in the store.
     pub fn len(&self) -> usize {
         self.idx.len()
     }
 
+    /// Whether the store holds no triplets.
     pub fn is_empty(&self) -> bool {
         self.idx.is_empty()
     }
@@ -201,6 +231,23 @@ mod tests {
         for &(i, j, l) in &store.idx {
             assert_eq!(ds.y[i as usize], ds.y[j as usize]);
             assert_ne!(ds.y[i as usize], ds.y[l as usize]);
+        }
+    }
+
+    #[test]
+    fn empty_store_grows_by_push_to_match_dense() {
+        let (_, store) = toy_store();
+        let mut grown = TripletStore::empty(store.d);
+        assert!(grown.is_empty());
+        for t in 0..store.len() {
+            grown.push(store.idx[t], store.a.row(t), store.b.row(t), store.h_norm[t]);
+        }
+        assert_eq!(grown.len(), store.len());
+        assert_eq!(grown.idx, store.idx);
+        for t in (0..store.len()).step_by(29) {
+            assert_eq!(grown.a.row(t), store.a.row(t));
+            assert_eq!(grown.b.row(t), store.b.row(t));
+            assert_eq!(grown.h_norm[t], store.h_norm[t]);
         }
     }
 

@@ -58,10 +58,12 @@ impl ActiveWorkset {
         }
     }
 
+    /// Active rows currently in the workset.
     pub fn len(&self) -> usize {
         self.ids.len()
     }
 
+    /// Whether every triplet has been retired.
     pub fn is_empty(&self) -> bool {
         self.ids.is_empty()
     }
@@ -71,14 +73,17 @@ impl ActiveWorkset {
         &self.ids
     }
 
+    /// Compacted `x_i − x_l` difference rows.
     pub fn a(&self) -> &Mat {
         &self.a
     }
 
+    /// Compacted `x_i − x_j` difference rows.
     pub fn b(&self) -> &Mat {
         &self.b
     }
 
+    /// Compacted `‖H_t‖_F` lane (row-aligned).
     pub fn h_norm(&self) -> &[f64] {
         &self.h_norm
     }
@@ -91,6 +96,7 @@ impl ActiveWorkset {
         }
     }
 
+    /// Whether `id` still has a workset row.
     pub fn is_active(&self, id: usize) -> bool {
         self.row_of[id] != RETIRED
     }
@@ -140,6 +146,17 @@ impl ActiveWorkset {
         true
     }
 
+    /// Grow the id space by `n_new` ids, all initially retired — the
+    /// streaming-admission primitive. The path driver then [`Self::revive`]s
+    /// each new id, appending its rows from the (grown) backing store, so
+    /// admitted candidates enter the reduced problem through the same
+    /// machinery as certificate-expired revives.
+    pub fn extend_ids(&mut self, n_new: usize) {
+        let total = self.row_of.len() + n_new;
+        assert!(total < RETIRED as usize, "triplet count exceeds u32 id space");
+        self.row_of.resize(total, RETIRED);
+    }
+
     /// Install the reference-margin lane from an id-indexed full vector
     /// (`full[t] = ⟨H_t, M₀⟩` for every triplet of the store), tagged with
     /// the identity of the reference frame it was gathered from (the path
@@ -167,6 +184,7 @@ impl ActiveWorkset {
         self.ref_margin.as_ref().map(|(_, rm)| rm.as_slice())
     }
 
+    /// Drop the reference-margin lane (stale-reference hygiene).
     pub fn clear_ref_margins(&mut self) {
         self.ref_margin = None;
     }
@@ -290,6 +308,31 @@ mod tests {
         // retire a revived id again: the full cycle stays consistent
         assert!(ws.retire(5));
         ws.assert_consistent(&st);
+    }
+
+    #[test]
+    fn extend_ids_then_revive_ingests_new_rows() {
+        // streaming admission: the store grows, the workset's id space is
+        // extended (new ids retired) and each new id enters via revive
+        let st = store();
+        let keep = st.len() / 2;
+        let mut small = TripletStore::empty(st.d);
+        for t in 0..keep {
+            small.push(st.idx[t], st.a.row(t), st.b.row(t), st.h_norm[t]);
+        }
+        let mut ws = ActiveWorkset::full(&small);
+        ws.retire(1);
+        // grow the store by two more triplets
+        small.push(st.idx[keep], st.a.row(keep), st.b.row(keep), st.h_norm[keep]);
+        small.push(st.idx[keep + 1], st.a.row(keep + 1), st.b.row(keep + 1), st.h_norm[keep + 1]);
+        ws.extend_ids(2);
+        assert!(!ws.is_active(keep));
+        assert!(!ws.is_active(keep + 1));
+        assert!(ws.revive(keep, &small));
+        assert!(ws.revive(keep + 1, &small));
+        assert_eq!(ws.len(), small.len() - 1); // id 1 still retired
+        assert_eq!(ws.a().row(ws.row_of(keep).unwrap()), small.a.row(keep));
+        ws.assert_consistent(&small);
     }
 
     #[test]

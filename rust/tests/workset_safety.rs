@@ -24,10 +24,15 @@ use triplet_screen::screening::{CertFamilies, ReferenceFrame, ScreeningManager};
 use triplet_screen::solver::{Problem, ScreenCtx, Solver, SolverConfig};
 use triplet_screen::triplet::TripletStatus;
 
-fn store(seed: u64) -> TripletStore {
+fn fixture(seed: u64) -> (Dataset, TripletStore) {
     let mut rng = Pcg64::seed(seed);
     let ds = synthetic::gaussian_mixture("g", 45, 4, 3, 2.6, &mut rng);
-    TripletStore::from_dataset(&ds, 3, &mut rng)
+    let store = TripletStore::from_dataset(&ds, 3, &mut rng);
+    (ds, store)
+}
+
+fn store(seed: u64) -> TripletStore {
+    fixture(seed).1
 }
 
 /// High-accuracy screening-off solve: the oracle.
@@ -288,6 +293,128 @@ fn certificate_frame_path_and_alpha_star() {
         total += rl.len() + rr.len();
     }
     assert!(total > 0, "frame certified nothing over a 6-step sweep");
+}
+
+/// Streamed mining with screen-on-admission: the tentpole safety oracle.
+/// An exhaustive miner enumerates the exact candidate set of the
+/// materialized store, every candidate is screened against the reference
+/// frame before its rows are ever copied — and the resulting path must
+/// reach the same optimum, with the membership of **every** triplet
+/// (admitted-and-screened, and never-admitted) verified against the
+/// screening-off oracle's α*.
+#[test]
+fn streamed_admission_path_oracle_identity() {
+    let (ds, st) = fixture(2);
+    let loss = Loss::smoothed_hinge(0.05);
+    let engine = NativeEngine::new(0);
+
+    let tight = SolverConfig {
+        tol: 1e-11,
+        tol_relative: false,
+        max_iters: 100_000,
+        ..Default::default()
+    };
+    let mut cfg = PathConfig {
+        max_steps: 10,
+        solver: tight,
+        ..Default::default()
+    };
+    cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+    cfg.range_screening = true;
+
+    let materialized = RegPath::new(cfg.clone()).run(&st, &engine);
+    let mut miner = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 96);
+    let streamed = RegPath::new(cfg).run_source(TripletSource::Streamed(&mut miner), &engine);
+
+    // (a) identical λ grid and optimum
+    assert_eq!(streamed.steps.len(), materialized.steps.len());
+    for (s, m) in streamed.steps.iter().zip(&materialized.steps) {
+        assert!((s.lambda - m.lambda).abs() < 1e-9 * m.lambda, "λ grid drifted");
+        assert!(s.converged, "streamed solve stalled at λ={}", s.lambda);
+    }
+    let diff = streamed.m_final.sub(&materialized.m_final).norm();
+    assert!(
+        diff < 1e-6,
+        "‖M_streamed − M_materialized‖_F = {diff:e} at the final λ"
+    );
+
+    // (b) admission actually screened: rejections happened and the
+    // workset never held the full candidate set
+    let stats = streamed.screening_stats.clone().expect("stats");
+    assert!(
+        stats.adm_rejected() > 0,
+        "no admission-time rejection exercised"
+    );
+    assert!(stats.adm_candidates >= st.len());
+    let summary = streamed.stream.as_ref().expect("stream summary");
+    assert_eq!(summary.candidates, st.len());
+    assert_eq!(
+        summary.admitted_rows + summary.pending_end,
+        summary.candidates,
+        "candidate conservation violated"
+    );
+    assert!(
+        summary.peak_workset_rows < st.len(),
+        "workset peaked at the full |T| = {}",
+        st.len()
+    );
+
+    // (c) α* verification at the final λ against the screening-off
+    // oracle over the FULL store. Slack: every reference along the path
+    // is ε-certified, so a fixed membership may sit within ~4ε·‖H‖ of
+    // its threshold.
+    let lam_end = streamed.steps.last().expect("at least one step").lambda;
+    let (m_star, eps_oracle) = solve_oracle(&st, loss, lam_end, &engine);
+    let eps_path = streamed
+        .steps
+        .iter()
+        .map(|s| (2.0 * s.gap.max(0.0) / s.lambda).sqrt())
+        .fold(0.0f64, f64::max);
+    let hn_max = st.h_norm.iter().cloned().fold(0.0f64, f64::max);
+    let slack = 1e-6 + 4.0 * (eps_oracle + eps_path) * hn_max;
+
+    // (c1) every admitted triplet with a screening decision at the end
+    let mut om_admitted = vec![0.0; summary.store.len()];
+    engine.margins(&m_star, &summary.store.a, &summary.store.b, &mut om_admitted);
+    for t in 0..summary.store.len() {
+        match summary.final_status.get(t) {
+            TripletStatus::ScreenedL => assert!(
+                om_admitted[t] < loss.l_threshold() + slack,
+                "admitted t={t} screened L but oracle margin {} (α* != 1)",
+                om_admitted[t]
+            ),
+            TripletStatus::ScreenedR => assert!(
+                om_admitted[t] > loss.r_threshold() - slack,
+                "admitted t={t} screened R but oracle margin {} (α* != 0)",
+                om_admitted[t]
+            ),
+            TripletStatus::Active => {}
+        }
+    }
+
+    // (c2) every NEVER-admitted candidate holds a live certificate at
+    // the final λ, so its α* must be fixed: its oracle margin cannot sit
+    // strictly inside the undecided band
+    let mut om_full = vec![0.0; st.len()];
+    engine.margins(&m_star, &st.a, &st.b, &mut om_full);
+    let admitted: std::collections::HashSet<(u32, u32, u32)> =
+        summary.store.idx.iter().copied().collect();
+    let mut never_admitted = 0usize;
+    for t in 0..st.len() {
+        if admitted.contains(&st.idx[t]) {
+            continue;
+        }
+        never_admitted += 1;
+        let inside_band =
+            om_full[t] > loss.l_threshold() + slack && om_full[t] < loss.r_threshold() - slack;
+        assert!(
+            !inside_band,
+            "never-admitted candidate {t} is truly active (oracle margin {})",
+            om_full[t]
+        );
+    }
+    assert_eq!(never_admitted, summary.pending_end);
+    assert!(never_admitted > 0, "everything was admitted — no memory saved");
 }
 
 /// Regression for the old range-extension loop that re-tested every
