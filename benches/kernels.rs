@@ -43,20 +43,33 @@ fn main() {
     let mut bench = if quick { Bench::quick() } else { Bench::default() };
     Bench::header();
 
-    // tiled GEMM/SYRK core (default) vs the scalar reference core, plus
-    // PJRT when artifacts are present — all through the same Engine API
+    // auto core (row-stream below gemm::D_BLOCK_MIN_D, d-blocked above)
+    // vs the pinned geometries vs the scalar reference core, plus PJRT
+    // when artifacts are present — all through the same Engine API
     let native = NativeEngine::new(0);
+    let rowstream = NativeEngine::row_stream(0);
+    let dblocked = NativeEngine::d_blocked(0);
     let scalar = NativeEngine::scalar(0);
     let pjrt = PjrtEngine::from_default_dir().ok();
 
     for (d, n) in [(19usize, 8192usize), (64, 8192), (128, 8192), (19, 65536)] {
         bench_engine(&mut bench, &native, n, d);
+        bench_engine(&mut bench, &dblocked, n, d);
         bench_engine(&mut bench, &scalar, n, d);
         if let Some(p) = &pjrt {
             if p.supports_dim(d) {
                 bench_engine(&mut bench, p, n, d);
             }
         }
+    }
+
+    // the high-d regime the d-blocked geometry exists for: compare the
+    // two tiled geometries head-to-head (scalar is left out — its full
+    // rank-1 pass at d = 768 tells us nothing new and dominates the
+    // bench wall)
+    for (d, n) in [(512usize, 2048usize), (768, 1024)] {
+        bench_engine(&mut bench, &rowstream, n, d);
+        bench_engine(&mut bench, &dblocked, n, d);
     }
 
     // eigendecomposition (the per-iteration PSD projection cost)

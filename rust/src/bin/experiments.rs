@@ -1,20 +1,33 @@
 //! `experiments` — regenerate every table and figure of the paper (§5).
 //!
-//! Usage: `experiments <table1|fig4|fig5|fig6|fig7|fig8|table2|table4|all>`
-//!   [--dataset NAME] [--engine native|pjrt] [--scale F] [--trials N]
-//!   [--seed N] [--tol F] [--verbose]
+//! Usage: `experiments <table1|fig4|fig5|fig6|fig7|fig8|table2|table4|`
+//!   `table5|rangestudy|perf|all>`
+//!   [--dataset NAME] [--engine native|native-scalar|pjrt]
+//!   [--kernel-core auto|row-stream|d-blocked|scalar] [--d-threshold N]
+//!   [--scale F] [--trials N] [--seed N] [--tol F] [--verbose]
 //!
 //! Outputs are printed as markdown and persisted under `reports/`.
 //! See DESIGN.md §5 for the experiment index and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! paper-vs-measured record. `rangestudy` is this repo's App. K.1
+//! extension study: DGB/GB general-form certificates vs RRPB-only, per
+//! dimension.
 
 use triplet_screen::coordinator::experiments as exp;
 use triplet_screen::prelude::*;
+use triplet_screen::runtime::KernelCore;
 use triplet_screen::util::cli::Args;
 
 fn make_engine(args: &Args) -> Box<dyn Engine> {
+    let threads = args.get_usize("threads", 0);
     match args.get_or("engine", "native") {
-        "native" => Box::new(NativeEngine::new(args.get_usize("threads", 0))),
+        "native" => {
+            let core = args.get("kernel-core").map(KernelCore::parse_cli);
+            let threshold = args
+                .get("d-threshold")
+                .map(|s| s.parse().expect("--d-threshold expects an integer"));
+            Box::new(NativeEngine::from_options(threads, core, threshold))
+        }
+        "native-scalar" => Box::new(NativeEngine::scalar(threads)),
         "pjrt" => Box::new(
             PjrtEngine::from_default_dir().expect("loading PJRT artifacts (run `make artifacts`)"),
         ),
@@ -38,7 +51,10 @@ fn main() {
     let engine = make_engine(&args);
     let opts = options(&args);
     let which = args.subcommand.clone().unwrap_or_else(|| {
-        eprintln!("usage: experiments <table1|fig4|fig5|fig6|fig7|fig8|table2|table4|all>");
+        eprintln!(
+            "usage: experiments \
+             <table1|fig4|fig5|fig6|fig7|fig8|table2|table4|table5|rangestudy|perf|all>"
+        );
         std::process::exit(2);
     });
     run(&which, engine.as_ref(), &opts, &args);
@@ -100,6 +116,21 @@ fn run(which: &str, engine: &dyn Engine, opts: &exp::ExpOptions, args: &Args) {
                 .unwrap_or_else(|| vec!["usps", "madelon", "colon-cancer", "gisette"]);
             let t = exp::run_table5(opts, &datasets);
             exp::emit("table5", &[&t]);
+        }
+        "rangestudy" => {
+            // App. K.1 extension study: DGB/GB general-form certificates
+            // vs RRPB-only across the paper's dimensional range (the
+            // d ≥ 512 points exercise the d-blocked kernel geometry)
+            let dims: Vec<usize> = args
+                .get("dims")
+                .map(|s| {
+                    s.split(',')
+                        .map(|t| t.parse().expect("--dims expects integers"))
+                        .collect()
+                })
+                .unwrap_or_else(|| vec![64, 300, 768]);
+            let t = exp::run_range_study(engine, opts, &dims);
+            exp::emit("rangestudy", &[&t]);
         }
         "perf" => {
             // §Perf artifacts: L1 TPU structural estimates + native-vs-PJRT
@@ -166,7 +197,16 @@ fn run(which: &str, engine: &dyn Engine, opts: &exp::ExpOptions, args: &Args) {
         }
         "all" => {
             for w in [
-                "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "table2", "table4", "table5",
+                "table1",
+                "fig4",
+                "fig5",
+                "fig6",
+                "fig7",
+                "fig8",
+                "table2",
+                "table4",
+                "table5",
+                "rangestudy",
             ] {
                 eprintln!("=== {w} ===");
                 run(w, engine, opts, args);

@@ -523,6 +523,215 @@ pub fn run_table5(opts: &ExpOptions, datasets: &[&str]) -> Table {
     table
 }
 
+/// Per-family outcome of one [`range_study_for`] dimension: how many
+/// certified λ-intervals one certificate family produced, how wide they
+/// are, and what the expiry-schedule sweep over the λ grid cost/yielded.
+#[derive(Clone, Debug)]
+pub struct CertFamilyStats {
+    /// merged certificates in the frame's expiry schedule
+    pub certificates: usize,
+    /// mean certified-interval width, clamped to (0, λ_max] (R-side
+    /// upper endpoints are often +∞: the rule keeps firing for every
+    /// larger λ, so the clamp measures the width *usable on the path*)
+    pub mean_width: f64,
+    /// Σ over the λ grid of ids certified at each λ
+    pub coverage_total: usize,
+    /// ids certified at the final (smallest) λ of the grid
+    pub coverage_final: usize,
+    /// Σ over the λ grid of certificates entering/expiring in the sweep
+    pub range_pass_work: usize,
+    /// seconds to build the frame (margins pass + derivation; the
+    /// general families add one `wgram`, one eigendecomposition and one
+    /// margins pass)
+    pub build_seconds: f64,
+}
+
+/// One dimension of the DGB/GB-vs-RRPB certificate study
+/// ([`range_study_for`]).
+#[derive(Clone, Debug)]
+pub struct RangeStudyRow {
+    /// feature dimension of the synthetic problem
+    pub d: usize,
+    /// triplets in the store
+    pub triplets: usize,
+    /// exact λ_max of the problem
+    pub lambda_max: f64,
+    /// λ-grid steps swept (λ_t = ρᵗ·λ_max)
+    pub steps: usize,
+    /// closed-form RRPB certificates only (`CertFamilies::rrpb_only`)
+    pub rrpb: CertFamilyStats,
+    /// RRPB + the DGB/GB general forms (`CertFamilies::all`)
+    pub general: CertFamilyStats,
+    /// soundness cross-check: at every λ of the grid the general
+    /// family's coverage was a superset of RRPB-only coverage, per side
+    /// (must hold — the general frame's intervals are unions that
+    /// include the RRPB ones)
+    pub general_is_superset: bool,
+}
+
+/// The App. K.1 study for one dimension: build the exact λ_max reference
+/// `M₀ = [ΣH]_+/λ_max` (ε = 0) over a synthetic d-dimensional store,
+/// derive certificates under `CertFamilies::rrpb_only()` vs
+/// `CertFamilies::all()` (the DGB/GB general range forms,
+/// `PathConfig::range_general`'s machinery), and sweep both expiry
+/// schedules down the λ grid — measuring exactly the marginal coverage
+/// the general families buy, with no solver in the loop (so the study
+/// stays tractable at d = 768, where every PGD iteration would pay an
+/// O(d³) eigendecomposition).
+pub fn range_study_for(
+    engine: &dyn Engine,
+    d: usize,
+    n_points: usize,
+    k: usize,
+    steps: usize,
+    rho: f64,
+    seed: u64,
+) -> RangeStudyRow {
+    use crate::linalg::psd_split;
+    use crate::screening::{CertFamilies, ReferenceFrame};
+
+    let mut rng = Pcg64::seed(seed ^ d as u64);
+    let ds = synthetic::gaussian_mixture(&format!("rs-d{d}"), n_points, d, 3, 2.5, &mut rng);
+    let store = TripletStore::from_dataset(&ds, k, &mut rng);
+    let loss = Loss::smoothed_hinge(0.05);
+    let lambda_max = Problem::lambda_max(&store, &loss, engine);
+    let ones = vec![1.0; store.len()];
+    let m0 = psd_split(&engine.wgram(&store.a, &store.b, &ones))
+        .plus
+        .scaled(1.0 / lambda_max);
+
+    let build = |families: CertFamilies| {
+        let t0 = std::time::Instant::now();
+        let frame = ReferenceFrame::build(
+            m0.clone(),
+            lambda_max,
+            0.0,
+            &store,
+            engine,
+            Some((&loss, families)),
+        );
+        (frame, t0.elapsed().as_secs_f64())
+    };
+    let (frame_rrpb, build_rrpb) = build(CertFamilies::rrpb_only());
+    let (frame_gen, build_gen) = build(CertFamilies::all());
+
+    let mean_width = |frame: &ReferenceFrame| {
+        let widths: Vec<f64> = frame
+            .certificates()
+            .iter()
+            .map(|c| (c.hi.min(lambda_max) - c.lo.max(0.0)).max(0.0))
+            .collect();
+        if widths.is_empty() {
+            0.0
+        } else {
+            widths.iter().sum::<f64>() / widths.len() as f64
+        }
+    };
+
+    let mut stats = [
+        CertFamilyStats {
+            certificates: frame_rrpb.n_certificates(),
+            mean_width: mean_width(&frame_rrpb),
+            coverage_total: 0,
+            coverage_final: 0,
+            range_pass_work: 0,
+            build_seconds: build_rrpb,
+        },
+        CertFamilyStats {
+            certificates: frame_gen.n_certificates(),
+            mean_width: mean_width(&frame_gen),
+            coverage_total: 0,
+            coverage_final: 0,
+            range_pass_work: 0,
+            build_seconds: build_gen,
+        },
+    ];
+
+    let mut superset = true;
+    let (mut l_r, mut r_r) = (Vec::new(), Vec::new());
+    let (mut l_g, mut r_g) = (Vec::new(), Vec::new());
+    let mut lambda = lambda_max;
+    for step in 0..steps {
+        lambda *= rho;
+        stats[0].range_pass_work += frame_rrpb.advance_covered(lambda, &mut l_r, &mut r_r);
+        stats[1].range_pass_work += frame_gen.advance_covered(lambda, &mut l_g, &mut r_g);
+        stats[0].coverage_total += l_r.len() + r_r.len();
+        stats[1].coverage_total += l_g.len() + r_g.len();
+        if step + 1 == steps {
+            stats[0].coverage_final = l_r.len() + r_r.len();
+            stats[1].coverage_final = l_g.len() + r_g.len();
+        }
+        for (sub, sup) in [(&mut l_r, &mut l_g), (&mut r_r, &mut r_g)] {
+            sub.sort_unstable();
+            sup.sort_unstable();
+            if !sub.iter().all(|id| sup.binary_search(id).is_ok()) {
+                superset = false;
+            }
+        }
+    }
+    let [rrpb, general] = stats;
+    RangeStudyRow {
+        d,
+        triplets: store.len(),
+        lambda_max,
+        steps,
+        rrpb,
+        general,
+        general_is_superset: superset,
+    }
+}
+
+/// The DGB/GB-vs-RRPB certificate study across dimensions (this repo's
+/// App. K.1 follow-up; `rangestudy` in the experiments binary). Columns
+/// per family: certificate count, mean certified width, total/final
+/// coverage over the λ grid, sweep work, frame build seconds.
+pub fn run_range_study(engine: &dyn Engine, opts: &ExpOptions, dims: &[usize]) -> Table {
+    let steps = if opts.max_steps > 0 { opts.max_steps } else { 25 };
+    let n_points = ((48.0 * opts.scale) as usize).max(24);
+    let mut table = Table::new(
+        "range study — DGB/GB general-form certificates vs RRPB-only",
+        &[
+            "d",
+            "triplets",
+            "lambda_max",
+            "rrpb_certs",
+            "gen_certs",
+            "rrpb_mean_width",
+            "gen_mean_width",
+            "rrpb_coverage",
+            "gen_coverage",
+            "rrpb_work",
+            "gen_work",
+            "superset",
+        ],
+    );
+    for &d in dims {
+        if opts.verbose {
+            eprintln!("  range study d={d} …");
+        }
+        let row = range_study_for(engine, d, n_points, 3, steps, 0.9, opts.seed);
+        assert!(
+            row.general_is_superset,
+            "d={d}: general-family coverage lost an RRPB-certified id"
+        );
+        table.row(vec![
+            d.to_string(),
+            row.triplets.to_string(),
+            fnum(row.lambda_max),
+            row.rrpb.certificates.to_string(),
+            row.general.certificates.to_string(),
+            fnum(row.rrpb.mean_width),
+            fnum(row.general.mean_width),
+            row.rrpb.coverage_total.to_string(),
+            row.general.coverage_total.to_string(),
+            row.rrpb.range_pass_work.to_string(),
+            row.general.range_pass_work.to_string(),
+            if row.general_is_superset { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    table
+}
+
 /// Persist a set of tables as one markdown report + CSVs.
 pub fn emit(name: &str, tables: &[&Table]) {
     let mut md = String::new();

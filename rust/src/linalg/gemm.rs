@@ -22,6 +22,18 @@
 //!   accumulation is symmetric, so only the upper triangle is
 //!   accumulated (j ≥ i) — **half the FLOPs** of the scalar rank-1
 //!   reference — and mirrored once after the parallel reduction.
+//! - **d-blocked panels** ([`margins_into_d_blocked`],
+//!   [`wsyrk_upper_d_blocked`]): the row-stream geometry above assumes
+//!   the panel `Y` scratch (PANEL_ROWS × d) and the d × d Gram stay
+//!   L1/L2-resident — which breaks down for d ≳ 512 (the paper's
+//!   higher-dimensional benchmarks: `Y` alone is 192 KB at d = 768 and
+//!   the Gram 4.7 MB). The d-blocked variants additionally split the
+//!   feature dimension into [`D_BLOCK`]-column blocks: the margins GEMM
+//!   computes `Y` one (row-panel × d-block) tile at a time (PANEL_ROWS ×
+//!   D_BLOCK scratch, M streamed in D_BLOCK-wide row slices) and the
+//!   SYRK accumulates the upper triangle one D_BLOCK × D_BLOCK Gram tile
+//!   at a time, streaming `a`/`b` column slices through it — every hot
+//!   buffer is cache-sized *independently of d*.
 //!
 //! Numerical contract: for a bitwise-symmetric `M` the panel GEMM
 //! accumulates the margin in exactly the scalar reference's summation
@@ -29,11 +41,20 @@
 //! summand-for-summand the scalar loop's upper triangle — parity with
 //! the scalar core is at f64 round-off (`rust/tests/kernel_parity.rs`
 //! checks 1e-10 on arbitrary shapes, including row counts and dimensions
-//! that are not multiples of the panel size).
+//! that are not multiples of the panel size). The d-blocked variants are
+//! **bitwise identical** to the row-stream kernels: blocking the columns
+//! of `Y` never splits a `Σ_j` accumulation chain (each `y[k][i]` still
+//! sums ascending j), the per-panel margin dot visits `i` globally
+//! ascending because blocks are walked in order with a carried
+//! accumulator, and each Gram cell's `Σ_t` chain lives entirely inside
+//! one tile with `t` ascending — so core selection can never change a
+//! solver trajectory or a screening decision (unit tests here assert
+//! `==`, not a tolerance).
 //!
 //! The same tile geometry is mirrored by the PJRT grid: the Pallas
-//! kernels dispatch row-blocks with per-block accumulators, so
-//! native-vs-PJRT comparisons measure the backend, not the blocking.
+//! kernels dispatch row-blocks with per-block accumulators (and, for
+//! high d, feature-dimension blocks), so native-vs-PJRT comparisons
+//! measure the backend, not the blocking.
 
 use super::Mat;
 
@@ -42,6 +63,19 @@ use super::Mat;
 /// reused PANEL_ROWS times. Mirrors the Pallas kernels' row-block size
 /// so native and PJRT runs share one grid decomposition.
 pub const PANEL_ROWS: usize = 32;
+
+/// Columns per feature-dimension block of the d-blocked kernels: one
+/// `Y` tile is PANEL_ROWS × D_BLOCK doubles (32 KB — L1/L2-resident on
+/// anything) and one Gram tile D_BLOCK × D_BLOCK doubles (128 KB —
+/// L2-resident), independently of d.
+pub const D_BLOCK: usize = 128;
+
+/// Feature dimension at which [`crate::runtime::KernelCore::Auto`]
+/// switches from the row-stream geometry to the d-blocked one: below
+/// this the row-stream panel scratch (PANEL_ROWS · d doubles) still
+/// fits L2 comfortably and the d-blocked variant's extra passes over
+/// the `a`/`b` panel rows buy nothing.
+pub const D_BLOCK_MIN_D: usize = 512;
 
 /// FLOPs of one margins pass over `n` rows: two quad forms per row, each
 /// a d×d GEMM row (2d²) plus a length-d dot (2d).
@@ -59,6 +93,17 @@ pub fn wgram_flops(n: usize, d: usize) -> f64 {
 /// Panel-tiled margins: `out[k] = a_tᵀ M a_t − b_tᵀ M b_t` for every row
 /// `t` in `rows`, written to `out` (aligned with `rows`). `y` is caller
 /// scratch, grown to at most `PANEL_ROWS · d` and reusable across calls.
+///
+/// ```
+/// use triplet_screen::linalg::{gemm, Mat};
+///
+/// let m = Mat::identity(3); // ⟨I, H⟩ = ‖a‖² − ‖b‖²
+/// let a = Mat::from_rows(2, 3, vec![1.0, 2.0, 2.0, 0.0, 3.0, 4.0]);
+/// let b = Mat::from_rows(2, 3, vec![1.0, 0.0, 0.0, 0.0, 0.0, 5.0]);
+/// let (mut out, mut y) = (vec![0.0; 2], Vec::new());
+/// gemm::margins_into(&m, &a, &b, 0..2, &mut out, &mut y);
+/// assert_eq!(out, vec![8.0, 0.0]);
+/// ```
 pub fn margins_into(
     mat: &Mat,
     a: &Mat,
@@ -129,11 +174,144 @@ fn quad_forms_panel(
     }
 }
 
+/// d-blocked panel margins: identical contract (and **bitwise identical
+/// output**) to [`margins_into`], but the feature dimension is walked in
+/// `d_block`-column blocks so the hot working set — one `Y` tile of
+/// `PANEL_ROWS · d_block` doubles (the required `y` capacity) plus a
+/// `d_block`-wide slice of each streamed `M` row — is cache-sized
+/// independently of d. `acc` is the per-panel margin accumulator lane
+/// (grown to `PANEL_ROWS`); it carries each row's partial dot across
+/// blocks so the `Σ_i x_i·y_i` chain still visits `i` globally
+/// ascending.
+///
+/// Engines pass [`D_BLOCK`]; the parameter exists so tests can place
+/// block boundaries anywhere.
+///
+/// ```
+/// use triplet_screen::linalg::{gemm, Mat};
+///
+/// let m = Mat::identity(5);
+/// let a = Mat::from_rows(1, 5, vec![1.0, 2.0, 0.0, 2.0, 4.0]);
+/// let b = Mat::from_rows(1, 5, vec![3.0, 0.0, 0.0, 4.0, 0.0]);
+/// let (mut out, mut y, mut acc) = (vec![0.0; 1], Vec::new(), Vec::new());
+/// // block width 2 splits d = 5 into blocks of 2 + 2 + 1
+/// gemm::margins_into_d_blocked(&m, &a, &b, 0..1, &mut out, &mut y, &mut acc, 2);
+/// assert_eq!(out, vec![0.0]); // ‖a‖² = ‖b‖² = 25
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn margins_into_d_blocked(
+    mat: &Mat,
+    a: &Mat,
+    b: &Mat,
+    rows: std::ops::Range<usize>,
+    out: &mut [f64],
+    y: &mut Vec<f64>,
+    acc: &mut Vec<f64>,
+    d_block: usize,
+) {
+    let d = mat.cols();
+    debug_assert!(mat.is_square());
+    debug_assert_eq!(a.cols(), d);
+    debug_assert_eq!(b.cols(), d);
+    debug_assert_eq!(out.len(), rows.len());
+    assert!(d_block > 0, "d_block must be positive");
+    if rows.is_empty() {
+        return;
+    }
+    let bw_max = d_block.min(d.max(1));
+    let pr_max = PANEL_ROWS.min(rows.len());
+    y.resize(pr_max * bw_max, 0.0);
+    acc.resize(pr_max, 0.0);
+    let mut p0 = rows.start;
+    while p0 < rows.end {
+        let pr = PANEL_ROWS.min(rows.end - p0);
+        let chunk = &mut out[p0 - rows.start..p0 - rows.start + pr];
+        quad_forms_panel_d_blocked(mat, a, p0, pr, chunk, y, acc, d_block, true);
+        quad_forms_panel_d_blocked(mat, b, p0, pr, chunk, y, acc, d_block, false);
+        p0 += pr;
+    }
+}
+
+/// One d-blocked panel of quad forms: `out[k] (= | -=) x_{p0+k}ᵀ M
+/// x_{p0+k}`, accumulated one `d_block`-column tile of `Y = X_panel · M`
+/// at a time. Per-element summation chains are those of
+/// [`quad_forms_panel`] exactly: every `y` cell still sums over
+/// ascending j, and the margin dot walks the blocks (hence `i`) in
+/// ascending order through the carried `acc` lane.
+#[allow(clippy::too_many_arguments)]
+fn quad_forms_panel_d_blocked(
+    mat: &Mat,
+    x: &Mat,
+    p0: usize,
+    pr: usize,
+    out: &mut [f64],
+    y: &mut [f64],
+    acc: &mut [f64],
+    d_block: usize,
+    assign: bool,
+) {
+    let d = mat.cols();
+    acc[..pr].fill(0.0);
+    let mut c0 = 0;
+    while c0 < d {
+        let c1 = (c0 + d_block).min(d);
+        let bw = c1 - c0;
+        let yb = &mut y[..pr * bw];
+        yb.fill(0.0);
+        // Y tile = X_panel · M[:, c0..c1]: stream the D_BLOCK-wide slice
+        // of each M row; each hot slice is multiplied into all pr panel
+        // rows before the next row is loaded.
+        for j in 0..d {
+            let mrow = &mat.row(j)[c0..c1];
+            for k in 0..pr {
+                let c = x.row(p0 + k)[j];
+                if c == 0.0 {
+                    continue;
+                }
+                let yrow = &mut yb[k * bw..(k + 1) * bw];
+                for (yi, &mi) in yrow.iter_mut().zip(mrow) {
+                    *yi += c * mi;
+                }
+            }
+        }
+        // fold this block's dot contribution into the carried margin
+        for k in 0..pr {
+            let xr = &x.row(p0 + k)[c0..c1];
+            let yr = &yb[k * bw..(k + 1) * bw];
+            let mut s = acc[k];
+            for (xi, yi) in xr.iter().zip(yr) {
+                s += xi * yi;
+            }
+            acc[k] = s;
+        }
+        c0 = c1;
+    }
+    for k in 0..pr {
+        if assign {
+            out[k] = acc[k];
+        } else {
+            out[k] -= acc[k];
+        }
+    }
+}
+
 /// Weighted SYRK, upper triangle: `G[i][j] += Σ_k w[k]·(a_t[i]a_t[j] −
 /// b_t[i]b_t[j])` for `j ≥ i`, `t = rows.start + k`. `w` is aligned with
 /// `rows`; zero weights are skipped. The lower triangle is left
 /// untouched — call [`mirror_upper`] once after reducing all partial
 /// accumulators.
+///
+/// ```
+/// use triplet_screen::linalg::{gemm, Mat};
+///
+/// let a = Mat::from_rows(1, 2, vec![1.0, 2.0]);
+/// let b = Mat::from_rows(1, 2, vec![2.0, 0.0]);
+/// let mut g = Mat::zeros(2, 2);
+/// gemm::wsyrk_upper(&mut g, &a, &b, 0..1, &[1.0]);
+/// gemm::mirror_upper(&mut g);
+/// // a·aᵀ − b·bᵀ = [[1,2],[2,4]] − [[4,0],[0,0]]
+/// assert_eq!((g[(0, 0)], g[(0, 1)], g[(1, 0)], g[(1, 1)]), (-3.0, 2.0, 2.0, 4.0));
+/// ```
 pub fn wsyrk_upper(g: &mut Mat, a: &Mat, b: &Mat, rows: std::ops::Range<usize>, w: &[f64]) {
     let d = a.cols();
     debug_assert_eq!(b.cols(), d);
@@ -152,6 +330,62 @@ pub fn wsyrk_upper(g: &mut Mat, a: &Mat, b: &Mat, rows: std::ops::Range<usize>, 
                 *gj += wai * aj - wbi * bj;
             }
         }
+    }
+}
+
+/// d-blocked weighted SYRK: identical contract (and **bitwise identical
+/// output**) to [`wsyrk_upper`], but the upper triangle is accumulated
+/// one `d_block × d_block` Gram tile at a time, streaming the matching
+/// `a`/`b` column slices through it — so the hot Gram working set is
+/// `d_block²` doubles instead of `d²` (4.7 MB at d = 768, far past L2;
+/// 128 KB per [`D_BLOCK`] tile). Each Gram cell lives in exactly one
+/// tile and its `Σ_t` chain keeps `t` ascending inside that tile, so
+/// the summand sequence per cell is exactly [`wsyrk_upper`]'s.
+///
+/// The trade: `a`/`b` panel rows are re-streamed once per tile-column
+/// instead of once total — O(n·d·(d/d_block)) extra loads against
+/// O(n·d²) FLOPs, a win as soon as the full Gram stops fitting in
+/// cache. Engines pass [`D_BLOCK`]; tests place boundaries anywhere.
+pub fn wsyrk_upper_d_blocked(
+    g: &mut Mat,
+    a: &Mat,
+    b: &Mat,
+    rows: std::ops::Range<usize>,
+    w: &[f64],
+    d_block: usize,
+) {
+    let d = a.cols();
+    debug_assert_eq!(b.cols(), d);
+    debug_assert_eq!((g.rows(), g.cols()), (d, d));
+    debug_assert_eq!(w.len(), rows.len());
+    assert!(d_block > 0, "d_block must be positive");
+    let mut i0 = 0;
+    while i0 < d {
+        let i1 = (i0 + d_block).min(d);
+        let mut j0 = i0;
+        while j0 < d {
+            let j1 = (j0 + d_block).min(d);
+            for (k, t) in rows.clone().enumerate() {
+                let wt = w[k];
+                if wt == 0.0 {
+                    continue;
+                }
+                let (ra, rb) = (a.row(t), b.row(t));
+                for i in i0..i1 {
+                    let js = j0.max(i);
+                    if js >= j1 {
+                        continue;
+                    }
+                    let (wai, wbi) = (wt * ra[i], wt * rb[i]);
+                    let grow = &mut g.row_mut(i)[js..j1];
+                    for ((gj, &aj), &bj) in grow.iter_mut().zip(&ra[js..j1]).zip(&rb[js..j1]) {
+                        *gj += wai * aj - wbi * bj;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
     }
 }
 
@@ -246,6 +480,77 @@ mod tests {
                 assert_eq!(g[(i, j)], g[(j, i)], "asymmetry at ({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn d_blocked_margins_bitwise_match_row_stream() {
+        // blocking the feature dimension must not change a single bit:
+        // arbitrary shapes, block widths straddling every boundary case
+        // (1, smaller than d, equal, larger)
+        forall("gemm-dblock-margins", 24, |rng| {
+            let d = 1 + rng.below(40);
+            let n = 1 + rng.below(2 * PANEL_ROWS + 3);
+            let (m, a, b) = rand_inputs(rng, n, d);
+            let mut base = vec![0.0; n];
+            let mut y = Vec::new();
+            margins_into(&m, &a, &b, 0..n, &mut base, &mut y);
+            let mut acc = Vec::new();
+            for d_block in [1, 2, d.saturating_sub(1).max(1), d, d + 3] {
+                let mut out = vec![0.0; n];
+                margins_into_d_blocked(&m, &a, &b, 0..n, &mut out, &mut y, &mut acc, d_block);
+                for t in 0..n {
+                    if out[t].to_bits() != base[t].to_bits() {
+                        return Err(format!(
+                            "d={d} block={d_block} t={t}: {} != {}",
+                            out[t], base[t]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn d_blocked_margins_subrange_alignment() {
+        let mut rng = Pcg64::seed(4);
+        let (m, a, b) = rand_inputs(&mut rng, 90, 11);
+        let (mut y, mut acc) = (Vec::new(), Vec::new());
+        let mut full = vec![0.0; 90];
+        margins_into_d_blocked(&m, &a, &b, 0..90, &mut full, &mut y, &mut acc, 4);
+        let mut part = vec![0.0; 33];
+        margins_into_d_blocked(&m, &a, &b, 41..74, &mut part, &mut y, &mut acc, 4);
+        for (k, t) in (41..74).enumerate() {
+            assert_eq!(part[k], full[t], "sub-range row {t} misaligned");
+        }
+    }
+
+    #[test]
+    fn d_blocked_wsyrk_bitwise_matches_row_stream() {
+        forall("gemm-dblock-wsyrk", 24, |rng| {
+            let d = 1 + rng.below(24);
+            let n = 1 + rng.below(60);
+            let (_, a, b) = rand_inputs(rng, n, d);
+            let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut base = Mat::zeros(d, d);
+            wsyrk_upper(&mut base, &a, &b, 0..n, &w);
+            for d_block in [1, 3, d.saturating_sub(1).max(1), d, d + 5] {
+                let mut g = Mat::zeros(d, d);
+                wsyrk_upper_d_blocked(&mut g, &a, &b, 0..n, &w, d_block);
+                for i in 0..d {
+                    for j in 0..d {
+                        if g[(i, j)].to_bits() != base[(i, j)].to_bits() {
+                            return Err(format!(
+                                "d={d} block={d_block}: cell ({i},{j}) {} != {}",
+                                g[(i, j)],
+                                base[(i, j)]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

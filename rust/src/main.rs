@@ -5,24 +5,60 @@
 //!   path    — run a full regularization path
 //!   info    — dataset/triplet/λ_max summary
 //!
-//! Common options: --dataset <name[-small]> --engine native|pjrt
-//!   --bound GB|PGB|DGB|CDGB|RPB|RRPB --rule sphere|linear|semidefinite
-//!   --k <n> --seed <n> --tol <f> --rho <f> --active-set --range --range-general
-//!
-//! Streaming (path only): --streamed mines triplets lazily with
-//! screen-on-admission instead of materializing the full store;
-//! --strategy exhaustive|stratified|hard-negative picks the enumeration
-//! order, --batch the mining batch size, --budget caps the candidate
-//! universe (subsampled mining).
+//! `triplet-screen --help` (or `<subcommand> --help`) prints the full
+//! option reference — the same text as the CLI section of
+//! `rust/README.md`, enforced byte-for-byte by the
+//! `readme_cli_section_embeds_help_verbatim` test below.
 
 use triplet_screen::coordinator::report::{fnum, fpct, Table};
 use triplet_screen::data::{synthetic, Dataset};
 use triplet_screen::loss::Loss;
 use triplet_screen::path::{PathConfig, RegPath, TripletSource};
 use triplet_screen::prelude::*;
+use triplet_screen::runtime::KernelCore;
 use triplet_screen::solver::Problem;
 use triplet_screen::triplet::{MiningStrategy, TripletMiner};
 use triplet_screen::util::cli::Args;
+
+/// Full option reference, printed by `--help` and mirrored verbatim in
+/// the CLI section of `rust/README.md`.
+const HELP: &str = "\
+usage: triplet-screen <info|train|path> [options]
+
+common options
+  --dataset NAME        synthetic analogue (e.g. segment-small)   [segment-small]
+  --libsvm PATH         load a LIBSVM file instead (--d to force dim)
+  --engine ENGINE       native | native-scalar | pjrt             [native]
+  --kernel-core CORE    auto | row-stream | d-blocked | scalar    [auto]
+                        (native engine only; auto picks d-blocked once
+                        d reaches the threshold)
+  --d-threshold N       auto switch-over dimension                [512]
+  --threads N           worker threads (0 = auto)                 [0]
+  --k N                 neighbors per anchor (triplet construction)
+  --seed N              RNG seed                                  [7]
+  --gamma F             smoothed-hinge gamma (0 = plain hinge)    [0.05]
+  --tol F               solver duality-gap tolerance              [1e-6]
+
+train
+  --lambda F            regularization weight (default 0.1·lambda_max)
+  --bound B             GB | PGB | DGB | CDGB | RPB | RRPB        [RRPB]
+  --rule R              sphere | linear | semidefinite            [sphere]
+  --no-screening        solve without screening
+
+path (everything train takes, plus)
+  --rho F               geometric decay lambda_t = rho·lambda_t-1 [0.9]
+  --max-steps N         hard cap on lambda steps                  [60]
+  --active-set          active-set heuristic (paper §5.3)
+  --range               range-based extension (§4 certificates)
+  --range-general       + DGB/GB general-form certificates (App K.1)
+  --config PATH         TOML-subset config file (see util/config.rs);
+                        --set sec.key=val,... applies overrides
+  --streamed            mine triplets lazily with screen-on-admission
+                        instead of materializing the full store
+  --strategy S          exhaustive | stratified | hard-negative   [exhaustive]
+  --batch N             mining batch size                         [4096]
+  --budget N            cap the candidate universe (subsampled mining)
+";
 
 fn parse_bound(s: &str) -> BoundKind {
     match s.to_ascii_uppercase().as_str() {
@@ -46,10 +82,37 @@ fn parse_rule(s: &str) -> RuleKind {
 }
 
 fn make_engine(args: &Args) -> Box<dyn Engine> {
+    make_engine_with(args, None)
+}
+
+/// Engine construction with CLI > config-file > default precedence for
+/// the kernel-core selection (`[engine]` section keys; see
+/// `util::config::engine_overrides`).
+fn make_engine_with(
+    args: &Args,
+    file_cfg: Option<&triplet_screen::util::config::Config>,
+) -> Box<dyn Engine> {
+    let (cfg_core, cfg_threshold, cfg_threads) = file_cfg
+        .map(triplet_screen::util::config::engine_overrides)
+        .unwrap_or((None, None, None));
+    let threads = args
+        .get("threads")
+        .map(|s| s.parse().expect("--threads expects an integer"))
+        .or(cfg_threads)
+        .unwrap_or(0);
     match args.get_or("engine", "native") {
-        "native" => Box::new(NativeEngine::new(args.get_usize("threads", 0))),
+        "native" => {
+            // kernel-core override: auto (default) picks row-stream vs
+            // d-blocked per call by the --d-threshold dimension
+            let core = args.get("kernel-core").map(KernelCore::parse_cli).or(cfg_core);
+            let threshold = args
+                .get("d-threshold")
+                .map(|s| s.parse().expect("--d-threshold expects an integer"))
+                .or(cfg_threshold);
+            Box::new(NativeEngine::from_options(threads, core, threshold))
+        }
         // scalar reference core: parity oracle / perf baseline
-        "native-scalar" => Box::new(NativeEngine::scalar(args.get_usize("threads", 0))),
+        "native-scalar" => Box::new(NativeEngine::scalar(threads)),
         "pjrt" => Box::new(
             PjrtEngine::from_default_dir().expect("loading PJRT artifacts (run `make artifacts`)"),
         ),
@@ -110,6 +173,11 @@ fn screening_cfg(args: &Args) -> Option<ScreeningConfig> {
 
 fn main() {
     let args = Args::parse();
+    if args.flag("help") {
+        // `triplet-screen --help` and `triplet-screen <sub> --help`
+        print!("{HELP}");
+        return;
+    }
     let mut rng = Pcg64::seed(args.get_usize("seed", 7) as u64);
     match args.subcommand.as_deref() {
         Some("info") => {
@@ -160,9 +228,9 @@ fn main() {
             println!("||M||_F    : {}", fnum(m.norm()));
         }
         Some("path") => {
-            let engine = make_engine(&args);
-            // config file (TOML subset) + --set overrides + CLI flags
-            let cfg = if let Some(path) = args.get("config") {
+            // config file (TOML subset) + --set overrides + CLI flags;
+            // the [engine] section feeds make_engine_with (CLI wins)
+            let file_cfg = args.get("config").map(|path| {
                 let mut file_cfg = triplet_screen::util::config::Config::load(path)
                     .expect("loading --config file");
                 if let Some(sets) = args.get("set") {
@@ -170,7 +238,11 @@ fn main() {
                         file_cfg.set(assignment).expect("applying --set override");
                     }
                 }
-                triplet_screen::util::config::path_config(&file_cfg)
+                file_cfg
+            });
+            let engine = make_engine_with(&args, file_cfg.as_ref());
+            let cfg = if let Some(file_cfg) = &file_cfg {
+                triplet_screen::util::config::path_config(file_cfg)
             } else {
                 PathConfig {
                     loss: Loss::smoothed_hinge(args.get_f64("gamma", 0.05)),
@@ -238,15 +310,27 @@ fn main() {
             }
         }
         _ => {
-            eprintln!(
-                "usage: triplet-screen <info|train|path> [--dataset NAME] [--engine native|pjrt]\n\
-                 \x20  [--bound GB|PGB|DGB|CDGB|RPB|RRPB] [--rule sphere|linear|semidefinite]\n\
-                 \x20  [--lambda F] [--rho F] [--tol F] [--k N] [--seed N] [--active-set] [--range]\n\
-                 \x20  [--range-general] [--no-screening] [--libsvm PATH]\n\
-                 \x20  path --streamed [--strategy exhaustive|stratified|hard-negative]\n\
-                 \x20  [--batch N] [--budget N]"
-            );
+            eprint!("{HELP}");
             std::process::exit(2);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::HELP;
+
+    /// The README's CLI section claims to mirror `--help` verbatim —
+    /// hold it to that (same rot-guard idea as the bench-schema
+    /// conformance check): any option added to one side without the
+    /// other fails tier-1.
+    #[test]
+    fn readme_cli_section_embeds_help_verbatim() {
+        let readme = include_str!("../README.md");
+        assert!(
+            readme.contains(HELP),
+            "rust/README.md CLI section diverged from the HELP const in main.rs — \
+             update the fenced block to match `triplet-screen --help` byte for byte"
+        );
     }
 }

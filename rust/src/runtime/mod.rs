@@ -4,11 +4,15 @@
 //! fused step). Two implementations:
 //!
 //! - [`NativeEngine`] — pure-rust f64, threaded. Routes every FLOP
-//!   through the tiled GEMM/SYRK core in [`crate::linalg::gemm`]
-//!   ([`KernelCore::Tiled`], the default); the original scalar core
-//!   ([`KernelCore::Scalar`], via [`NativeEngine::scalar`]) is kept as
-//!   the parity oracle and perf baseline, and as the fallback for
-//!   dimensions without compiled artifacts.
+//!   through the tiled GEMM/SYRK core in [`crate::linalg::gemm`]:
+//!   [`KernelCore::Auto`] (the default) picks the row-stream geometry
+//!   ([`KernelCore::Tiled`]) below `gemm::D_BLOCK_MIN_D` and the
+//!   d-blocked geometry ([`KernelCore::DBlocked`], cache-sized buffers
+//!   independently of d) at and above it — the two are bitwise
+//!   identical, so the switch is invisible to results. The original
+//!   scalar core ([`KernelCore::Scalar`], via [`NativeEngine::scalar`])
+//!   is kept as the parity oracle and perf baseline, and as the
+//!   fallback for dimensions without compiled artifacts.
 //! - [`PjrtEngine`] — loads the AOT artifacts (`artifacts/*.hlo.txt`,
 //!   lowered from the L2 JAX model wrapping the L1 Pallas kernels) and
 //!   executes them through the PJRT C API via the `xla` crate. Its

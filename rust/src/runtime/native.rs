@@ -5,15 +5,25 @@
 //! kernel's grid-accumulator structure exactly, which keeps
 //! native-vs-PJRT comparisons meaningful.
 //!
-//! Two interchangeable compute cores share that scaffold
-//! ([`KernelCore`]):
+//! Interchangeable compute cores share that scaffold ([`KernelCore`]):
 //!
-//! - **Tiled** (the default): routes every FLOP through
+//! - **Tiled** (row-stream): routes every FLOP through
 //!   [`crate::linalg::gemm`] — panel-tiled GEMM margins
 //!   ([`gemm::PANEL_ROWS`] rows per tile, `M` L2-resident, each streamed
 //!   `M` row reused across the whole panel from L1) and the
 //!   upper-triangle weighted SYRK (half the FLOPs of the rank-1
 //!   reference, mirrored once after the reduction).
+//! - **DBlocked**: the same panels with the feature dimension
+//!   additionally split into [`gemm::D_BLOCK`]-column blocks
+//!   ([`gemm::margins_into_d_blocked`] / [`gemm::wsyrk_upper_d_blocked`])
+//!   so every hot buffer is cache-sized independently of d — the
+//!   geometry for the paper's d ≳ 512 benchmarks, bitwise identical to
+//!   the row-stream core by construction.
+//! - **Auto** (the default): picks DBlocked when the call's d reaches
+//!   the engine's threshold ([`gemm::D_BLOCK_MIN_D`] unless overridden
+//!   via [`NativeEngine::with_d_threshold`] / CLI `--d-threshold`),
+//!   Tiled below it. Because the two geometries are bitwise identical,
+//!   the switch can never change a result — only the cache behavior.
 //! - **Scalar**: the original per-row matvec + full rank-1 update
 //!   reference, kept as the parity oracle
 //!   (`rust/tests/kernel_parity.rs`) and the perf baseline
@@ -39,22 +49,55 @@ pub enum KernelCore {
     /// per-row matvec margins + full rank-1 gradient updates (the
     /// original scalar reference; parity oracle and perf baseline)
     Scalar,
-    /// panel-tiled GEMM margins + upper-triangle weighted SYRK
-    /// (`linalg::gemm`)
+    /// row-stream geometry: panel-tiled GEMM margins + upper-triangle
+    /// weighted SYRK (`linalg::gemm`), whole rows of `M`/`G` resident
     Tiled,
+    /// d-blocked geometry: the same panels with the feature dimension
+    /// split into `gemm::D_BLOCK`-column blocks — cache-sized buffers
+    /// independently of d, bitwise identical to `Tiled`
+    DBlocked,
+    /// per-call selection: `DBlocked` once d reaches the engine's
+    /// threshold (`gemm::D_BLOCK_MIN_D` by default), `Tiled` below it
+    Auto,
+}
+
+impl KernelCore {
+    /// Parse a CLI/config spelling (`auto`, `row-stream`, `d-blocked`,
+    /// `scalar`; aliases `tiled` and `dblocked` accepted).
+    pub fn parse(s: &str) -> Option<KernelCore> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelCore::Auto),
+            "row-stream" | "rowstream" | "tiled" => Some(KernelCore::Tiled),
+            "d-blocked" | "dblocked" => Some(KernelCore::DBlocked),
+            "scalar" => Some(KernelCore::Scalar),
+            _ => None,
+        }
+    }
+
+    /// [`Self::parse`] with the canonical CLI failure: panics, naming
+    /// the valid spellings. Both binaries route `--kernel-core` through
+    /// this so the message (and the accepted set) cannot drift.
+    pub fn parse_cli(s: &str) -> KernelCore {
+        KernelCore::parse(s).unwrap_or_else(|| {
+            panic!("unknown --kernel-core {s:?} (auto|row-stream|d-blocked|scalar)")
+        })
+    }
 }
 
 /// Native engine; `threads = 0` means auto.
 pub struct NativeEngine {
     threads: usize,
     core: KernelCore,
+    /// d at which `KernelCore::Auto` switches to the d-blocked geometry
+    d_threshold: usize,
     scratch: ScratchPool,
 }
 
 impl NativeEngine {
-    /// Default engine: tiled compute core.
+    /// Default engine: auto core (row-stream below
+    /// [`gemm::D_BLOCK_MIN_D`], d-blocked at and above it).
     pub fn new(threads: usize) -> NativeEngine {
-        NativeEngine::with_core(threads, KernelCore::Tiled)
+        NativeEngine::with_core(threads, KernelCore::Auto)
     }
 
     /// The original scalar core — parity oracle and perf baseline.
@@ -62,18 +105,69 @@ impl NativeEngine {
         NativeEngine::with_core(threads, KernelCore::Scalar)
     }
 
+    /// Row-stream geometry pinned regardless of d (bench baseline for
+    /// the d-blocked comparison).
+    pub fn row_stream(threads: usize) -> NativeEngine {
+        NativeEngine::with_core(threads, KernelCore::Tiled)
+    }
+
+    /// d-blocked geometry pinned regardless of d.
+    pub fn d_blocked(threads: usize) -> NativeEngine {
+        NativeEngine::with_core(threads, KernelCore::DBlocked)
+    }
+
     /// Engine with an explicit compute core.
     pub fn with_core(threads: usize, core: KernelCore) -> NativeEngine {
         NativeEngine {
             threads,
             core,
+            d_threshold: gemm::D_BLOCK_MIN_D,
             scratch: ScratchPool::default(),
         }
     }
 
-    /// The compute core this engine routes kernels through.
+    /// Engine from CLI/config-style options: `None` falls back to the
+    /// defaults (`Auto` core, [`gemm::D_BLOCK_MIN_D`] threshold). The
+    /// one construction path both binaries share — pair with
+    /// [`KernelCore::parse_cli`] for the spelling parse.
+    pub fn from_options(
+        threads: usize,
+        core: Option<KernelCore>,
+        d_threshold: Option<usize>,
+    ) -> NativeEngine {
+        let mut engine = NativeEngine::with_core(threads, core.unwrap_or(KernelCore::Auto));
+        if let Some(t) = d_threshold {
+            engine = engine.with_d_threshold(t);
+        }
+        engine
+    }
+
+    /// Override the `Auto` switch-over dimension (CLI `--d-threshold`).
+    /// No effect on pinned cores.
+    pub fn with_d_threshold(mut self, d_threshold: usize) -> NativeEngine {
+        self.d_threshold = d_threshold.max(1);
+        self
+    }
+
+    /// The compute core this engine routes kernels through (possibly
+    /// `Auto`; see [`Self::core_for`] for the per-d resolution).
     pub fn core(&self) -> KernelCore {
         self.core
+    }
+
+    /// The concrete core a call with feature dimension `d` runs on —
+    /// never `Auto`.
+    pub fn core_for(&self, d: usize) -> KernelCore {
+        match self.core {
+            KernelCore::Auto => {
+                if d >= self.d_threshold {
+                    KernelCore::DBlocked
+                } else {
+                    KernelCore::Tiled
+                }
+            }
+            pinned => pinned,
+        }
     }
 
     fn workers(&self) -> usize {
@@ -104,7 +198,9 @@ fn row_quad(mat: &Mat, x: &[f64], tmp: &mut [f64]) -> f64 {
 impl Engine for NativeEngine {
     fn name(&self) -> &'static str {
         match self.core {
-            KernelCore::Tiled => "native",
+            KernelCore::Auto => "native",
+            KernelCore::Tiled => "native-rowstream",
+            KernelCore::DBlocked => "native-dblocked",
             KernelCore::Scalar => "native-scalar",
         }
     }
@@ -115,7 +211,7 @@ impl Engine for NativeEngine {
         debug_assert_eq!(a.rows(), out.len());
         debug_assert_eq!(b.rows(), out.len());
         let workers = self.workers();
-        match self.core {
+        match self.core_for(d) {
             KernelCore::Scalar => parallel::par_fill(out, workers, |range, chunk| {
                 let mut tmp = self.scratch.take(d);
                 for (k, t) in range.enumerate() {
@@ -129,13 +225,30 @@ impl Engine for NativeEngine {
                 gemm::margins_into(mat, a, b, range, chunk, &mut y);
                 self.scratch.put(y);
             }),
+            KernelCore::DBlocked => parallel::par_fill(out, workers, |range, chunk| {
+                let mut y = self.scratch.take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
+                let mut acc = self.scratch.take(gemm::PANEL_ROWS);
+                gemm::margins_into_d_blocked(
+                    mat,
+                    a,
+                    b,
+                    range,
+                    chunk,
+                    &mut y,
+                    &mut acc,
+                    gemm::D_BLOCK,
+                );
+                self.scratch.put(y);
+                self.scratch.put(acc);
+            }),
+            KernelCore::Auto => unreachable!("core_for never returns Auto"),
         }
     }
 
     fn wgram(&self, a: &Mat, b: &Mat, w: &[f64]) -> Mat {
         let (n, d) = (a.rows(), a.cols());
         debug_assert_eq!(w.len(), n);
-        let core = self.core;
+        let core = self.core_for(d);
         let partials = parallel::par_ranges(n, self.workers(), |range| {
             let mut g = Mat::zeros(d, d);
             match core {
@@ -143,6 +256,11 @@ impl Engine for NativeEngine {
                     let w_chunk = &w[range.clone()];
                     gemm::wsyrk_upper(&mut g, a, b, range, w_chunk);
                 }
+                KernelCore::DBlocked => {
+                    let w_chunk = &w[range.clone()];
+                    gemm::wsyrk_upper_d_blocked(&mut g, a, b, range, w_chunk, gemm::D_BLOCK);
+                }
+                KernelCore::Auto => unreachable!("core_for never returns Auto"),
                 KernelCore::Scalar => {
                     for t in range {
                         let wt = w[t];
@@ -166,12 +284,12 @@ impl Engine for NativeEngine {
         for p in partials {
             g.axpy(1.0, &p);
         }
-        // Both cores emit an exactly-symmetric gram from the same upper
-        // triangle: the tiled core never computed the lower half, and
-        // the scalar core's lower half is overwritten by the mirror.
-        // The upper-triangle summands and the reduction order coincide,
-        // so the two cores' outputs are bitwise identical — which is
-        // what lets benches assert identical screening trajectories
+        // Every core emits an exactly-symmetric gram from the same upper
+        // triangle: the tiled/d-blocked cores never computed the lower
+        // half, and the scalar core's lower half is overwritten by the
+        // mirror. The upper-triangle summands and the reduction order
+        // coincide, so all cores' outputs are bitwise identical — which
+        // is what lets benches assert identical screening trajectories
         // across cores. (The scalar core still pays its full-rank-1
         // inner loop: the perf baseline is untouched.)
         gemm::mirror_upper(&mut g);
@@ -193,7 +311,7 @@ impl Engine for NativeEngine {
         } else {
             Loss::hinge()
         };
-        let core = self.core;
+        let core = self.core_for(d);
         // one fused pass per worker: margins, loss, alpha, local gram —
         // the Pallas grid-accumulator structure, per compute core
         let ranges = parallel::split_ranges(n, self.workers());
@@ -250,6 +368,45 @@ impl Engine for NativeEngine {
                             scratch.put(y);
                             scratch.put(alpha);
                         }
+                        KernelCore::DBlocked => {
+                            let mut y =
+                                scratch.take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
+                            let mut acc = scratch.take(gemm::PANEL_ROWS);
+                            let mut alpha = scratch.take(gemm::PANEL_ROWS);
+                            let mut p0 = range.start;
+                            while p0 < range.end {
+                                let pr = gemm::PANEL_ROWS.min(range.end - p0);
+                                let off = p0 - range.start;
+                                let chunk = &mut head[off..off + pr];
+                                gemm::margins_into_d_blocked(
+                                    mat,
+                                    a,
+                                    b,
+                                    p0..p0 + pr,
+                                    chunk,
+                                    &mut y,
+                                    &mut acc,
+                                    gemm::D_BLOCK,
+                                );
+                                for (k, &m) in chunk.iter().enumerate() {
+                                    lsum += loss.value(m);
+                                    alpha[k] = loss.alpha(m);
+                                }
+                                gemm::wsyrk_upper_d_blocked(
+                                    &mut g,
+                                    a,
+                                    b,
+                                    p0..p0 + pr,
+                                    &alpha[..pr],
+                                    gemm::D_BLOCK,
+                                );
+                                p0 += pr;
+                            }
+                            scratch.put(y);
+                            scratch.put(acc);
+                            scratch.put(alpha);
+                        }
+                        KernelCore::Auto => unreachable!("core_for never returns Auto"),
                     }
                     (lsum, g)
                 }));
@@ -262,7 +419,7 @@ impl Engine for NativeEngine {
             lsum += l;
             g.axpy(1.0, &p);
         }
-        // mirror for BOTH cores — see the wgram comment: bitwise-equal
+        // mirror for EVERY core — see the wgram comment: bitwise-equal
         // symmetric gradients keep the cores' solver trajectories
         // identical without touching the scalar perf baseline
         gemm::mirror_upper(&mut g);
@@ -284,12 +441,21 @@ mod tests {
         (m, a, b)
     }
 
+    fn all_cores(threads: usize) -> [NativeEngine; 4] {
+        [
+            NativeEngine::new(threads),
+            NativeEngine::row_stream(threads),
+            NativeEngine::d_blocked(threads),
+            NativeEngine::scalar(threads),
+        ]
+    }
+
     #[test]
     fn margins_match_naive() {
         forall("native-margins", 16, |rng| {
             let (n, d) = (1 + rng.below(200), 1 + rng.below(12));
             let (m, a, b) = rand_inputs(rng, n, d);
-            for engine in [NativeEngine::new(3), NativeEngine::scalar(3)] {
+            for engine in all_cores(3) {
                 let mut out = vec![0.0; n];
                 engine.margins(&m, &a, &b, &mut out);
                 for t in 0..n {
@@ -312,7 +478,7 @@ mod tests {
                 want.axpy(w[t], &Mat::outer(a.row(t)));
                 want.axpy(-w[t], &Mat::outer(b.row(t)));
             }
-            for engine in [NativeEngine::new(2), NativeEngine::scalar(2)] {
+            for engine in all_cores(2) {
                 let g = engine.wgram(&a, &b, &w);
                 close(g.sub(&want).max_abs(), 0.0, 0.0, 1e-10, engine.name())?;
             }
@@ -327,7 +493,7 @@ mod tests {
             let (m, a, b) = rand_inputs(rng, n, d);
             let gamma = 0.05;
             let loss = Loss::smoothed_hinge(gamma);
-            for eng in [NativeEngine::new(4), NativeEngine::scalar(4)] {
+            for eng in all_cores(4) {
                 let mut margins = vec![0.0; n];
                 let (lsum, g) = eng.step(&m, &a, &b, gamma, &mut margins);
                 let mut margins2 = vec![0.0; n];
@@ -353,7 +519,7 @@ mod tests {
             let n = 1 + rng.below(3 * gemm::PANEL_ROWS);
             let d = 1 + rng.below(20);
             let (m, a, b) = rand_inputs(rng, n, d);
-            let tiled = NativeEngine::new(2);
+            let tiled = NativeEngine::row_stream(2);
             let scalar = NativeEngine::scalar(2);
             let mut mt = vec![0.0; n];
             let mut ms = vec![0.0; n];
@@ -369,10 +535,99 @@ mod tests {
     }
 
     #[test]
+    fn d_blocked_core_is_bitwise_identical_to_row_stream() {
+        // core selection must never change a bit: same step outputs for
+        // the d-blocked geometry as for the row-stream one, on shapes
+        // straddling both the row-panel and (via small d vs D_BLOCK) the
+        // single-partial-block edge
+        forall("native-dblock-bitwise", 12, |rng| {
+            let n = 1 + rng.below(3 * gemm::PANEL_ROWS);
+            let d = 1 + rng.below(20);
+            let (m, a, b) = rand_inputs(rng, n, d);
+            let rs = NativeEngine::row_stream(2);
+            let db = NativeEngine::d_blocked(2);
+            let mut mr = vec![0.0; n];
+            let mut md = vec![0.0; n];
+            let (lr, gr) = rs.step(&m, &a, &b, 0.05, &mut mr);
+            let (ld, gd) = db.step(&m, &a, &b, 0.05, &mut md);
+            if lr.to_bits() != ld.to_bits() {
+                return Err(format!("loss bits diverged: {lr} vs {ld}"));
+            }
+            for t in 0..n {
+                if mr[t].to_bits() != md[t].to_bits() {
+                    return Err(format!("margin {t} bits diverged"));
+                }
+            }
+            for i in 0..d {
+                for j in 0..d {
+                    if gr[(i, j)].to_bits() != gd[(i, j)].to_bits() {
+                        return Err(format!("grad ({i},{j}) bits diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auto_core_resolves_by_d_threshold() {
+        let auto = NativeEngine::new(1);
+        assert_eq!(auto.core(), KernelCore::Auto);
+        assert_eq!(auto.core_for(gemm::D_BLOCK_MIN_D - 1), KernelCore::Tiled);
+        assert_eq!(auto.core_for(gemm::D_BLOCK_MIN_D), KernelCore::DBlocked);
+        let low = NativeEngine::new(1).with_d_threshold(8);
+        assert_eq!(low.core_for(7), KernelCore::Tiled);
+        assert_eq!(low.core_for(8), KernelCore::DBlocked);
+        // pinned cores ignore the threshold
+        assert_eq!(
+            NativeEngine::scalar(1).with_d_threshold(1).core_for(999),
+            KernelCore::Scalar
+        );
+        assert_eq!(
+            NativeEngine::row_stream(1).with_d_threshold(1).core_for(999),
+            KernelCore::Tiled
+        );
+    }
+
+    #[test]
+    fn kernel_core_parses_cli_spellings() {
+        assert_eq!(KernelCore::parse("auto"), Some(KernelCore::Auto));
+        assert_eq!(KernelCore::parse("row-stream"), Some(KernelCore::Tiled));
+        assert_eq!(KernelCore::parse("tiled"), Some(KernelCore::Tiled));
+        assert_eq!(KernelCore::parse("d-blocked"), Some(KernelCore::DBlocked));
+        assert_eq!(KernelCore::parse("DBlocked"), Some(KernelCore::DBlocked));
+        assert_eq!(KernelCore::parse("scalar"), Some(KernelCore::Scalar));
+        assert_eq!(KernelCore::parse("mmx"), None);
+        assert_eq!(KernelCore::parse_cli("d-blocked"), KernelCore::DBlocked);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown --kernel-core")]
+    fn kernel_core_cli_typo_fails_loudly() {
+        let _ = KernelCore::parse_cli("dblockedd");
+    }
+
+    #[test]
+    fn from_options_applies_overrides() {
+        let defaulted = NativeEngine::from_options(2, None, None);
+        assert_eq!(defaulted.core(), KernelCore::Auto);
+        assert_eq!(defaulted.core_for(gemm::D_BLOCK_MIN_D), KernelCore::DBlocked);
+        let pinned = NativeEngine::from_options(2, Some(KernelCore::Scalar), Some(4));
+        assert_eq!(pinned.core(), KernelCore::Scalar);
+        let low = NativeEngine::from_options(2, Some(KernelCore::Auto), Some(4));
+        assert_eq!(low.core_for(4), KernelCore::DBlocked);
+        assert_eq!(low.core_for(3), KernelCore::Tiled);
+    }
+
+    #[test]
     fn thread_count_invariance() {
         let mut rng = Pcg64::seed(5);
         let (m, a, b) = rand_inputs(&mut rng, 333, 7);
-        for mk in [NativeEngine::new as fn(usize) -> NativeEngine, NativeEngine::scalar] {
+        for mk in [
+            NativeEngine::new as fn(usize) -> NativeEngine,
+            NativeEngine::d_blocked,
+            NativeEngine::scalar,
+        ] {
             let mut o1 = vec![0.0; 333];
             let mut o8 = vec![0.0; 333];
             mk(1).margins(&m, &a, &b, &mut o1);
@@ -391,7 +646,7 @@ mod tests {
     fn hinge_step_gamma_zero() {
         let mut rng = Pcg64::seed(6);
         let (m, a, b) = rand_inputs(&mut rng, 64, 5);
-        for eng in [NativeEngine::new(2), NativeEngine::scalar(2)] {
+        for eng in all_cores(2) {
             let mut margins = vec![0.0; 64];
             let (lsum, _) = eng.step(&m, &a, &b, 0.0, &mut margins);
             let want: f64 = margins.iter().map(|&m| (1.0 - m).max(0.0)).sum();
@@ -416,8 +671,12 @@ mod tests {
     #[test]
     fn engine_names_distinguish_cores() {
         assert_eq!(NativeEngine::new(1).name(), "native");
+        assert_eq!(NativeEngine::row_stream(1).name(), "native-rowstream");
+        assert_eq!(NativeEngine::d_blocked(1).name(), "native-dblocked");
         assert_eq!(NativeEngine::scalar(1).name(), "native-scalar");
-        assert_eq!(NativeEngine::new(1).core(), KernelCore::Tiled);
+        assert_eq!(NativeEngine::new(1).core(), KernelCore::Auto);
+        assert_eq!(NativeEngine::row_stream(1).core(), KernelCore::Tiled);
+        assert_eq!(NativeEngine::d_blocked(1).core(), KernelCore::DBlocked);
         assert_eq!(NativeEngine::scalar(1).core(), KernelCore::Scalar);
     }
 }

@@ -19,7 +19,12 @@
 //! uses, accumulating per-block partial gradients that this wrapper
 //! reduces (`g.axpy` per chunk) exactly like the native worker
 //! reduction — so native-vs-PJRT timings compare backends under one
-//! blocking scheme.
+//! blocking scheme. For d past [`crate::linalg::gemm::D_BLOCK_MIN_D`]
+//! the native core switches to its d-blocked geometry
+//! ([`crate::linalg::gemm::D_BLOCK`]-column feature tiles), which is
+//! the CPU mirror of the Pallas kernels' (row-block × feature-block)
+//! grid — VMEM-sized feature tiles on TPU, cache-sized column blocks
+//! here — so the comparison stays blocking-equivalent at every d.
 
 use super::{Engine, StepOut};
 use crate::linalg::Mat;

@@ -11,7 +11,11 @@
 //! core so comparisons stay meaningful): dispatches are row-blocked with
 //! per-block accumulators reduced at the end — the same grid-accumulator
 //! structure and row-tile geometry as the native panels
-//! ([`crate::linalg::gemm::PANEL_ROWS`] rows per tile).
+//! ([`crate::linalg::gemm::PANEL_ROWS`] rows per tile). For the high-d
+//! regime the native core additionally blocks the feature dimension in
+//! [`crate::linalg::gemm::D_BLOCK`]-column tiles, matching the Pallas
+//! kernels' (row-block × feature-block) grid decomposition, so the
+//! native-vs-PJRT comparison stays blocking-equivalent at every d.
 
 use super::{Engine, StepOut};
 use crate::linalg::Mat;

@@ -263,6 +263,16 @@ impl ReferenceFrame {
         self.schedule.len()
     }
 
+    /// The merged certified λ-intervals, sorted by upper endpoint
+    /// descending (the sweep's entry order). Read-only view for the
+    /// DGB/GB-vs-RRPB certificate studies (`benches/screening.rs`,
+    /// `coordinator::experiments::run_range_study`): interval widths and
+    /// per-side counts are computed from these without touching the
+    /// sweep state.
+    pub fn certificates(&self) -> &[Certificate] {
+        &self.schedule
+    }
+
     /// Whether the frame carries *exact* RRPB sphere-rule intervals for
     /// `loss` — exact means "the rule fires at λ iff λ is inside", so a
     /// manager may treat exclusion as a no-fire proof.

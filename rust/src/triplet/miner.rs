@@ -37,6 +37,41 @@ use std::collections::BinaryHeap;
 
 /// Candidate enumeration order (and, combined with
 /// [`TripletMiner::with_budget`], subsampling policy).
+///
+/// Strategy selection, end to end — every strategy enumerates the same
+/// candidate universe, only the order (and therefore what a truncating
+/// budget keeps) differs:
+///
+/// ```
+/// use triplet_screen::prelude::*;
+/// use triplet_screen::triplet::CandidateBatch;
+///
+/// let mut rng = Pcg64::seed(3);
+/// let ds = synthetic::gaussian_mixture("doc", 24, 4, 2, 2.5, &mut rng);
+/// let universe = TripletMiner::new(&ds, 2, MiningStrategy::Exhaustive, 16)
+///     .total_candidates();
+///
+/// let mut batch = CandidateBatch::new(ds.d());
+/// for strategy in [
+///     MiningStrategy::Exhaustive,        // bit-parity with TripletStore
+///     MiningStrategy::StratifiedByClass, // classes interleaved
+///     MiningStrategy::HardNegativeFirst, // nearest negatives first
+/// ] {
+///     let mut miner = TripletMiner::new(&ds, 2, strategy, 16);
+///     assert_eq!(miner.total_candidates(), universe);
+///     let mut seen = 0;
+///     while miner.next_into(&mut batch) {
+///         seen += batch.len();
+///     }
+///     assert_eq!(seen, universe);
+/// }
+///
+/// // a budget truncates the enumeration — pair it with a non-exhaustive
+/// // strategy so the kept subset is meaningful (stratified/hard-negative)
+/// let budgeted = TripletMiner::new(&ds, 2, MiningStrategy::StratifiedByClass, 16)
+///     .with_budget(10);
+/// assert_eq!(budgeted.total_candidates(), 10.min(universe));
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MiningStrategy {
     /// Every same×diff pair per anchor, anchor-major, same-class-neighbor

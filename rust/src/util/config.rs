@@ -3,7 +3,12 @@
 //! Grammar: `[section]` headers, `key = value` pairs, `#` comments.
 //! Values: strings ("…"), numbers, booleans, and flat arrays. Keys are
 //! addressed as `section.key`; CLI `--set section.key=value` overrides
-//! win over file values.
+//! win over file values, and CLI flags win over both.
+//!
+//! Recognized sections: `[path]` / `[solver]` / `[screening]` / `[loss]`
+//! (consumed by [`path_config`]) and `[engine]` (consumed by
+//! [`engine_overrides`]: `kernel_core`, `d_threshold`, `threads` — the
+//! kernel-core selection documented in `triplet-screen --help`).
 
 use std::collections::BTreeMap;
 
@@ -189,6 +194,32 @@ pub fn path_config(cfg: &Config) -> crate::path::PathConfig {
     }
 }
 
+/// Native-engine selection from a config's `[engine]` section:
+/// `(kernel_core, d_threshold, threads)`, each `None` when the key is
+/// absent (CLI flags take precedence over these in `main.rs`).
+///
+/// Panics on an unrecognized `engine.kernel_core` spelling and on
+/// negative/fractional `d_threshold`/`threads` — a config typo should
+/// fail loudly, not silently truncate or fall back to `Auto`.
+pub fn engine_overrides(
+    cfg: &Config,
+) -> (Option<crate::runtime::KernelCore>, Option<usize>, Option<usize>) {
+    let core = cfg.get("engine.kernel_core").map(|v| match v {
+        Value::Str(s) => crate::runtime::KernelCore::parse(s)
+            .unwrap_or_else(|| panic!("bad engine.kernel_core {s:?}")),
+        other => panic!("engine.kernel_core expects a string, got {other:?}"),
+    });
+    let nonneg_int = |key: &str| {
+        cfg.get(key).map(|v| match v {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => *x as usize,
+            other => panic!("{key} expects a non-negative integer, got {other:?}"),
+        })
+    };
+    let d_threshold = nonneg_int("engine.d_threshold");
+    let threads = nonneg_int("engine.threads");
+    (core, d_threshold, threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +238,11 @@ tol_relative = false
 [screening]
 bound = "PGB"
 rule = "sphere"
+
+[engine]
+kernel_core = "d-blocked"
+d_threshold = 300
+threads = 2
 
 [data]
 datasets = ["segment", "wine"]
@@ -249,6 +285,39 @@ datasets = ["segment", "wine"]
             pc.screening.map(|s| s.bound),
             Some(crate::screening::BoundKind::Pgb)
         );
+    }
+
+    #[test]
+    fn engine_section_parses() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let (core, d_threshold, threads) = engine_overrides(&c);
+        assert_eq!(core, Some(crate::runtime::KernelCore::DBlocked));
+        assert_eq!(d_threshold, Some(300));
+        assert_eq!(threads, Some(2));
+        // absent section: all None
+        let empty = Config::parse("[path]\nrho = 0.9\n").unwrap();
+        assert_eq!(engine_overrides(&empty), (None, None, None));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad engine.kernel_core")]
+    fn engine_core_typo_fails_loudly() {
+        let c = Config::parse("[engine]\nkernel_core = \"dblockedd\"\n").unwrap();
+        let _ = engine_overrides(&c);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative integer")]
+    fn engine_negative_threshold_fails_loudly() {
+        let c = Config::parse("[engine]\nd_threshold = -1\n").unwrap();
+        let _ = engine_overrides(&c);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative integer")]
+    fn engine_fractional_threads_fail_loudly() {
+        let c = Config::parse("[engine]\nthreads = 2.7\n").unwrap();
+        let _ = engine_overrides(&c);
     }
 
     #[test]

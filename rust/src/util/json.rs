@@ -121,6 +121,63 @@ impl Json {
     }
 }
 
+/// Recursively collect every object key appearing anywhere in `doc`
+/// (array elements included) into `out`.
+pub fn collect_keys(doc: &Json, out: &mut std::collections::BTreeSet<String>) {
+    match doc {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                out.insert(k.clone());
+                collect_keys(v, out);
+            }
+        }
+        Json::Arr(items) => {
+            for v in items {
+                collect_keys(v, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Keys of `doc` that never appear as a standalone word in `schema_md` —
+/// the bench-schema rot guard: `benches/screening.rs` runs this against
+/// `rust/docs/BENCH_SCHEMA.md` (compiled in via `include_str!`) and
+/// fails if a telemetry field was added without documenting it.
+pub fn undocumented_keys(doc: &Json, schema_md: &str) -> Vec<String> {
+    let mut keys = std::collections::BTreeSet::new();
+    collect_keys(doc, &mut keys);
+    keys.into_iter()
+        .filter(|k| !appears_as_word(schema_md, k))
+        .collect()
+}
+
+/// Whether `word` occurs in `text` with non-identifier characters (or
+/// the text boundary) on both sides. Keys are ASCII identifiers, so
+/// byte-level boundary checks are safe.
+fn appears_as_word(text: &str, word: &str) -> bool {
+    if word.is_empty() {
+        return false;
+    }
+    let bytes = text.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = text[start..].find(word) {
+        let abs = start + pos;
+        let end = abs + word.len();
+        let before_ok = abs == 0 || !is_word_byte(bytes[abs - 1]);
+        let after_ok = end >= bytes.len() || !is_word_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = abs + 1;
+    }
+    false
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -383,5 +440,43 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse(r#""A""#).unwrap().as_str(), Some("A"));
+    }
+
+    #[test]
+    fn collect_keys_walks_nested_arrays() {
+        let doc = Json::obj(vec![
+            ("top", Json::Num(1.0)),
+            (
+                "steps",
+                Json::Arr(vec![Json::obj(vec![
+                    ("lambda", Json::Num(0.5)),
+                    ("inner", Json::obj(vec![("deep", Json::Null)])),
+                ])]),
+            ),
+        ]);
+        let mut keys = std::collections::BTreeSet::new();
+        collect_keys(&doc, &mut keys);
+        let got: Vec<&str> = keys.iter().map(|s| s.as_str()).collect();
+        assert_eq!(got, vec!["deep", "inner", "lambda", "steps", "top"]);
+    }
+
+    #[test]
+    fn undocumented_keys_respects_word_boundaries() {
+        let doc = Json::obj(vec![
+            ("wall", Json::Num(1.0)),
+            ("wall_seconds", Json::Num(2.0)),
+            ("missing_field", Json::Num(3.0)),
+        ]);
+        // `wall_seconds` documents itself but must NOT satisfy `wall`;
+        // `{lambda, wall}`-style brace lists must count
+        let md = "| `wall_seconds` | step wall |\narray of `{lambda, wall}` records\n";
+        let missing = undocumented_keys(&doc, md);
+        assert_eq!(missing, vec!["missing_field".to_string()]);
+        let md2 = "only `wall_seconds` here";
+        let missing2 = undocumented_keys(&doc, md2);
+        assert_eq!(
+            missing2,
+            vec!["missing_field".to_string(), "wall".to_string()]
+        );
     }
 }

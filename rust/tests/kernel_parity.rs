@@ -1,12 +1,16 @@
-//! Tiled-vs-scalar compute-core parity battery.
+//! Compute-core parity battery: row-stream tiled, d-blocked, scalar.
 //!
-//! The panel-tiled GEMM/SYRK core (`linalg::gemm`, routed through
-//! `NativeEngine`'s default `KernelCore::Tiled`) must reproduce the
-//! scalar reference core to f64 round-off (tolerance 1e-10) on arbitrary
-//! shapes — including row counts and dimensions that are **not**
-//! multiples of the panel size — and `Engine::step` must agree across
-//! engines (native vs. the PJRT build when its artifacts are present;
-//! the offline stub cannot be constructed and the cross-engine case then
+//! The panel-tiled GEMM/SYRK cores (`linalg::gemm`, routed through
+//! `NativeEngine`'s `KernelCore` selection — `Auto` by default) must
+//! reproduce the scalar reference core to f64 round-off (tolerance
+//! 1e-10) on arbitrary shapes — including row counts that are **not**
+//! multiples of the panel size and dimensions straddling the
+//! `gemm::D_BLOCK` boundary — and the row-stream vs d-blocked
+//! geometries must be **bitwise identical** (solver trajectories
+//! included), so kernel-core selection can never change a screening
+//! decision. `Engine::step` must additionally agree across engines
+//! (native vs. the PJRT build when its artifacts are present; the
+//! offline stub cannot be constructed and the cross-engine case then
 //! skips with a message, same protocol as `rust/tests/runtime_pjrt.rs`).
 
 use triplet_screen::linalg::{gemm, Mat};
@@ -122,6 +126,77 @@ fn panel_boundary_shapes_exact() {
     }
 }
 
+/// The acceptance sweep for the d-blocked geometry: d ∈ {64, 300, 768}
+/// — below, straddling, and a multiple of `gemm::D_BLOCK` — plus the
+/// exact block-boundary dims. d-blocked vs scalar within 1e-10, and
+/// d-blocked vs row-stream bitwise.
+#[test]
+fn d_blocked_parity_high_dims() {
+    let mut rng = Pcg64::seed(17);
+    let boundary = [gemm::D_BLOCK - 1, gemm::D_BLOCK, gemm::D_BLOCK + 1];
+    for &d in [64usize, 300, 768].iter().chain(&boundary) {
+        // keep n small: these dims are expensive in debug builds
+        let n = gemm::PANEL_ROWS + 7;
+        let (m, a, b, w) = rand_inputs(&mut rng, n, d);
+        let dblocked = NativeEngine::d_blocked(3);
+        let rowstream = NativeEngine::row_stream(3);
+        let scalar = NativeEngine::scalar(3);
+        let mut od = vec![0.0; n];
+        let mut orow = vec![0.0; n];
+        let mut os = vec![0.0; n];
+        dblocked.margins(&m, &a, &b, &mut od);
+        rowstream.margins(&m, &a, &b, &mut orow);
+        scalar.margins(&m, &a, &b, &mut os);
+        for t in 0..n {
+            assert!(
+                (od[t] - os[t]).abs() <= TOL * (1.0 + os[t].abs()),
+                "d={d} t={t}: d-blocked {} vs scalar {}",
+                od[t],
+                os[t]
+            );
+            assert_eq!(
+                od[t].to_bits(),
+                orow[t].to_bits(),
+                "d={d} t={t}: d-blocked margins not bitwise row-stream"
+            );
+        }
+        let gd = dblocked.wgram(&a, &b, &w);
+        let grow = rowstream.wgram(&a, &b, &w);
+        let gs = scalar.wgram(&a, &b, &w);
+        assert!(
+            gd.sub(&gs).max_abs() <= TOL * (1.0 + gs.max_abs()),
+            "d={d}: d-blocked wgram diverges from scalar by {}",
+            gd.sub(&gs).max_abs()
+        );
+        assert_eq!(
+            gd.sub(&grow).max_abs(),
+            0.0,
+            "d={d}: d-blocked wgram not bitwise row-stream"
+        );
+    }
+}
+
+/// The auto core must dispatch to the d-blocked geometry above its
+/// threshold and still agree with the pinned cores (threshold forced
+/// low so the test stays cheap).
+#[test]
+fn auto_core_dispatch_is_invisible() {
+    let mut rng = Pcg64::seed(23);
+    let d = 40;
+    let n = 2 * gemm::PANEL_ROWS + 5;
+    let (m, a, b, _) = rand_inputs(&mut rng, n, d);
+    let auto_db = NativeEngine::new(2).with_d_threshold(8); // resolves DBlocked
+    assert_eq!(auto_db.core_for(d), KernelCore::DBlocked);
+    let rowstream = NativeEngine::row_stream(2);
+    let mut oa = vec![0.0; n];
+    let mut orow = vec![0.0; n];
+    auto_db.margins(&m, &a, &b, &mut oa);
+    rowstream.margins(&m, &a, &b, &mut orow);
+    for t in 0..n {
+        assert_eq!(oa[t].to_bits(), orow[t].to_bits(), "auto dispatch changed bits at {t}");
+    }
+}
+
 /// The tiled core must leave solver results unchanged: one full solve
 /// per core, same optimum.
 #[test]
@@ -153,6 +228,43 @@ fn solver_end_to_end_core_parity() {
     );
 }
 
+/// Solver trajectories must be **bitwise identical** across the three
+/// deterministic cores (scalar, row-stream, d-blocked): every iterate
+/// is built from bitwise-equal margins and bitwise-symmetric gradients,
+/// so the optima — and hence every screening decision taken along the
+/// way — agree to the last bit.
+#[test]
+fn solver_trajectory_bitwise_identical_across_cores() {
+    use triplet_screen::solver::{Problem, Solver, SolverConfig};
+    let mut rng = Pcg64::seed(29);
+    let ds = synthetic::gaussian_mixture("g", 36, 6, 3, 2.5, &mut rng);
+    let store = TripletStore::from_dataset(&ds, 2, &mut rng);
+    let loss = Loss::smoothed_hinge(0.05);
+    let cfg = SolverConfig {
+        tol: 1e-8,
+        tol_relative: false,
+        ..Default::default()
+    };
+    let solve = |engine: &NativeEngine| {
+        let lmax = Problem::lambda_max(&store, &loss, engine);
+        let mut prob = Problem::new(&store, loss, lmax * 0.3);
+        Solver::new(cfg.clone()).solve(&mut prob, engine, Mat::zeros(6, 6), None)
+    };
+    let (m_row, st_row) = solve(&NativeEngine::row_stream(2));
+    let (m_db, st_db) = solve(&NativeEngine::d_blocked(2));
+    let (m_sc, st_sc) = solve(&NativeEngine::scalar(2));
+    assert!(st_row.converged && st_db.converged && st_sc.converged);
+    assert_eq!(st_row.iters, st_db.iters, "row-stream vs d-blocked iteration counts");
+    assert_eq!(st_row.iters, st_sc.iters, "row-stream vs scalar iteration counts");
+    for i in 0..6 {
+        for j in 0..6 {
+            let bits = m_row[(i, j)].to_bits();
+            assert_eq!(bits, m_db[(i, j)].to_bits(), "d-blocked trajectory split at ({i},{j})");
+            assert_eq!(bits, m_sc[(i, j)].to_bits(), "scalar trajectory split at ({i},{j})");
+        }
+    }
+}
+
 /// Cross-engine `Engine::step` parity: native (tiled) vs the PJRT
 /// engine. The offline stub's constructors fail by design, in which case
 /// this skips loudly — on a real `--features pjrt` + artifacts build it
@@ -167,7 +279,7 @@ fn step_cross_engine_native_vs_pjrt() {
         return;
     };
     let native = NativeEngine::new(0);
-    assert_eq!(native.core(), KernelCore::Tiled);
+    assert_eq!(native.core(), KernelCore::Auto);
     let mut rng = Pcg64::seed(11);
     for (n, d) in [(257usize, 4usize), (8192, 19)] {
         if !pjrt.supports_dim(d) {
