@@ -72,6 +72,24 @@ fn main() {
         bench_engine(&mut bench, &dblocked, n, d);
     }
 
+    // certified-f32 bulk margins (the mixed tier's hot pass): same
+    // high-d shapes, f32 panels + per-row rounding envelope vs the f64
+    // margins rows above
+    let mixed = NativeEngine::new(0).with_precision(PrecisionTier::MixedCertified);
+    for (d, n) in [(512usize, 2048usize), (768, 1024)] {
+        let mut rng = Pcg64::seed(42);
+        let (m, a, b, _) = inputs(&mut rng, n, d);
+        let mut out = vec![0.0; n];
+        let mut env = vec![0.0; n];
+        bench.run(
+            &format!("margins_f32/{}/d{}/n{}", mixed.name(), d, n),
+            Some(n as u64),
+            || {
+                assert!(mixed.margins_f32(&m, &a, &b, &mut out, &mut env));
+            },
+        );
+    }
+
     // eigendecomposition (the per-iteration PSD projection cost)
     for d in [19usize, 64, 128, 200] {
         let mut rng = Pcg64::seed(1);

@@ -26,6 +26,14 @@
 //! bench-schema conformance check (every emitted key must appear in
 //! `rust/docs/BENCH_SCHEMA.md`).
 //!
+//! PR 6 adds the certified-f32 mixed-precision tier: the d = 768 bulk
+//! margins pass timed in f64 vs certified f32 (`f32_pass_wall_seconds`,
+//! gated not to lose to the f64 wall), an in-bench envelope-parity
+//! check, and a mixed-tier streamed path that must reproduce the f64
+//! admissions exactly while promoting under a quarter of its candidates
+//! to the exact fallback (`promotions`, `envelope_mean_width`). CI runs
+//! the whole bench a second time under `--features simd`.
+//!
 //! Run: `cargo bench --bench screening` (add `-- --quick` for short runs).
 
 use triplet_screen::coordinator::experiments as exp;
@@ -387,6 +395,62 @@ fn main() {
     let p64_rrpb_range: usize = p64_rrpb.steps.iter().map(|s| s.range_screened).sum();
     let p64_gen_range: usize = p64_gen.steps.iter().map(|s| s.range_screened).sum();
 
+    // ---- PR 6: certified-f32 mixed-precision tier ----
+    // (a) the bulk margins pass at d = 768 (the bandwidth-bound regime
+    // the tier exists for): exact f64 vs certified f32 + envelope, same
+    // auto-resolved d-blocked geometry. Alongside, the in-bench parity
+    // checks the kernel battery also runs in debug: the lane microkernels
+    // vs the lane-free scalar core to 1e-10, and every f32 margin within
+    // its quoted envelope of the exact value. CI repeats this whole bench
+    // under `--features simd`, so the widened microkernels pass the same
+    // gates on real release-mode traffic.
+    let mixed_engine = NativeEngine::new(0).with_precision(PrecisionTier::MixedCertified);
+    let d768 = 768usize;
+    let n768 = sweep_n;
+    let mut rng768 = Pcg64::seed(768);
+    let mut m768 = Mat::from_fn(d768, d768, |_, _| rng768.normal());
+    m768.symmetrize();
+    let a768 = Mat::from_fn(n768, d768, |_, _| rng768.normal());
+    let b768 = Mat::from_fn(n768, d768, |_, _| rng768.normal());
+    let mut out_f64 = vec![0.0; n768];
+    let mut out_f32 = vec![0.0; n768];
+    let mut env768 = vec![0.0; n768];
+    let t_margins_f64 = time_best(&mut || engine.margins(&m768, &a768, &b768, &mut out_f64));
+    let t_margins_f32 = time_best(&mut || {
+        assert!(
+            mixed_engine.margins_f32(&m768, &a768, &b768, &mut out_f32, &mut env768),
+            "mixed-tier engine declined margins_f32"
+        );
+    });
+    let mut out_sc768 = vec![0.0; n768];
+    scalar_engine.margins(&m768, &a768, &b768, &mut out_sc768);
+    for t in 0..n768 {
+        assert!(
+            (out_f64[t] - out_sc768[t]).abs() <= 1e-10 * (1.0 + out_sc768[t].abs()),
+            "d=768 t={t}: lane margins {} vs scalar {} past 1e-10",
+            out_f64[t],
+            out_sc768[t]
+        );
+        assert!(
+            env768[t].is_finite() && env768[t] > 0.0,
+            "d=768 t={t}: degenerate envelope {}",
+            env768[t]
+        );
+        assert!(
+            (out_f32[t] - out_f64[t]).abs() <= env768[t],
+            "d=768 t={t}: f32 margin {} vs exact {} breaks envelope {}",
+            out_f32[t],
+            out_f64[t],
+            env768[t]
+        );
+    }
+    println!(
+        "mixed tier d={d768} (n={n768}): margins f64 {:.1}ms / certified-f32 {:.1}ms ({:.2}x)",
+        t_margins_f64 * 1e3,
+        t_margins_f32 * 1e3,
+        t_margins_f64 / t_margins_f32
+    );
+
     // ---- pipeline telemetry: PR 1-equivalent vs certificate frame ----
     // Four paths on the same store: naive (no screening, the optimum
     // oracle), the PR 1 pipeline (workset + memo, frame certificates
@@ -428,6 +492,13 @@ fn main() {
     let mut miner = TripletMiner::new(&ds, 5, MiningStrategy::Exhaustive, 4096);
     let streamed =
         RegPath::new(mk_cfg(true, true)).run_source(TripletSource::Streamed(&mut miner), &engine);
+    // PR 6 (b): the same streamed pipeline under the mixed tier —
+    // admission margins in f32, boundary-ambiguous candidates promoted
+    // to an exact f64 re-test. Must land the same admissions and optima
+    // step for step while promoting only a small fraction (gate below).
+    let mut miner32 = TripletMiner::new(&ds, 5, MiningStrategy::Exhaustive, 4096);
+    let streamed_mixed = RegPath::new(mk_cfg(true, true))
+        .run_source(TripletSource::Streamed(&mut miner32), &mixed_engine);
     // screening-off path on the scalar core: the kernel-time comparison
     // runs over the FULL workset every step (milliseconds of kernel
     // time per step), so the tiled-vs-scalar gate below measures the
@@ -501,6 +572,17 @@ fn main() {
     // streamed-admission telemetry (PR 4)
     let stream = streamed.stream.clone().expect("streamed run records a summary");
     let stream_stats = streamed.screening_stats.clone().unwrap_or_default();
+    // mixed-tier streamed telemetry (PR 6)
+    let stream_mixed = streamed_mixed
+        .stream
+        .clone()
+        .expect("mixed streamed run records a summary");
+    let stream_stats_mixed = streamed_mixed.screening_stats.clone().unwrap_or_default();
+    let envelope_mean_width = if stream_stats_mixed.envelope_count > 0 {
+        stream_stats_mixed.envelope_sum / stream_stats_mixed.envelope_count as f64
+    } else {
+        0.0
+    };
     let stream_admitted_per_step: Vec<Json> = streamed
         .steps
         .iter()
@@ -593,6 +675,17 @@ fn main() {
         ),
         ("d64_path_rrpb_wall_seconds", Json::Num(p64_rrpb.total_wall)),
         ("d64_path_general_wall_seconds", Json::Num(p64_gen.total_wall)),
+        ("precision_tier", Json::Str(mixed_engine.precision().label().into())),
+        ("f64_pass_wall_seconds", Json::Num(t_margins_f64)),
+        ("f32_pass_wall_seconds", Json::Num(t_margins_f32)),
+        ("rule_evals_f32", Json::Num(stream_stats_mixed.rule_evals_f32 as f64)),
+        ("promotions", Json::Num(stream_stats_mixed.promotions as f64)),
+        (
+            "mixed_adm_candidates",
+            Json::Num(stream_stats_mixed.adm_candidates as f64),
+        ),
+        ("envelope_mean_width", Json::Num(envelope_mean_width)),
+        ("mixed_stream_wall_seconds", Json::Num(streamed_mixed.total_wall)),
     ]);
     println!("\nscreening-path telemetry (JSON):");
     println!("{}", doc.to_string_compact());
@@ -712,6 +805,66 @@ fn main() {
     assert_eq!(
         stats.rule_evals, stats_dblocked.rule_evals,
         "kernel choice changed screening behavior (auto vs d-blocked rule evals)"
+    );
+    // ---- PR 6 acceptance: certified-f32 mixed tier ----
+    // the f32 bulk margins pass (envelope computation included) must not
+    // lose to the f64 pass at d = 768 — the tier halves the memory
+    // traffic of the bandwidth-bound regime, so anything slower is a
+    // regression; same 5% measurement-noise allowance as the d-blocked
+    // wall gate above
+    assert!(
+        t_margins_f32 <= t_margins_f64 * 1.05,
+        "mixed-tier regression at d=768: f32 pass {t_margins_f32:.4}s > \
+         f64 pass {t_margins_f64:.4}s (+5% noise)"
+    );
+    // the mixed streamed path must be indistinguishable from the f64
+    // one: same λ grid, same optima, same admissions — the envelope
+    // promoted every ambiguous decision to exact arithmetic
+    assert_eq!(
+        streamed_mixed.steps.len(),
+        streamed.steps.len(),
+        "mixed streamed path walked a different λ grid"
+    );
+    for (a, b) in streamed_mixed.steps.iter().zip(&streamed.steps) {
+        assert!(
+            (a.p - b.p).abs() < 1e-4 * (1.0 + b.p.abs()),
+            "mixed streamed path drifted from f64 at λ={}",
+            b.lambda
+        );
+        assert_eq!(
+            a.admitted, b.admitted,
+            "mixed tier changed admissions at λ={}",
+            b.lambda
+        );
+    }
+    assert_eq!(
+        (stream_mixed.admitted_rows, stream_mixed.pending_end),
+        (stream.admitted_rows, stream.pending_end),
+        "mixed tier changed the final admitted/pending split"
+    );
+    // every admission candidate was either decided in f32 or promoted —
+    // nothing slipped through undecided and unaccounted
+    assert!(
+        stream_stats_mixed.rule_evals_f32 > 0,
+        "mixed tier never evaluated a candidate in f32"
+    );
+    assert_eq!(
+        stream_stats_mixed.rule_evals_f32 + stream_stats_mixed.promotions,
+        stream_stats_mixed.adm_candidates,
+        "mixed-tier conservation violated: f32 decisions + promotions != candidates"
+    );
+    // ... and the envelope is tight enough to be useful: fewer than a
+    // quarter of the candidates needed the exact fallback
+    assert!(
+        stream_stats_mixed.adm_candidates > 0,
+        "mixed streamed run saw no admission candidates"
+    );
+    assert!(
+        (stream_stats_mixed.promotions as f64)
+            < 0.25 * stream_stats_mixed.adm_candidates as f64,
+        "envelope too loose: {} of {} candidates promoted to f64 (>= 25%)",
+        stream_stats_mixed.promotions,
+        stream_stats_mixed.adm_candidates
     );
     // ---- satellite: bench-schema conformance (the doc cannot rot) ----
     // every key this bench emits — d_sweep/cert_study subfields

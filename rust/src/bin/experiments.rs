@@ -4,7 +4,8 @@
 //!   `table5|rangestudy|perf|all>`
 //!   [--dataset NAME] [--engine native|native-scalar|pjrt]
 //!   [--kernel-core auto|row-stream|d-blocked|scalar] [--d-threshold N]
-//!   [--scale F] [--trials N] [--seed N] [--tol F] [--verbose]
+//!   [--precision f64|mixed] [--scale F] [--trials N] [--seed N]
+//!   [--tol F] [--verbose]
 //!
 //! Outputs are printed as markdown and persisted under `reports/`.
 //! See DESIGN.md §5 for the experiment index and EXPERIMENTS.md for the
@@ -25,7 +26,8 @@ fn make_engine(args: &Args) -> Box<dyn Engine> {
             let threshold = args
                 .get("d-threshold")
                 .map(|s| s.parse().expect("--d-threshold expects an integer"));
-            Box::new(NativeEngine::from_options(threads, core, threshold))
+            let precision = args.get("precision").map(PrecisionTier::parse_cli);
+            Box::new(NativeEngine::from_options(threads, core, threshold, precision))
         }
         "native-scalar" => Box::new(NativeEngine::scalar(threads)),
         "pjrt" => Box::new(

@@ -35,26 +35,53 @@
 //!   at a time, streaming `a`/`b` column slices through it — every hot
 //!   buffer is cache-sized *independently of d*.
 //!
+//! **Element-generic panels + SIMD microkernels.** The panel drivers are
+//! generic over the element scalar ([`Elem`]: `f64` for the exact tier,
+//! `f32` for the certified bulk tier — see
+//! [`crate::runtime::PrecisionTier`]), so both precisions share one body
+//! of panel code ([`margins_into_g`], [`margins_into_d_blocked_g`],
+//! [`wsyrk_upper_g`]). Their inner loops are three explicit microkernels
+//! — [`axpy_mk`], [`axpy2_mk`] (elementwise; any vector width is
+//! bitwise-invisible) and the lane-split dot `dot_into_lanes` — whose
+//! accumulator width is the compile-time [`LANES`] constant: 1 without
+//! the `simd` cargo feature (the *bitwise* scalar-fallback oracle —
+//! exactly the pre-SIMD summation chains), 4 with it (independent
+//! per-lane chains the autovectorizer maps onto the vector ISA; the
+//! microkernels are also the single swap-in point for `std::simd` once
+//! portable SIMD stabilizes). Lane assignment is by **global feature
+//! index mod LANES** with a fixed left-to-right lane reduction, so the
+//! row-stream and d-blocked geometries stay bitwise identical to each
+//! other under *either* feature set, for *any* block width.
+//!
 //! Numerical contract: for a bitwise-symmetric `M` the panel GEMM
 //! accumulates the margin in exactly the scalar reference's summation
-//! order (ascending j, then ascending i), and the SYRK upper triangle is
-//! summand-for-summand the scalar loop's upper triangle — parity with
+//! order (ascending j, then ascending i per lane) — parity with
 //! the scalar core is at f64 round-off (`rust/tests/kernel_parity.rs`
 //! checks 1e-10 on arbitrary shapes, including row counts and dimensions
-//! that are not multiples of the panel size). The d-blocked variants are
-//! **bitwise identical** to the row-stream kernels: blocking the columns
-//! of `Y` never splits a `Σ_j` accumulation chain (each `y[k][i]` still
-//! sums ascending j), the per-panel margin dot visits `i` globally
-//! ascending because blocks are walked in order with a carried
-//! accumulator, and each Gram cell's `Σ_t` chain lives entirely inside
-//! one tile with `t` ascending — so core selection can never change a
-//! solver trajectory or a screening decision (unit tests here assert
-//! `==`, not a tolerance).
+//! that are not multiples of the panel size), and without the `simd`
+//! feature the chains are bit-for-bit the scalar reference's. The
+//! d-blocked variants are **bitwise identical** to the row-stream
+//! kernels: blocking the columns of `Y` never splits a `Σ_j`
+//! accumulation chain (each `y[k][i]` still sums ascending j), the
+//! per-panel margin dot visits `i` globally ascending *within each
+//! lane* because blocks are walked in order with a carried per-lane
+//! accumulator (block phase = start column mod [`LANES`]), and each
+//! Gram cell's `Σ_t` chain lives entirely inside one tile with `t`
+//! ascending — so core selection can never change a solver trajectory
+//! or a screening decision (unit tests here assert `==`, not a
+//! tolerance).
 //!
 //! The same tile geometry is mirrored by the PJRT grid: the Pallas
 //! kernels dispatch row-blocks with per-block accumulators (and, for
 //! high d, feature-dimension blocks), so native-vs-PJRT comparisons
 //! measure the backend, not the blocking.
+
+// Under the default single-lane build `LANES` const-folds to 1, turning
+// the lane arithmetic below (`% LANES`, `/ LANES * LANES`) into no-ops
+// clippy would flag — they are the degenerate case of the generic lane
+// splitting, not mistakes, and the real widths appear under the `simd`
+// feature (which the lint pass does not build).
+#![allow(clippy::modulo_one, clippy::identity_op)]
 
 use super::Mat;
 
@@ -77,6 +104,45 @@ pub const D_BLOCK: usize = 128;
 /// the `a`/`b` panel rows buy nothing.
 pub const D_BLOCK_MIN_D: usize = 512;
 
+/// Dot-microkernel accumulator lanes: 1 without the `simd` feature (the
+/// bitwise scalar-fallback oracle — summation chains identical to the
+/// pre-SIMD kernels), 4 with it (independent per-lane chains, reduced
+/// in a fixed left-to-right order). Lane membership of a product term
+/// is its **global** feature index mod LANES, so blocked and row-stream
+/// geometries agree bitwise under either setting.
+pub const LANES: usize = if cfg!(feature = "simd") { 4 } else { 1 };
+
+/// Length of the per-panel lane-accumulator scratch the d-blocked
+/// kernels carry across feature blocks: one [`LANES`]-wide accumulator
+/// row per panel row. Callers allocating the `acc` scratch size it with
+/// this.
+pub const PANEL_ACC_LEN: usize = PANEL_ROWS * LANES;
+
+/// Element scalar of the generic panel kernels: `f64` (the exact tier)
+/// and `f32` (the certified bulk tier of
+/// [`crate::runtime::PrecisionTier::MixedCertified`]) share the panel
+/// drivers and microkernels through this trait.
+pub trait Elem:
+    Copy
+    + PartialEq
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+{
+    /// Additive identity (accumulator seed; also the skip sentinel of
+    /// the GEMM zero-coefficient shortcut).
+    const ZERO: Self;
+}
+
+impl Elem for f64 {
+    const ZERO: f64 = 0.0;
+}
+
+impl Elem for f32 {
+    const ZERO: f32 = 0.0;
+}
+
 /// FLOPs of one margins pass over `n` rows: two quad forms per row, each
 /// a d×d GEMM row (2d²) plus a length-d dot (2d).
 pub fn margins_flops(n: usize, d: usize) -> f64 {
@@ -88,6 +154,94 @@ pub fn margins_flops(n: usize, d: usize) -> f64 {
 /// 4d² the full rank-1 reference spends.
 pub fn wgram_flops(n: usize, d: usize) -> f64 {
     n as f64 * (2.0 * (d * (d + 1)) as f64 + 2.0 * d as f64)
+}
+
+/// axpy microkernel: `y[i] += c·m[i]`, walked in [`LANES`]-wide chunks
+/// with a scalar tail. Elementwise — no cross-element reduction chain —
+/// so the chunking is bitwise-invisible at every LANES.
+#[inline(always)]
+fn axpy_mk<E: Elem>(y: &mut [E], c: E, m: &[E]) {
+    debug_assert_eq!(y.len(), m.len());
+    let body = y.len() / LANES * LANES;
+    for (yc, mc) in y[..body]
+        .chunks_exact_mut(LANES)
+        .zip(m[..body].chunks_exact(LANES))
+    {
+        for v in 0..LANES {
+            yc[v] += c * mc[v];
+        }
+    }
+    for (yi, &mi) in y[body..].iter_mut().zip(&m[body..]) {
+        *yi += c * mi;
+    }
+}
+
+/// Fused two-sided axpy microkernel of the SYRK row update:
+/// `g[j] += wa·a[j] − wb·b[j]`, [`LANES`]-chunked like [`axpy_mk`] —
+/// elementwise, bitwise-invisible chunking.
+#[inline(always)]
+fn axpy2_mk<E: Elem>(g: &mut [E], wa: E, a: &[E], wb: E, b: &[E]) {
+    debug_assert_eq!(g.len(), a.len());
+    debug_assert_eq!(g.len(), b.len());
+    let body = g.len() / LANES * LANES;
+    for ((gc, ac), bc) in g[..body]
+        .chunks_exact_mut(LANES)
+        .zip(a[..body].chunks_exact(LANES))
+        .zip(b[..body].chunks_exact(LANES))
+    {
+        for v in 0..LANES {
+            gc[v] += wa * ac[v] - wb * bc[v];
+        }
+    }
+    for ((gj, &aj), &bj) in g[body..].iter_mut().zip(&a[body..]).zip(&b[body..]) {
+        *gj += wa * aj - wb * bj;
+    }
+}
+
+/// Lane-split dot microkernel: folds `x[u]·y[u]` into
+/// `lanes[(phase + u) % LANES]` with each lane's partial sum
+/// accumulating in ascending `u`. `phase` is the *global* index of
+/// `x[0]` (mod LANES), so a dot split across column blocks — each block
+/// calling this with its own phase on a carried `lanes` array — builds
+/// exactly the same per-lane chains as one unblocked call: lane
+/// membership depends only on the global index.
+#[inline(always)]
+fn dot_into_lanes<E: Elem>(x: &[E], y: &[E], phase: usize, lanes: &mut [E; LANES]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    // scalar head until the next lane-0 boundary …
+    let head = ((LANES - phase % LANES) % LANES).min(n);
+    let mut lane = phase % LANES;
+    for (&xi, &yi) in x[..head].iter().zip(&y[..head]) {
+        lanes[lane] += xi * yi;
+        lane = (lane + 1) % LANES;
+    }
+    // … LANES-wide body (chunk element v lands in lane v) …
+    let body = (n - head) / LANES * LANES;
+    for (xc, yc) in x[head..head + body]
+        .chunks_exact(LANES)
+        .zip(y[head..head + body].chunks_exact(LANES))
+    {
+        for v in 0..LANES {
+            lanes[v] += xc[v] * yc[v];
+        }
+    }
+    // … scalar tail (shorter than LANES, starting back at lane 0).
+    for (v, (&xi, &yi)) in x[head + body..].iter().zip(&y[head + body..]).enumerate() {
+        lanes[v] += xi * yi;
+    }
+}
+
+/// Fixed left-to-right lane reduction `((l₀+l₁)+l₂)+l₃` — the one place
+/// the lane partial sums meet, shared by every caller so the chain is
+/// identical everywhere. With `LANES = 1` this is the identity.
+#[inline(always)]
+fn reduce_lanes<E: Elem>(lanes: &[E; LANES]) -> E {
+    let mut s = lanes[0];
+    for &l in &lanes[1..] {
+        s = s + l;
+    }
+    s
 }
 
 /// Panel-tiled margins: `out[k] = a_tᵀ M a_t − b_tᵀ M b_t` for every row
@@ -116,60 +270,86 @@ pub fn margins_into(
     debug_assert!(mat.is_square());
     debug_assert_eq!(a.cols(), d);
     debug_assert_eq!(b.cols(), d);
+    margins_into_g(
+        mat.as_slice(),
+        d,
+        a.as_slice(),
+        b.as_slice(),
+        rows,
+        out,
+        y,
+    );
+}
+
+/// Element-generic body of [`margins_into`]: `mat` is a row-major d×d
+/// buffer, `a`/`b` row-major with `d` columns (covering at least
+/// `rows.end` rows). The f64 instantiation *is* the exact kernel; the
+/// f32 instantiation is the bulk pass of the certified mixed-precision
+/// tier (callers convert inputs once per pass — O(n·d) against the
+/// O(n·d²) kernel).
+pub fn margins_into_g<E: Elem>(
+    mat: &[E],
+    d: usize,
+    a: &[E],
+    b: &[E],
+    rows: std::ops::Range<usize>,
+    out: &mut [E],
+    y: &mut Vec<E>,
+) {
+    debug_assert_eq!(mat.len(), d * d);
+    debug_assert!(a.len() >= rows.end * d);
+    debug_assert!(b.len() >= rows.end * d);
     debug_assert_eq!(out.len(), rows.len());
     if rows.is_empty() {
         return;
     }
-    y.resize(PANEL_ROWS.min(rows.len()) * d, 0.0);
+    y.resize(PANEL_ROWS.min(rows.len()) * d.max(1), E::ZERO);
     let mut p0 = rows.start;
     while p0 < rows.end {
         let pr = PANEL_ROWS.min(rows.end - p0);
         let chunk = &mut out[p0 - rows.start..p0 - rows.start + pr];
-        quad_forms_panel(mat, a, p0, pr, chunk, y, true);
-        quad_forms_panel(mat, b, p0, pr, chunk, y, false);
+        quad_forms_panel(mat, d, a, p0, pr, chunk, y, true);
+        quad_forms_panel(mat, d, b, p0, pr, chunk, y, false);
         p0 += pr;
     }
 }
 
 /// One panel of quad forms: `out[k] (= | -=) x_{p0+k}ᵀ M x_{p0+k}`.
-fn quad_forms_panel(
-    mat: &Mat,
-    x: &Mat,
+#[allow(clippy::too_many_arguments)]
+fn quad_forms_panel<E: Elem>(
+    mat: &[E],
+    d: usize,
+    x: &[E],
     p0: usize,
     pr: usize,
-    out: &mut [f64],
-    y: &mut [f64],
+    out: &mut [E],
+    y: &mut [E],
     assign: bool,
 ) {
-    let d = mat.cols();
     let yp = &mut y[..pr * d];
-    yp.fill(0.0);
+    yp.fill(E::ZERO);
     // Y = X_panel · M: stream M one row at a time; each hot M row is
     // multiplied into all pr panel rows before the next row is loaded.
     for j in 0..d {
-        let mrow = mat.row(j);
+        let mrow = &mat[j * d..(j + 1) * d];
         for k in 0..pr {
-            let c = x.row(p0 + k)[j];
-            if c == 0.0 {
+            let c = x[(p0 + k) * d + j];
+            if c == E::ZERO {
                 continue;
             }
-            let yrow = &mut yp[k * d..(k + 1) * d];
-            for (yi, &mi) in yrow.iter_mut().zip(mrow) {
-                *yi += c * mi;
-            }
+            axpy_mk(&mut yp[k * d..(k + 1) * d], c, mrow);
         }
     }
     for k in 0..pr {
-        let xr = x.row(p0 + k);
+        let xr = &x[(p0 + k) * d..(p0 + k + 1) * d];
         let yr = &yp[k * d..(k + 1) * d];
-        let mut acc = 0.0;
-        for (xi, yi) in xr.iter().zip(yr) {
-            acc += xi * yi;
-        }
+        let mut lanes = [E::ZERO; LANES];
+        dot_into_lanes(xr, yr, 0, &mut lanes);
+        let acc = reduce_lanes(&lanes);
         if assign {
             out[k] = acc;
         } else {
-            out[k] -= acc;
+            out[k] = out[k] - acc;
         }
     }
 }
@@ -180,9 +360,9 @@ fn quad_forms_panel(
 /// `PANEL_ROWS · d_block` doubles (the required `y` capacity) plus a
 /// `d_block`-wide slice of each streamed `M` row — is cache-sized
 /// independently of d. `acc` is the per-panel margin accumulator lane
-/// (grown to `PANEL_ROWS`); it carries each row's partial dot across
-/// blocks so the `Σ_i x_i·y_i` chain still visits `i` globally
-/// ascending.
+/// (grown to `PANEL_ROWS · LANES`); it carries each row's per-lane
+/// partial dots across blocks so every lane's `Σ x_i·y_i` chain still
+/// visits its `i ≡ lane (mod LANES)` subsequence globally ascending.
 ///
 /// Engines pass [`D_BLOCK`]; the parameter exists so tests can place
 /// block boundaries anywhere.
@@ -213,6 +393,36 @@ pub fn margins_into_d_blocked(
     debug_assert!(mat.is_square());
     debug_assert_eq!(a.cols(), d);
     debug_assert_eq!(b.cols(), d);
+    margins_into_d_blocked_g(
+        mat.as_slice(),
+        d,
+        a.as_slice(),
+        b.as_slice(),
+        rows,
+        out,
+        y,
+        acc,
+        d_block,
+    );
+}
+
+/// Element-generic body of [`margins_into_d_blocked`] (see
+/// [`margins_into_g`] for the buffer layout contract).
+#[allow(clippy::too_many_arguments)]
+pub fn margins_into_d_blocked_g<E: Elem>(
+    mat: &[E],
+    d: usize,
+    a: &[E],
+    b: &[E],
+    rows: std::ops::Range<usize>,
+    out: &mut [E],
+    y: &mut Vec<E>,
+    acc: &mut Vec<E>,
+    d_block: usize,
+) {
+    debug_assert_eq!(mat.len(), d * d);
+    debug_assert!(a.len() >= rows.end * d);
+    debug_assert!(b.len() >= rows.end * d);
     debug_assert_eq!(out.len(), rows.len());
     assert!(d_block > 0, "d_block must be positive");
     if rows.is_empty() {
@@ -220,14 +430,14 @@ pub fn margins_into_d_blocked(
     }
     let bw_max = d_block.min(d.max(1));
     let pr_max = PANEL_ROWS.min(rows.len());
-    y.resize(pr_max * bw_max, 0.0);
-    acc.resize(pr_max, 0.0);
+    y.resize(pr_max * bw_max, E::ZERO);
+    acc.resize(pr_max * LANES, E::ZERO);
     let mut p0 = rows.start;
     while p0 < rows.end {
         let pr = PANEL_ROWS.min(rows.end - p0);
         let chunk = &mut out[p0 - rows.start..p0 - rows.start + pr];
-        quad_forms_panel_d_blocked(mat, a, p0, pr, chunk, y, acc, d_block, true);
-        quad_forms_panel_d_blocked(mat, b, p0, pr, chunk, y, acc, d_block, false);
+        quad_forms_panel_d_blocked(mat, d, a, p0, pr, chunk, y, acc, d_block, true);
+        quad_forms_panel_d_blocked(mat, d, b, p0, pr, chunk, y, acc, d_block, false);
         p0 += pr;
     }
 }
@@ -236,61 +446,61 @@ pub fn margins_into_d_blocked(
 /// x_{p0+k}`, accumulated one `d_block`-column tile of `Y = X_panel · M`
 /// at a time. Per-element summation chains are those of
 /// [`quad_forms_panel`] exactly: every `y` cell still sums over
-/// ascending j, and the margin dot walks the blocks (hence `i`) in
-/// ascending order through the carried `acc` lane.
+/// ascending j, and the margin dot walks the blocks (hence each lane's
+/// `i` subsequence) in ascending order through the carried per-row
+/// `acc` lane group, with each block's lane phase pinned to its global
+/// start column (`c0 % LANES`).
 #[allow(clippy::too_many_arguments)]
-fn quad_forms_panel_d_blocked(
-    mat: &Mat,
-    x: &Mat,
+fn quad_forms_panel_d_blocked<E: Elem>(
+    mat: &[E],
+    d: usize,
+    x: &[E],
     p0: usize,
     pr: usize,
-    out: &mut [f64],
-    y: &mut [f64],
-    acc: &mut [f64],
+    out: &mut [E],
+    y: &mut [E],
+    acc: &mut [E],
     d_block: usize,
     assign: bool,
 ) {
-    let d = mat.cols();
-    acc[..pr].fill(0.0);
+    let accp = &mut acc[..pr * LANES];
+    accp.fill(E::ZERO);
     let mut c0 = 0;
     while c0 < d {
         let c1 = (c0 + d_block).min(d);
         let bw = c1 - c0;
         let yb = &mut y[..pr * bw];
-        yb.fill(0.0);
+        yb.fill(E::ZERO);
         // Y tile = X_panel · M[:, c0..c1]: stream the D_BLOCK-wide slice
         // of each M row; each hot slice is multiplied into all pr panel
         // rows before the next row is loaded.
         for j in 0..d {
-            let mrow = &mat.row(j)[c0..c1];
+            let mrow = &mat[j * d + c0..j * d + c1];
             for k in 0..pr {
-                let c = x.row(p0 + k)[j];
-                if c == 0.0 {
+                let c = x[(p0 + k) * d + j];
+                if c == E::ZERO {
                     continue;
                 }
-                let yrow = &mut yb[k * bw..(k + 1) * bw];
-                for (yi, &mi) in yrow.iter_mut().zip(mrow) {
-                    *yi += c * mi;
-                }
+                axpy_mk(&mut yb[k * bw..(k + 1) * bw], c, mrow);
             }
         }
-        // fold this block's dot contribution into the carried margin
+        // fold this block's dot contribution into the carried lanes
         for k in 0..pr {
-            let xr = &x.row(p0 + k)[c0..c1];
+            let xr = &x[(p0 + k) * d + c0..(p0 + k) * d + c1];
             let yr = &yb[k * bw..(k + 1) * bw];
-            let mut s = acc[k];
-            for (xi, yi) in xr.iter().zip(yr) {
-                s += xi * yi;
-            }
-            acc[k] = s;
+            let lanes: &mut [E; LANES] =
+                (&mut accp[k * LANES..(k + 1) * LANES]).try_into().unwrap();
+            dot_into_lanes(xr, yr, c0, lanes);
         }
         c0 = c1;
     }
     for k in 0..pr {
+        let lanes: &[E; LANES] = (&accp[k * LANES..(k + 1) * LANES]).try_into().unwrap();
+        let s = reduce_lanes(lanes);
         if assign {
-            out[k] = acc[k];
+            out[k] = s;
         } else {
-            out[k] -= acc[k];
+            out[k] = out[k] - s;
         }
     }
 }
@@ -316,19 +526,34 @@ pub fn wsyrk_upper(g: &mut Mat, a: &Mat, b: &Mat, rows: std::ops::Range<usize>, 
     let d = a.cols();
     debug_assert_eq!(b.cols(), d);
     debug_assert_eq!((g.rows(), g.cols()), (d, d));
+    wsyrk_upper_g(g.as_mut_slice(), d, a.as_slice(), b.as_slice(), rows, w);
+}
+
+/// Element-generic body of [`wsyrk_upper`]: `g` is a row-major d×d
+/// buffer, `a`/`b` row-major with `d` columns. The row update is the
+/// [`axpy2_mk`] microkernel — elementwise, so its output is bitwise
+/// independent of [`LANES`].
+pub fn wsyrk_upper_g<E: Elem>(
+    g: &mut [E],
+    d: usize,
+    a: &[E],
+    b: &[E],
+    rows: std::ops::Range<usize>,
+    w: &[E],
+) {
+    debug_assert_eq!(g.len(), d * d);
+    debug_assert!(a.len() >= rows.end * d);
+    debug_assert!(b.len() >= rows.end * d);
     debug_assert_eq!(w.len(), rows.len());
     for (k, t) in rows.enumerate() {
         let wt = w[k];
-        if wt == 0.0 {
+        if wt == E::ZERO {
             continue;
         }
-        let (ra, rb) = (a.row(t), b.row(t));
+        let (ra, rb) = (&a[t * d..(t + 1) * d], &b[t * d..(t + 1) * d]);
         for i in 0..d {
             let (wai, wbi) = (wt * ra[i], wt * rb[i]);
-            let grow = &mut g.row_mut(i)[i..];
-            for ((gj, &aj), &bj) in grow.iter_mut().zip(&ra[i..]).zip(&rb[i..]) {
-                *gj += wai * aj - wbi * bj;
-            }
+            axpy2_mk(&mut g[i * d + i..(i + 1) * d], wai, &ra[i..], wbi, &rb[i..]);
         }
     }
 }
@@ -359,6 +584,7 @@ pub fn wsyrk_upper_d_blocked(
     debug_assert_eq!((g.rows(), g.cols()), (d, d));
     debug_assert_eq!(w.len(), rows.len());
     assert!(d_block > 0, "d_block must be positive");
+    let (gs, a, b) = (g.as_mut_slice(), a.as_slice(), b.as_slice());
     let mut i0 = 0;
     while i0 < d {
         let i1 = (i0 + d_block).min(d);
@@ -370,17 +596,20 @@ pub fn wsyrk_upper_d_blocked(
                 if wt == 0.0 {
                     continue;
                 }
-                let (ra, rb) = (a.row(t), b.row(t));
+                let (ra, rb) = (&a[t * d..(t + 1) * d], &b[t * d..(t + 1) * d]);
                 for i in i0..i1 {
                     let js = j0.max(i);
                     if js >= j1 {
                         continue;
                     }
                     let (wai, wbi) = (wt * ra[i], wt * rb[i]);
-                    let grow = &mut g.row_mut(i)[js..j1];
-                    for ((gj, &aj), &bj) in grow.iter_mut().zip(&ra[js..j1]).zip(&rb[js..j1]) {
-                        *gj += wai * aj - wbi * bj;
-                    }
+                    axpy2_mk(
+                        &mut gs[i * d + js..i * d + j1],
+                        wai,
+                        &ra[js..j1],
+                        wbi,
+                        &rb[js..j1],
+                    );
                 }
             }
             j0 = j1;
@@ -416,6 +645,15 @@ mod tests {
     }
 
     #[test]
+    fn lane_count_matches_feature() {
+        if cfg!(feature = "simd") {
+            assert_eq!(LANES, 4);
+        } else {
+            assert_eq!(LANES, 1);
+        }
+    }
+
+    #[test]
     fn margins_match_quad_form_oracle() {
         forall("gemm-margins", 24, |rng| {
             // shapes deliberately straddle PANEL_ROWS boundaries
@@ -446,6 +684,40 @@ mod tests {
         for (k, t) in (37..78).enumerate() {
             assert_eq!(part[k], full[t], "sub-range row {t} misaligned");
         }
+    }
+
+    #[test]
+    fn f32_instantiation_tracks_f64_panels() {
+        // the generic drivers share one body: the f32 instantiation must
+        // reproduce the f64 margins to f32 round-off on modest inputs
+        forall("gemm-f32", 16, |rng| {
+            let d = 1 + rng.below(24);
+            let n = 1 + rng.below(2 * PANEL_ROWS + 3);
+            let (m, a, b) = rand_inputs(rng, n, d);
+            let m32: Vec<f32> = m.as_slice().iter().map(|&v| v as f32).collect();
+            let a32: Vec<f32> = a.as_slice().iter().map(|&v| v as f32).collect();
+            let b32: Vec<f32> = b.as_slice().iter().map(|&v| v as f32).collect();
+            let mut out = vec![0.0; n];
+            let mut y = Vec::new();
+            margins_into(&m, &a, &b, 0..n, &mut out, &mut y);
+            let mut out32 = vec![0.0f32; n];
+            let mut y32: Vec<f32> = Vec::new();
+            margins_into_g(&m32, d, &a32, &b32, 0..n, &mut out32, &mut y32);
+            let (mut acc32, mut out32b) = (Vec::new(), vec![0.0f32; n]);
+            margins_into_d_blocked_g(
+                &m32, d, &a32, &b32, 0..n, &mut out32b, &mut y32, &mut acc32, 3,
+            );
+            for t in 0..n {
+                // loose: f32 arithmetic over ~2d-long chains
+                let tol = 1e-4 * (1.0 + d as f64);
+                close(out32[t] as f64, out[t], tol, tol, "f32 margin")?;
+                // blocked and row-stream f32 agree bitwise, like f64
+                if out32b[t].to_bits() != out32[t].to_bits() {
+                    return Err(format!("f32 d-blocked split bits at {t}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -486,7 +758,9 @@ mod tests {
     fn d_blocked_margins_bitwise_match_row_stream() {
         // blocking the feature dimension must not change a single bit:
         // arbitrary shapes, block widths straddling every boundary case
-        // (1, smaller than d, equal, larger)
+        // (1, smaller than d, equal, larger) — and under the simd
+        // feature, block widths not divisible by LANES exercise the
+        // lane-phase carry
         forall("gemm-dblock-margins", 24, |rng| {
             let d = 1 + rng.below(40);
             let n = 1 + rng.below(2 * PANEL_ROWS + 3);
@@ -495,7 +769,7 @@ mod tests {
             let mut y = Vec::new();
             margins_into(&m, &a, &b, 0..n, &mut base, &mut y);
             let mut acc = Vec::new();
-            for d_block in [1, 2, d.saturating_sub(1).max(1), d, d + 3] {
+            for d_block in [1, 2, 3, d.saturating_sub(1).max(1), d, d + 3] {
                 let mut out = vec![0.0; n];
                 margins_into_d_blocked(&m, &a, &b, 0..n, &mut out, &mut y, &mut acc, d_block);
                 for t in 0..n {

@@ -15,7 +15,7 @@ use triplet_screen::data::{synthetic, Dataset};
 use triplet_screen::loss::Loss;
 use triplet_screen::path::{PathConfig, RegPath, TripletSource};
 use triplet_screen::prelude::*;
-use triplet_screen::runtime::KernelCore;
+use triplet_screen::runtime::{KernelCore, PrecisionTier};
 use triplet_screen::solver::Problem;
 use triplet_screen::triplet::{MiningStrategy, TripletMiner};
 use triplet_screen::util::cli::Args;
@@ -33,6 +33,12 @@ common options
                         (native engine only; auto picks d-blocked once
                         d reaches the threshold)
   --d-threshold N       auto switch-over dimension                [512]
+  --precision TIER      f64 | mixed                               [f64]
+                        (native engine only; mixed runs the bulk
+                        screening/admission margin passes in f32 with a
+                        certified rounding envelope and promotes
+                        boundary-ambiguous triplets to f64 — screened
+                        sets are provably identical to all-f64)
   --threads N           worker threads (0 = auto)                 [0]
   --k N                 neighbors per anchor (triplet construction)
   --seed N              RNG seed                                  [7]
@@ -86,15 +92,15 @@ fn make_engine(args: &Args) -> Box<dyn Engine> {
 }
 
 /// Engine construction with CLI > config-file > default precedence for
-/// the kernel-core selection (`[engine]` section keys; see
-/// `util::config::engine_overrides`).
+/// the kernel-core and precision-tier selection (`[engine]` section
+/// keys; see `util::config::engine_overrides`).
 fn make_engine_with(
     args: &Args,
     file_cfg: Option<&triplet_screen::util::config::Config>,
 ) -> Box<dyn Engine> {
-    let (cfg_core, cfg_threshold, cfg_threads) = file_cfg
+    let (cfg_core, cfg_threshold, cfg_threads, cfg_precision) = file_cfg
         .map(triplet_screen::util::config::engine_overrides)
-        .unwrap_or((None, None, None));
+        .unwrap_or((None, None, None, None));
     let threads = args
         .get("threads")
         .map(|s| s.parse().expect("--threads expects an integer"))
@@ -109,7 +115,11 @@ fn make_engine_with(
                 .get("d-threshold")
                 .map(|s| s.parse().expect("--d-threshold expects an integer"))
                 .or(cfg_threshold);
-            Box::new(NativeEngine::from_options(threads, core, threshold))
+            let precision = args
+                .get("precision")
+                .map(PrecisionTier::parse_cli)
+                .or(cfg_precision);
+            Box::new(NativeEngine::from_options(threads, core, threshold, precision))
         }
         // scalar reference core: parity oracle / perf baseline
         "native-scalar" => Box::new(NativeEngine::scalar(threads)),

@@ -872,6 +872,11 @@ fn admit_batch_into(
         match decision {
             Admission::Admit => {
                 store.push(batch.idx[t], batch.a.row(t), batch.b.row(t), batch.h_norm[t]);
+                // exactness contract: `hm[t]` is the exact f64 ⟨H, M₀⟩ for
+                // every admitted candidate — under the mixed tier,
+                // `admit_batch` re-computes admitted margins in f64 before
+                // returning (the lane scales into `hq` on all later RRPB
+                // passes, so an f32 value here would poison screening)
                 lane.push(hm[t]);
             }
             Admission::Certified { side, expires } => {

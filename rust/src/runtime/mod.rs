@@ -23,6 +23,18 @@
 //! Both must agree to f64 round-off; `rust/tests/runtime_pjrt.rs` checks
 //! exactly that on the real artifacts, and `rust/tests/kernel_parity.rs`
 //! checks the tiled core against the scalar reference.
+//!
+//! **Precision tiers.** An engine additionally advertises a
+//! [`PrecisionTier`]: under [`PrecisionTier::MixedCertified`] the
+//! screening manager and the streaming admission path route their bulk
+//! margin passes through [`Engine::margins_f32`] — the same generic
+//! panel kernels instantiated at `f32`, roughly halving memory traffic —
+//! and receive alongside each margin a certified forward-error envelope
+//! (`screening::bounds::eps_round`). Every consumer then evaluates its
+//! rule at *both* envelope endpoints; only rows whose decision flips
+//! inside the envelope are promoted to the exact f64 path, so the
+//! screened sets are provably identical to an all-f64 run (the
+//! safety battery in `rust/tests/workset_safety.rs` enforces this).
 
 mod native;
 // The real PJRT engine needs the vendored `xla` + `anyhow` crates, which
@@ -43,6 +55,49 @@ pub use native::{KernelCore, NativeEngine};
 pub use pjrt::{PjrtEngine, ARTIFACTS_DIR_ENV};
 
 use crate::linalg::Mat;
+
+/// Numeric tier an engine runs the *bulk* screening passes at.
+///
+/// The solver's descent arithmetic is always f64; the tier only governs
+/// the screening-statistic and admission margin passes, which are
+/// bandwidth-bound and certified by an explicit rounding envelope.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PrecisionTier {
+    /// Everything in f64 — the exact reference path (default).
+    #[default]
+    F64,
+    /// Bulk margin passes in f32 with a certified per-row error
+    /// envelope; boundary-ambiguous rows are promoted to f64. Screened
+    /// sets are provably identical to [`PrecisionTier::F64`].
+    MixedCertified,
+}
+
+impl PrecisionTier {
+    /// Parse a tier name (case-insensitive): `f64` / `double` / `exact`,
+    /// or `mixed` / `mixed-certified` / `f32`. Returns `None` for
+    /// anything else.
+    pub fn parse(s: &str) -> Option<PrecisionTier> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" | "exact" => Some(PrecisionTier::F64),
+            "mixed" | "mixed-certified" | "f32" => Some(PrecisionTier::MixedCertified),
+            _ => None,
+        }
+    }
+
+    /// [`PrecisionTier::parse`] with a loud CLI-grade failure.
+    pub fn parse_cli(s: &str) -> PrecisionTier {
+        PrecisionTier::parse(s)
+            .unwrap_or_else(|| panic!("unknown precision tier {s:?} (use f64 or mixed)"))
+    }
+
+    /// Stable label for telemetry (`f64` / `mixed`).
+    pub fn label(self) -> &'static str {
+        match self {
+            PrecisionTier::F64 => "f64",
+            PrecisionTier::MixedCertified => "mixed",
+        }
+    }
+}
 
 /// One objective/gradient evaluation: `(loss_sum, grad_loss_sum)` where
 /// `grad_loss_sum = Σ_t α_t H_t`; margins are written to `margins_out`.
@@ -74,4 +129,23 @@ pub trait Engine: Sync {
         gamma: f64,
         margins_out: &mut [f64],
     ) -> StepOut;
+
+    /// The precision tier this engine runs bulk screening passes at.
+    /// Defaults to [`PrecisionTier::F64`] so existing engines (and the
+    /// PJRT stub) are exact without opting in.
+    fn precision(&self) -> PrecisionTier {
+        PrecisionTier::F64
+    }
+
+    /// Certified-f32 bulk margins: compute [`Engine::margins`] in f32
+    /// (widened into `out`) and fill `env[t]` with a rigorous bound on
+    /// `|out[t] − margins_f64[t]|` (`screening::bounds::eps_round`).
+    /// Returns `false` — leaving `out`/`env` untouched — when the
+    /// engine has no f32 tier (the default, and whenever
+    /// [`Engine::precision`] is [`PrecisionTier::F64`]); callers must
+    /// then use the exact [`Engine::margins`] path.
+    fn margins_f32(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64], env: &mut [f64]) -> bool {
+        let _ = (mat, a, b, out, env);
+        false
+    }
 }

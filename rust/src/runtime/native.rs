@@ -36,10 +36,22 @@
 //! before it is read (`matvec` fills `tmp`, `quad_forms_panel` zeroes
 //! its panel, `alpha[k]` is assigned before `wsyrk_upper` reads it), so
 //! the non-zeroing `take` is sound.
+//!
+//! Under [`PrecisionTier::MixedCertified`]
+//! ([`NativeEngine::with_precision`], CLI `--precision mixed`) the
+//! engine additionally serves [`Engine::margins_f32`]: inputs are
+//! converted once per pass (O(n·d), against the O(n·d²) kernel), the
+//! *same* generic panel kernels run instantiated at `f32` (through the
+//! row-stream or d-blocked geometry the core selection dictates), and
+//! each row gets the certified rounding envelope
+//! [`crate::screening::bounds::eps_round`] computed from the f64 data
+//! norms during conversion. The f32 lanes live in a second
+//! [`ScratchPool`] so warm mixed-tier passes allocate nothing either.
 
-use super::{Engine, StepOut};
+use super::{Engine, PrecisionTier, StepOut};
 use crate::linalg::{gemm, Mat};
 use crate::loss::Loss;
+use crate::screening::bounds::eps_round;
 use crate::util::parallel;
 use crate::util::pool::ScratchPool;
 
@@ -90,7 +102,11 @@ pub struct NativeEngine {
     core: KernelCore,
     /// d at which `KernelCore::Auto` switches to the d-blocked geometry
     d_threshold: usize,
+    /// numeric tier of the bulk screening passes (`F64` unless opted in)
+    precision: PrecisionTier,
     scratch: ScratchPool,
+    /// f32 conversion/compute lanes of the mixed-precision tier
+    scratch32: ScratchPool<f32>,
 }
 
 impl NativeEngine {
@@ -122,30 +138,42 @@ impl NativeEngine {
             threads,
             core,
             d_threshold: gemm::D_BLOCK_MIN_D,
+            precision: PrecisionTier::F64,
             scratch: ScratchPool::default(),
+            scratch32: ScratchPool::default(),
         }
     }
 
     /// Engine from CLI/config-style options: `None` falls back to the
-    /// defaults (`Auto` core, [`gemm::D_BLOCK_MIN_D`] threshold). The
-    /// one construction path both binaries share — pair with
-    /// [`KernelCore::parse_cli`] for the spelling parse.
+    /// defaults (`Auto` core, [`gemm::D_BLOCK_MIN_D`] threshold, exact
+    /// `F64` tier). The one construction path both binaries share —
+    /// pair with [`KernelCore::parse_cli`] /
+    /// [`PrecisionTier::parse_cli`] for the spelling parses.
     pub fn from_options(
         threads: usize,
         core: Option<KernelCore>,
         d_threshold: Option<usize>,
+        precision: Option<PrecisionTier>,
     ) -> NativeEngine {
         let mut engine = NativeEngine::with_core(threads, core.unwrap_or(KernelCore::Auto));
         if let Some(t) = d_threshold {
             engine = engine.with_d_threshold(t);
         }
-        engine
+        engine.with_precision(precision.unwrap_or_default())
     }
 
     /// Override the `Auto` switch-over dimension (CLI `--d-threshold`).
     /// No effect on pinned cores.
     pub fn with_d_threshold(mut self, d_threshold: usize) -> NativeEngine {
         self.d_threshold = d_threshold.max(1);
+        self
+    }
+
+    /// Select the numeric tier of the bulk screening passes (CLI
+    /// `--precision`). [`PrecisionTier::MixedCertified`] turns
+    /// [`Engine::margins_f32`] on; everything else is unaffected.
+    pub fn with_precision(mut self, precision: PrecisionTier) -> NativeEngine {
+        self.precision = precision;
         self
     }
 
@@ -227,7 +255,7 @@ impl Engine for NativeEngine {
             }),
             KernelCore::DBlocked => parallel::par_fill(out, workers, |range, chunk| {
                 let mut y = self.scratch.take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
-                let mut acc = self.scratch.take(gemm::PANEL_ROWS);
+                let mut acc = self.scratch.take(gemm::PANEL_ACC_LEN);
                 gemm::margins_into_d_blocked(
                     mat,
                     a,
@@ -371,7 +399,7 @@ impl Engine for NativeEngine {
                         KernelCore::DBlocked => {
                             let mut y =
                                 scratch.take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
-                            let mut acc = scratch.take(gemm::PANEL_ROWS);
+                            let mut acc = scratch.take(gemm::PANEL_ACC_LEN);
                             let mut alpha = scratch.take(gemm::PANEL_ROWS);
                             let mut p0 = range.start;
                             while p0 < range.end {
@@ -424,6 +452,90 @@ impl Engine for NativeEngine {
         // identical without touching the scalar perf baseline
         gemm::mirror_upper(&mut g);
         (lsum, g)
+    }
+
+    fn precision(&self) -> PrecisionTier {
+        self.precision
+    }
+
+    fn margins_f32(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64], env: &mut [f64]) -> bool {
+        if self.precision != PrecisionTier::MixedCertified {
+            return false;
+        }
+        let d = mat.rows();
+        let n = a.rows();
+        debug_assert!(mat.is_square());
+        debug_assert_eq!(a.cols(), d);
+        debug_assert_eq!(b.cols(), d);
+        debug_assert_eq!(out.len(), n);
+        debug_assert_eq!(env.len(), n);
+        let q_norm = mat.norm();
+        // One O(n·d) conversion + envelope pass against the O(n·d²)
+        // kernel. The envelope's row norms accumulate in f64, per side
+        // in ascending index order — `CandidateBatch::push`'s chains —
+        // so the two admission surfaces quote identical norms.
+        let mut m32 = self.scratch32.take(d * d);
+        for (dst, &src) in m32.iter_mut().zip(mat.as_slice()) {
+            *dst = src as f32;
+        }
+        let mut a32 = self.scratch32.take(n * d);
+        let mut b32 = self.scratch32.take(n * d);
+        for t in 0..n {
+            let mut na = 0.0;
+            for (dst, &src) in a32[t * d..(t + 1) * d].iter_mut().zip(a.row(t)) {
+                *dst = src as f32;
+                na += src * src;
+            }
+            let mut nb = 0.0;
+            for (dst, &src) in b32[t * d..(t + 1) * d].iter_mut().zip(b.row(t)) {
+                *dst = src as f32;
+                nb += src * src;
+            }
+            env[t] = eps_round(d, q_norm, na + nb);
+        }
+        let mut out32 = self.scratch32.take(n);
+        let workers = self.workers();
+        match self.core_for(d) {
+            // the f32 tier always runs the microkernel panels — the
+            // scalar core routes through the row-stream geometry
+            KernelCore::Scalar | KernelCore::Tiled => {
+                parallel::par_fill(&mut out32, workers, |range, chunk| {
+                    let mut y = self.scratch32.take(gemm::PANEL_ROWS * d.max(1));
+                    gemm::margins_into_g(&m32, d, &a32, &b32, range, chunk, &mut y);
+                    self.scratch32.put(y);
+                });
+            }
+            KernelCore::DBlocked => {
+                parallel::par_fill(&mut out32, workers, |range, chunk| {
+                    let mut y = self
+                        .scratch32
+                        .take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
+                    let mut acc = self.scratch32.take(gemm::PANEL_ACC_LEN);
+                    gemm::margins_into_d_blocked_g(
+                        &m32,
+                        d,
+                        &a32,
+                        &b32,
+                        range,
+                        chunk,
+                        &mut y,
+                        &mut acc,
+                        gemm::D_BLOCK,
+                    );
+                    self.scratch32.put(y);
+                    self.scratch32.put(acc);
+                });
+            }
+            KernelCore::Auto => unreachable!("core_for never returns Auto"),
+        }
+        for (o, &v) in out.iter_mut().zip(out32.iter()) {
+            *o = v as f64;
+        }
+        self.scratch32.put(m32);
+        self.scratch32.put(a32);
+        self.scratch32.put(b32);
+        self.scratch32.put(out32);
+        true
     }
 }
 
@@ -609,14 +721,106 @@ mod tests {
 
     #[test]
     fn from_options_applies_overrides() {
-        let defaulted = NativeEngine::from_options(2, None, None);
+        let defaulted = NativeEngine::from_options(2, None, None, None);
         assert_eq!(defaulted.core(), KernelCore::Auto);
         assert_eq!(defaulted.core_for(gemm::D_BLOCK_MIN_D), KernelCore::DBlocked);
-        let pinned = NativeEngine::from_options(2, Some(KernelCore::Scalar), Some(4));
+        assert_eq!(defaulted.precision(), PrecisionTier::F64);
+        let pinned = NativeEngine::from_options(2, Some(KernelCore::Scalar), Some(4), None);
         assert_eq!(pinned.core(), KernelCore::Scalar);
-        let low = NativeEngine::from_options(2, Some(KernelCore::Auto), Some(4));
+        let low = NativeEngine::from_options(2, Some(KernelCore::Auto), Some(4), None);
         assert_eq!(low.core_for(4), KernelCore::DBlocked);
         assert_eq!(low.core_for(3), KernelCore::Tiled);
+        let mixed = NativeEngine::from_options(
+            2,
+            None,
+            None,
+            Some(PrecisionTier::MixedCertified),
+        );
+        assert_eq!(mixed.precision(), PrecisionTier::MixedCertified);
+    }
+
+    #[test]
+    fn precision_tier_parses_cli_spellings() {
+        assert_eq!(PrecisionTier::parse("f64"), Some(PrecisionTier::F64));
+        assert_eq!(PrecisionTier::parse("exact"), Some(PrecisionTier::F64));
+        assert_eq!(
+            PrecisionTier::parse("mixed"),
+            Some(PrecisionTier::MixedCertified)
+        );
+        assert_eq!(
+            PrecisionTier::parse("mixed-certified"),
+            Some(PrecisionTier::MixedCertified)
+        );
+        assert_eq!(PrecisionTier::parse("f16"), None);
+        assert_eq!(PrecisionTier::parse_cli("f32"), PrecisionTier::MixedCertified);
+        assert_eq!(PrecisionTier::F64.label(), "f64");
+        assert_eq!(PrecisionTier::MixedCertified.label(), "mixed");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown precision tier")]
+    fn precision_tier_cli_typo_fails_loudly() {
+        let _ = PrecisionTier::parse_cli("mixedd");
+    }
+
+    #[test]
+    fn margins_f32_requires_mixed_tier() {
+        // an exact-tier engine must decline, leaving the buffers alone
+        let eng = NativeEngine::new(1);
+        let mut rng = Pcg64::seed(11);
+        let (m, a, b) = rand_inputs(&mut rng, 10, 4);
+        let mut out = vec![-9.0; 10];
+        let mut env = vec![-9.0; 10];
+        assert!(!eng.margins_f32(&m, &a, &b, &mut out, &mut env));
+        assert!(out.iter().all(|&v| v == -9.0));
+        assert!(env.iter().all(|&v| v == -9.0));
+    }
+
+    #[test]
+    fn margins_f32_within_envelope_of_exact() {
+        forall("native-margins-f32", 12, |rng| {
+            let (n, d) = (1 + rng.below(150), 1 + rng.below(16));
+            let (m, a, b) = rand_inputs(rng, n, d);
+            let mut exact = vec![0.0; n];
+            NativeEngine::new(2).margins(&m, &a, &b, &mut exact);
+            let mut bits: Option<Vec<u64>> = None;
+            for mk in [
+                NativeEngine::row_stream as fn(usize) -> NativeEngine,
+                NativeEngine::d_blocked,
+                NativeEngine::scalar,
+            ] {
+                let eng = mk(2).with_precision(PrecisionTier::MixedCertified);
+                let mut out = vec![0.0; n];
+                let mut env = vec![0.0; n];
+                if !eng.margins_f32(&m, &a, &b, &mut out, &mut env) {
+                    return Err("mixed engine declined margins_f32".into());
+                }
+                for t in 0..n {
+                    if env[t] <= 0.0 {
+                        return Err(format!("t={t}: non-positive envelope {}", env[t]));
+                    }
+                    if (out[t] - exact[t]).abs() > env[t] {
+                        return Err(format!(
+                            "t={t}: |{} - {}| > env {}",
+                            out[t], exact[t], env[t]
+                        ));
+                    }
+                }
+                // every core serves the same f32 bits (scalar routes
+                // through the row-stream panels; d-blocked is bitwise
+                // identical to them by construction)
+                let ob: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+                match &bits {
+                    None => bits = Some(ob),
+                    Some(prev) => {
+                        if *prev != ob {
+                            return Err("f32 bits differ across cores".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

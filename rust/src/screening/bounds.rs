@@ -4,8 +4,49 @@
 //! Derivations are referenced next to each function; the geometric
 //! relations the paper proves (PGB ⊆ GB, RPB ⊆ DGB at the optimum,
 //! PGB = RPB at the optimum) are asserted in the test suite.
+//!
+//! This module also owns the mixed-precision tier's rounding envelope
+//! [`eps_round`]: the certified forward-error bound that, added to a
+//! rule's effective radius (equivalently: evaluating the rule at both
+//! endpoints of `m̂ ± ε_round`), makes an f32 screening statistic safe —
+//! see `docs/PAPER_MAP.md` for the derivation and the per-rule mapping.
 
 use crate::linalg::{psd_split, Mat, PsdSplit};
+
+/// Unit roundoff of IEEE-754 binary32 (`2⁻²⁴`) — the `u` of the
+/// [`eps_round`] forward-error bound.
+pub const F32_UNIT_ROUNDOFF: f64 = 5.960_464_477_539_062_5e-8;
+
+/// Certified rounding envelope of one f32 margin evaluation
+/// `m̂ = fl₃₂(aᵀQa − bᵀQb)`:
+///
+/// `ε_round(d, ‖Q‖_F, xsq) = γ_n · ‖Q‖_F · xsq`, with
+/// `γ_n = n·u/(1 − n·u)`, `u = 2⁻²⁴`, `n = 2d + 16`, and
+/// `xsq = ‖a‖² + ‖b‖²` (the data norms the store/batch already holds).
+///
+/// Why this bounds `|m̂ − m|`: each quad form is a GEMV (every `y_i`
+/// sums `d` products) followed by a length-`d` dot, so its longest
+/// sequential accumulation chain has `2d + 2` rounded operations; the
+/// standard forward-error bound (Higham, *Accuracy and Stability of
+/// Numerical Algorithms*, §3.1) then gives
+/// `|fl(aᵀQa) − aᵀQa| ≤ γ_{2d+2}·Σ_{ij}|a_i||Q_ij||a_j|`, and by
+/// Cauchy–Schwarz `Σ_{ij}|a_i||Q_ij||a_j| ≤ ‖a‖²·‖Q‖_F`. The slack of
+/// `n = 2d + 16` over `2d + 2` absorbs the f64→f32 input conversions
+/// (one relative `u` per operand), the final subtraction of the two
+/// quad forms, the f64 reference's own (2⁻⁵³-scale) error, and the
+/// SIMD lane split (which only *shortens* chains). The envelope is
+/// monotone in `d`, `‖Q‖_F`, and `xsq` by construction — inflating a
+/// radius with it can never tighten a bound — and saturates to
+/// `+∞` once `n·u ≥ 1` (d ≈ 8.4M, far past any metric-learning
+/// dimension), which degrades to "promote everything", still safe.
+pub fn eps_round(d: usize, q_norm: f64, xsq: f64) -> f64 {
+    let nu = (2 * d + 16) as f64 * F32_UNIT_ROUNDOFF;
+    if nu >= 1.0 {
+        return f64::INFINITY;
+    }
+    let gamma = nu / (1.0 - nu);
+    gamma * q_norm * xsq
+}
 
 /// A Frobenius-norm ball `{X : ‖X − Q‖_F ≤ r}` containing `M*`.
 #[derive(Clone, Debug)]
@@ -295,5 +336,33 @@ mod tests {
         // GB radius does NOT vanish in general (Thm 3.4 discussion)
         let s_gb = gb(&m_star, &grad, lambda);
         assert!(s_gb.r >= s_pgb.r);
+    }
+
+    #[test]
+    fn eps_round_positive_finite_and_scaled() {
+        let e = eps_round(300, 2.0, 5.0);
+        assert!(e > 0.0 && e.is_finite());
+        // γ_n ≈ n·u at these sizes: within 1% of the first-order value
+        let nu = (2.0 * 300.0 + 16.0) * F32_UNIT_ROUNDOFF;
+        assert!((e - nu * 2.0 * 5.0).abs() < 0.01 * e);
+        // homogeneous in both norms
+        assert!((eps_round(300, 4.0, 5.0) - 2.0 * e).abs() < 1e-18);
+        assert!((eps_round(300, 2.0, 10.0) - 2.0 * e).abs() < 1e-18);
+        // zero data ⇒ zero envelope (still never negative)
+        assert_eq!(eps_round(300, 0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn eps_round_monotone_and_saturating() {
+        // monotone in d — the inflation can only grow with chain length
+        let mut prev = 0.0;
+        for d in [1usize, 8, 64, 300, 512, 768, 10_000] {
+            let e = eps_round(d, 1.0, 1.0);
+            assert!(e >= prev, "not monotone at d={d}");
+            prev = e;
+        }
+        // n·u ≥ 1 degrades to +∞ (promote everything) instead of a
+        // bogus finite bound
+        assert_eq!(eps_round(usize::MAX / 4, 1.0, 1.0), f64::INFINITY);
     }
 }

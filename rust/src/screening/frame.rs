@@ -319,6 +319,56 @@ impl ReferenceFrame {
         Admission::Admit
     }
 
+    /// Certified admission over an approximate margin `hm ± env` (the
+    /// mixed-precision tier: `hm` from the f32 admission pre-pass, `env`
+    /// its [`crate::screening::bounds::eps_round`] envelope).
+    ///
+    /// At fixed λ the RRPB rules act on the scaled margin
+    /// `((λ₀+λ)/2λ)·hm` against a radius independent of `hm`, so the
+    /// decision regions in `hm` are the ordered intervals Certified-L /
+    /// Admit / Certified-R; as in
+    /// [`crate::screening::rules::sphere_rule_enveloped`], agreement of
+    /// [`Self::admission_decision`] at the interval's two endpoints
+    /// certifies the exact-f64 decision on the whole interval. `None`
+    /// means the true margin may straddle a boundary: the caller must
+    /// promote the candidate to an exact f64 margin before deciding.
+    ///
+    /// On an agreeing Certified pair, the reported `expires` is the
+    /// **max** of the endpoints' expiries: the R-range's lower endpoint
+    /// is non-increasing in `hm` and the L-range's non-decreasing, so
+    /// the max bounds the true expiry from above — the certificate is
+    /// dropped no later than the exact path would drop it (conservative,
+    /// never unsafe).
+    pub fn admission_decision_enveloped(
+        &self,
+        hm: f64,
+        hn: f64,
+        lambda: f64,
+        loss: &Loss,
+        env: f64,
+    ) -> Option<Admission> {
+        debug_assert!(env >= 0.0, "envelope must be >= 0, got {env}");
+        let lo = self.admission_decision(hm - env, hn, lambda, loss);
+        let hi = self.admission_decision(hm + env, hn, lambda, loss);
+        match (lo, hi) {
+            (Admission::Admit, Admission::Admit) => Some(Admission::Admit),
+            (
+                Admission::Certified {
+                    side: sl,
+                    expires: el,
+                },
+                Admission::Certified {
+                    side: sh,
+                    expires: eh,
+                },
+            ) if sl == sh => Some(Admission::Certified {
+                side: sl,
+                expires: el.max(eh),
+            }),
+            _ => None,
+        }
+    }
+
     /// Advance the certificate sweep to `lambda` (strictly below the
     /// previous call's λ) and emit the ids certified at `lambda` into
     /// `out_l`/`out_r`, skipping ids already retired from `active`.
@@ -722,6 +772,73 @@ mod tests {
             }
         }
         assert!(certified > 0, "fixture produced no certified candidates");
+    }
+
+    /// The enveloped admission either certifies the exact decision for
+    /// every margin in `hm ± env` (checked by dense sampling) or
+    /// abstains — and a certified expiry is never below the true one.
+    #[test]
+    fn enveloped_admission_certifies_exactly_or_abstains() {
+        let (store, m0, engine) = fixture();
+        let loss = Loss::smoothed_hinge(0.05);
+        let (l0, eps) = (2.5, 1e-3);
+        let frame = ReferenceFrame::build(m0.clone(), l0, eps, &store, &engine, None);
+        let mut hm = vec![0.0; store.len()];
+        engine.margins(&m0, &store.a, &store.b, &mut hm);
+        let (mut agreed, mut abstained) = (0usize, 0usize);
+        for t in 0..store.len() {
+            let hn = store.h_norm[t];
+            for k in 1..=8 {
+                let lam = l0 * 0.93f64.powi(k);
+                // envelopes from tiny (realistic) to huge (forces overlap
+                // with a boundary somewhere in the fixture)
+                for env in [1e-9, 1e-3, 0.3] {
+                    let got = frame.admission_decision_enveloped(hm[t], hn, lam, &loss, env);
+                    let exact = frame.admission_decision(hm[t], hn, lam, &loss);
+                    match got {
+                        None => {
+                            abstained += 1;
+                            // abstention must come from genuine endpoint
+                            // disagreement
+                            let lo = frame.admission_decision(hm[t] - env, hn, lam, &loss);
+                            let hi = frame.admission_decision(hm[t] + env, hn, lam, &loss);
+                            assert_ne!(lo, hi, "abstained on agreeing endpoints");
+                        }
+                        Some(Admission::Admit) => {
+                            agreed += 1;
+                            assert_eq!(exact, Admission::Admit);
+                            // dense interior sample: every margin admits
+                            for s in 0..=8 {
+                                let m = hm[t] - env + 2.0 * env * (s as f64 / 8.0);
+                                assert_eq!(
+                                    frame.admission_decision(m, hn, lam, &loss),
+                                    Admission::Admit
+                                );
+                            }
+                        }
+                        Some(Admission::Certified { side, expires }) => {
+                            agreed += 1;
+                            let Admission::Certified {
+                                side: es,
+                                expires: ee,
+                            } = exact
+                            else {
+                                panic!("certified {side:?} but exact admits (t={t})");
+                            };
+                            assert_eq!(side, es);
+                            // conservative: never expires later than the
+                            // exact certificate claims to last
+                            assert!(
+                                expires >= ee - 1e-15,
+                                "expiry {expires} below exact {ee}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        assert!(agreed > 0, "fixture never certified an enveloped decision");
+        assert!(abstained > 0, "fixture never forced a promotion");
     }
 
     /// The exact RRPB decision helper agrees with the closed forms.

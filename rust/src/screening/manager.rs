@@ -40,7 +40,7 @@ use super::rules::{self, Decision};
 use super::sdls::{self, SdlsQuery};
 use super::{BoundKind, RuleKind, ScreeningConfig};
 use crate::linalg::psd_split;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, PrecisionTier};
 use crate::solver::{Problem, ScreenCtx};
 use crate::util::parallel;
 use crate::util::timer::PhaseTimers;
@@ -75,6 +75,20 @@ pub struct ScreeningStats {
     pub adm_rejected_r: usize,
     /// candidates admitted into the workset (rows copied)
     pub adm_admitted: usize,
+    /// mixed-precision tier: evaluations decided by the f32 pass alone
+    /// (the rounding envelope cleared both endpoints — the decision is
+    /// provably the exact-f64 one)
+    pub rule_evals_f32: usize,
+    /// mixed-precision tier: boundary-ambiguous evaluations promoted to
+    /// the exact f64 path (per pass: one gathered f64 margins kernel
+    /// call over exactly these rows)
+    pub promotions: usize,
+    /// sum of the rounding envelopes over all mixed-tier evaluations —
+    /// `envelope_sum / envelope_count` is the mean envelope width
+    /// reported as bench telemetry
+    pub envelope_sum: f64,
+    /// number of envelopes accumulated into `envelope_sum`
+    pub envelope_count: usize,
 }
 
 impl ScreeningStats {
@@ -93,6 +107,10 @@ impl ScreeningStats {
         self.adm_rejected_l = self.adm_rejected_l.saturating_add(other.adm_rejected_l);
         self.adm_rejected_r = self.adm_rejected_r.saturating_add(other.adm_rejected_r);
         self.adm_admitted = self.adm_admitted.saturating_add(other.adm_admitted);
+        self.rule_evals_f32 = self.rule_evals_f32.saturating_add(other.rule_evals_f32);
+        self.promotions = self.promotions.saturating_add(other.promotions);
+        self.envelope_sum += other.envelope_sum;
+        self.envelope_count = self.envelope_count.saturating_add(other.envelope_count);
     }
 
     /// Candidates rejected at admission time on either side.
@@ -110,6 +128,8 @@ struct Scratch {
     hp: Vec<f64>,
     /// `⟨H_t, X₀⟩` anchor margins for SDLS with non-PSD centers
     hx0: Vec<f64>,
+    /// per-row rounding envelopes of the mixed-precision f32 pass
+    env: Vec<f64>,
 }
 
 /// Identity of a fixed (iterate-independent) sphere: RPB/RRPB spheres
@@ -130,6 +150,14 @@ struct BlockOut {
     /// ids proven not to fire under a fixed sphere (memo candidates)
     cleared: Vec<usize>,
     evals: usize,
+    /// mixed tier: evaluations certified by the f32 pass alone
+    evals_f32: usize,
+    /// mixed tier: active-row positions `k` whose f32 evaluation was
+    /// boundary-ambiguous — decided by one gathered f64 pass afterwards
+    promote: Vec<usize>,
+    /// mixed tier: envelope telemetry (sum of widths, count)
+    env_sum: f64,
+    env_count: usize,
 }
 
 /// Stateful screening engine for one regularization-path run.
@@ -199,6 +227,18 @@ impl ScreeningManager {
     /// row; admission counters land in [`ScreeningStats`]. Returns false
     /// — leaving both outputs empty — when no reference frame is
     /// installed (admission cannot prove anything without one).
+    ///
+    /// Under [`PrecisionTier::MixedCertified`] the margins pass runs in
+    /// f32 and decisions are certified through
+    /// [`ReferenceFrame::admission_decision_enveloped`] with the
+    /// per-candidate rounding envelope. Candidates whose f32 evaluation
+    /// lands inside the envelope of a decision boundary are promoted:
+    /// one gathered exact f64 margins pass covers exactly the promoted
+    /// rows *plus every admitted row* — admitted entries feed the
+    /// workset's reference-margin lane, which must only ever carry exact
+    /// f64 values (the lane scales into `hq` on all later RRPB passes).
+    /// Robust f32 rejections keep their f32 margin in `hm`; it is never
+    /// consumed downstream.
     pub fn admit_batch(
         &mut self,
         batch: &crate::triplet::CandidateBatch,
@@ -216,12 +256,67 @@ impl ScreeningManager {
             return false;
         };
         hm.resize(batch.len(), 0.0);
-        if !batch.is_empty() {
-            engine.margins(frame.m0(), &batch.a, &batch.b, hm);
-        }
         out.reserve(batch.len());
-        for t in 0..batch.len() {
-            let decision = frame.admission_decision(hm[t], batch.h_norm[t], lambda, loss);
+        let mut mixed = false;
+        if engine.precision() == PrecisionTier::MixedCertified && !batch.is_empty() {
+            self.scratch.env.resize(batch.len(), 0.0);
+            mixed = engine.margins_f32(frame.m0(), &batch.a, &batch.b, hm, &mut self.scratch.env);
+        }
+        if mixed {
+            let env: &[f64] = &self.scratch.env;
+            // batch indices needing an exact f64 margin: boundary-ambiguous
+            // (decision promoted) ∪ admitted (lane exactness contract)
+            let mut need_f64: Vec<usize> = Vec::new();
+            let mut ambiguous: Vec<usize> = Vec::new();
+            for t in 0..batch.len() {
+                self.stats.envelope_sum += env[t];
+                self.stats.envelope_count = self.stats.envelope_count.saturating_add(1);
+                match frame.admission_decision_enveloped(
+                    hm[t],
+                    batch.h_norm[t],
+                    lambda,
+                    loss,
+                    env[t],
+                ) {
+                    Some(Admission::Admit) => {
+                        self.stats.rule_evals_f32 += 1;
+                        need_f64.push(t);
+                        out.push(Admission::Admit);
+                    }
+                    Some(certified) => {
+                        self.stats.rule_evals_f32 += 1;
+                        out.push(certified);
+                    }
+                    None => {
+                        self.stats.promotions += 1;
+                        need_f64.push(t);
+                        ambiguous.push(t);
+                        // placeholder, overwritten from the exact margin below
+                        out.push(Admission::Admit);
+                    }
+                }
+            }
+            if !need_f64.is_empty() {
+                let pa = batch.a.select_rows(&need_f64);
+                let pb = batch.b.select_rows(&need_f64);
+                let mut pm = vec![0.0; need_f64.len()];
+                engine.margins(frame.m0(), &pa, &pb, &mut pm);
+                for (j, &t) in need_f64.iter().enumerate() {
+                    hm[t] = pm[j];
+                }
+                for &t in &ambiguous {
+                    out[t] = frame.admission_decision(hm[t], batch.h_norm[t], lambda, loss);
+                }
+            }
+        } else {
+            if !batch.is_empty() {
+                engine.margins(frame.m0(), &batch.a, &batch.b, hm);
+            }
+            for t in 0..batch.len() {
+                out.push(frame.admission_decision(hm[t], batch.h_norm[t], lambda, loss));
+            }
+        }
+        for decision in out.iter() {
             self.stats.adm_candidates = self.stats.adm_candidates.saturating_add(1);
             match decision {
                 Admission::Admit => {
@@ -234,7 +329,6 @@ impl ScreeningManager {
                     self.stats.adm_rejected_r = self.stats.adm_rejected_r.saturating_add(1);
                 }
             }
-            out.push(decision);
         }
         true
     }
@@ -377,7 +471,32 @@ impl ScreeningManager {
             return (vec![], vec![]);
         }
 
-        self.center_margins(&sphere, problem, ctx, engine);
+        // Mixed-precision tier: the engine-pass bounds (GB/PGB/CDGB) under
+        // the plain sphere rule run their margins pass in f32 with a
+        // per-row rounding envelope. DGB reuses f64 margins already paid
+        // for by the objective and RPB/RRPB only scale the f64 reference
+        // lane, so f32 would save nothing there — they stay exact.
+        let mixed_eligible = self.cfg.rule == RuleKind::Sphere
+            && matches!(
+                self.cfg.bound,
+                BoundKind::Gb | BoundKind::Pgb | BoundKind::Cdgb
+            )
+            && engine.precision() == PrecisionTier::MixedCertified;
+        let mut mixed = false;
+        if mixed_eligible {
+            self.scratch.hq.resize(n, 0.0);
+            self.scratch.env.resize(n, 0.0);
+            mixed = engine.margins_f32(
+                &sphere.q,
+                problem.active_a(),
+                problem.active_b(),
+                &mut self.scratch.hq,
+                &mut self.scratch.env,
+            );
+        }
+        if !mixed {
+            self.center_margins(&sphere, problem, ctx, engine);
+        }
 
         // Linear-rule support plane (one margins pass with P): prefer
         // P = −[Q^GB]_− from the projection of the gradient-step point
@@ -432,6 +551,7 @@ impl ScreeningManager {
         let hq: &[f64] = &self.scratch.hq;
         let hp: &[f64] = &self.scratch.hp;
         let hx0: &[f64] = &self.scratch.hx0;
+        let env: &[f64] = &self.scratch.env;
         let no_fire: &[bool] = &self.no_fire;
         let rule = self.cfg.rule;
         let max_iter = self.cfg.sdls_max_iter;
@@ -446,6 +566,10 @@ impl ScreeningManager {
                 r: Vec::new(),
                 cleared: Vec::new(),
                 evals: 0,
+                evals_f32: 0,
+                promote: Vec::new(),
+                env_sum: 0.0,
+                env_count: 0,
             };
             for k in range {
                 let t = ids[k];
@@ -455,7 +579,31 @@ impl ScreeningManager {
                 out.evals += 1;
                 let decision = match rule {
                     RuleKind::Sphere => {
-                        rules::sphere_rule(hq[k], hn[k], sphere_ref.r, thr_l, thr_r)
+                        if mixed {
+                            out.env_sum += env[k];
+                            out.env_count += 1;
+                            match rules::sphere_rule_enveloped(
+                                hq[k],
+                                hn[k],
+                                sphere_ref.r,
+                                thr_l,
+                                thr_r,
+                                env[k],
+                            ) {
+                                Some(decision) => {
+                                    out.evals_f32 += 1;
+                                    decision
+                                }
+                                // boundary-ambiguous: decided by the
+                                // gathered f64 pass after the blocks
+                                None => {
+                                    out.promote.push(k);
+                                    continue;
+                                }
+                            }
+                        } else {
+                            rules::sphere_rule(hq[k], hn[k], sphere_ref.r, thr_l, thr_r)
+                        }
                     }
                     RuleKind::Linear => match lin {
                         Some((pq, pn_sq)) => rules::linear_rule(
@@ -509,17 +657,47 @@ impl ScreeningManager {
         let mut new_l = Vec::new();
         let mut new_r = Vec::new();
         let mut evals = 0usize;
+        let mut evals_f32 = 0usize;
+        let mut env_sum = 0.0f64;
+        let mut env_count = 0usize;
         let mut cleared = Vec::new();
+        let mut promote: Vec<usize> = Vec::new();
         for b in blocks {
             new_l.extend(b.l);
             new_r.extend(b.r);
             cleared.extend(b.cleared);
             evals += b.evals;
+            evals_f32 += b.evals_f32;
+            env_sum += b.env_sum;
+            env_count += b.env_count;
+            promote.extend(b.promote);
         }
         for t in cleared {
             self.no_fire[t] = true;
         }
+        // Promotion pass: one gathered exact f64 margins call over the
+        // boundary-ambiguous rows, then the exact sphere rule. Margins are
+        // computed per row (no cross-row reduction), so the gathered pass
+        // is bitwise identical to a full f64 pass over the same rows —
+        // mixed-tier decisions match the pure-f64 run exactly.
+        if !promote.is_empty() {
+            let pa = problem.active_a().select_rows(&promote);
+            let pb = problem.active_b().select_rows(&promote);
+            let mut pm = vec![0.0; promote.len()];
+            engine.margins(&sphere.q, &pa, &pb, &mut pm);
+            for (j, &k) in promote.iter().enumerate() {
+                match rules::sphere_rule(pm[j], hn[k], sphere.r, thr_l, thr_r) {
+                    Decision::ScreenL => new_l.push(ids[k]),
+                    Decision::ScreenR => new_r.push(ids[k]),
+                    Decision::None => {}
+                }
+            }
+        }
         self.stats.rule_evals += evals;
+        self.stats.rule_evals_f32 += evals_f32;
+        self.stats.promotions += promote.len();
+        self.stats.envelope_sum += env_sum;
+        self.stats.envelope_count = self.stats.envelope_count.saturating_add(env_count);
         self.stats.skipped += n - evals;
         self.stats.screened_l += new_l.len();
         self.stats.screened_r += new_r.len();
@@ -649,6 +827,8 @@ mod tests {
             adm_candidates: usize::MAX - 2,
             ..Default::default()
         };
+        a.rule_evals_f32 = usize::MAX - 1;
+        a.envelope_sum = 1.5;
         let b = ScreeningStats {
             calls: 7,
             rule_evals: 9,
@@ -657,6 +837,10 @@ mod tests {
             adm_rejected_l: 2,
             adm_rejected_r: 1,
             adm_admitted: 8,
+            rule_evals_f32: 6,
+            promotions: 3,
+            envelope_sum: 0.25,
+            envelope_count: 4,
             ..Default::default()
         };
         a.merge(&b);
@@ -667,6 +851,10 @@ mod tests {
         assert_eq!(a.adm_rejected_l, 2);
         assert_eq!(a.adm_rejected_r, 1);
         assert_eq!(a.adm_admitted, 8);
+        assert_eq!(a.rule_evals_f32, usize::MAX);
+        assert_eq!(a.promotions, 3);
+        assert!((a.envelope_sum - 1.75).abs() < 1e-15);
+        assert_eq!(a.envelope_count, 4);
         assert_eq!(
             ScreeningStats {
                 adm_rejected_l: usize::MAX,
@@ -717,6 +905,139 @@ mod tests {
         }
         assert_eq!(mgr.stats.adm_candidates, batch.len());
         assert_eq!(mgr.stats.adm_admitted + mgr.stats.adm_rejected(), batch.len());
+    }
+
+    #[test]
+    fn mixed_tier_screen_matches_f64_decisions_and_conserves_evals() {
+        // For every engine-pass bound under the sphere rule, the mixed
+        // tier must reach the exact same screening decisions as the pure
+        // f64 engine (both-endpoint certification + f64 promotion), and
+        // every evaluation must land in exactly one of the two counters:
+        // rule_evals == rule_evals_f32 + promotions.
+        let f = fix(7);
+        let lambda = f.lmax * 0.2;
+        let mut prob = Problem::new(&f.store, f.loss, lambda);
+        let (m, _) = Solver::new(SolverConfig {
+            tol: 1e-4,
+            tol_relative: false,
+            ..Default::default()
+        })
+        .solve(&mut prob, &f.engine, Mat::zeros(4, 4), None);
+        let mut timers = PhaseTimers::default();
+        let ev = prob.eval(&m, &f.engine, &mut timers);
+        let grad = prob.grad(&m, &ev.k);
+        let (d_val, split) = prob.dual(&ev.margins, &ev.k, &mut timers);
+        let ctx = ScreenCtx {
+            m: &m,
+            grad: &grad,
+            p: ev.p,
+            d: d_val,
+            gap: ev.p - d_val,
+            k_plus: &split.plus,
+            pre_split: None,
+            margins: &ev.margins,
+            iter: 0,
+        };
+        let mixed_engine =
+            NativeEngine::new(2).with_precision(crate::runtime::PrecisionTier::MixedCertified);
+        for bound in [BoundKind::Gb, BoundKind::Pgb, BoundKind::Cdgb] {
+            let mut exact = ScreeningManager::new(ScreeningConfig::new(bound, RuleKind::Sphere));
+            let (mut le, mut re) = exact.screen(&prob, &ctx, &f.engine);
+            let mut mixed = ScreeningManager::new(ScreeningConfig::new(bound, RuleKind::Sphere));
+            let (mut lm, mut rm) = mixed.screen(&prob, &ctx, &mixed_engine);
+            le.sort_unstable();
+            re.sort_unstable();
+            lm.sort_unstable();
+            rm.sort_unstable();
+            assert_eq!(le, lm, "{bound:?}: mixed L set diverged from f64");
+            assert_eq!(re, rm, "{bound:?}: mixed R set diverged from f64");
+            let s = &mixed.stats;
+            assert!(s.rule_evals_f32 > 0, "{bound:?}: f32 tier did no work");
+            assert_eq!(
+                s.rule_evals,
+                s.rule_evals_f32 + s.promotions,
+                "{bound:?}: evaluation conservation violated"
+            );
+            assert_eq!(s.envelope_count, s.rule_evals, "{bound:?}: envelope telemetry gap");
+            assert!(s.envelope_sum > 0.0, "{bound:?}: zero-width envelopes");
+            // the exact manager never touches the mixed counters
+            assert_eq!(exact.stats.rule_evals_f32, 0);
+            assert_eq!(exact.stats.promotions, 0);
+            assert_eq!(exact.stats.envelope_count, 0);
+        }
+    }
+
+    #[test]
+    fn mixed_admission_matches_exact_and_keeps_lane_exact() {
+        // Mixed-tier admission must (a) reach the same admit/reject split
+        // as the exact path (certified expires may be conservative but the
+        // side must agree), and (b) hand back bitwise-exact f64 margins
+        // for every admitted candidate — the workset reference-margin lane
+        // consumes them on all later RRPB passes.
+        let f = fix(8);
+        let l0 = f.lmax * 0.4;
+        let m0 = exact_solution(&f, l0);
+        let lambda = l0 * 0.8;
+        let mut rng = crate::util::rng::Pcg64::seed(78);
+        let ds = synthetic::gaussian_mixture("adm32", 40, 4, 3, 2.6, &mut rng);
+        let mut miner = crate::triplet::TripletMiner::new(
+            &ds,
+            3,
+            crate::triplet::MiningStrategy::Exhaustive,
+            64,
+        );
+        let mut batch = crate::triplet::CandidateBatch::new(ds.d());
+        assert!(miner.next_into(&mut batch));
+
+        let mixed_engine =
+            NativeEngine::new(2).with_precision(crate::runtime::PrecisionTier::MixedCertified);
+        let mut exact = ScreeningManager::new(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        exact.set_reference(m0.clone(), l0, 1e-9, &f.store, &f.engine);
+        let mut mixed = ScreeningManager::new(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+        mixed.set_reference(m0.clone(), l0, 1e-9, &f.store, &f.engine);
+
+        let (mut hm_e, mut out_e) = (Vec::new(), Vec::new());
+        assert!(exact.admit_batch(&batch, lambda, &f.loss, &f.engine, &mut hm_e, &mut out_e));
+        let (mut hm_m, mut out_m) = (Vec::new(), Vec::new());
+        assert!(mixed.admit_batch(&batch, lambda, &f.loss, &mixed_engine, &mut hm_m, &mut out_m));
+
+        assert_eq!(out_e.len(), out_m.len());
+        use super::super::frame::Admission;
+        for t in 0..batch.len() {
+            match (&out_e[t], &out_m[t]) {
+                (Admission::Admit, Admission::Admit) => {
+                    // lane contract: admitted margins are exact f64
+                    assert_eq!(
+                        hm_e[t].to_bits(),
+                        hm_m[t].to_bits(),
+                        "candidate {t}: admitted margin not exact"
+                    );
+                }
+                (
+                    Admission::Certified { side: se, expires: ee },
+                    Admission::Certified { side: sm, expires: em },
+                ) => {
+                    assert_eq!(se, sm, "candidate {t}: certified side diverged");
+                    // mixed expires is max over the envelope endpoints —
+                    // conservative, never below the exact certificate
+                    assert!(
+                        *em >= *ee - 1e-15,
+                        "candidate {t}: mixed certificate expires earlier than exact"
+                    );
+                }
+                (e, m) => panic!("candidate {t}: decisions diverged: {e:?} vs {m:?}"),
+            }
+        }
+        assert_eq!(mixed.stats.adm_candidates, batch.len());
+        assert_eq!(mixed.stats.adm_admitted, exact.stats.adm_admitted);
+        assert_eq!(mixed.stats.adm_rejected(), exact.stats.adm_rejected());
+        // every candidate was either f32-certified or promoted
+        assert_eq!(
+            mixed.stats.rule_evals_f32 + mixed.stats.promotions,
+            batch.len(),
+            "admission conservation violated"
+        );
+        assert_eq!(mixed.stats.envelope_count, batch.len());
     }
 
     #[test]

@@ -50,6 +50,52 @@ pub fn sphere_rule(hq: f64, hn: f64, r: f64, thr_l: f64, thr_r: f64) -> Decision
     }
 }
 
+/// Certified sphere rule over an approximate statistic `hq ± env`
+/// (the mixed-precision tier: `hq` from the f32 pass, `env` its
+/// [`crate::screening::bounds::eps_round`] envelope).
+///
+/// As a function of the true `hq`, [`sphere_rule`]'s decision regions
+/// are the ordered intervals L / None / R, so evaluating the rule at
+/// the interval's two endpoints certifies it on the whole interval:
+/// agreement means the returned decision **is** the exact-f64 decision
+/// (the true `hq` lies between the endpoints); disagreement returns
+/// `None` — the statistic is within the envelope of a boundary and the
+/// caller must promote the triplet to the exact f64 path.
+///
+/// ```
+/// use triplet_screen::screening::rules::{sphere_rule_enveloped, Decision};
+/// // far from every boundary: certified R even with the envelope
+/// assert_eq!(
+///     sphere_rule_enveloped(2.0, 1.0, 0.5, 0.95, 1.0, 1e-6),
+///     Some(Decision::ScreenR)
+/// );
+/// // min over the sphere sits exactly on the threshold: ambiguous
+/// assert_eq!(sphere_rule_enveloped(1.5, 1.0, 0.5, 0.95, 1.0, 1e-6), None);
+/// // certified-undecided is also an agreement (no promotion needed)
+/// assert_eq!(
+///     sphere_rule_enveloped(1.0, 1.0, 5.0, 0.95, 1.0, 1e-6),
+///     Some(Decision::None)
+/// );
+/// ```
+#[inline]
+pub fn sphere_rule_enveloped(
+    hq: f64,
+    hn: f64,
+    r: f64,
+    thr_l: f64,
+    thr_r: f64,
+    env: f64,
+) -> Option<Decision> {
+    debug_assert!(env >= 0.0, "envelope must be >= 0, got {env}");
+    let lo = sphere_rule(hq - env, hn, r, thr_l, thr_r);
+    let hi = sphere_rule(hq + env, hn, r, thr_l, thr_r);
+    if lo == hi {
+        Some(lo)
+    } else {
+        None
+    }
+}
+
 /// Analytic minimum of `⟨X, H⟩` over sphere ∩ halfspace `⟨P, X⟩ ≥ 0`
 /// (Thm 3.1). Inputs: `hq = ⟨H,Q⟩`, `hn = ‖H‖`, `hp = ⟨P,H⟩`,
 /// `pq = ⟨P,Q⟩`, `pn_sq = ‖P‖²`, radius `r`.
@@ -131,6 +177,57 @@ mod tests {
         assert_eq!(sphere_rule(1.01, 3.0, 0.0, 0.95, 1.0), Decision::ScreenR);
         assert_eq!(sphere_rule(0.94, 3.0, 0.0, 0.95, 1.0), Decision::ScreenL);
         assert_eq!(sphere_rule(0.97, 3.0, 0.0, 0.95, 1.0), Decision::None);
+    }
+
+    /// The enveloped rule certifies iff the whole interval agrees — and
+    /// when it certifies, the decision equals the exact rule's at every
+    /// point of the interval (fuzzed against dense sampling).
+    #[test]
+    fn enveloped_rule_certifies_exactly_or_abstains() {
+        forall("sphere-enveloped", 256, |rng| {
+            let hq = rng.normal() * 2.0;
+            let hn = rng.uniform() * 2.0;
+            let r = rng.uniform();
+            let env = rng.uniform() * 0.3;
+            let (thr_l, thr_r) = (0.95, 1.0);
+            let got = sphere_rule_enveloped(hq, hn, r, thr_l, thr_r, env);
+            // dense sample of the interval, endpoints included
+            let mut seen = Vec::new();
+            for k in 0..=16 {
+                // endpoints sampled at the rule's own evaluation points
+                let m = match k {
+                    0 => hq - env,
+                    16 => hq + env,
+                    _ => hq - env + 2.0 * env * (k as f64 / 16.0),
+                };
+                seen.push(sphere_rule(m, hn, r, thr_l, thr_r));
+            }
+            let uniform = seen.iter().all(|&s| s == seen[0]);
+            match got {
+                Some(dec) => {
+                    if !uniform || dec != seen[0] {
+                        return Err(format!("certified {dec:?} but interval mixes {seen:?}"));
+                    }
+                }
+                None => {
+                    // abstained: the endpoints genuinely disagree
+                    if seen[0] == *seen.last().unwrap() {
+                        return Err("abstained on an agreeing interval".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn enveloped_rule_zero_envelope_is_exact_rule() {
+        for hq in [0.5, 0.97, 1.2, 2.0] {
+            assert_eq!(
+                sphere_rule_enveloped(hq, 1.0, 0.1, 0.95, 1.0, 0.0),
+                Some(sphere_rule(hq, 1.0, 0.1, 0.95, 1.0))
+            );
+        }
     }
 
     /// The linear rule is never weaker than the sphere rule, and its

@@ -372,6 +372,15 @@ impl<'a> TripletMiner<'a> {
 /// rejection stays proven; once the path crosses `expires` the candidate
 /// must be re-tested (and possibly admitted).
 ///
+/// Under the mixed-precision admission tier
+/// ([`crate::runtime::PrecisionTier::MixedCertified`]) an f32-certified
+/// rejection carries a *conservative* `expires` — the max over the
+/// rounding-envelope endpoints, never below the exact value. The proof it
+/// records is still exact (both endpoints agreed on the side); the only
+/// effect is a possibly earlier re-test, which re-proves or admits under
+/// the then-current frame, so streamed admission outcomes match the pure
+/// f64 pipeline.
+///
 /// Note on identity: `PartialEq`/`Ord` compare **only `expires`** — they
 /// exist to key the [`PendingPool`] expiry heap, not to identify
 /// candidates. Two records for different triplets with equal expiry

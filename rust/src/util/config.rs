@@ -7,8 +7,9 @@
 //!
 //! Recognized sections: `[path]` / `[solver]` / `[screening]` / `[loss]`
 //! (consumed by [`path_config`]) and `[engine]` (consumed by
-//! [`engine_overrides`]: `kernel_core`, `d_threshold`, `threads` — the
-//! kernel-core selection documented in `triplet-screen --help`).
+//! [`engine_overrides`]: `kernel_core`, `d_threshold`, `threads`,
+//! `precision` — the kernel-core and precision-tier selection documented
+//! in `triplet-screen --help`).
 
 use std::collections::BTreeMap;
 
@@ -195,15 +196,22 @@ pub fn path_config(cfg: &Config) -> crate::path::PathConfig {
 }
 
 /// Native-engine selection from a config's `[engine]` section:
-/// `(kernel_core, d_threshold, threads)`, each `None` when the key is
-/// absent (CLI flags take precedence over these in `main.rs`).
+/// `(kernel_core, d_threshold, threads, precision)`, each `None` when
+/// the key is absent (CLI flags take precedence over these in
+/// `main.rs`).
 ///
-/// Panics on an unrecognized `engine.kernel_core` spelling and on
-/// negative/fractional `d_threshold`/`threads` — a config typo should
-/// fail loudly, not silently truncate or fall back to `Auto`.
+/// Panics on an unrecognized `engine.kernel_core` or `engine.precision`
+/// spelling and on negative/fractional `d_threshold`/`threads` — a
+/// config typo should fail loudly, not silently truncate or fall back
+/// to a default.
 pub fn engine_overrides(
     cfg: &Config,
-) -> (Option<crate::runtime::KernelCore>, Option<usize>, Option<usize>) {
+) -> (
+    Option<crate::runtime::KernelCore>,
+    Option<usize>,
+    Option<usize>,
+    Option<crate::runtime::PrecisionTier>,
+) {
     let core = cfg.get("engine.kernel_core").map(|v| match v {
         Value::Str(s) => crate::runtime::KernelCore::parse(s)
             .unwrap_or_else(|| panic!("bad engine.kernel_core {s:?}")),
@@ -217,7 +225,12 @@ pub fn engine_overrides(
     };
     let d_threshold = nonneg_int("engine.d_threshold");
     let threads = nonneg_int("engine.threads");
-    (core, d_threshold, threads)
+    let precision = cfg.get("engine.precision").map(|v| match v {
+        Value::Str(s) => crate::runtime::PrecisionTier::parse(s)
+            .unwrap_or_else(|| panic!("bad engine.precision {s:?} (use f64 or mixed)")),
+        other => panic!("engine.precision expects a string, got {other:?}"),
+    });
+    (core, d_threshold, threads, precision)
 }
 
 #[cfg(test)]
@@ -243,6 +256,7 @@ rule = "sphere"
 kernel_core = "d-blocked"
 d_threshold = 300
 threads = 2
+precision = "mixed"
 
 [data]
 datasets = ["segment", "wine"]
@@ -290,19 +304,53 @@ datasets = ["segment", "wine"]
     #[test]
     fn engine_section_parses() {
         let c = Config::parse(SAMPLE).unwrap();
-        let (core, d_threshold, threads) = engine_overrides(&c);
+        let (core, d_threshold, threads, precision) = engine_overrides(&c);
         assert_eq!(core, Some(crate::runtime::KernelCore::DBlocked));
         assert_eq!(d_threshold, Some(300));
         assert_eq!(threads, Some(2));
+        assert_eq!(
+            precision,
+            Some(crate::runtime::PrecisionTier::MixedCertified)
+        );
         // absent section: all None
         let empty = Config::parse("[path]\nrho = 0.9\n").unwrap();
-        assert_eq!(engine_overrides(&empty), (None, None, None));
+        assert_eq!(engine_overrides(&empty), (None, None, None, None));
+    }
+
+    #[test]
+    fn engine_precision_spellings() {
+        for (text, want) in [
+            ("f64", crate::runtime::PrecisionTier::F64),
+            ("double", crate::runtime::PrecisionTier::F64),
+            ("exact", crate::runtime::PrecisionTier::F64),
+            ("mixed", crate::runtime::PrecisionTier::MixedCertified),
+            ("mixed-certified", crate::runtime::PrecisionTier::MixedCertified),
+            ("F32", crate::runtime::PrecisionTier::MixedCertified),
+        ] {
+            let c =
+                Config::parse(&format!("[engine]\nprecision = \"{text}\"\n")).unwrap();
+            assert_eq!(engine_overrides(&c).3, Some(want), "spelling {text:?}");
+        }
     }
 
     #[test]
     #[should_panic(expected = "bad engine.kernel_core")]
     fn engine_core_typo_fails_loudly() {
         let c = Config::parse("[engine]\nkernel_core = \"dblockedd\"\n").unwrap();
+        let _ = engine_overrides(&c);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad engine.precision")]
+    fn engine_precision_typo_fails_loudly() {
+        let c = Config::parse("[engine]\nprecision = \"f16\"\n").unwrap();
+        let _ = engine_overrides(&c);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects a string")]
+    fn engine_precision_non_string_fails_loudly() {
+        let c = Config::parse("[engine]\nprecision = 32\n").unwrap();
         let _ = engine_overrides(&c);
     }
 

@@ -1,10 +1,12 @@
-//! Reusable f64 scratch-lane pool.
+//! Reusable scratch-lane pool.
 //!
 //! Hot kernels (`runtime::NativeEngine` workers) and the eigensolver
-//! (`linalg::sym_eig`) need short-lived f64 lanes every call; pooling
-//! them means the steady state allocates nothing. One implementation
-//! serves both the per-engine pool and the process-global eig-workspace
-//! static (`new` is `const`).
+//! (`linalg::sym_eig`) need short-lived scratch lanes every call;
+//! pooling them means the steady state allocates nothing. One
+//! implementation serves the per-engine pools and the process-global
+//! eig-workspace static (`new` is `const`). The pool is generic over
+//! the lane element (default `f64`; the mixed-precision tier pools
+//! `f32` conversion lanes through the same type).
 //!
 //! Discipline: `take(len)` hands out a lane of exactly `len` with
 //! *unspecified* contents (recycled data or zeros) for consumers that
@@ -17,15 +19,15 @@
 
 use std::sync::Mutex;
 
-/// Capped LIFO pool of reusable `Vec<f64>` lanes.
-pub struct ScratchPool {
-    bufs: Mutex<Vec<Vec<f64>>>,
+/// Capped LIFO pool of reusable `Vec<T>` lanes (`T = f64` by default).
+pub struct ScratchPool<T = f64> {
+    bufs: Mutex<Vec<Vec<T>>>,
     cap: usize,
 }
 
-impl ScratchPool {
+impl<T: Clone + Default> ScratchPool<T> {
     /// Pool retaining at most `cap` lanes (const: usable in statics).
-    pub const fn new(cap: usize) -> ScratchPool {
+    pub const fn new(cap: usize) -> ScratchPool<T> {
         ScratchPool {
             bufs: Mutex::new(Vec::new()),
             cap,
@@ -36,7 +38,7 @@ impl ScratchPool {
     /// in the prefix, zeros in any extension) — for consumers that
     /// fully overwrite before reading. No O(len) memset on the hot
     /// path.
-    pub fn take(&self, len: usize) -> Vec<f64> {
+    pub fn take(&self, len: usize) -> Vec<T> {
         let mut v = self
             .bufs
             .lock()
@@ -44,20 +46,20 @@ impl ScratchPool {
             .pop()
             .unwrap_or_default();
         v.truncate(len);
-        v.resize(len, 0.0);
+        v.resize(len, T::default());
         v
     }
 
     /// A zeroed lane of length `len` — for consumers that may read a
     /// slot before writing it.
-    pub fn take_zeroed(&self, len: usize) -> Vec<f64> {
+    pub fn take_zeroed(&self, len: usize) -> Vec<T> {
         let mut v = self.take(len);
-        v.fill(0.0);
+        v.fill(T::default());
         v
     }
 
     /// Return a lane to the pool (dropped when the pool is full).
-    pub fn put(&self, v: Vec<f64>) {
+    pub fn put(&self, v: Vec<T>) {
         let mut pool = self.bufs.lock().expect("scratch pool poisoned");
         if pool.len() < self.cap {
             pool.push(v);
@@ -70,7 +72,7 @@ impl ScratchPool {
     }
 }
 
-impl Default for ScratchPool {
+impl<T: Clone + Default> Default for ScratchPool<T> {
     /// Default cap covers a few complements of the ≤16 parallel workers.
     fn default() -> Self {
         ScratchPool::new(64)
@@ -108,7 +110,7 @@ mod tests {
 
     #[test]
     fn cap_bounds_growth() {
-        let pool = ScratchPool::new(3);
+        let pool = ScratchPool::<f64>::new(3);
         let lanes: Vec<_> = (0..8).map(|_| pool.take(4)).collect();
         for v in lanes {
             pool.put(v);
@@ -123,5 +125,17 @@ mod tests {
         assert_eq!(v.len(), 5);
         S.put(v);
         assert_eq!(S.pooled(), 1);
+    }
+
+    #[test]
+    fn f32_lanes_pool_independently() {
+        let pool: ScratchPool<f32> = ScratchPool::new(4);
+        let mut v = pool.take(6);
+        v[0] = 1.5f32;
+        pool.put(v);
+        let v2 = pool.take(3);
+        assert_eq!(v2.len(), 3);
+        pool.put(v2);
+        assert_eq!(pool.pooled(), 1);
     }
 }

@@ -12,6 +12,14 @@
 //! (native vs. the PJRT build when its artifacts are present; the
 //! offline stub cannot be constructed and the cross-engine case then
 //! skips with a message, same protocol as `rust/tests/runtime_pjrt.rs`).
+//!
+//! The SIMD battery at the bottom runs this file's guarantees across the
+//! `simd` feature matrix (CI runs both `cargo test` and `cargo test
+//! --features simd`): the lane microkernels vs the lane-free scalar core
+//! at d ∈ {64, 300, 511, 512, 513, 768}, the single-lane default build
+//! bitwise against a hand-rolled streaming reference (the fallback *is*
+//! the parity oracle), and the certified-f32 bulk pass within its quoted
+//! envelope of the exact f64 margins at the same dims.
 
 use triplet_screen::linalg::{gemm, Mat};
 use triplet_screen::loss::Loss;
@@ -261,6 +269,160 @@ fn solver_trajectory_bitwise_identical_across_cores() {
             let bits = m_row[(i, j)].to_bits();
             assert_eq!(bits, m_db[(i, j)].to_bits(), "d-blocked trajectory split at ({i},{j})");
             assert_eq!(bits, m_sc[(i, j)].to_bits(), "scalar trajectory split at ({i},{j})");
+        }
+    }
+}
+
+/// The SIMD acceptance sweep: at every battery dimension — below,
+/// straddling and at the `gemm::D_BLOCK_MIN_D` auto threshold, plus a
+/// `gemm::D_BLOCK` multiple — the lane-accumulator geometries
+/// (row-stream and d-blocked, `gemm::LANES`-wide partial sums) must
+/// agree with the lane-free scalar core to 1e-10 and with each other
+/// **bitwise**. The file runs under both feature sets in CI: with
+/// `--features simd` this exercises the widened microkernels, without it
+/// the same sweep is the single-lane fallback regression.
+#[test]
+fn simd_lane_kernels_vs_scalar_battery() {
+    let mut rng = Pcg64::seed(41);
+    let thr = gemm::D_BLOCK_MIN_D;
+    for &d in &[64usize, 300, thr - 1, thr, thr + 1, 768] {
+        let n = gemm::PANEL_ROWS + 5;
+        let (m, a, b, w) = rand_inputs(&mut rng, n, d);
+        let rowstream = NativeEngine::row_stream(3);
+        let dblocked = NativeEngine::d_blocked(3);
+        let scalar = NativeEngine::scalar(3);
+        let mut orow = vec![0.0; n];
+        let mut od = vec![0.0; n];
+        let mut os = vec![0.0; n];
+        rowstream.margins(&m, &a, &b, &mut orow);
+        dblocked.margins(&m, &a, &b, &mut od);
+        scalar.margins(&m, &a, &b, &mut os);
+        for t in 0..n {
+            assert!(
+                (orow[t] - os[t]).abs() <= TOL * (1.0 + os[t].abs()),
+                "d={d} t={t}: lane margins {} vs scalar {}",
+                orow[t],
+                os[t]
+            );
+            assert_eq!(
+                orow[t].to_bits(),
+                od[t].to_bits(),
+                "d={d} t={t}: row-stream vs d-blocked lane margins not bitwise"
+            );
+        }
+        let grow = rowstream.wgram(&a, &b, &w);
+        let gd = dblocked.wgram(&a, &b, &w);
+        let gs = scalar.wgram(&a, &b, &w);
+        assert!(
+            grow.sub(&gs).max_abs() <= TOL * (1.0 + gs.max_abs()),
+            "d={d}: lane wgram diverges from scalar by {}",
+            grow.sub(&gs).max_abs()
+        );
+        assert_eq!(
+            grow.sub(&gd).max_abs(),
+            0.0,
+            "d={d}: row-stream vs d-blocked lane wgram not bitwise"
+        );
+    }
+}
+
+/// With the `simd` feature off the build must be single-lane and the
+/// microkernels must collapse to the seed's exact summation chains:
+/// `y[i] += x[j]·M[j][i]` streamed over ascending `j`, then one plain
+/// ascending dot `Σ_i x[i]·y[i]` — checked **bitwise** against a
+/// hand-rolled reference, making the default build the parity oracle the
+/// SIMD build is measured against.
+#[cfg(not(feature = "simd"))]
+#[test]
+fn scalar_fallback_is_bitwise_reference() {
+    assert_eq!(gemm::LANES, 1, "default build must compile single-lane kernels");
+    fn reference_quad(m: &Mat, x: &[f64]) -> f64 {
+        let d = x.len();
+        let mut y = vec![0.0; d];
+        for j in 0..d {
+            if x[j] == 0.0 {
+                continue; // the panel kernel skips zero coefficients
+            }
+            let mrow = m.row(j);
+            for i in 0..d {
+                y[i] += x[j] * mrow[i];
+            }
+        }
+        let mut acc = 0.0;
+        for i in 0..d {
+            acc += x[i] * y[i];
+        }
+        acc
+    }
+    forall("bitwise-fallback", 16, |rng| {
+        let d = 1 + rng.below(40);
+        let n = 1 + rng.below(2 * gemm::PANEL_ROWS + 3);
+        let (m, a, b, _) = rand_inputs(rng, n, d);
+        let mut out = vec![0.0; n];
+        let mut y = Vec::new();
+        gemm::margins_into(&m, &a, &b, 0..n, &mut out, &mut y);
+        for t in 0..n {
+            let r = reference_quad(&m, a.row(t)) - reference_quad(&m, b.row(t));
+            if out[t].to_bits() != r.to_bits() {
+                return Err(format!(
+                    "n={n} d={d} t={t}: kernel {} not bitwise reference {r}",
+                    out[t]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// With the `simd` feature on, the microkernels must actually widen —
+/// a build where the feature silently resolves to one lane would make
+/// the whole parity battery vacuous.
+#[cfg(feature = "simd")]
+#[test]
+fn simd_build_is_four_lane() {
+    assert_eq!(gemm::LANES, 4, "simd feature must widen the microkernels to 4 lanes");
+}
+
+/// The certified-f32 bulk pass at the battery dims: both lane geometries
+/// serve margins within their quoted rounding envelope of the exact f64
+/// pass, with the same f32 bits, and the envelope stays finite and
+/// positive up to d = 768 (the bench-gate dimension).
+#[test]
+fn margins_f32_envelope_parity_battery_dims() {
+    let mut rng = Pcg64::seed(53);
+    for &d in &[64usize, 300, 768] {
+        let n = gemm::PANEL_ROWS + 3;
+        let (m, a, b, _) = rand_inputs(&mut rng, n, d);
+        let mut exact = vec![0.0; n];
+        NativeEngine::new(2).margins(&m, &a, &b, &mut exact);
+        let mut bits: Option<Vec<u64>> = None;
+        for mk in [NativeEngine::row_stream as fn(usize) -> NativeEngine, NativeEngine::d_blocked] {
+            let eng = mk(2).with_precision(PrecisionTier::MixedCertified);
+            let mut out = vec![0.0; n];
+            let mut env = vec![0.0; n];
+            assert!(
+                eng.margins_f32(&m, &a, &b, &mut out, &mut env),
+                "mixed-tier engine declined margins_f32 at d={d}"
+            );
+            for t in 0..n {
+                assert!(
+                    env[t].is_finite() && env[t] > 0.0,
+                    "d={d} t={t}: degenerate envelope {}",
+                    env[t]
+                );
+                assert!(
+                    (out[t] - exact[t]).abs() <= env[t],
+                    "d={d} t={t}: |{} - {}| exceeds envelope {}",
+                    out[t],
+                    exact[t],
+                    env[t]
+                );
+            }
+            let ob: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+            match &bits {
+                None => bits = Some(ob),
+                Some(prev) => assert_eq!(*prev, ob, "d={d}: f32 bits differ across cores"),
+            }
         }
     }
 }

@@ -189,6 +189,78 @@ fn spectral_identities() {
 }
 
 #[test]
+fn f32_margin_discrepancy_within_envelope() {
+    // the mixed tier's safety contract, fuzzed over problem geometry:
+    // for arbitrary (symmetric Q, data X, triplet set) the f32 bulk
+    // margins differ from the exact f64 margins by at most the quoted
+    // per-row envelope — the bound every enveloped rule evaluation and
+    // admission range test relies on
+    forall("f32-envelope", 24, |rng| {
+        let store = random_store(rng);
+        let d = store.d;
+        let mut q = Mat::from_fn(d, d, |_, _| rng.normal());
+        q.symmetrize();
+        // vary the scale across draws: envelopes are homogeneous in ‖Q‖
+        let q = q.scaled(10f64.powi(rng.below(5) as i32 - 2));
+        let exact_engine = NativeEngine::new(1);
+        let mixed = NativeEngine::new(1).with_precision(PrecisionTier::MixedCertified);
+        let n = store.len();
+        let mut exact = vec![0.0; n];
+        let mut out = vec![0.0; n];
+        let mut env = vec![0.0; n];
+        exact_engine.margins(&q, &store.a, &store.b, &mut exact);
+        if !mixed.margins_f32(&q, &store.a, &store.b, &mut out, &mut env) {
+            return Err("mixed-tier engine declined margins_f32".into());
+        }
+        for t in 0..n {
+            if env[t].is_nan() || env[t] < 0.0 {
+                return Err(format!("t={t}: degenerate envelope {}", env[t]));
+            }
+            if (out[t] - exact[t]).abs() > env[t] {
+                return Err(format!(
+                    "t={t}: f32 margin {} vs exact {} breaks envelope {}",
+                    out[t], exact[t], env[t]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eps_round_inflation_monotone() {
+    // radius inflation must be monotone in every argument — chain
+    // length d, ‖Q‖_F and the data norms — so that inflating a rule
+    // radius with it can never *tighten* a bound; fuzzed over ordered
+    // argument pairs, plus the n·u ≥ 1 saturation edge
+    forall("eps-round-monotone", 64, |rng| {
+        let d1 = 1 + rng.below(2048);
+        let d2 = d1 + rng.below(2048);
+        let q1 = rng.uniform() * 10.0;
+        let q2 = q1 * (1.0 + rng.uniform());
+        let x1 = rng.uniform() * 100.0;
+        let x2 = x1 * (1.0 + rng.uniform());
+        let base = bounds::eps_round(d1, q1, x1);
+        if base.is_nan() || base < 0.0 {
+            return Err(format!("degenerate envelope {base}"));
+        }
+        for (name, e) in [
+            ("d", bounds::eps_round(d2, q1, x1)),
+            ("q_norm", bounds::eps_round(d1, q2, x1)),
+            ("xsq", bounds::eps_round(d1, q1, x2)),
+        ] {
+            if e < base {
+                return Err(format!("not monotone in {name}: {e} < {base}"));
+            }
+        }
+        Ok(())
+    });
+    // saturation: past n·u ≥ 1 the bound degrades to +∞ (promote
+    // everything) rather than quoting a bogus finite envelope
+    assert_eq!(bounds::eps_round(usize::MAX / 8, 1.0, 1.0), f64::INFINITY);
+}
+
+#[test]
 fn lambda_max_is_boundary() {
     // at λ ≥ λ_max the all-ones dual is optimal (gap ~ 0); below it is not
     forall("lambda-max", 8, |rng| {

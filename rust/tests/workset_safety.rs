@@ -417,6 +417,190 @@ fn streamed_admission_path_oracle_identity() {
     assert!(never_admitted > 0, "everything was admitted — no memory saved");
 }
 
+/// Mixed-precision tier over a full materialized path: with the bulk
+/// screening margins in certified f32 (PGB + sphere is an engine-pass
+/// combination, so every rule evaluation routes through the f32 tier),
+/// the path must retire exactly the same triplets at every λ as the
+/// all-f64 run, reach the same optimum, and conserve its evaluation
+/// accounting — every evaluation is either f32-certified or promoted,
+/// never both, never neither.
+#[test]
+fn mixed_tier_full_path_identity_and_conservation() {
+    let st = store(2);
+    let exact_engine = NativeEngine::new(0);
+    let mixed_engine = NativeEngine::new(0).with_precision(PrecisionTier::MixedCertified);
+    let mut cfg = PathConfig {
+        max_steps: 12,
+        solver: SolverConfig {
+            tol: 1e-9,
+            tol_relative: false,
+            max_iters: 100_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.screening = Some(ScreeningConfig::new(BoundKind::Pgb, RuleKind::Sphere));
+    let r_exact = RegPath::new(cfg.clone()).run(&st, &exact_engine);
+    let r_mixed = RegPath::new(cfg).run(&st, &mixed_engine);
+
+    // identical active sets at every λ: the enveloped f32 rule plus the
+    // gathered f64 promotion pass reproduce the exact decisions, and the
+    // solver arithmetic is always f64, so the trajectories coincide
+    assert_eq!(r_exact.steps.len(), r_mixed.steps.len());
+    for (e, m) in r_exact.steps.iter().zip(&r_mixed.steps) {
+        assert!(e.converged && m.converged);
+        assert_eq!(e.screened_l, m.screened_l, "L̂ diverged at λ={}", e.lambda);
+        assert_eq!(e.screened_r, m.screened_r, "R̂ diverged at λ={}", e.lambda);
+        assert_eq!(e.rule_evals, m.rule_evals, "eval counts diverged at λ={}", e.lambda);
+    }
+    let diff = r_mixed.m_final.sub(&r_exact.m_final).norm();
+    assert!(diff < 1e-6, "mixed tier moved the optimum: ‖ΔM‖_F = {diff:e}");
+
+    let se = r_exact.screening_stats.expect("exact stats");
+    let sm = r_mixed.screening_stats.expect("mixed stats");
+    assert_eq!(se.rule_evals, sm.rule_evals, "tiering changed the eval budget");
+    assert!(sm.rule_evals_f32 > 0, "f32 tier did no work over the whole path");
+    assert_eq!(
+        sm.rule_evals,
+        sm.rule_evals_f32 + sm.promotions,
+        "evaluation conservation violated: {} != {} + {}",
+        sm.rule_evals,
+        sm.rule_evals_f32,
+        sm.promotions
+    );
+    assert_eq!(sm.envelope_count, sm.rule_evals, "envelope telemetry gap");
+    assert!(sm.envelope_sum > 0.0 && sm.envelope_sum.is_finite());
+    // the exact run never touches the mixed counters
+    assert_eq!(se.rule_evals_f32, 0);
+    assert_eq!(se.promotions, 0);
+    assert_eq!(se.envelope_count, 0);
+}
+
+/// Engineered boundary promotion: a hand-built GB geometry (zero
+/// gradient ⇒ zero-radius sphere at Q = I) pins one margin *exactly* on
+/// the R-threshold, so its f32 envelope endpoints must straddle the
+/// boundary and force a promotion — proving the promotion machinery is
+/// exercised non-vacuously — while a decisive margin in the same batch
+/// stays on the f32 fast path.
+#[test]
+fn mixed_tier_promotes_exact_boundary_margin() {
+    let mut st = TripletStore::empty(2);
+    // aᵀIa − bᵀIb = 1.0 = loss.r_threshold() exactly, ‖H‖_F = 1
+    st.push((0, 1, 2), &[1.0, 0.0], &[0.0, 0.0], 1.0);
+    // margin 100: decisively past the threshold at any envelope width
+    st.push((0, 2, 1), &[10.0, 0.0], &[0.0, 0.0], 100.0);
+    let loss = Loss::smoothed_hinge(0.05);
+    let prob = Problem::new(&st, loss, 1.0);
+    let m = Mat::identity(2);
+    let grad = Mat::zeros(2, 2);
+    let k_plus = Mat::zeros(2, 2);
+    let margins = vec![0.0; 2];
+    let ctx = ScreenCtx {
+        m: &m,
+        grad: &grad,
+        p: 0.0,
+        d: 0.0,
+        gap: 0.0,
+        k_plus: &k_plus,
+        pre_split: None,
+        margins: &margins,
+        iter: 0,
+    };
+    let exact_engine = NativeEngine::new(1);
+    let mixed_engine = NativeEngine::new(1).with_precision(PrecisionTier::MixedCertified);
+    let mut exact = ScreeningManager::new(ScreeningConfig::new(BoundKind::Gb, RuleKind::Sphere));
+    let (mut le, mut re) = exact.screen(&prob, &ctx, &exact_engine);
+    let mut mixed = ScreeningManager::new(ScreeningConfig::new(BoundKind::Gb, RuleKind::Sphere));
+    let (mut lm, mut rm) = mixed.screen(&prob, &ctx, &mixed_engine);
+    le.sort_unstable();
+    re.sort_unstable();
+    lm.sort_unstable();
+    rm.sort_unstable();
+    assert_eq!(le, lm, "mixed L decisions diverged on the boundary fixture");
+    assert_eq!(re, rm, "mixed R decisions diverged on the boundary fixture");
+    assert!(re.contains(&1), "decisive margin 100 must screen R");
+    // the boundary margin MUST be promoted: 1.0 is f32-exact, the
+    // envelope is strictly positive, so hq ± env straddles thr_r
+    assert_eq!(mixed.stats.promotions, 1, "exact-boundary margin was not promoted");
+    assert_eq!(mixed.stats.rule_evals_f32, 1);
+    assert_eq!(mixed.stats.rule_evals, 2);
+    assert_eq!(mixed.stats.envelope_count, 2);
+    assert_eq!(exact.stats.promotions, 0, "exact path must never promote");
+}
+
+/// Streamed mining under the mixed tier: screen-on-admission runs its
+/// bulk margin passes in f32 (the certified rejections carry
+/// conservative expiry — re-tested earlier, never decided differently),
+/// so the streamed path must admit exactly the same candidates at the
+/// same steps, retire the same triplets, and reach the same optimum as
+/// the all-f64 streamed run.
+#[test]
+fn mixed_tier_streamed_admission_matches_f64() {
+    let (ds, st) = fixture(2);
+    let exact_engine = NativeEngine::new(0);
+    let mixed_engine = NativeEngine::new(0).with_precision(PrecisionTier::MixedCertified);
+    let mut cfg = PathConfig {
+        max_steps: 10,
+        solver: SolverConfig {
+            tol: 1e-9,
+            tol_relative: false,
+            max_iters: 100_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+    cfg.range_screening = true;
+
+    let mut miner_e = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 96);
+    let r_exact =
+        RegPath::new(cfg.clone()).run_source(TripletSource::Streamed(&mut miner_e), &exact_engine);
+    let mut miner_m = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 96);
+    let r_mixed =
+        RegPath::new(cfg).run_source(TripletSource::Streamed(&mut miner_m), &mixed_engine);
+
+    assert_eq!(r_exact.steps.len(), r_mixed.steps.len());
+    for (e, m) in r_exact.steps.iter().zip(&r_mixed.steps) {
+        assert!(e.converged && m.converged);
+        assert_eq!(e.admitted, m.admitted, "admission timing diverged at λ={}", e.lambda);
+        assert_eq!(e.screened_l, m.screened_l, "L̂ diverged at λ={}", e.lambda);
+        assert_eq!(e.screened_r, m.screened_r, "R̂ diverged at λ={}", e.lambda);
+    }
+    let diff = r_mixed.m_final.sub(&r_exact.m_final).norm();
+    assert!(diff < 1e-6, "mixed streamed optimum drifted: ‖ΔM‖_F = {diff:e}");
+
+    // identical admitted stores (same candidates, same push order) and
+    // identical final screening membership
+    let sum_e = r_exact.stream.as_ref().expect("exact summary");
+    let sum_m = r_mixed.stream.as_ref().expect("mixed summary");
+    assert_eq!(sum_e.candidates, sum_m.candidates);
+    assert_eq!(sum_e.admitted_rows, sum_m.admitted_rows, "admitted sets differ in size");
+    assert_eq!(sum_e.pending_end, sum_m.pending_end);
+    assert_eq!(sum_e.store.idx, sum_m.store.idx, "admitted candidate order diverged");
+    for t in 0..sum_e.store.len() {
+        assert_eq!(
+            sum_e.final_status.get(t),
+            sum_m.final_status.get(t),
+            "final status diverged on admitted triplet {t}"
+        );
+    }
+
+    // admission accounting: under RRPB the screening rule stays exact,
+    // so every f32 evaluation/promotion is an admission test — the
+    // conservative expiry may re-test more often, never less
+    let se = r_exact.screening_stats.expect("exact stats");
+    let sm = r_mixed.screening_stats.expect("mixed stats");
+    assert!(sm.rule_evals_f32 > 0, "admission never used the f32 tier");
+    assert_eq!(
+        sm.rule_evals_f32 + sm.promotions,
+        sm.adm_candidates,
+        "admission conservation violated"
+    );
+    assert!(sm.adm_candidates >= se.adm_candidates, "mixed run re-tested less than exact");
+    assert_eq!(se.rule_evals_f32, 0);
+    assert_eq!(se.promotions, 0);
+}
+
 /// Regression for the old range-extension loop that re-tested every
 /// store id: the certificate sweep must only emit ids that are active in
 /// the presented workset — retired ids are never revisited, even while
