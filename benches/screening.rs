@@ -34,6 +34,16 @@
 //! to the exact fallback (`promotions`, `envelope_mean_width`). CI runs
 //! the whole bench a second time under `--features simd`.
 //!
+//! PR 7 adds the persistent-pool thread sweep (`thread_sweep`: pooled
+//! margins+wgram walls at workers ∈ {1, 2, 4, 8} × d ∈ {300, 768}, gated
+//! so multi-worker strictly beats single-worker at d = 768 on multicore
+//! hosts, with bitwise cross-checks at every worker count), the
+//! pool-vs-spawn dispatch-overhead gate (`pool_dispatch_wall_seconds`
+//! must beat the old per-call `thread::scope` baseline), a screened-path
+//! worker-invariance gate (identical rule evals, screened sets and
+//! optimum bits at every worker count), and per-step `pool_workers` /
+//! `kernel_par_wall_seconds` telemetry.
+//!
 //! Run: `cargo bench --bench screening` (add `-- --quick` for short runs).
 
 use triplet_screen::coordinator::experiments as exp;
@@ -44,6 +54,7 @@ use triplet_screen::screening::{bounds, l_range, r_range, rules, sdls};
 use triplet_screen::solver::{Problem, Solver, SolverConfig};
 use triplet_screen::util::bench::Bench;
 use triplet_screen::util::json::{self, Json};
+use triplet_screen::util::parallel;
 use triplet_screen::util::timer::PhaseTimers;
 
 /// The documented telemetry schema, compiled in so the conformance
@@ -451,6 +462,149 @@ fn main() {
         t_margins_f64 / t_margins_f32
     );
 
+    // ---- PR 7: persistent-pool thread sweep ----
+    // Pooled margins + wgram walls at explicit worker counts, auto core
+    // (row-stream at d = 300, d-blocked at d = 768 — both geometries
+    // ride the pool). Outputs are cross-checked **bitwise** against the
+    // single-worker run at every count: the pool may only move walls,
+    // never bits.
+    let host_cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let thread_sweep_workers: [usize; 4] = [1, 2, 4, 8];
+    let mut thread_sweep_json: Vec<Json> = Vec::new();
+    let mut pooled_walls_768: Vec<(usize, f64)> = Vec::new(); // (workers, margins+wgram)
+    for &dd in &[300usize, 768] {
+        let mut rng_t = Pcg64::seed(700 + dd as u64);
+        let mut mt = Mat::from_fn(dd, dd, |_, _| rng_t.normal());
+        mt.symmetrize();
+        let at = Mat::from_fn(sweep_n, dd, |_, _| rng_t.normal());
+        let bt = Mat::from_fn(sweep_n, dd, |_, _| rng_t.normal());
+        let wt: Vec<f64> = (0..sweep_n).map(|_| rng_t.uniform()).collect();
+        let mut ref_margins = vec![0.0; sweep_n];
+        NativeEngine::new(1).margins(&mt, &at, &bt, &mut ref_margins);
+        let ref_g = NativeEngine::new(1).wgram(&at, &bt, &wt);
+        for &wk_n in &thread_sweep_workers {
+            let eng = NativeEngine::new(wk_n);
+            let mut out_t = vec![0.0; sweep_n];
+            let t_m = time_best(&mut || eng.margins(&mt, &at, &bt, &mut out_t));
+            let t_w = time_best(&mut || {
+                std::hint::black_box(eng.wgram(&at, &bt, &wt));
+            });
+            eng.margins(&mt, &at, &bt, &mut out_t);
+            for t in 0..sweep_n {
+                assert_eq!(
+                    out_t[t].to_bits(),
+                    ref_margins[t].to_bits(),
+                    "d={dd} workers={wk_n}: pooled margins changed bits at row {t}"
+                );
+            }
+            let g_t = eng.wgram(&at, &bt, &wt);
+            assert_eq!(
+                g_t.sub(&ref_g).max_abs(),
+                0.0,
+                "d={dd} workers={wk_n}: pooled wgram changed bits"
+            );
+            println!(
+                "thread-sweep d={dd} workers={wk_n}: margins {:.1}ms, wgram {:.1}ms",
+                t_m * 1e3,
+                t_w * 1e3
+            );
+            if dd == 768 {
+                pooled_walls_768.push((wk_n, t_m + t_w));
+            }
+            thread_sweep_json.push(Json::obj(vec![
+                ("d", Json::Num(dd as f64)),
+                ("n", Json::Num(sweep_n as f64)),
+                ("workers", Json::Num(wk_n as f64)),
+                ("margins_wall", Json::Num(t_m)),
+                ("wgram_wall", Json::Num(t_w)),
+            ]));
+        }
+    }
+
+    // ---- PR 7: pool dispatch overhead vs the old per-call spawn ----
+    // The screening rule loop pays one fork-join dispatch per `screen()`
+    // call; before the persistent pool each dispatch was a fresh
+    // `thread::scope` spawn/join. Time both on trivial tasks so only the
+    // dispatch machinery is measured.
+    let dispatch_workers = parallel::default_threads().clamp(2, 4);
+    let dispatch_iters = if quick { 300 } else { 1000 };
+    let t_pool_dispatch = time_best(&mut || {
+        for _ in 0..dispatch_iters {
+            std::hint::black_box(parallel::par_sum(dispatch_workers, dispatch_workers, |r| {
+                r.len() as f64
+            }));
+        }
+    }) / dispatch_iters as f64;
+    let t_spawn_dispatch = time_best(&mut || {
+        for _ in 0..dispatch_iters {
+            std::thread::scope(|s| {
+                for _ in 1..dispatch_workers {
+                    s.spawn(|| std::hint::black_box(1u64));
+                }
+            });
+        }
+    }) / dispatch_iters as f64;
+    println!(
+        "dispatch overhead ({dispatch_workers} workers): pool {:.2}µs vs spawn {:.2}µs per section",
+        t_pool_dispatch * 1e6,
+        t_spawn_dispatch * 1e6
+    );
+
+    // ---- PR 7: screened-path worker invariance ----
+    // The full certificate pipeline at every sweep worker count: the
+    // worker count may only change walls — screened sets, rule-eval
+    // counts and the optimum must be bitwise those of the 1-worker run.
+    let path_at_workers = |workers: usize| {
+        let mut sc = ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere);
+        sc.use_frame_certs = true;
+        let cfg = PathConfig {
+            rho: 0.9,
+            max_steps: if quick { 6 } else { 10 },
+            solver: SolverConfig {
+                tol: 1e-5,
+                ..Default::default()
+            },
+            screening: Some(sc),
+            range_screening: true,
+            range_general: true,
+            ..Default::default()
+        };
+        RegPath::new(cfg).run(&store64, &NativeEngine::new(workers))
+    };
+    let path_w1 = path_at_workers(1);
+    let path_w1_stats = path_w1.screening_stats.clone().unwrap_or_default();
+    for &wk_n in &thread_sweep_workers[1..] {
+        let p = path_at_workers(wk_n);
+        let p_stats = p.screening_stats.clone().unwrap_or_default();
+        assert_eq!(
+            p_stats.rule_evals, path_w1_stats.rule_evals,
+            "worker count {wk_n} changed screened-path rule evals"
+        );
+        assert_eq!(
+            p.steps.len(),
+            path_w1.steps.len(),
+            "worker count {wk_n} changed the λ grid"
+        );
+        for (a, b) in p.steps.iter().zip(&path_w1.steps) {
+            assert_eq!(
+                (a.screened_l, a.screened_r, a.range_screened, a.rule_evals),
+                (b.screened_l, b.screened_r, b.range_screened, b.rule_evals),
+                "worker count {wk_n} changed the screened set at λ={}",
+                b.lambda
+            );
+            assert_eq!(a.pool_workers, wk_n, "PathStep.pool_workers mis-reported");
+        }
+        for i in 0..store64.d {
+            for j in 0..store64.d {
+                assert_eq!(
+                    p.m_final[(i, j)].to_bits(),
+                    path_w1.m_final[(i, j)].to_bits(),
+                    "worker count {wk_n} moved the optimum bits at ({i},{j})"
+                );
+            }
+        }
+    }
+
     // ---- pipeline telemetry: PR 1-equivalent vs certificate frame ----
     // Four paths on the same store: naive (no screening, the optimum
     // oracle), the PR 1 pipeline (workset + memo, frame certificates
@@ -544,6 +698,11 @@ fn main() {
                 ("compute_seconds", Json::Num(s.compute_time)),
                 ("screen_ms_per_call", Json::Num(ms_per_call)),
                 ("wall_seconds", Json::Num(s.wall)),
+                ("pool_workers", Json::Num(s.pool_workers as f64)),
+                (
+                    "kernel_par_wall_seconds",
+                    Json::Num(s.kernel_par_wall_seconds),
+                ),
             ])
         })
         .collect();
@@ -686,6 +845,18 @@ fn main() {
         ),
         ("envelope_mean_width", Json::Num(envelope_mean_width)),
         ("mixed_stream_wall_seconds", Json::Num(streamed_mixed.total_wall)),
+        ("thread_sweep", Json::Arr(thread_sweep_json)),
+        ("host_cores", Json::Num(host_cores as f64)),
+        ("pool_capacity", Json::Num(parallel::pool().capacity() as f64)),
+        ("pool_threads_spawned", Json::Num(parallel::pool_stats().threads as f64)),
+        ("pool_scopes_total", Json::Num(parallel::pool_stats().scopes as f64)),
+        ("pool_tasks_total", Json::Num(parallel::pool_stats().tasks as f64)),
+        (
+            "pool_wall_seconds_total",
+            Json::Num(parallel::pool_stats().wall_seconds),
+        ),
+        ("pool_dispatch_wall_seconds", Json::Num(t_pool_dispatch)),
+        ("spawn_dispatch_wall_seconds", Json::Num(t_spawn_dispatch)),
     ]);
     println!("\nscreening-path telemetry (JSON):");
     println!("{}", doc.to_string_compact());
@@ -866,6 +1037,43 @@ fn main() {
         stream_stats_mixed.promotions,
         stream_stats_mixed.adm_candidates
     );
+    // ---- PR 7 acceptance: persistent pool ----
+    // multi-worker pooled kernels must strictly beat the single-worker
+    // wall at d = 768 — the point of the pool. A timing gate, so it only
+    // runs where parallel speedup is physically possible; single-core
+    // hosts log the skip instead of flaking.
+    let wall_768_w1 = pooled_walls_768
+        .iter()
+        .find(|(w, _)| *w == 1)
+        .map(|(_, t)| *t)
+        .expect("thread sweep ran at workers=1");
+    let wall_768_multi = pooled_walls_768
+        .iter()
+        .filter(|(w, _)| *w > 1)
+        .map(|(_, t)| *t)
+        .fold(f64::INFINITY, f64::min);
+    if host_cores >= 2 {
+        assert!(
+            wall_768_multi < wall_768_w1,
+            "pool regression at d=768: best multi-worker margins+wgram wall \
+             {wall_768_multi:.4}s not below single-worker {wall_768_w1:.4}s"
+        );
+    } else {
+        eprintln!(
+            "SKIP thread-sweep wall gate: single-core host \
+             (multi {wall_768_multi:.4}s vs single {wall_768_w1:.4}s recorded only)"
+        );
+    }
+    // ... and a pooled fork-join dispatch must cost less than the old
+    // per-call thread::scope spawn/join it replaced — the overhead every
+    // screen() call used to pay
+    assert!(
+        t_pool_dispatch < t_spawn_dispatch,
+        "pool dispatch regression: {:.2}µs per section >= spawn baseline {:.2}µs",
+        t_pool_dispatch * 1e6,
+        t_spawn_dispatch * 1e6
+    );
+
     // ---- satellite: bench-schema conformance (the doc cannot rot) ----
     // every key this bench emits — d_sweep/cert_study subfields
     // included — must appear in rust/docs/BENCH_SCHEMA.md

@@ -34,6 +34,18 @@
 //!   SYRK accumulates the upper triangle one D_BLOCK × D_BLOCK Gram tile
 //!   at a time, streaming `a`/`b` column slices through it — every hot
 //!   buffer is cache-sized *independently of d*.
+//! - **Band-parallel SYRK** ([`wsyrk_upper_parallel`],
+//!   [`wsyrk_upper_d_blocked_parallel`]): the upper-triangle rows are
+//!   partitioned by [`syrk_bands`] into cell-balanced contiguous bands,
+//!   one per pool worker, each accumulating its disjoint row slice of
+//!   the Gram outright. No worker ever holds a *partial* accumulator
+//!   for a cell — every `Σ_t` chain lives whole inside one band — so
+//!   N-worker output is **bitwise identical** to 1-worker (and to the
+//!   serial kernels), the same `==`-on-bits contract the d-blocked
+//!   geometry already carries. Margins parallelize in the engine by
+//!   [`PANEL_ROWS`]-aligned row chunks (each row's margin is an
+//!   independent chain, and aligned chunks keep the panel decomposition
+//!   itself worker-invariant).
 //!
 //! **Element-generic panels + SIMD microkernels.** The panel drivers are
 //! generic over the element scalar ([`Elem`]: `f64` for the exact tier,
@@ -542,6 +554,29 @@ pub fn wsyrk_upper_g<E: Elem>(
     w: &[E],
 ) {
     debug_assert_eq!(g.len(), d * d);
+    wsyrk_upper_band_g(g, d, a, b, rows, w, 0..d);
+}
+
+/// One horizontal band of [`wsyrk_upper_g`]: accumulate the upper-triangle
+/// cells of Gram rows `band` only, into a band-local buffer `g` of
+/// `band.len() · d` elements (cell `(i, j)` lands at
+/// `(i − band.start)·d + j`). With `band = 0..d` this *is*
+/// [`wsyrk_upper_g`]. Each cell's `Σ_t` chain (t ascending, same
+/// summands) is untouched by the banding, so any row partition of the
+/// triangle reassembles bitwise into the serial result — this is the
+/// unit of work the band-parallel driver [`wsyrk_upper_parallel_g`]
+/// hands each pool worker.
+pub fn wsyrk_upper_band_g<E: Elem>(
+    g: &mut [E],
+    d: usize,
+    a: &[E],
+    b: &[E],
+    rows: std::ops::Range<usize>,
+    w: &[E],
+    band: std::ops::Range<usize>,
+) {
+    debug_assert_eq!(g.len(), band.len() * d);
+    debug_assert!(band.end <= d);
     debug_assert!(a.len() >= rows.end * d);
     debug_assert!(b.len() >= rows.end * d);
     debug_assert_eq!(w.len(), rows.len());
@@ -551,9 +586,10 @@ pub fn wsyrk_upper_g<E: Elem>(
             continue;
         }
         let (ra, rb) = (&a[t * d..(t + 1) * d], &b[t * d..(t + 1) * d]);
-        for i in 0..d {
+        for i in band.clone() {
             let (wai, wbi) = (wt * ra[i], wt * rb[i]);
-            axpy2_mk(&mut g[i * d + i..(i + 1) * d], wai, &ra[i..], wbi, &rb[i..]);
+            let row0 = (i - band.start) * d;
+            axpy2_mk(&mut g[row0 + i..row0 + d], wai, &ra[i..], wbi, &rb[i..]);
         }
     }
 }
@@ -582,18 +618,51 @@ pub fn wsyrk_upper_d_blocked(
     let d = a.cols();
     debug_assert_eq!(b.cols(), d);
     debug_assert_eq!((g.rows(), g.cols()), (d, d));
+    wsyrk_upper_d_blocked_band_g(
+        g.as_mut_slice(),
+        d,
+        a.as_slice(),
+        b.as_slice(),
+        rows,
+        w,
+        d_block,
+        0..d,
+    );
+}
+
+/// One horizontal band of the d-blocked SYRK (see
+/// [`wsyrk_upper_band_g`] for the band-local `g` layout): tile rows walk
+/// `band` in `d_block` steps, tile columns walk `j0.max(band tile
+/// start)..d` as in [`wsyrk_upper_d_blocked`]. Every Gram cell still
+/// lives in exactly one tile with its `Σ_t` chain ascending, so band
+/// boundaries — wherever they fall relative to `d_block` — never change
+/// a bit of any cell.
+#[allow(clippy::too_many_arguments)]
+pub fn wsyrk_upper_d_blocked_band_g<E: Elem>(
+    g: &mut [E],
+    d: usize,
+    a: &[E],
+    b: &[E],
+    rows: std::ops::Range<usize>,
+    w: &[E],
+    d_block: usize,
+    band: std::ops::Range<usize>,
+) {
+    debug_assert_eq!(g.len(), band.len() * d);
+    debug_assert!(band.end <= d);
+    debug_assert!(a.len() >= rows.end * d);
+    debug_assert!(b.len() >= rows.end * d);
     debug_assert_eq!(w.len(), rows.len());
     assert!(d_block > 0, "d_block must be positive");
-    let (gs, a, b) = (g.as_mut_slice(), a.as_slice(), b.as_slice());
-    let mut i0 = 0;
-    while i0 < d {
-        let i1 = (i0 + d_block).min(d);
+    let mut i0 = band.start;
+    while i0 < band.end {
+        let i1 = (i0 + d_block).min(band.end);
         let mut j0 = i0;
         while j0 < d {
             let j1 = (j0 + d_block).min(d);
             for (k, t) in rows.clone().enumerate() {
                 let wt = w[k];
-                if wt == 0.0 {
+                if wt == E::ZERO {
                     continue;
                 }
                 let (ra, rb) = (&a[t * d..(t + 1) * d], &b[t * d..(t + 1) * d]);
@@ -603,8 +672,9 @@ pub fn wsyrk_upper_d_blocked(
                         continue;
                     }
                     let (wai, wbi) = (wt * ra[i], wt * rb[i]);
+                    let row0 = (i - band.start) * d;
                     axpy2_mk(
-                        &mut gs[i * d + js..i * d + j1],
+                        &mut g[row0 + js..row0 + j1],
                         wai,
                         &ra[js..j1],
                         wbi,
@@ -616,6 +686,151 @@ pub fn wsyrk_upper_d_blocked(
         }
         i0 = i1;
     }
+}
+
+/// Partition the rows of a d×d upper triangle into at most `workers`
+/// contiguous bands of near-equal **cell count** `Σ_{i∈band} (d − i)` —
+/// the first rows of the triangle are the longest, so an equal-row split
+/// would leave the last worker nearly idle. Bands are non-empty, in
+/// order, and cover `0..d` exactly; the band list depends only on
+/// `(d, workers)`, never on data or scheduling.
+pub fn syrk_bands(d: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    let workers = workers.max(1).min(d.max(1));
+    if d == 0 {
+        return Vec::new();
+    }
+    let total = d * (d + 1) / 2;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for i in 0..d {
+        acc += d - i;
+        // close band b as soon as the cumulative cell count reaches
+        // (b + 1)/workers of the triangle
+        if acc * workers >= total * (out.len() + 1) {
+            out.push(start..i + 1);
+            start = i + 1;
+            if out.len() == workers {
+                break;
+            }
+        }
+    }
+    if start < d {
+        out.push(start..d);
+    }
+    out
+}
+
+/// Band-parallel weighted SYRK, element-generic: the upper-triangle rows
+/// are split by [`syrk_bands`] and each pool worker accumulates its band
+/// directly into its disjoint row slice of `g` via
+/// [`wsyrk_upper_band_g`]. Every Gram cell's whole `Σ_t` chain lives in
+/// exactly one worker — no partial-accumulator reduction anywhere — so
+/// the output is **bitwise identical** to the serial [`wsyrk_upper_g`]
+/// at any worker count (and composes with the [`LANES`] microkernels,
+/// which are elementwise here).
+pub fn wsyrk_upper_parallel_g<E: Elem + Send + Sync>(
+    g: &mut [E],
+    d: usize,
+    a: &[E],
+    b: &[E],
+    rows: std::ops::Range<usize>,
+    w: &[E],
+    workers: usize,
+) {
+    debug_assert_eq!(g.len(), d * d);
+    let bands = syrk_bands(d, workers);
+    if bands.len() <= 1 {
+        wsyrk_upper_g(g, d, a, b, rows, w);
+        return;
+    }
+    // bands are contiguous rows of the row-major `g`, so each worker's
+    // slice is a contiguous element range — a clean disjoint split
+    let elems: Vec<std::ops::Range<usize>> =
+        bands.iter().map(|bd| bd.start * d..bd.end * d).collect();
+    crate::util::parallel::par_fill_ranges(g, elems, |r, chunk| {
+        wsyrk_upper_band_g(chunk, d, a, b, rows.clone(), w, r.start / d..r.end / d);
+    });
+}
+
+/// [`wsyrk_upper_parallel_g`] on the f64 [`Mat`] wrapper (the engine's
+/// row-stream wgram path).
+pub fn wsyrk_upper_parallel(
+    g: &mut Mat,
+    a: &Mat,
+    b: &Mat,
+    rows: std::ops::Range<usize>,
+    w: &[f64],
+    workers: usize,
+) {
+    let d = a.cols();
+    debug_assert_eq!(b.cols(), d);
+    debug_assert_eq!((g.rows(), g.cols()), (d, d));
+    wsyrk_upper_parallel_g(g.as_mut_slice(), d, a.as_slice(), b.as_slice(), rows, w, workers);
+}
+
+/// Band-parallel d-blocked weighted SYRK, element-generic: [`syrk_bands`]
+/// rows per worker, each running [`wsyrk_upper_d_blocked_band_g`] over
+/// its disjoint row slice. Bitwise identical to
+/// [`wsyrk_upper_d_blocked`] — and therefore to [`wsyrk_upper`] — at any
+/// worker count (per-cell `Σ_t` chains are tile- and band-independent).
+#[allow(clippy::too_many_arguments)]
+pub fn wsyrk_upper_d_blocked_parallel_g<E: Elem + Send + Sync>(
+    g: &mut [E],
+    d: usize,
+    a: &[E],
+    b: &[E],
+    rows: std::ops::Range<usize>,
+    w: &[E],
+    d_block: usize,
+    workers: usize,
+) {
+    debug_assert_eq!(g.len(), d * d);
+    let bands = syrk_bands(d, workers);
+    if bands.len() <= 1 {
+        wsyrk_upper_d_blocked_band_g(g, d, a, b, rows, w, d_block, 0..d);
+        return;
+    }
+    let elems: Vec<std::ops::Range<usize>> =
+        bands.iter().map(|bd| bd.start * d..bd.end * d).collect();
+    crate::util::parallel::par_fill_ranges(g, elems, |r, chunk| {
+        wsyrk_upper_d_blocked_band_g(
+            chunk,
+            d,
+            a,
+            b,
+            rows.clone(),
+            w,
+            d_block,
+            r.start / d..r.end / d,
+        );
+    });
+}
+
+/// [`wsyrk_upper_d_blocked_parallel_g`] on the f64 [`Mat`] wrapper (the
+/// engine's d-blocked wgram path).
+pub fn wsyrk_upper_d_blocked_parallel(
+    g: &mut Mat,
+    a: &Mat,
+    b: &Mat,
+    rows: std::ops::Range<usize>,
+    w: &[f64],
+    d_block: usize,
+    workers: usize,
+) {
+    let d = a.cols();
+    debug_assert_eq!(b.cols(), d);
+    debug_assert_eq!((g.rows(), g.cols()), (d, d));
+    wsyrk_upper_d_blocked_parallel_g(
+        g.as_mut_slice(),
+        d,
+        a.as_slice(),
+        b.as_slice(),
+        rows,
+        w,
+        d_block,
+        workers,
+    );
 }
 
 /// Reflect the accumulated upper triangle into the lower half, restoring
@@ -825,6 +1040,105 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn syrk_bands_cover_triangle_balanced() {
+        for d in [1usize, 2, 5, 17, 64, 300] {
+            for w in [1usize, 2, 3, 7, 8, 64] {
+                let bands = syrk_bands(d, w);
+                assert!(!bands.is_empty());
+                assert!(bands.len() <= w.min(d));
+                let mut next = 0;
+                for bd in &bands {
+                    assert_eq!(bd.start, next, "d={d} w={w}");
+                    assert!(!bd.is_empty(), "d={d} w={w}: empty band");
+                    next = bd.end;
+                }
+                assert_eq!(next, d, "d={d} w={w}: bands do not cover 0..d");
+                // cell counts near-balanced: no band above ~2x the ideal
+                // share (the first row alone can force that much at small d)
+                if bands.len() == w {
+                    let total = d * (d + 1) / 2;
+                    for bd in &bands {
+                        let cells: usize = bd.clone().map(|i| d - i).sum();
+                        assert!(
+                            cells * w <= 2 * total + 2 * d * w,
+                            "d={d} w={w}: band {bd:?} holds {cells} of {total} cells"
+                        );
+                    }
+                }
+            }
+        }
+        assert!(syrk_bands(0, 4).is_empty());
+    }
+
+    #[test]
+    fn parallel_wsyrk_bitwise_matches_serial_any_worker_count() {
+        // the tentpole determinism contract: every band partition of the
+        // triangle reassembles bit-for-bit into the serial SYRK, for both
+        // geometries, at worker counts around and past the core count
+        forall("gemm-par-wsyrk", 16, |rng| {
+            let d = 1 + rng.below(40);
+            let n = 1 + rng.below(60);
+            let (_, a, b) = rand_inputs(rng, n, d);
+            let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut base = Mat::zeros(d, d);
+            wsyrk_upper(&mut base, &a, &b, 0..n, &w);
+            for workers in [1usize, 2, 7] {
+                let mut g = Mat::zeros(d, d);
+                wsyrk_upper_parallel(&mut g, &a, &b, 0..n, &w, workers);
+                let mut gdb = Mat::zeros(d, d);
+                wsyrk_upper_d_blocked_parallel(&mut gdb, &a, &b, 0..n, &w, 7, workers);
+                for i in 0..d {
+                    for j in i..d {
+                        if g[(i, j)].to_bits() != base[(i, j)].to_bits() {
+                            return Err(format!(
+                                "d={d} workers={workers}: row-stream cell ({i},{j}) split bits"
+                            ));
+                        }
+                        if gdb[(i, j)].to_bits() != base[(i, j)].to_bits() {
+                            return Err(format!(
+                                "d={d} workers={workers}: d-blocked cell ({i},{j}) split bits"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_wsyrk_f32_bitwise_matches_serial() {
+        let mut rng = Pcg64::seed(11);
+        let (d, n) = (23usize, 41usize);
+        let (_, a, b) = rand_inputs(&mut rng, n, d);
+        let a32: Vec<f32> = a.as_slice().iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = b.as_slice().iter().map(|&v| v as f32).collect();
+        let w32: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut base = vec![0.0f32; d * d];
+        wsyrk_upper_g(&mut base, d, &a32, &b32, 0..n, &w32);
+        for workers in [2usize, 7] {
+            let mut g = vec![0.0f32; d * d];
+            wsyrk_upper_parallel_g(&mut g, d, &a32, &b32, 0..n, &w32, workers);
+            let mut gdb = vec![0.0f32; d * d];
+            wsyrk_upper_d_blocked_parallel_g(&mut gdb, d, &a32, &b32, 0..n, &w32, 5, workers);
+            for i in 0..d {
+                for j in i..d {
+                    assert_eq!(
+                        g[i * d + j].to_bits(),
+                        base[i * d + j].to_bits(),
+                        "f32 row-stream workers={workers} cell ({i},{j})"
+                    );
+                    assert_eq!(
+                        gdb[i * d + j].to_bits(),
+                        base[i * d + j].to_bits(),
+                        "f32 d-blocked workers={workers} cell ({i},{j})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -172,6 +172,11 @@ pub struct PathStep {
     pub screen_time: f64,
     /// seconds spent in margin/gradient kernels
     pub compute_time: f64,
+    /// worker count the engine dispatched pooled sections at this λ
+    pub pool_workers: usize,
+    /// pooled parallel-section wall seconds attributed to this λ — the
+    /// delta of [`crate::util::parallel::pool_stats`] around the solve
+    pub kernel_par_wall_seconds: f64,
 }
 
 /// Outcome summary of a streamed (mined, screen-on-admission) path run.
@@ -348,6 +353,7 @@ impl RegPath {
             let ws_rows = problem.workset().len();
 
             let stats_before = screening_totals(manager.as_ref(), manager2.as_ref());
+            let pool_before = crate::util::parallel::pool_stats();
 
             // ---- solve with dynamic screening ----
             let mut rate_regpath = problem.status().screening_rate();
@@ -432,6 +438,10 @@ impl RegPath {
                 wall,
                 screen_time: stats.timers.screening.secs(),
                 compute_time: stats.timers.compute.secs(),
+                pool_workers: engine.workers(),
+                kernel_par_wall_seconds: (crate::util::parallel::pool_stats().wall_seconds
+                    - pool_before.wall_seconds)
+                    .max(0.0),
             });
 
             m_warm = m_sol;
@@ -677,6 +687,7 @@ impl RegPath {
             peak_ws_rows = peak_ws_rows.max(ws_rows);
 
             let stats_before = screening_totals(manager.as_ref(), manager2.as_ref());
+            let pool_before = crate::util::parallel::pool_stats();
 
             // ---- 4. solve with dynamic screening ----
             let mut rate_regpath = problem.status().screening_rate();
@@ -756,6 +767,10 @@ impl RegPath {
                 wall,
                 screen_time: stats.timers.screening.secs(),
                 compute_time: stats.timers.compute.secs(),
+                pool_workers: engine.workers(),
+                kernel_par_wall_seconds: (crate::util::parallel::pool_stats().wall_seconds
+                    - pool_before.wall_seconds)
+                    .max(0.0),
             });
 
             m_warm = m_sol;

@@ -130,6 +130,15 @@ pub trait Engine: Sync {
         margins_out: &mut [f64],
     ) -> StepOut;
 
+    /// Worker count this engine dispatches pooled sections at. Callers
+    /// that parallelize around the engine (the screening rule loop, the
+    /// streamed-admission batches) use this so one `--threads` knob
+    /// governs every pass. Defaults to the `TS_THREADS`/auto-detected
+    /// count from [`crate::util::parallel::default_threads`].
+    fn workers(&self) -> usize {
+        crate::util::parallel::default_threads()
+    }
+
     /// The precision tier this engine runs bulk screening passes at.
     /// Defaults to [`PrecisionTier::F64`] so existing engines (and the
     /// PJRT stub) are exact without opting in.

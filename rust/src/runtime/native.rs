@@ -1,9 +1,20 @@
 //! Pure-rust reference engine (threaded f64).
 //!
-//! Each worker processes a contiguous block of triplets and accumulates a
-//! worker-local gradient that is reduced at the end — matching the Pallas
-//! kernel's grid-accumulator structure exactly, which keeps
-//! native-vs-PJRT comparisons meaningful.
+//! Every parallel pass rides the persistent worker pool
+//! (`util::parallel`), split so that **each worker owns whole summation
+//! chains**: margins parallelize over [`gemm::PANEL_ROWS`]-aligned row
+//! chunks (each row's margin is one independent chain, and aligned
+//! chunks keep the panel decomposition itself identical at any worker
+//! count), the weighted SYRK over [`gemm::syrk_bands`] — disjoint
+//! horizontal bands of the Gram's upper triangle, each worker
+//! accumulating its band's cells outright — and the fused step runs
+//! parallel margins, a *serial* O(n) loss/α pass (one `Σ_t ℓ(m_t)`
+//! chain, owned by the calling thread), then the band-parallel SYRK on
+//! the α weights. No pass anywhere reduces partial per-cell
+//! accumulators, so N-worker output is **bitwise identical** to
+//! 1-worker for every kernel ([`Engine::workers`] can never move a
+//! screening decision — `rust/tests/kernel_parity.rs` asserts `==` on
+//! bits across worker counts).
 //!
 //! Interchangeable compute cores share that scaffold ([`KernelCore`]):
 //!
@@ -177,6 +188,15 @@ impl NativeEngine {
         self
     }
 
+    /// Override the worker count after construction (builder form of the
+    /// constructors' `threads` argument; `0` = auto, i.e.
+    /// `parallel::default_threads()`). Worker counts size the split only
+    /// — every kernel is bitwise identical at any setting.
+    pub fn with_workers(mut self, workers: usize) -> NativeEngine {
+        self.threads = workers;
+        self
+    }
+
     /// The compute core this engine routes kernels through (possibly
     /// `Auto`; see [`Self::core_for`] for the per-d resolution).
     pub fn core(&self) -> KernelCore {
@@ -195,14 +215,6 @@ impl NativeEngine {
                 }
             }
             pinned => pinned,
-        }
-    }
-
-    fn workers(&self) -> usize {
-        if self.threads == 0 {
-            parallel::default_threads()
-        } else {
-            self.threads
         }
     }
 }
@@ -233,12 +245,24 @@ impl Engine for NativeEngine {
         }
     }
 
+    fn workers(&self) -> usize {
+        if self.threads == 0 {
+            parallel::default_threads()
+        } else {
+            self.threads
+        }
+    }
+
     fn margins(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64]) {
         let d = mat.rows();
         debug_assert_eq!(a.cols(), d);
         debug_assert_eq!(a.rows(), out.len());
         debug_assert_eq!(b.rows(), out.len());
         let workers = self.workers();
+        // chunk boundaries on PANEL_ROWS multiples: each row's margin is
+        // an independent chain, and aligned chunks additionally keep the
+        // panel decomposition itself identical at any worker count
+        let align = gemm::PANEL_ROWS;
         match self.core_for(d) {
             KernelCore::Scalar => parallel::par_fill(out, workers, |range, chunk| {
                 let mut tmp = self.scratch.take(d);
@@ -248,27 +272,30 @@ impl Engine for NativeEngine {
                 }
                 self.scratch.put(tmp);
             }),
-            KernelCore::Tiled => parallel::par_fill(out, workers, |range, chunk| {
+            KernelCore::Tiled => parallel::par_fill_aligned(out, workers, align, |range, chunk| {
                 let mut y = self.scratch.take(gemm::PANEL_ROWS * d);
                 gemm::margins_into(mat, a, b, range, chunk, &mut y);
                 self.scratch.put(y);
             }),
-            KernelCore::DBlocked => parallel::par_fill(out, workers, |range, chunk| {
-                let mut y = self.scratch.take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
-                let mut acc = self.scratch.take(gemm::PANEL_ACC_LEN);
-                gemm::margins_into_d_blocked(
-                    mat,
-                    a,
-                    b,
-                    range,
-                    chunk,
-                    &mut y,
-                    &mut acc,
-                    gemm::D_BLOCK,
-                );
-                self.scratch.put(y);
-                self.scratch.put(acc);
-            }),
+            KernelCore::DBlocked => {
+                parallel::par_fill_aligned(out, workers, align, |range, chunk| {
+                    let mut y =
+                        self.scratch.take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
+                    let mut acc = self.scratch.take(gemm::PANEL_ACC_LEN);
+                    gemm::margins_into_d_blocked(
+                        mat,
+                        a,
+                        b,
+                        range,
+                        chunk,
+                        &mut y,
+                        &mut acc,
+                        gemm::D_BLOCK,
+                    );
+                    self.scratch.put(y);
+                    self.scratch.put(acc);
+                })
+            }
             KernelCore::Auto => unreachable!("core_for never returns Auto"),
         }
     }
@@ -276,50 +303,60 @@ impl Engine for NativeEngine {
     fn wgram(&self, a: &Mat, b: &Mat, w: &[f64]) -> Mat {
         let (n, d) = (a.rows(), a.cols());
         debug_assert_eq!(w.len(), n);
-        let core = self.core_for(d);
-        let partials = parallel::par_ranges(n, self.workers(), |range| {
-            let mut g = Mat::zeros(d, d);
-            match core {
-                KernelCore::Tiled => {
-                    let w_chunk = &w[range.clone()];
-                    gemm::wsyrk_upper(&mut g, a, b, range, w_chunk);
-                }
-                KernelCore::DBlocked => {
-                    let w_chunk = &w[range.clone()];
-                    gemm::wsyrk_upper_d_blocked(&mut g, a, b, range, w_chunk, gemm::D_BLOCK);
-                }
-                KernelCore::Auto => unreachable!("core_for never returns Auto"),
-                KernelCore::Scalar => {
-                    for t in range {
+        let workers = self.workers();
+        let mut g = Mat::zeros(d, d);
+        match self.core_for(d) {
+            KernelCore::Tiled => gemm::wsyrk_upper_parallel(&mut g, a, b, 0..n, w, workers),
+            KernelCore::DBlocked => gemm::wsyrk_upper_d_blocked_parallel(
+                &mut g,
+                a,
+                b,
+                0..n,
+                w,
+                gemm::D_BLOCK,
+                workers,
+            ),
+            KernelCore::Scalar => {
+                // band-parallel like the tiled cores — each worker owns
+                // whole Gram rows, so every cell's Σ_t chain stays in
+                // one worker — but rows cost the same here (full
+                // rank-1 inner loop, lower half included), so the split
+                // is by equal row count, not triangle cells
+                let (a_s, b_s) = (a.as_slice(), b.as_slice());
+                let bands = parallel::split_ranges(d, workers);
+                let elems: Vec<std::ops::Range<usize>> =
+                    bands.iter().map(|bd| bd.start * d..bd.end * d).collect();
+                parallel::par_fill_ranges(g.as_mut_slice(), elems, |r, chunk| {
+                    let band = r.start / d..r.end / d;
+                    for t in 0..n {
                         let wt = w[t];
                         if wt == 0.0 {
                             continue;
                         }
-                        let (ra, rb) = (a.row(t), b.row(t));
-                        for i in 0..d {
+                        let (ra, rb) = (&a_s[t * d..(t + 1) * d], &b_s[t * d..(t + 1) * d]);
+                        for i in band.clone() {
                             let (wai, wbi) = (wt * ra[i], wt * rb[i]);
-                            let grow = g.row_mut(i);
+                            let row0 = (i - band.start) * d;
+                            let grow = &mut chunk[row0..row0 + d];
                             for j in 0..d {
                                 grow[j] += wai * ra[j] - wbi * rb[j];
                             }
                         }
                     }
-                }
+                });
             }
-            g
-        });
-        let mut g = Mat::zeros(d, d);
-        for p in partials {
-            g.axpy(1.0, &p);
+            KernelCore::Auto => unreachable!("core_for never returns Auto"),
         }
         // Every core emits an exactly-symmetric gram from the same upper
         // triangle: the tiled/d-blocked cores never computed the lower
         // half, and the scalar core's lower half is overwritten by the
-        // mirror. The upper-triangle summands and the reduction order
-        // coincide, so all cores' outputs are bitwise identical — which
-        // is what lets benches assert identical screening trajectories
-        // across cores. (The scalar core still pays its full-rank-1
-        // inner loop: the perf baseline is untouched.)
+        // mirror. The upper-triangle summands and the per-cell chain
+        // order coincide — each cell's Σ_t lives whole inside one band —
+        // so all cores' outputs are bitwise identical at any worker
+        // count, which is what lets benches assert identical screening
+        // trajectories across cores and worker counts. (The scalar core
+        // still pays its full-rank-1 inner loop: the perf baseline is
+        // untouched.)
         gemm::mirror_upper(&mut g);
         g
     }
@@ -332,125 +369,29 @@ impl Engine for NativeEngine {
         gamma: f64,
         margins_out: &mut [f64],
     ) -> StepOut {
-        let (n, d) = (a.rows(), a.cols());
+        let (n, _d) = (a.rows(), a.cols());
         debug_assert_eq!(margins_out.len(), n);
         let loss = if gamma > 0.0 {
             Loss::smoothed_hinge(gamma)
         } else {
             Loss::hinge()
         };
-        let core = self.core_for(d);
-        // one fused pass per worker: margins, loss, alpha, local gram —
-        // the Pallas grid-accumulator structure, per compute core
-        let ranges = parallel::split_ranges(n, self.workers());
-        let results: Vec<(f64, Mat)> = std::thread::scope(|scope| {
-            // split margins_out into per-range chunks
-            let mut handles = Vec::new();
-            let mut rest: &mut [f64] = margins_out;
-            for range in &ranges {
-                let (head, tail) = rest.split_at_mut(range.len());
-                rest = tail;
-                let range = range.clone();
-                let scratch = &self.scratch;
-                handles.push(scope.spawn(move || {
-                    let mut g = Mat::zeros(d, d);
-                    let mut lsum = 0.0;
-                    match core {
-                        KernelCore::Scalar => {
-                            let mut tmp = scratch.take(d);
-                            for (k, t) in range.enumerate() {
-                                let (ra, rb) = (a.row(t), b.row(t));
-                                let m = row_quad(mat, ra, &mut tmp)
-                                    - row_quad(mat, rb, &mut tmp);
-                                head[k] = m;
-                                lsum += loss.value(m);
-                                let alpha = loss.alpha(m);
-                                if alpha != 0.0 {
-                                    for i in 0..d {
-                                        let (wai, wbi) = (alpha * ra[i], alpha * rb[i]);
-                                        let grow = g.row_mut(i);
-                                        for j in 0..d {
-                                            grow[j] += wai * ra[j] - wbi * rb[j];
-                                        }
-                                    }
-                                }
-                            }
-                            scratch.put(tmp);
-                        }
-                        KernelCore::Tiled => {
-                            let mut y = scratch.take(gemm::PANEL_ROWS * d);
-                            let mut alpha = scratch.take(gemm::PANEL_ROWS);
-                            let mut p0 = range.start;
-                            while p0 < range.end {
-                                let pr = gemm::PANEL_ROWS.min(range.end - p0);
-                                let off = p0 - range.start;
-                                let chunk = &mut head[off..off + pr];
-                                gemm::margins_into(mat, a, b, p0..p0 + pr, chunk, &mut y);
-                                for (k, &m) in chunk.iter().enumerate() {
-                                    lsum += loss.value(m);
-                                    alpha[k] = loss.alpha(m);
-                                }
-                                gemm::wsyrk_upper(&mut g, a, b, p0..p0 + pr, &alpha[..pr]);
-                                p0 += pr;
-                            }
-                            scratch.put(y);
-                            scratch.put(alpha);
-                        }
-                        KernelCore::DBlocked => {
-                            let mut y =
-                                scratch.take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
-                            let mut acc = scratch.take(gemm::PANEL_ACC_LEN);
-                            let mut alpha = scratch.take(gemm::PANEL_ROWS);
-                            let mut p0 = range.start;
-                            while p0 < range.end {
-                                let pr = gemm::PANEL_ROWS.min(range.end - p0);
-                                let off = p0 - range.start;
-                                let chunk = &mut head[off..off + pr];
-                                gemm::margins_into_d_blocked(
-                                    mat,
-                                    a,
-                                    b,
-                                    p0..p0 + pr,
-                                    chunk,
-                                    &mut y,
-                                    &mut acc,
-                                    gemm::D_BLOCK,
-                                );
-                                for (k, &m) in chunk.iter().enumerate() {
-                                    lsum += loss.value(m);
-                                    alpha[k] = loss.alpha(m);
-                                }
-                                gemm::wsyrk_upper_d_blocked(
-                                    &mut g,
-                                    a,
-                                    b,
-                                    p0..p0 + pr,
-                                    &alpha[..pr],
-                                    gemm::D_BLOCK,
-                                );
-                                p0 += pr;
-                            }
-                            scratch.put(y);
-                            scratch.put(acc);
-                            scratch.put(alpha);
-                        }
-                        KernelCore::Auto => unreachable!("core_for never returns Auto"),
-                    }
-                    (lsum, g)
-                }));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
+        // three passes, each bitwise worker-count-invariant: pooled
+        // margins (row chains), a serial O(n) loss/α pass (one Σ_t loss
+        // chain, t ascending — same order the old fused single-worker
+        // pass used), then the band-parallel wgram. The fused per-worker
+        // pass this replaces reduced per-worker partial grams in chunk
+        // order, which regrouped per-cell chains and made the bits
+        // depend on the worker count.
+        self.margins(mat, a, b, margins_out);
+        let mut alpha = self.scratch.take(n);
         let mut lsum = 0.0;
-        let mut g = Mat::zeros(d, d);
-        for (l, p) in results {
-            lsum += l;
-            g.axpy(1.0, &p);
+        for (k, &m) in margins_out.iter().enumerate() {
+            lsum += loss.value(m);
+            alpha[k] = loss.alpha(m);
         }
-        // mirror for EVERY core — see the wgram comment: bitwise-equal
-        // symmetric gradients keep the cores' solver trajectories
-        // identical without touching the scalar perf baseline
-        gemm::mirror_upper(&mut g);
+        let g = self.wgram(a, b, &alpha[..n]);
+        self.scratch.put(alpha);
         (lsum, g)
     }
 
@@ -499,14 +440,14 @@ impl Engine for NativeEngine {
             // the f32 tier always runs the microkernel panels — the
             // scalar core routes through the row-stream geometry
             KernelCore::Scalar | KernelCore::Tiled => {
-                parallel::par_fill(&mut out32, workers, |range, chunk| {
+                parallel::par_fill_aligned(&mut out32, workers, gemm::PANEL_ROWS, |range, chunk| {
                     let mut y = self.scratch32.take(gemm::PANEL_ROWS * d.max(1));
                     gemm::margins_into_g(&m32, d, &a32, &b32, range, chunk, &mut y);
                     self.scratch32.put(y);
                 });
             }
             KernelCore::DBlocked => {
-                parallel::par_fill(&mut out32, workers, |range, chunk| {
+                parallel::par_fill_aligned(&mut out32, workers, gemm::PANEL_ROWS, |range, chunk| {
                     let mut y = self
                         .scratch32
                         .take(gemm::PANEL_ROWS * gemm::D_BLOCK.min(d.max(1)));
@@ -824,9 +765,12 @@ mod tests {
     }
 
     #[test]
-    fn thread_count_invariance() {
+    fn thread_count_invariance_is_bitwise() {
+        // the pool contract: every summation chain lives whole inside
+        // one worker, so worker count never changes a bit
         let mut rng = Pcg64::seed(5);
         let (m, a, b) = rand_inputs(&mut rng, 333, 7);
+        let w: Vec<f64> = (0..333).map(|_| rng.uniform()).collect();
         for mk in [
             NativeEngine::new as fn(usize) -> NativeEngine,
             NativeEngine::d_blocked,
@@ -837,12 +781,43 @@ mod tests {
             mk(1).margins(&m, &a, &b, &mut o1);
             mk(8).margins(&m, &a, &b, &mut o8);
             for t in 0..333 {
-                assert!((o1[t] - o8[t]).abs() < 1e-12);
+                assert_eq!(o1[t].to_bits(), o8[t].to_bits(), "margin {t}");
             }
-            let w = vec![0.5; 333];
             let g1 = mk(1).wgram(&a, &b, &w);
             let g8 = mk(8).wgram(&a, &b, &w);
-            assert!(g1.sub(&g8).max_abs() < 1e-10);
+            for i in 0..7 {
+                for j in 0..7 {
+                    assert_eq!(g1[(i, j)].to_bits(), g8[(i, j)].to_bits(), "g ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_is_bitwise_invariant_across_worker_counts() {
+        let mut rng = Pcg64::seed(17);
+        let (m, a, b) = rand_inputs(&mut rng, 257, 9);
+        for mk in [
+            NativeEngine::new as fn(usize) -> NativeEngine,
+            NativeEngine::d_blocked,
+            NativeEngine::scalar,
+        ] {
+            let mut ref_margins = vec![0.0; 257];
+            let (ref_l, ref_g) = mk(0).with_workers(1).step(&m, &a, &b, 0.05, &mut ref_margins);
+            for workers in [2, 3, 8] {
+                let eng = mk(0).with_workers(workers);
+                let mut margins = vec![0.0; 257];
+                let (l, g) = eng.step(&m, &a, &b, 0.05, &mut margins);
+                assert_eq!(l.to_bits(), ref_l.to_bits(), "loss at {workers} workers");
+                for t in 0..257 {
+                    assert_eq!(margins[t].to_bits(), ref_margins[t].to_bits());
+                }
+                for i in 0..9 {
+                    for j in 0..9 {
+                        assert_eq!(g[(i, j)].to_bits(), ref_g[(i, j)].to_bits());
+                    }
+                }
+            }
         }
     }
 

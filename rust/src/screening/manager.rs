@@ -558,7 +558,9 @@ impl ScreeningManager {
         let q_norm_sq = sphere.q.norm_sq();
         let r_sq = sphere.r * sphere.r;
         let sphere_ref = &sphere;
-        let workers = parallel::default_threads();
+        // one `--threads` knob governs every pooled pass: the rule loop
+        // rides the same worker count the engine's kernels dispatch at
+        let workers = engine.workers();
 
         let blocks = parallel::par_blocks(n, RULE_BLOCK, workers, |range| {
             let mut out = BlockOut {

@@ -1,28 +1,69 @@
-//! Scoped fork-join parallelism over index ranges (rayon stand-in).
+//! Persistent worker-pool parallelism over index ranges (rayon stand-in).
 //!
-//! All parallel loops in the crate go through [`par_ranges`]: the range
-//! `[0, n)` is split into one contiguous chunk per worker, each worker runs
-//! the closure on its chunk, and results are collected in chunk order —
-//! deterministic regardless of scheduling.
+//! All parallel loops in the crate go through one lazily-started global
+//! [`ThreadPool`]: a fork-join section ([`ThreadPool::run_scoped`]) splits
+//! its work into one closure per chunk, enqueues all but the first on the
+//! shared queue, runs the first inline on the calling thread, then
+//! help-drains the queue until its own tasks have completed. Workers are
+//! spawned once and reused forever, so the per-call cost of a parallel
+//! section is a queue push + condvar wake instead of a `thread::spawn` —
+//! the difference the screening rule loop (thousands of `screen()` calls
+//! per path) actually feels.
+//!
+//! **Determinism contract.** The pool never decides *how* work splits —
+//! callers pass explicit chunk lists ([`split_ranges`],
+//! [`split_ranges_aligned`], or custom bands) and results come back in
+//! chunk order. Every summation chain lives entirely inside one chunk, so
+//! outputs are bitwise identical at any worker count, with any number of
+//! pool threads (including zero: if spawning fails the caller drains the
+//! whole queue itself and the results are the same bits).
 
-/// Number of workers to use: respects `TS_THREADS`, defaults to the number
-/// of available cores capped at 16 (the workloads here stop scaling past
-/// that on the triplet sizes we run).
-pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("TS_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Parse a `TS_THREADS` value. `0` (and the empty string) means
+/// auto-detect — it returns `None` so the caller falls back to
+/// [`auto_threads`] — and anything non-numeric is a loud configuration
+/// error instead of silently falling through to the core count.
+pub fn parse_ts_threads(v: &str) -> Option<usize> {
+    let v = v.trim();
+    if v.is_empty() {
+        return None;
     }
+    match v.parse::<usize>() {
+        Ok(0) => None,
+        Ok(n) => Some(n),
+        Err(_) => panic!(
+            "TS_THREADS must be a non-negative integer (0 or unset = auto-detect), got {v:?}"
+        ),
+    }
+}
+
+/// Auto-detected worker count: available cores capped at 16 (the
+/// workloads here stop scaling past that on the triplet sizes we run).
+pub fn auto_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
         .min(16)
 }
 
+/// Number of workers to use: `TS_THREADS` if set (where `0` explicitly
+/// selects auto-detection and garbage panics — see [`parse_ts_threads`]),
+/// otherwise [`auto_threads`].
+pub fn default_threads() -> usize {
+    match std::env::var("TS_THREADS") {
+        Ok(v) => parse_ts_threads(&v).unwrap_or_else(auto_threads),
+        Err(_) => auto_threads(),
+    }
+}
+
 /// Split `[0, n)` into at most `workers` contiguous ranges of near-equal
 /// length (the first `n % workers` ranges are one longer).
-pub fn split_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+pub fn split_ranges(n: usize, workers: usize) -> Vec<Range<usize>> {
     let workers = workers.max(1).min(n.max(1));
     let base = n / workers;
     let extra = n % workers;
@@ -39,53 +80,353 @@ pub fn split_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
     out
 }
 
-/// Run `f` over chunks of `[0, n)` in parallel; returns per-chunk results
-/// in chunk order. `f` must be `Sync` (called from many threads).
-pub fn par_ranges<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+/// Like [`split_ranges`], but every chunk boundary (except possibly the
+/// final `n`) is a multiple of `align`. Block-structured kernels (the
+/// `PANEL_ROWS`-paneled margins GEMM) split on these so the panel
+/// decomposition — and therefore every summation chain — is identical at
+/// any worker count.
+pub fn split_ranges_aligned(n: usize, workers: usize, align: usize) -> Vec<Range<usize>> {
+    let align = align.max(1);
+    split_ranges(n.div_ceil(align), workers)
+        .into_iter()
+        .map(|r| r.start * align..(r.end * align).min(n))
+        .collect()
+}
+
+/// A borrowed fork-join closure, as accepted by
+/// [`ThreadPool::run_scoped`].
+pub type ScopedTask<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+/// A queued unit of work. Scoped closures are transmuted to `'static`
+/// before enqueueing; [`ThreadPool::run_scoped`] guarantees they finish
+/// before the borrowed scope ends.
+type Task = ScopedTask<'static>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+}
+
+/// Completion latch for one fork-join scope: counts outstanding queued
+/// tasks and stores the first panic payload for re-raising on the caller.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState {
+                remaining,
+                panic: None,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_open(&self) -> bool {
+        self.state.lock().unwrap().remaining == 0
+    }
+
+    fn wait_open(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        self.state.lock().unwrap().panic.take()
+    }
+}
+
+/// The persistent worker pool behind every `par_*` helper.
+///
+/// Threads are spawned lazily (first multi-chunk section) and capped at
+/// [`ThreadPool::capacity`]; they block on a condvar between sections, so
+/// an idle pool costs nothing. Dispatch and wall telemetry accumulate in
+/// relaxed atomics — snapshot them with [`pool_stats`].
+pub struct ThreadPool {
+    shared: PoolShared,
+    spawned: AtomicUsize,
+    capacity: usize,
+    scopes: AtomicU64,
+    tasks: AtomicU64,
+    wall_nanos: AtomicU64,
+}
+
+/// Telemetry snapshot of the global pool (see [`pool_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    /// Worker threads currently spawned (≤ the pool capacity; the
+    /// calling thread, which always participates, is not counted).
+    pub threads: usize,
+    /// Fork-join sections dispatched since process start (multi-chunk
+    /// only — single-chunk sections run inline and never touch the pool).
+    pub scopes: u64,
+    /// Total chunk closures executed across those sections, including
+    /// the one the calling thread runs inline.
+    pub tasks: u64,
+    /// Cumulative wall-clock seconds spent inside fork-join sections,
+    /// measured on the calling thread from dispatch to join.
+    pub wall_seconds: f64,
+}
+
+impl ThreadPool {
+    fn new() -> ThreadPool {
+        ThreadPool {
+            shared: PoolShared {
+                queue: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+            },
+            spawned: AtomicUsize::new(0),
+            // Enough threads for the configured worker count on this
+            // host, bounded so a wild TS_THREADS cannot fork-bomb.
+            capacity: default_threads().max(auto_threads()).min(64),
+            scopes: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+            wall_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Hard cap on pool threads (decided once at pool creation).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn ensure_workers(&'static self, wanted: usize) {
+        let target = wanted.min(self.capacity);
+        loop {
+            let cur = self.spawned.load(Ordering::Relaxed);
+            if cur >= target {
+                return;
+            }
+            if self
+                .spawned
+                .compare_exchange(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                let spawned = std::thread::Builder::new()
+                    .name(format!("ts-pool-{cur}"))
+                    .spawn(move || self.worker_loop());
+                if spawned.is_err() {
+                    // Thread creation failed (resource limits): undo the
+                    // reservation and fall back to caller-side draining —
+                    // correctness never depends on pool threads existing.
+                    self.spawned.fetch_sub(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn worker_loop(&'static self) {
+        loop {
+            let task = {
+                let mut q = self.shared.queue.lock().unwrap();
+                loop {
+                    if let Some(t) = q.pop_front() {
+                        break t;
+                    }
+                    q = self.shared.available.wait(q).unwrap();
+                }
+            };
+            // Queued tasks are latch wrappers that catch their own
+            // panics, so `task()` cannot unwind through the worker.
+            task();
+        }
+    }
+
+    /// Run every closure in `tasks` to completion before returning — the
+    /// fork-join primitive the `par_*` routers are built on. The first
+    /// closure runs inline on the calling thread; the rest go on the
+    /// shared queue, and the caller help-drains the queue (executing
+    /// whatever it pops, including tasks of nested sections) until its
+    /// own latch opens. A panic in any closure is re-raised here after
+    /// all sibling closures have finished.
+    pub fn run_scoped<'scope>(&'static self, mut tasks: Vec<ScopedTask<'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if tasks.len() == 1 {
+            (tasks.pop().unwrap())();
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        self.scopes.fetch_add(1, Ordering::Relaxed);
+        self.tasks.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+        self.ensure_workers(tasks.len() - 1);
+        let latch = Latch::new(tasks.len() - 1);
+        {
+            let latch = &latch;
+            let mut q = self.shared.queue.lock().unwrap();
+            for task in tasks.drain(1..) {
+                let wrapped: ScopedTask<'_> = Box::new(move || {
+                    let res = catch_unwind(AssertUnwindSafe(task));
+                    latch.complete(res.err());
+                });
+                // SAFETY: only the lifetime is transmuted (same layout).
+                // All borrowed state inside the wrapper is dropped
+                // before it counts the latch down, and this function
+                // does not return (so neither `'scope` nor the latch
+                // borrow ends) before waiting for exactly that.
+                let wrapped: Task =
+                    unsafe { std::mem::transmute::<ScopedTask<'_>, Task>(wrapped) };
+                q.push_back(wrapped);
+            }
+            self.shared.available.notify_all();
+        }
+        let first = tasks.pop().unwrap();
+        let first_panic = catch_unwind(AssertUnwindSafe(first)).err();
+        // Help-drain: our queued tasks are FIFO-ahead of anything newer,
+        // so once the queue is observed empty they are all executing (or
+        // done) elsewhere and blocking on the latch cannot deadlock.
+        while !latch.is_open() {
+            let task = self.shared.queue.lock().unwrap().pop_front();
+            match task {
+                Some(t) => t(),
+                None => {
+                    latch.wait_open();
+                    break;
+                }
+            }
+        }
+        let panic = latch.take_panic().or(first_panic);
+        self.wall_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+
+    fn stats(&self) -> PoolStats {
+        PoolStats {
+            threads: self.spawned.load(Ordering::Relaxed),
+            scopes: self.scopes.load(Ordering::Relaxed),
+            tasks: self.tasks.load(Ordering::Relaxed),
+            wall_seconds: self.wall_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+}
+
+/// The process-wide pool. Creation is cheap (no threads until the first
+/// multi-chunk section), so this can be called freely.
+pub fn pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::new)
+}
+
+/// Snapshot the global pool's dispatch telemetry. Counters are
+/// process-cumulative; callers wanting per-phase numbers snapshot before
+/// and after and subtract (`PathStep::kernel_par_wall_seconds` does).
+pub fn pool_stats() -> PoolStats {
+    pool().stats()
+}
+
+/// Run `f` over an explicit chunk list in parallel; returns per-chunk
+/// results in chunk order. `f` must be `Sync` (called from many threads).
+pub fn par_range_tasks<T, F>(ranges: Vec<Range<usize>>, f: F) -> Vec<T>
 where
     T: Send,
-    F: Fn(std::ops::Range<usize>) -> T + Sync,
+    F: Fn(Range<usize>) -> T + Sync,
 {
-    let ranges = split_ranges(n, workers);
     if ranges.len() <= 1 {
         return ranges.into_iter().map(&f).collect();
     }
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = ranges
-            .into_iter()
-            .map(|r| scope.spawn(|| f(r)))
+    let n = ranges.len();
+    let mut results: Vec<Option<T>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+    {
+        let fr = &f;
+        let tasks: Vec<ScopedTask<'_>> = results
+            .iter_mut()
+            .zip(ranges)
+            .map(|(slot, r)| Box::new(move || *slot = Some(fr(r))) as ScopedTask<'_>)
             .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    })
+        pool().run_scoped(tasks);
+    }
+    results
+        .into_iter()
+        .map(|o| o.expect("scoped task completed"))
+        .collect()
 }
 
-/// Parallel in-place map over disjoint mutable chunks of `out`, where chunk
-/// `c` covers rows `[ranges[c])` and the closure fills its slice.
-pub fn par_fill<T, F>(out: &mut [T], workers: usize, f: F)
+/// Run `f` over chunks of `[0, n)` in parallel; returns per-chunk results
+/// in chunk order.
+pub fn par_ranges<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
-    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+    F: Fn(Range<usize>) -> T + Sync,
 {
-    let n = out.len();
-    let ranges = split_ranges(n, workers);
+    par_range_tasks(split_ranges(n, workers), f)
+}
+
+/// Parallel in-place map over disjoint mutable chunks of `out` cut at the
+/// given boundaries; `ranges` must be contiguous from 0 and cover
+/// `out.len()` exactly (as produced by [`split_ranges`] /
+/// [`split_ranges_aligned`] / the SYRK band splitter). The closure gets
+/// each chunk's index range and its slice of `out`.
+pub fn par_fill_ranges<T, F>(out: &mut [T], ranges: Vec<Range<usize>>, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    debug_assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>(), out.len());
     if ranges.len() <= 1 {
         if let Some(r) = ranges.into_iter().next() {
-            f(r.clone(), out);
+            f(r, out);
         }
         return;
     }
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut offset = 0;
-        for r in ranges {
-            let (head, tail) = rest.split_at_mut(r.len());
-            debug_assert_eq!(offset, r.start);
-            offset += r.len();
-            let fr = &f;
-            scope.spawn(move || fr(r, head));
-            rest = tail;
-        }
-    });
+    let fr = &f;
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    for r in ranges {
+        let (head, tail) = rest.split_at_mut(r.len());
+        tasks.push(Box::new(move || fr(r, head)));
+        rest = tail;
+    }
+    pool().run_scoped(tasks);
+}
+
+/// Parallel in-place map over disjoint mutable chunks of `out`, one
+/// near-equal chunk per worker.
+pub fn par_fill<T, F>(out: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    let ranges = split_ranges(out.len(), workers);
+    par_fill_ranges(out, ranges, f);
+}
+
+/// [`par_fill`] with chunk boundaries on multiples of `align` — the
+/// variant block-structured kernels use so their block decomposition is
+/// worker-count-invariant (see [`split_ranges_aligned`]).
+pub fn par_fill_aligned<T, F>(out: &mut [T], workers: usize, align: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    let ranges = split_ranges_aligned(out.len(), workers, align);
+    par_fill_ranges(out, ranges, f);
 }
 
 /// Run `f` over fixed-size blocks of `[0, n)` in parallel, returning the
@@ -97,7 +438,7 @@ where
 pub fn par_blocks<T, F>(n: usize, block: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
-    F: Fn(std::ops::Range<usize>) -> T + Sync,
+    F: Fn(Range<usize>) -> T + Sync,
 {
     let block = block.max(1);
     let nblocks = n.div_ceil(block);
@@ -109,10 +450,11 @@ where
     per_worker.into_iter().flatten().collect()
 }
 
-/// Parallel sum-reduction of per-chunk `f` results.
+/// Parallel sum-reduction of per-chunk `f` results (summed in chunk
+/// order, so the reduction chain is worker-count-deterministic).
 pub fn par_sum<F>(n: usize, workers: usize, f: F) -> f64
 where
-    F: Fn(std::ops::Range<usize>) -> f64 + Sync,
+    F: Fn(Range<usize>) -> f64 + Sync,
 {
     par_ranges(n, workers, f).into_iter().sum()
 }
@@ -120,6 +462,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::quickcheck::forall;
 
     #[test]
     fn split_covers_range_exactly() {
@@ -138,6 +481,79 @@ mod tests {
     }
 
     #[test]
+    fn split_ranges_quickcheck_degenerate_shapes() {
+        // ISSUE 7 satellite: explicit coverage for n < workers and n = 0,
+        // randomized over both.
+        forall("split-ranges-degenerate", 128, |rng| {
+            let workers = 1 + rng.below(32);
+            let n = rng.below(workers + 1); // 0 ≤ n ≤ workers, mostly n < workers
+            let rs = split_ranges(n, workers);
+            if n == 0 {
+                if !rs.is_empty() {
+                    return Err(format!("n=0 produced {} ranges", rs.len()));
+                }
+                return Ok(());
+            }
+            if rs.len() > n {
+                return Err(format!("n={n} workers={workers}: {} ranges (> n)", rs.len()));
+            }
+            let mut next = 0;
+            for r in &rs {
+                if r.is_empty() {
+                    return Err(format!("n={n} workers={workers}: empty range {r:?}"));
+                }
+                if r.start != next {
+                    return Err(format!("gap before {r:?} (expected start {next})"));
+                }
+                next = r.end;
+            }
+            if next != n {
+                return Err(format!("coverage ends at {next}, expected {n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_aligned_boundaries_are_multiples() {
+        for (n, w, align) in [
+            (100usize, 4usize, 32usize),
+            (1003, 7, 32),
+            (31, 4, 32),
+            (0, 3, 32),
+            (64, 2, 32),
+            (65, 3, 1),
+        ] {
+            let rs = split_ranges_aligned(n, w, align);
+            let total: usize = rs.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n, "n={n} w={w} align={align}");
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next);
+                assert_eq!(r.start % align, 0, "unaligned boundary in {r:?}");
+                next = r.end;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn parse_ts_threads_is_explicit() {
+        assert_eq!(parse_ts_threads("3"), Some(3));
+        assert_eq!(parse_ts_threads(" 8 "), Some(8));
+        // 0 and empty are explicit auto-detect, not a silent clamp to 1
+        assert_eq!(parse_ts_threads("0"), None);
+        assert_eq!(parse_ts_threads(""), None);
+        assert_eq!(parse_ts_threads("  "), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "TS_THREADS must be a non-negative integer")]
+    fn parse_ts_threads_rejects_garbage() {
+        parse_ts_threads("lots");
+    }
+
+    #[test]
     fn par_sum_matches_serial() {
         let xs: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
         let serial: f64 = xs.iter().sum();
@@ -151,6 +567,20 @@ mod tests {
     fn par_fill_writes_every_cell() {
         let mut out = vec![0usize; 1003];
         par_fill(&mut out, 4, |r, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = r.start + k;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn par_fill_aligned_writes_every_cell() {
+        let mut out = vec![0usize; 1003];
+        par_fill_aligned(&mut out, 7, 32, |r, chunk| {
+            assert_eq!(r.start % 32, 0);
             for (k, v) in chunk.iter_mut().enumerate() {
                 *v = r.start + k;
             }
@@ -184,5 +614,46 @@ mod tests {
         let mut sorted = res.clone();
         sorted.sort_unstable();
         assert_eq!(res, sorted);
+    }
+
+    #[test]
+    fn pool_is_reused_across_sections() {
+        // Dispatch many multi-chunk sections: the pool must reuse its
+        // workers (threads never exceed capacity) while the scope/task
+        // counters advance — the persistent-pool contract.
+        let before = pool_stats();
+        for _ in 0..50 {
+            let s = par_sum(1000, 4, |r| r.len() as f64);
+            assert_eq!(s, 1000.0);
+        }
+        let after = pool_stats();
+        assert!(after.scopes >= before.scopes + 50);
+        assert!(after.tasks >= before.tasks + 100);
+        assert!(after.threads <= pool().capacity());
+        assert!(after.wall_seconds >= before.wall_seconds);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let caught = std::panic::catch_unwind(|| {
+            par_ranges(100, 4, |r| {
+                if r.start >= 50 {
+                    panic!("chunk {} failed", r.start);
+                }
+                r.len()
+            })
+        });
+        assert!(caught.is_err(), "panic in a pooled chunk must propagate");
+        // ... and the pool must still be usable afterwards
+        assert_eq!(par_sum(100, 4, |r| r.len() as f64), 100.0);
+    }
+
+    #[test]
+    fn nested_sections_complete() {
+        // A pooled task that itself opens a section must help-drain
+        // rather than deadlock, whatever the worker count.
+        let outer = par_ranges(8, 4, |r| par_sum(64, 3, |inner| (inner.len() * r.len()) as f64));
+        let total: f64 = outer.into_iter().sum();
+        assert_eq!(total, 8.0 * 64.0);
     }
 }

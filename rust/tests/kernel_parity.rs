@@ -13,6 +13,12 @@
 //! offline stub cannot be constructed and the cross-engine case then
 //! skips with a message, same protocol as `rust/tests/runtime_pjrt.rs`).
 //!
+//! The pooled-kernel battery additionally pins worker-count invariance:
+//! margins, SYRK, certified-f32 margins, and full solver trajectories
+//! are bitwise identical at workers ∈ {1, 2, 7} (every summation chain
+//! lives whole inside one worker's panel/band), so `--threads` can
+//! never change a screening decision either.
+//!
 //! The SIMD battery at the bottom runs this file's guarantees across the
 //! `simd` feature matrix (CI runs both `cargo test` and `cargo test
 //! --features simd`): the lane microkernels vs the lane-free scalar core
@@ -269,6 +275,118 @@ fn solver_trajectory_bitwise_identical_across_cores() {
             let bits = m_row[(i, j)].to_bits();
             assert_eq!(bits, m_db[(i, j)].to_bits(), "d-blocked trajectory split at ({i},{j})");
             assert_eq!(bits, m_sc[(i, j)].to_bits(), "scalar trajectory split at ({i},{j})");
+        }
+    }
+}
+
+/// The pooled-kernel acceptance battery: margins and the weighted SYRK
+/// must be **bitwise identical** at every worker count, for both panel
+/// geometries and both element types. Every summation chain — one
+/// margin row, one Gram cell's Σ_t — lives whole inside a single
+/// worker's panel/band, so splitting the work differently can never
+/// regroup a chain.
+#[test]
+fn kernels_bitwise_invariant_across_worker_counts() {
+    let mut rng = Pcg64::seed(61);
+    for mk in [NativeEngine::row_stream as fn(usize) -> NativeEngine, NativeEngine::d_blocked] {
+        for &d in &[19usize, 64] {
+            let n = 3 * gemm::PANEL_ROWS + 5;
+            let (m, a, b, w) = rand_inputs(&mut rng, n, d);
+            let mut ref_margins = vec![0.0; n];
+            mk(1).margins(&m, &a, &b, &mut ref_margins);
+            let ref_g = mk(1).wgram(&a, &b, &w);
+            for workers in [2usize, 7] {
+                let eng = mk(workers);
+                let mut out = vec![0.0; n];
+                eng.margins(&m, &a, &b, &mut out);
+                for t in 0..n {
+                    assert_eq!(
+                        out[t].to_bits(),
+                        ref_margins[t].to_bits(),
+                        "{} d={d} workers={workers} t={t}: margins not bitwise",
+                        eng.name()
+                    );
+                }
+                let g = eng.wgram(&a, &b, &w);
+                for i in 0..d {
+                    for j in 0..d {
+                        assert_eq!(
+                            g[(i, j)].to_bits(),
+                            ref_g[(i, j)].to_bits(),
+                            "{} d={d} workers={workers}: wgram ({i},{j}) not bitwise",
+                            eng.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Same worker-count invariance for the certified-f32 bulk margins: the
+/// f32 panel chains are PANEL_ROWS-aligned per worker, so the mixed
+/// tier's bits — and therefore every promotion decision — are
+/// independent of the worker count.
+#[test]
+fn margins_f32_bitwise_invariant_across_worker_counts() {
+    let mut rng = Pcg64::seed(67);
+    for mk in [NativeEngine::row_stream as fn(usize) -> NativeEngine, NativeEngine::d_blocked] {
+        let (n, d) = (3 * gemm::PANEL_ROWS + 5, 48);
+        let (m, a, b, _) = rand_inputs(&mut rng, n, d);
+        let run = |workers: usize| {
+            let eng = mk(workers).with_precision(PrecisionTier::MixedCertified);
+            let mut out = vec![0.0; n];
+            let mut env = vec![0.0; n];
+            assert!(eng.margins_f32(&m, &a, &b, &mut out, &mut env));
+            (
+                out.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+                env.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+            )
+        };
+        let (ref_out, ref_env) = run(1);
+        for workers in [2usize, 7] {
+            let (out, env) = run(workers);
+            assert_eq!(out, ref_out, "f32 margins bits moved at {workers} workers");
+            assert_eq!(env, ref_env, "f32 envelope bits moved at {workers} workers");
+        }
+    }
+}
+
+/// Full solver trajectories must also be worker-count-invariant: same
+/// iterate sequence, same optimum bits, whatever `--threads` says. Runs
+/// under both feature sets in CI (default and `--features simd`).
+#[test]
+fn solver_trajectory_bitwise_identical_across_worker_counts() {
+    use triplet_screen::solver::{Problem, Solver, SolverConfig};
+    let mut rng = Pcg64::seed(71);
+    let ds = synthetic::gaussian_mixture("g", 36, 6, 3, 2.5, &mut rng);
+    let store = TripletStore::from_dataset(&ds, 2, &mut rng);
+    let loss = Loss::smoothed_hinge(0.05);
+    let cfg = SolverConfig {
+        tol: 1e-8,
+        tol_relative: false,
+        ..Default::default()
+    };
+    let solve = |workers: usize| {
+        let engine = NativeEngine::new(0).with_workers(workers);
+        let lmax = Problem::lambda_max(&store, &loss, &engine);
+        let mut prob = Problem::new(&store, loss, lmax * 0.3);
+        Solver::new(cfg.clone()).solve(&mut prob, &engine, Mat::zeros(6, 6), None)
+    };
+    let (m1, st1) = solve(1);
+    assert!(st1.converged);
+    for workers in [2usize, 4, 7] {
+        let (m, st) = solve(workers);
+        assert!(st.converged);
+        assert_eq!(st.iters, st1.iters, "iteration count moved at {workers} workers");
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(
+                    m[(i, j)].to_bits(),
+                    m1[(i, j)].to_bits(),
+                    "trajectory split at ({i},{j}) with {workers} workers"
+                );
+            }
         }
     }
 }
