@@ -90,7 +90,10 @@ fn main() {
         );
     }
 
-    // eigendecomposition (the per-iteration PSD projection cost)
+    // eigendecomposition (the per-iteration PSD projection cost) and the
+    // spectral-map reconstruction it feeds: apply_spectral is a scaled
+    // rank-k update through the tiled SYRK panels (was a naive O(d³)
+    // triple loop)
     for d in [19usize, 64, 128, 200] {
         let mut rng = Pcg64::seed(1);
         let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
@@ -101,5 +104,33 @@ fn main() {
         bench.run(&format!("min_eigpair/d{d}"), None, || {
             triplet_screen::linalg::min_eigpair(&m, 1e-9, 200)
         });
+        let eig = triplet_screen::linalg::sym_eig(&m);
+        bench.run(&format!("apply_spectral/d{d}"), None, || {
+            eig.apply_spectral(|x| x.max(0.0))
+        });
+    }
+
+    // factored-backend kernels: the embedding pass Z = X·Lᵀ (one per
+    // reference compression / uncached batch) and the O(r) margin pass
+    // it enables, at the bench-gate dimension d = 768
+    {
+        use triplet_screen::linalg::gemm;
+        let (n, d) = (8192usize, 768usize);
+        let mut rng = Pcg64::seed(42);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal());
+        let workers = triplet_screen::util::parallel::default_threads();
+        for r in [16usize, 64, 256] {
+            let l = Mat::from_fn(r, d, |_, _| rng.normal());
+            let mut z = Mat::zeros(n, r);
+            bench.run(&format!("embed/d{d}/r{r}/n{n}"), Some(n as u64), || {
+                gemm::embed_parallel(&x, &l, &mut z, workers)
+            });
+            let za = z.clone();
+            let zb = z.clone();
+            let mut out = vec![0.0; n];
+            bench.run(&format!("embed_margins/r{r}/n{n}"), Some(n as u64), || {
+                gemm::embed_margins_parallel(&za, &zb, &mut out, workers)
+            });
+        }
     }
 }

@@ -44,10 +44,20 @@
 //! optimum bits at every worker count), and per-step `pool_workers` /
 //! `kernel_par_wall_seconds` telemetry.
 //!
+//! PR 8 adds the low-rank factored backend sweep (`rank_sweep`:
+//! compression, embedding and cached O(r) reference-margin walls at
+//! r ∈ {16, 64, 256} × d = 768, gated strictly below the dense
+//! d-blocked margins wall; `rank_smoke`: a telemetry-only d = 4096
+//! row), a full certificate path through `FactoredEngine` at r = d
+//! gated to reproduce the dense run's screened sets, rule-eval budget
+//! and optimum exactly (`factored_rule_evals` + the `factored_*`
+//! cache/compression counters), and the τ-ordering check on a
+//! synthetic rank-64 reference.
+//!
 //! Run: `cargo bench --bench screening` (add `-- --quick` for short runs).
 
 use triplet_screen::coordinator::experiments as exp;
-use triplet_screen::linalg::{gemm, Mat};
+use triplet_screen::linalg::{gemm, LowRankFactor, Mat};
 use triplet_screen::loss::Loss;
 use triplet_screen::prelude::*;
 use triplet_screen::screening::{bounds, l_range, r_range, rules, sdls};
@@ -605,6 +615,136 @@ fn main() {
         }
     }
 
+    // ---- PR 8: low-rank factored screening backend ----
+    // (a) kernel-level rank sweep at d = 768: one-time compression wall,
+    // the embedding pass Z = X·Lᵀ, and the *cached* O(r) reference
+    // margin pass, against the dense d-blocked margins wall on the same
+    // inputs. The reference is synthesized at generator rank 64 so the
+    // sweep crosses it: r = 16 truncates (τ > 0), r ∈ {64, 256} are
+    // lossless up to round-off.
+    let bench_workers = parallel::default_threads();
+    let gen_rank = 64usize;
+    let l_gen = Mat::from_fn(gen_rank, d768, |_, _| rng768.normal());
+    let m_psd768 = LowRankFactor::from_l(l_gen).to_dense(bench_workers);
+    let mut out_fac = vec![0.0; n768];
+    let t_dense_ref_margins =
+        time_best(&mut || dblocked_engine.margins(&m_psd768, &a768, &b768, &mut out_fac));
+    let rank_sweep_ranks: [usize; 3] = [16, 64, 256];
+    let mut rank_sweep_json: Vec<Json> = Vec::new();
+    let mut factored_walls_768: Vec<(usize, f64)> = Vec::new();
+    let mut rank_sweep_taus: Vec<f64> = Vec::new();
+    for &r in &rank_sweep_ranks {
+        let t0 = std::time::Instant::now();
+        let (factor, tau) = LowRankFactor::compress(&m_psd768, r);
+        let t_compress = t0.elapsed().as_secs_f64();
+        let t_embed = time_best(&mut || {
+            std::hint::black_box(factor.embed(&a768, bench_workers));
+        });
+        let fac_engine = FactoredEngine::new(NativeEngine::new(0), r);
+        let (m_rec, _) = fac_engine.compress_reference(m_psd768.clone());
+        // warm the embedding cache, then time the cached O(r) pass
+        fac_engine.ref_margins(&m_rec, &a768, &b768, &mut out_fac);
+        let t_fac_margins =
+            time_best(&mut || fac_engine.ref_margins(&m_rec, &a768, &b768, &mut out_fac));
+        // safety cross-check: the O(r) pass must reproduce the dense
+        // margins of the exact reconstruction it screens for
+        let mut out_dense_rec = vec![0.0; n768];
+        dblocked_engine.margins(&m_rec, &a768, &b768, &mut out_dense_rec);
+        for t in 0..n768 {
+            assert!(
+                (out_fac[t] - out_dense_rec[t]).abs() <= 1e-9 * (1.0 + out_dense_rec[t].abs()),
+                "d=768 r={r} t={t}: factored margin {} vs dense {} on the reconstruction",
+                out_fac[t],
+                out_dense_rec[t]
+            );
+        }
+        println!(
+            "rank-sweep d={d768} r={r} (n={n768}): compress {:.1}ms, embed {:.1}ms, \
+             cached factored margins {:.2}ms vs dense d-blocked {:.2}ms ({:.1}x), τ={tau:.3e}",
+            t_compress * 1e3,
+            t_embed * 1e3,
+            t_fac_margins * 1e3,
+            t_dense_ref_margins * 1e3,
+            t_dense_ref_margins / t_fac_margins
+        );
+        factored_walls_768.push((r, t_fac_margins));
+        rank_sweep_taus.push(tau);
+        rank_sweep_json.push(Json::obj(vec![
+            ("rank", Json::Num(r as f64)),
+            ("d", Json::Num(d768 as f64)),
+            ("n", Json::Num(n768 as f64)),
+            ("tau", Json::Num(tau)),
+            ("compress_wall_seconds", Json::Num(t_compress)),
+            ("embed_wall_seconds", Json::Num(t_embed)),
+            ("factored_margins_wall", Json::Num(t_fac_margins)),
+            ("dense_margins_wall", Json::Num(t_dense_ref_margins)),
+        ]));
+    }
+
+    // (b) the d = 4096 smoke row — telemetry only, no dense baseline:
+    // the dense O(d²)-per-row pass is exactly the cost the factored
+    // backend exists to avoid at this dimension.
+    let (d4k, n4k, r4k) = (4096usize, 256usize, 64usize);
+    let mut rng4k = Pcg64::seed(4096);
+    let l4k_gen = Mat::from_fn(gen_rank, d4k, |_, _| rng4k.normal());
+    let m4k = LowRankFactor::from_l(l4k_gen).to_dense(bench_workers);
+    let a4k = Mat::from_fn(n4k, d4k, |_, _| rng4k.normal());
+    let b4k = Mat::from_fn(n4k, d4k, |_, _| rng4k.normal());
+    let t0_4k = std::time::Instant::now();
+    let (factor4k, tau4k) = LowRankFactor::compress(&m4k, r4k);
+    let t_compress4k = t0_4k.elapsed().as_secs_f64();
+    let t_embed4k = time_best(&mut || {
+        std::hint::black_box(factor4k.embed(&a4k, bench_workers));
+    });
+    let za4k = factor4k.embed(&a4k, bench_workers);
+    let zb4k = factor4k.embed(&b4k, bench_workers);
+    let mut out4k = vec![0.0; n4k];
+    let t_fac4k =
+        time_best(&mut || gemm::embed_margins_parallel(&za4k, &zb4k, &mut out4k, bench_workers));
+    println!(
+        "rank-smoke d={d4k} r={r4k} (n={n4k}): compress {:.0}ms, embed {:.1}ms, \
+         factored margins {:.2}ms, τ={tau4k:.3e}",
+        t_compress4k * 1e3,
+        t_embed4k * 1e3,
+        t_fac4k * 1e3
+    );
+    let rank_smoke_json = vec![Json::obj(vec![
+        ("rank", Json::Num(r4k as f64)),
+        ("d", Json::Num(d4k as f64)),
+        ("n", Json::Num(n4k as f64)),
+        ("tau", Json::Num(tau4k)),
+        ("compress_wall_seconds", Json::Num(t_compress4k)),
+        ("embed_wall_seconds", Json::Num(t_embed4k)),
+        ("factored_margins_wall", Json::Num(t_fac4k)),
+    ])];
+    drop((za4k, zb4k, m4k, factor4k, a4k, b4k));
+
+    // (c) the full certificate pipeline through the factored backend at
+    // r = d = 64: decision parity with the dense run is the tentpole
+    // gate (identical screened sets and rule-eval counts at every λ).
+    let factored_engine64 = FactoredEngine::new(NativeEngine::new(0), store64.d);
+    let p64_fact = {
+        let mut sc = ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere);
+        sc.use_frame_certs = true;
+        let cfg = PathConfig {
+            rho: 0.9,
+            max_steps: if quick { 6 } else { 10 },
+            solver: SolverConfig {
+                tol: 1e-5,
+                ..Default::default()
+            },
+            screening: Some(sc),
+            range_screening: true,
+            range_general: true,
+            ..Default::default()
+        };
+        RegPath::new(cfg).run(&store64, &factored_engine64)
+    };
+    let p64_fact_stats = p64_fact.screening_stats.clone().unwrap_or_default();
+    let fac_tel = factored_engine64
+        .factored_telemetry()
+        .expect("factored engine reports telemetry");
+
     // ---- pipeline telemetry: PR 1-equivalent vs certificate frame ----
     // Four paths on the same store: naive (no screening, the optimum
     // oracle), the PR 1 pipeline (workset + memo, frame certificates
@@ -857,6 +997,42 @@ fn main() {
         ),
         ("pool_dispatch_wall_seconds", Json::Num(t_pool_dispatch)),
         ("spawn_dispatch_wall_seconds", Json::Num(t_spawn_dispatch)),
+        ("rank", Json::Num(store64.d as f64)),
+        ("rank_sweep", Json::Arr(rank_sweep_json)),
+        ("rank_smoke", Json::Arr(rank_smoke_json)),
+        (
+            "dense_ref_margins_wall_d768",
+            Json::Num(t_dense_ref_margins),
+        ),
+        (
+            "factored_rule_evals",
+            Json::Num(p64_fact_stats.rule_evals as f64),
+        ),
+        (
+            "factored_path_wall_seconds",
+            Json::Num(p64_fact.total_wall),
+        ),
+        (
+            "factored_compressions",
+            Json::Num(fac_tel.compressions as f64),
+        ),
+        (
+            "factored_embed_passes",
+            Json::Num(fac_tel.embed_passes as f64),
+        ),
+        (
+            "factored_embed_cache_hits",
+            Json::Num(fac_tel.embed_cache_hits as f64),
+        ),
+        (
+            "factored_rows_served",
+            Json::Num(fac_tel.factored_rows as f64),
+        ),
+        (
+            "factored_dense_fallback_rows",
+            Json::Num(fac_tel.dense_fallback_rows as f64),
+        ),
+        ("factored_last_tau", Json::Num(fac_tel.last_tau)),
     ]);
     println!("\nscreening-path telemetry (JSON):");
     println!("{}", doc.to_string_compact());
@@ -1072,6 +1248,62 @@ fn main() {
         "pool dispatch regression: {:.2}µs per section >= spawn baseline {:.2}µs",
         t_pool_dispatch * 1e6,
         t_spawn_dispatch * 1e6
+    );
+    // ---- PR 8 acceptance: factored screening backend ----
+    // the cached O(r) reference margin pass must be STRICTLY below the
+    // dense d-blocked wall at d = 768 for every sweep rank — the whole
+    // point of the backend. No noise allowance: the factored pass does
+    // O(n·r) arithmetic against the dense core's O(n·d²), a ≥ 3-decade
+    // flop gap that no scheduler jitter can close.
+    for &(r, t_fac) in &factored_walls_768 {
+        assert!(
+            t_fac < t_dense_ref_margins,
+            "factored regression at d=768 r={r}: cached factored margins {t_fac:.5}s \
+             not strictly below dense d-blocked {t_dense_ref_margins:.5}s"
+        );
+    }
+    // truncating below the generator rank must cost accuracy (τ > 0 at
+    // r = 16) and covering it must not (τ collapses to round-off at
+    // r = 64 ≥ rank(M))
+    assert!(
+        rank_sweep_taus[0] > rank_sweep_taus[1],
+        "compression telemetry inverted: τ(r=16) = {} <= τ(r=64) = {} on a rank-64 reference",
+        rank_sweep_taus[0],
+        rank_sweep_taus[1]
+    );
+    // at r = d the factored backend must make the SAME decisions as the
+    // dense run: same λ grid, same screened sets, same rule-eval budget
+    // step for step — the compression is exact, so its ε-inflation is
+    // the fp envelope and no certificate can flip
+    assert_eq!(
+        p64_fact.steps.len(),
+        p64_gen.steps.len(),
+        "factored backend at r = d walked a different λ grid"
+    );
+    for (a, b) in p64_fact.steps.iter().zip(&p64_gen.steps) {
+        assert_eq!(
+            (a.screened_l, a.screened_r, a.range_screened, a.rule_evals),
+            (b.screened_l, b.screened_r, b.range_screened, b.rule_evals),
+            "factored backend at r = d changed the screened set at λ={}",
+            b.lambda
+        );
+    }
+    assert_eq!(
+        p64_fact_stats.rule_evals, p64_gen_stats.rule_evals,
+        "factored backend at r = d changed the rule-eval budget"
+    );
+    let fact_diff = p64_fact.m_final.sub(&p64_gen.m_final).max_abs();
+    assert!(
+        fact_diff < 1e-6,
+        "factored backend at r = d moved the optimum: max |ΔM| = {fact_diff:.3e}"
+    );
+    // the factored lanes actually carried traffic (the gate above would
+    // pass vacuously if every row silently fell back to dense kernels)
+    assert!(
+        fac_tel.compressions > 0 && fac_tel.factored_rows > 0,
+        "factored path served no factored rows (compressions = {}, rows = {})",
+        fac_tel.compressions,
+        fac_tel.factored_rows
     );
 
     // ---- satellite: bench-schema conformance (the doc cannot rot) ----

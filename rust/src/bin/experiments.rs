@@ -4,8 +4,13 @@
 //!   `table5|rangestudy|perf|all>`
 //!   [--dataset NAME] [--engine native|native-scalar|pjrt]
 //!   [--kernel-core auto|row-stream|d-blocked|scalar] [--d-threshold N]
-//!   [--precision f64|mixed] [--scale F] [--trials N] [--seed N]
-//!   [--tol F] [--verbose]
+//!   [--precision f64|mixed] [--rank R] [--scale F] [--trials N]
+//!   [--seed N] [--tol F] [--verbose]
+//!
+//! `--rank R` wraps the native engine in the rank-R factored screening
+//! backend (reference margins/norms in O(R) per row; the exact
+//! compression error is folded into each frame's ε, so screening stays
+//! safe for the dense problem).
 //!
 //! Outputs are printed as markdown and persisted under `reports/`.
 //! See DESIGN.md §5 for the experiment index and EXPERIMENTS.md for the
@@ -15,11 +20,19 @@
 
 use triplet_screen::coordinator::experiments as exp;
 use triplet_screen::prelude::*;
-use triplet_screen::runtime::KernelCore;
+use triplet_screen::runtime::{parse_rank, FactoredEngine, KernelCore};
 use triplet_screen::util::cli::Args;
+
+fn maybe_factored(inner: NativeEngine, rank: Option<usize>) -> Box<dyn Engine> {
+    match rank {
+        Some(r) => Box::new(FactoredEngine::new(inner, r)),
+        None => Box::new(inner),
+    }
+}
 
 fn make_engine(args: &Args) -> Box<dyn Engine> {
     let threads = args.get_usize("threads", 0);
+    let rank = args.get("rank").and_then(parse_rank);
     match args.get_or("engine", "native") {
         "native" => {
             let core = args.get("kernel-core").map(KernelCore::parse_cli);
@@ -27,12 +40,22 @@ fn make_engine(args: &Args) -> Box<dyn Engine> {
                 .get("d-threshold")
                 .map(|s| s.parse().expect("--d-threshold expects an integer"));
             let precision = args.get("precision").map(PrecisionTier::parse_cli);
-            Box::new(NativeEngine::from_options(threads, core, threshold, precision))
+            maybe_factored(
+                NativeEngine::from_options(threads, core, threshold, precision),
+                rank,
+            )
         }
-        "native-scalar" => Box::new(NativeEngine::scalar(threads)),
-        "pjrt" => Box::new(
-            PjrtEngine::from_default_dir().expect("loading PJRT artifacts (run `make artifacts`)"),
-        ),
+        "native-scalar" => maybe_factored(NativeEngine::scalar(threads), rank),
+        "pjrt" => {
+            assert!(
+                rank.is_none(),
+                "--rank wraps the native engines; it is not supported with --engine pjrt"
+            );
+            Box::new(
+                PjrtEngine::from_default_dir()
+                    .expect("loading PJRT artifacts (run `make artifacts`)"),
+            )
+        }
         other => panic!("unknown engine {other:?}"),
     }
 }

@@ -78,7 +78,7 @@ pub mod prelude {
     pub use crate::linalg::Mat;
     pub use crate::loss::Loss;
     pub use crate::path::{PathConfig, RegPath, TripletSource};
-    pub use crate::runtime::{Engine, NativeEngine, PjrtEngine, PrecisionTier};
+    pub use crate::runtime::{Engine, FactoredEngine, NativeEngine, PjrtEngine, PrecisionTier};
     pub use crate::screening::{BoundKind, RuleKind, ScreeningConfig};
     pub use crate::solver::{Solver, SolverConfig};
     pub use crate::triplet::{MiningStrategy, TripletMiner, TripletStore};

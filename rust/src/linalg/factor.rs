@@ -1,0 +1,349 @@
+//! Low-rank factor `M̃ = LᵀL` — the representation behind the factored
+//! screening backend.
+//!
+//! *Metric Learning in an RKHS* (PAPERS.md) motivates the regime: for
+//! very high d the learned metric is naturally low-rank, `M = LᵀL` with
+//! `L` an r×d factor, r ≪ d. Everything the screening rules consume is
+//! then cheap in factored form:
+//!
+//! - **margins**: `⟨LᵀL, H_t⟩ = ‖L a_t‖² − ‖L b_t‖²` — O(r) per triplet
+//!   after the O(n·d·r) embedding `Z = X·Lᵀ` ([`gemm::embed_into`]),
+//!   against the O(d²)-amortized dense GEMM;
+//! - **norms**: `‖LᵀL‖_F = ‖L Lᵀ‖_F` (cyclic trace:
+//!   `tr(LᵀLLᵀL) = tr((LLᵀ)²)`), so the Frobenius scalar every sphere
+//!   bound needs comes from the r×r Gram `G = L Lᵀ` — O(r²·d) once,
+//!   O(r²) per query, never a d×d object.
+//!
+//! [`LowRankFactor::compress`] builds the factor from a dense reference
+//! with an **exact** approximation error: the screening layer treats the
+//! truncated reference `M̃` as just another approximate reference under
+//! the paper's Theorem 3.10 — `‖M̃ − M*‖ ≤ ε + τ` with
+//! `τ = ‖M̃ − M‖_F` — so factored screening stays *safe for the true
+//! dense problem* by inflating the reference-ball radius by τ (see
+//! `runtime/factored.rs`). At r = d the compression keeps the whole
+//! (PSD part of the) spectrum, τ is round-off, and factored decisions
+//! match dense decisions exactly; at r < d τ is the exactly-known tail
+//! mass `√(‖M‖²_F − ‖S_B‖²_F)`.
+
+use super::{gemm, sym_eig, Mat};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone version counter distinguishing factor instances (the
+/// embedding cache keys on it — see `runtime/factored.rs`).
+static FACTOR_VERSION: AtomicU64 = AtomicU64::new(0);
+
+/// Fixed seed of the randomized range finder: compression must be a
+/// pure function of `(M, r)` so repeated frame builds (and replays of
+/// the same λ-path) reconstruct bit-identical factors.
+const RANGE_FINDER_SEED: u64 = 0xFAC7_0EED_5EED_0001;
+
+/// A rank-r factor `L` (stored r×d) of a symmetric PSD approximation
+/// `M̃ = LᵀL`, with its r×r Gram `G = L Lᵀ` and Frobenius norm cached.
+#[derive(Clone, Debug)]
+pub struct LowRankFactor {
+    l: Mat,
+    gram: Mat,
+    norm: f64,
+    version: u64,
+}
+
+impl LowRankFactor {
+    /// Wrap an explicit r×d factor, caching its Gram and norm.
+    pub fn from_l(l: Mat) -> LowRankFactor {
+        let gram = row_gram(&l);
+        let norm = gram.norm();
+        LowRankFactor {
+            l,
+            gram,
+            norm,
+            version: FACTOR_VERSION.fetch_add(1, Ordering::Relaxed) + 1,
+        }
+    }
+
+    /// Compress a symmetric d×d reference to rank `r`, returning the
+    /// factor and the **exact** approximation error
+    /// `τ = ‖M − LᵀL‖_F` (plus a deterministic floating-point envelope
+    /// `2d·ε_machine·‖M‖_F` covering the round-off of the error
+    /// accounting itself).
+    ///
+    /// - `r = d`: direct eigendecomposition; `L = Λ₊^{1/2}Vᵀ` keeps the
+    ///   whole PSD part, `τ² = Σ_{λ<0} λ²` exactly (≈ 0 for the PSD
+    ///   references the solver produces).
+    /// - `r < d`: seeded randomized range finder (one power iteration,
+    ///   twice-reorthogonalized Gram–Schmidt), then the PSD part of the
+    ///   small projected matrix `B = QᵀMQ`; `τ² = ‖M‖²_F − ‖S_B‖²_F`
+    ///   by the Pythagorean split `⟨M, QS_BQᵀ⟩ = ‖S_B‖²_F`.
+    ///
+    /// Panics if `r = 0` or `r > d` — callers validate user input first
+    /// (see `runtime/factored.rs` `parse_rank`).
+    pub fn compress(m: &Mat, r: usize) -> (LowRankFactor, f64) {
+        assert!(m.is_square(), "compress needs a square reference");
+        let d = m.rows();
+        assert!(r >= 1, "rank must be at least 1");
+        assert!(r <= d, "rank {r} exceeds the feature dimension {d}");
+        let m_norm = m.norm();
+        let fp_envelope = 2.0 * d as f64 * f64::EPSILON * m_norm;
+        if r == d {
+            // exact path: spectral split, keep the PSD part whole
+            let e = sym_eig(m);
+            let l = Mat::from_fn(d, d, |k, i| {
+                e.values[k].max(0.0).sqrt() * e.vectors[(i, k)]
+            });
+            let tail_sq: f64 = e
+                .values
+                .iter()
+                .map(|&v| v.min(0.0) * v.min(0.0))
+                .sum();
+            return (LowRankFactor::from_l(l), tail_sq.sqrt() + fp_envelope);
+        }
+        // randomized range finder, row form (rows are candidate
+        // directions): P₁ = ΩᵀM, Q₁ = orth(P₁); one power iteration
+        // P₂ = Q₁M, Q = orth(P₂) — M is symmetric, so row- and
+        // column-space sketches coincide.
+        let mut rng =
+            crate::util::rng::Pcg64::seed(RANGE_FINDER_SEED ^ ((d as u64) << 16) ^ (r as u64));
+        let omega_t = Mat::from_fn(r, d, |_, _| rng.normal());
+        let mut q = omega_t.matmul(m);
+        orthonormalize_rows(&mut q);
+        let mut q2 = q.matmul(m);
+        orthonormalize_rows(&mut q2);
+        let q = q2;
+        // B = QᵀMQ in row form: T = Q·M (r×d), B = T·Qᵀ (r×r)
+        let t = q.matmul(m);
+        let mut b = t.matmul(&q.transpose());
+        b.symmetrize();
+        let eb = sym_eig(&b);
+        // PSD part S_B = WΘ₊Wᵀ; factor rows l_k = √θ_k·(w_kᵀQ)
+        let wq = eb.vectors.transpose().matmul(&q);
+        let l = Mat::from_fn(r, d, |k, i| eb.values[k].max(0.0).sqrt() * wq[(k, i)]);
+        let kept_sq: f64 = eb
+            .values
+            .iter()
+            .map(|&v| v.max(0.0) * v.max(0.0))
+            .sum();
+        let tau = (m.norm_sq() - kept_sq).max(0.0).sqrt() + fp_envelope;
+        (LowRankFactor::from_l(l), tau)
+    }
+
+    /// The factor rows (r×d).
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// The cached r×r Gram `G = L Lᵀ`.
+    pub fn gram(&self) -> &Mat {
+        &self.gram
+    }
+
+    /// `‖M̃‖_F = ‖G‖_F` — the O(r²)-per-query norm scalar the sphere
+    /// bounds consume (never recomputed from any d×d object).
+    pub fn norm(&self) -> f64 {
+        self.norm
+    }
+
+    /// Factor rank r (rows of `L`).
+    pub fn rank(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// Ambient feature dimension d (columns of `L`).
+    pub fn dim(&self) -> usize {
+        self.l.cols()
+    }
+
+    /// Monotone instance id — embedding caches key on it.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Embed `n` data rows: `Z = X·Lᵀ` (n×r), through the pool-parallel
+    /// panel GEMM (bitwise worker-invariant).
+    pub fn embed(&self, x: &Mat, workers: usize) -> Mat {
+        let mut z = Mat::zeros(x.rows(), self.rank());
+        gemm::embed_parallel(x, &self.l, &mut z, workers);
+        z
+    }
+
+    /// Reconstruct the dense `M̃ = LᵀL = Σ_k l_k l_kᵀ` through the
+    /// single-sided SYRK (upper triangle + mirror — bitwise symmetric,
+    /// bitwise worker-invariant).
+    pub fn to_dense(&self, workers: usize) -> Mat {
+        let (r, d) = (self.rank(), self.dim());
+        let mut out = Mat::zeros(d, d);
+        let w = vec![1.0; r];
+        gemm::ssyrk_upper_parallel(&mut out, &self.l, 0..r, &w, workers);
+        gemm::mirror_upper(&mut out);
+        out
+    }
+}
+
+/// Row Gram `G = L Lᵀ` (r×r): each cell one whole [`gemm::dot`] chain,
+/// upper triangle + mirror. O(r²·d) — once per factor.
+fn row_gram(l: &Mat) -> Mat {
+    let r = l.rows();
+    let mut g = Mat::zeros(r, r);
+    for i in 0..r {
+        for j in i..r {
+            g[(i, j)] = gemm::dot(l.row(i), l.row(j));
+        }
+    }
+    gemm::mirror_upper(&mut g);
+    g
+}
+
+/// Twice-through modified Gram–Schmidt over the *rows* of `q`:
+/// orthonormal rows on exit (rows that vanish under projection are
+/// zeroed — harmless for the range finder, their spectral weight is 0).
+fn orthonormalize_rows(q: &mut Mat) {
+    let (r, d) = (q.rows(), q.cols());
+    for _pass in 0..2 {
+        for i in 0..r {
+            for j in 0..i {
+                let c = gemm::dot(q.row(i), q.row(j));
+                if c != 0.0 {
+                    for u in 0..d {
+                        q[(i, u)] -= c * q[(j, u)];
+                    }
+                }
+            }
+            let nrm = gemm::dot(q.row(i), q.row(i)).sqrt();
+            if nrm > 1e-300 {
+                for u in 0..d {
+                    q[(i, u)] /= nrm;
+                }
+            } else {
+                for u in 0..d {
+                    q[(i, u)] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{close, forall};
+    use crate::util::rng::Pcg64;
+
+    fn rand_psd(rng: &mut Pcg64, d: usize, rank: usize) -> Mat {
+        // Σ of `rank` random outer products — PSD with known rank
+        let mut m = Mat::zeros(d, d);
+        for _ in 0..rank {
+            let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            m.axpy(1.0, &Mat::outer(&v));
+        }
+        m
+    }
+
+    #[test]
+    fn gram_norm_matches_dense_norm() {
+        forall("factor-norm-identity", 16, |rng| {
+            let d = 1 + rng.below(20);
+            let r = 1 + rng.below(d);
+            let l = Mat::from_fn(r, d, |_, _| rng.normal());
+            let f = LowRankFactor::from_l(l);
+            let dense = f.to_dense(1);
+            close(f.norm(), dense.norm(), 1e-10, 1e-10, "‖G‖_F vs ‖LᵀL‖_F")
+        });
+    }
+
+    #[test]
+    fn compress_tau_is_exact_frobenius_error() {
+        forall("factor-tau-exact", 12, |rng| {
+            let d = 4 + rng.below(16);
+            let r = 1 + rng.below(d - 1); // strictly r < d
+            let m = rand_psd(rng, d, 2 + rng.below(d));
+            let (f, tau) = LowRankFactor::compress(&m, r);
+            assert_eq!(f.rank(), r);
+            let err = m.sub(&f.to_dense(1)).norm();
+            // τ = exact error up to round-off (the √ of a difference of
+            // squared norms cancels to ~√ε_machine·‖M‖ when the tail is
+            // tiny, hence the absolute term)
+            close(tau, err, 1e-6, 1e-7 * (1.0 + m.norm()), "τ vs ‖M − M̃‖_F")
+        });
+    }
+
+    #[test]
+    fn compress_full_rank_is_lossless_on_psd() {
+        forall("factor-full-rank", 12, |rng| {
+            let d = 1 + rng.below(14);
+            let m = rand_psd(rng, d, d + 2);
+            let (f, tau) = LowRankFactor::compress(&m, d);
+            let err = m.sub(&f.to_dense(1)).max_abs();
+            close(err, 0.0, 0.0, 1e-9 * (1.0 + m.max_abs()), "r = d reconstruction")?;
+            // τ collapses to the fp envelope on a PSD reference
+            if tau > 1e-9 * (1.0 + m.norm()) {
+                return Err(format!("τ = {tau} not tiny at r = d on PSD input"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compress_captures_low_rank_exactly() {
+        // a reference of true rank k is reproduced by any r ≥ k sketch
+        let mut rng = Pcg64::seed(7);
+        let (d, k) = (24usize, 3usize);
+        let m = rand_psd(&mut rng, d, k);
+        let (f, tau) = LowRankFactor::compress(&m, 8);
+        let err = m.sub(&f.to_dense(1)).norm();
+        assert!(err < 1e-8 * m.norm(), "rank-{k} input not captured: {err}");
+        assert!(tau < 1e-7 * m.norm(), "τ = {tau} should be near zero");
+    }
+
+    #[test]
+    fn compress_is_deterministic() {
+        let mut rng = Pcg64::seed(9);
+        let m = rand_psd(&mut rng, 17, 6);
+        let (f1, t1) = LowRankFactor::compress(&m, 5);
+        let (f2, t2) = LowRankFactor::compress(&m, 5);
+        assert_eq!(t1.to_bits(), t2.to_bits());
+        for (a, b) in f1.l().as_slice().iter().zip(f2.l().as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "range finder not deterministic");
+        }
+    }
+
+    #[test]
+    fn embed_margins_match_dense_quad_forms() {
+        forall("factor-embed-margins", 12, |rng| {
+            let d = 2 + rng.below(16);
+            let r = 1 + rng.below(d);
+            let n = 1 + rng.below(50);
+            let l = Mat::from_fn(r, d, |_, _| rng.normal());
+            let f = LowRankFactor::from_l(l);
+            let dense = f.to_dense(1);
+            let a = Mat::from_fn(n, d, |_, _| rng.normal());
+            let b = Mat::from_fn(n, d, |_, _| rng.normal());
+            let (za, zb) = (f.embed(&a, 1), f.embed(&b, 1));
+            let mut out = vec![0.0; n];
+            gemm::embed_margins_into(&za, &zb, 0..n, &mut out);
+            for t in 0..n {
+                let want = dense.quad_form(a.row(t)) - dense.quad_form(b.row(t));
+                close(out[t], want, 1e-9, 1e-9 * (1.0 + want.abs()), "factored margin")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "rank must be at least 1")]
+    fn compress_rejects_rank_zero() {
+        let m = Mat::identity(4);
+        let _ = LowRankFactor::compress(&m, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the feature dimension")]
+    fn compress_rejects_rank_above_dim() {
+        let m = Mat::identity(4);
+        let _ = LowRankFactor::compress(&m, 5);
+    }
+
+    #[test]
+    fn versions_are_distinct() {
+        let f1 = LowRankFactor::from_l(Mat::identity(3));
+        let f2 = LowRankFactor::from_l(Mat::identity(3));
+        assert_ne!(f1.version(), f2.version());
+    }
+}

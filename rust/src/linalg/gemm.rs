@@ -83,6 +83,20 @@
 //! or a screening decision (unit tests here assert `==`, not a
 //! tolerance).
 //!
+//! **Factored kernels** ([`embed_into`], [`embed_margins_into`],
+//! [`ssyrk_upper`]): the low-rank backend (`M = LᵀL`, `L` stored r×d —
+//! see [`crate::linalg::LowRankFactor`]) needs three more primitives:
+//! the embedding GEMM `Z = X·Lᵀ` (panel-tiled like the margins kernel,
+//! each factor row reused [`PANEL_ROWS`] times from L1), the O(r)
+//! norm-difference margins `‖z_a‖² − ‖z_b‖²` over cached embeddings,
+//! and a *single-sided* scaled SYRK `G += Σ_k w_k·v_k v_kᵀ` (upper
+//! triangle + [`mirror_upper`], the same half-FLOP geometry as
+//! [`wsyrk_upper`]) used for factor reconstruction and
+//! `SymEig::apply_spectral`. Every output cell of the embed and
+//! embed-margins kernels is one whole [`dot`] chain and the scaled SYRK
+//! parallelizes by the same [`syrk_bands`] row bands, so all three are
+//! bitwise worker-invariant like the dense kernels.
+//!
 //! The same tile geometry is mirrored by the PJRT grid: the Pallas
 //! kernels dispatch row-blocks with per-block accumulators (and, for
 //! high d, feature-dimension blocks), so native-vs-PJRT comparisons
@@ -845,6 +859,193 @@ pub fn mirror_upper(g: &mut Mat) {
     }
 }
 
+/// FLOPs of one embedding pass `Z = X·Lᵀ` over `n` rows at rank `r`:
+/// one length-d dot (2d FLOPs) per (data row, factor row) pair. Compare
+/// with [`margins_flops`]: the factored reference pass costs
+/// `2·embed_flops + O(n·r)` against the dense pass's `4·n·d²` — the
+/// r/d-fold saving the low-rank backend exists for.
+pub fn embed_flops(n: usize, d: usize, r: usize) -> f64 {
+    2.0 * n as f64 * d as f64 * r as f64
+}
+
+/// Lane-split dot product `Σ_u x[u]·y[u]` with exactly the microkernels'
+/// summation chains (lane membership by global index mod [`LANES`],
+/// fixed left-to-right lane reduction). One call owns the entire
+/// accumulation chain of its result, so any row partition of a caller's
+/// output built from whole `dot` calls is bitwise worker-invariant —
+/// the contract the factored embed/margins kernels below rely on.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    let mut lanes = [0.0; LANES];
+    dot_into_lanes(x, y, 0, &mut lanes);
+    reduce_lanes(&lanes)
+}
+
+/// Panel-tiled embedding GEMM `Z = X·Lᵀ`: for every data row `t` in
+/// `rows` and factor row `k`, `out[(t − rows.start)·r + k] = ⟨x_t, l_k⟩`
+/// (`out` is row-major `rows.len() × r`). Rows of `x` are processed in
+/// [`PANEL_ROWS`] panels with `l` streamed row-by-row, so each loaded
+/// factor row is reused PANEL_ROWS times from L1 — the margins kernel's
+/// geometry with `L` in the role of `M`. Every output cell is one whole
+/// [`dot`] chain: cutting `rows` anywhere reassembles bitwise.
+///
+/// ```
+/// use triplet_screen::linalg::{gemm, Mat};
+///
+/// let x = Mat::from_rows(2, 3, vec![1.0, 2.0, 0.0, 0.0, 1.0, 1.0]);
+/// let l = Mat::from_rows(1, 3, vec![3.0, 0.0, 4.0]); // r = 1
+/// let mut z = vec![0.0; 2];
+/// gemm::embed_into(&x, &l, 0..2, &mut z);
+/// assert_eq!(z, vec![3.0, 4.0]);
+/// ```
+pub fn embed_into(x: &Mat, l: &Mat, rows: std::ops::Range<usize>, out: &mut [f64]) {
+    let d = x.cols();
+    let r = l.rows();
+    debug_assert_eq!(l.cols(), d);
+    debug_assert!(x.rows() >= rows.end);
+    debug_assert_eq!(out.len(), rows.len() * r);
+    let mut p0 = rows.start;
+    while p0 < rows.end {
+        let pr = PANEL_ROWS.min(rows.end - p0);
+        for k in 0..r {
+            let lrow = l.row(k);
+            for t in 0..pr {
+                out[(p0 - rows.start + t) * r + k] = dot(x.row(p0 + t), lrow);
+            }
+        }
+        p0 += pr;
+    }
+}
+
+/// Pool-parallel [`embed_into`] filling the full `z = x·lᵀ` (n × r):
+/// rows are split into [`PANEL_ROWS`]-aligned chunks, one per worker,
+/// so the panel decomposition — and with it every bit of `z` — is
+/// identical at any worker count.
+pub fn embed_parallel(x: &Mat, l: &Mat, z: &mut Mat, workers: usize) {
+    let r = l.rows();
+    debug_assert_eq!((z.rows(), z.cols()), (x.rows(), r));
+    if r == 0 {
+        return;
+    }
+    crate::util::parallel::par_fill_aligned(
+        z.as_mut_slice(),
+        workers,
+        PANEL_ROWS * r,
+        |range, chunk| embed_into(x, l, range.start / r..range.end / r, chunk),
+    );
+}
+
+/// Factored margins from cached embeddings: `out[k] = ‖za_t‖² − ‖zb_t‖²`
+/// for every row `t` in `rows` — the O(r) form of the triplet margin,
+/// since `⟨LᵀL, H_t⟩ = ‖L a_t‖² − ‖L b_t‖²`. Each row's two norm dots
+/// are whole [`dot`] chains, so any row partition is bitwise
+/// worker-invariant.
+pub fn embed_margins_into(za: &Mat, zb: &Mat, rows: std::ops::Range<usize>, out: &mut [f64]) {
+    debug_assert_eq!(za.cols(), zb.cols());
+    debug_assert!(za.rows() >= rows.end);
+    debug_assert!(zb.rows() >= rows.end);
+    debug_assert_eq!(out.len(), rows.len());
+    for (k, t) in rows.enumerate() {
+        let (ra, rb) = (za.row(t), zb.row(t));
+        out[k] = dot(ra, ra) - dot(rb, rb);
+    }
+}
+
+/// Pool-parallel [`embed_margins_into`]: plain row split (each margin is
+/// an independent pair of [`dot`] chains, so no alignment is needed for
+/// worker invariance).
+pub fn embed_margins_parallel(za: &Mat, zb: &Mat, out: &mut [f64], workers: usize) {
+    crate::util::parallel::par_fill(out, workers, |range, chunk| {
+        embed_margins_into(za, zb, range, chunk)
+    });
+}
+
+/// One horizontal band of the single-sided scaled SYRK `G += Σ_k
+/// w[k]·v_k v_kᵀ` over the rows `v_k` of `v` (row-major, `d` columns):
+/// upper-triangle cells of Gram rows `band` only, into a band-local
+/// buffer `g` of `band.len() · d` elements (cell `(i, j)` at
+/// `(i − band.start)·d + j`), exactly the [`wsyrk_upper_band_g`] layout.
+/// Zero weights are skipped (the `f(λ) = 0` shortcut of
+/// `SymEig::apply_spectral`); each cell's `Σ_k` chain lives whole inside
+/// one band with `k` ascending, so any row partition reassembles
+/// bitwise.
+pub fn ssyrk_upper_band_g<E: Elem>(
+    g: &mut [E],
+    d: usize,
+    v: &[E],
+    rows: std::ops::Range<usize>,
+    w: &[E],
+    band: std::ops::Range<usize>,
+) {
+    debug_assert_eq!(g.len(), band.len() * d);
+    debug_assert!(band.end <= d);
+    debug_assert!(v.len() >= rows.end * d);
+    debug_assert_eq!(w.len(), rows.len());
+    for (k, t) in rows.enumerate() {
+        let wt = w[k];
+        if wt == E::ZERO {
+            continue;
+        }
+        let rv = &v[t * d..(t + 1) * d];
+        for i in band.clone() {
+            let wvi = wt * rv[i];
+            let row0 = (i - band.start) * d;
+            axpy_mk(&mut g[row0 + i..row0 + d], wvi, &rv[i..]);
+        }
+    }
+}
+
+/// Single-sided scaled SYRK, upper triangle: `G[i][j] += Σ_k
+/// w[k]·v_k[i]·v_k[j]` for `j ≥ i` — half the FLOPs of the rank-1
+/// reference, like [`wsyrk_upper`]. Call [`mirror_upper`] once after.
+///
+/// ```
+/// use triplet_screen::linalg::{gemm, Mat};
+///
+/// let v = Mat::from_rows(1, 2, vec![1.0, 2.0]);
+/// let mut g = Mat::zeros(2, 2);
+/// gemm::ssyrk_upper(&mut g, &v, 0..1, &[2.0]);
+/// gemm::mirror_upper(&mut g);
+/// // 2·v·vᵀ = [[2,4],[4,8]]
+/// assert_eq!((g[(0, 0)], g[(0, 1)], g[(1, 0)], g[(1, 1)]), (2.0, 4.0, 4.0, 8.0));
+/// ```
+pub fn ssyrk_upper(g: &mut Mat, v: &Mat, rows: std::ops::Range<usize>, w: &[f64]) {
+    let d = v.cols();
+    debug_assert_eq!((g.rows(), g.cols()), (d, d));
+    ssyrk_upper_band_g(g.as_mut_slice(), d, v.as_slice(), rows, w, 0..d);
+}
+
+/// Band-parallel [`ssyrk_upper`]: [`syrk_bands`] rows per pool worker,
+/// each accumulating its disjoint row slice outright — whole `Σ_k`
+/// chains per worker, so the output is **bitwise identical** to the
+/// serial kernel at any worker count.
+pub fn ssyrk_upper_parallel(
+    g: &mut Mat,
+    v: &Mat,
+    rows: std::ops::Range<usize>,
+    w: &[f64],
+    workers: usize,
+) {
+    let d = v.cols();
+    debug_assert_eq!((g.rows(), g.cols()), (d, d));
+    let bands = syrk_bands(d, workers);
+    if bands.len() <= 1 {
+        ssyrk_upper(g, v, rows, w);
+        return;
+    }
+    let elems: Vec<std::ops::Range<usize>> =
+        bands.iter().map(|bd| bd.start * d..bd.end * d).collect();
+    crate::util::parallel::par_fill_ranges(g.as_mut_slice(), elems, |er, chunk| {
+        ssyrk_upper_band_g(
+            chunk,
+            d,
+            v.as_slice(),
+            rows.clone(),
+            w,
+            er.start / d..er.end / d,
+        );
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1150,5 +1351,153 @@ mod tests {
         assert!(wgram_flops(100, 64) < 0.6 * full);
         // margins dominated by 4·n·d²
         assert!((margins_flops(1, 100) - (4.0 * 100.0 * 100.0 + 4.0 * 100.0)).abs() < 1e-9);
+        // one embed pass at r = d is half a margins pass (one GEMM, no dot)
+        assert!((embed_flops(10, 64, 16) - 2.0 * 10.0 * 64.0 * 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_matches_scalar_sum() {
+        forall("gemm-dot", 16, |rng| {
+            let n = rng.below(70);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            close(dot(&x, &y), want, 1e-12, 1e-12, "dot")
+        });
+    }
+
+    #[test]
+    fn embed_matches_matvec_oracle() {
+        forall("gemm-embed", 24, |rng| {
+            // shapes straddle PANEL_ROWS boundaries; r down to 1
+            let d = 1 + rng.below(24);
+            let r = 1 + rng.below(d);
+            let n = 1 + rng.below(3 * PANEL_ROWS + 2);
+            let x = Mat::from_fn(n, d, |_, _| rng.normal());
+            let l = Mat::from_fn(r, d, |_, _| rng.normal());
+            let mut z = vec![0.0; n * r];
+            embed_into(&x, &l, 0..n, &mut z);
+            for t in 0..n {
+                for k in 0..r {
+                    let want: f64 = x.row(t).iter().zip(l.row(k)).map(|(a, b)| a * b).sum();
+                    close(z[t * r + k], want, 1e-12, 1e-12, "embed cell")?;
+                }
+            }
+            // sub-range lands at out[0..], like margins_into
+            let (lo, hi) = (n / 3, n / 3 + n.div_ceil(2).min(n - n / 3));
+            let mut part = vec![0.0; (hi - lo) * r];
+            embed_into(&x, &l, lo..hi, &mut part);
+            for (k, t) in (lo..hi).enumerate() {
+                for c in 0..r {
+                    if part[k * r + c].to_bits() != z[t * r + c].to_bits() {
+                        return Err(format!("sub-range row {t} col {c} misaligned"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn embed_parallel_bitwise_matches_serial() {
+        forall("gemm-embed-par", 12, |rng| {
+            let d = 1 + rng.below(20);
+            let r = 1 + rng.below(d);
+            let n = 1 + rng.below(3 * PANEL_ROWS + 2);
+            let x = Mat::from_fn(n, d, |_, _| rng.normal());
+            let l = Mat::from_fn(r, d, |_, _| rng.normal());
+            let mut base = vec![0.0; n * r];
+            embed_into(&x, &l, 0..n, &mut base);
+            for workers in [1usize, 2, 7] {
+                let mut z = Mat::zeros(n, r);
+                embed_parallel(&x, &l, &mut z, workers);
+                for (u, (&got, &want)) in z.as_slice().iter().zip(&base).enumerate() {
+                    if got.to_bits() != want.to_bits() {
+                        return Err(format!("workers={workers} elem {u}: {got} != {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn embed_margins_match_norm_oracle_and_worker_invariant() {
+        forall("gemm-embed-margins", 16, |rng| {
+            let r = 1 + rng.below(12);
+            let n = 1 + rng.below(90);
+            let za = Mat::from_fn(n, r, |_, _| rng.normal());
+            let zb = Mat::from_fn(n, r, |_, _| rng.normal());
+            let mut base = vec![0.0; n];
+            embed_margins_into(&za, &zb, 0..n, &mut base);
+            for t in 0..n {
+                let want = za.row(t).iter().map(|v| v * v).sum::<f64>()
+                    - zb.row(t).iter().map(|v| v * v).sum::<f64>();
+                close(base[t], want, 1e-12, 1e-12, "embed margin")?;
+            }
+            for workers in [2usize, 7] {
+                let mut out = vec![0.0; n];
+                embed_margins_parallel(&za, &zb, &mut out, workers);
+                for t in 0..n {
+                    if out[t].to_bits() != base[t].to_bits() {
+                        return Err(format!("workers={workers} t={t} split bits"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ssyrk_matches_outer_sum_oracle() {
+        forall("gemm-ssyrk", 24, |rng| {
+            let d = 1 + rng.below(12);
+            let n = 1 + rng.below(40);
+            let v = Mat::from_fn(n, d, |_, _| rng.normal());
+            // mix of negative, zero (skip path) and positive weights
+            let w: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.below(4) == 0 {
+                        0.0
+                    } else {
+                        rng.normal()
+                    }
+                })
+                .collect();
+            let mut g = Mat::zeros(d, d);
+            ssyrk_upper(&mut g, &v, 0..n, &w);
+            mirror_upper(&mut g);
+            let mut want = Mat::zeros(d, d);
+            for t in 0..n {
+                want.axpy(w[t], &Mat::outer(v.row(t)));
+            }
+            close(g.sub(&want).max_abs(), 0.0, 0.0, 1e-10, "ssyrk")
+        });
+    }
+
+    #[test]
+    fn parallel_ssyrk_bitwise_matches_serial_any_worker_count() {
+        forall("gemm-par-ssyrk", 12, |rng| {
+            let d = 1 + rng.below(40);
+            let n = 1 + rng.below(40);
+            let v = Mat::from_fn(n, d, |_, _| rng.normal());
+            let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut base = Mat::zeros(d, d);
+            ssyrk_upper(&mut base, &v, 0..n, &w);
+            for workers in [1usize, 2, 7] {
+                let mut g = Mat::zeros(d, d);
+                ssyrk_upper_parallel(&mut g, &v, 0..n, &w, workers);
+                for i in 0..d {
+                    for j in i..d {
+                        if g[(i, j)].to_bits() != base[(i, j)].to_bits() {
+                            return Err(format!(
+                                "d={d} workers={workers}: cell ({i},{j}) split bits"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -3,17 +3,22 @@
 //! Everything the screening machinery needs: a row-major [`Mat`] with
 //! Frobenius-space operations, the tiled GEMM/SYRK compute core behind
 //! every engine ([`gemm`]: panel-tiled margins + half-FLOP weighted
-//! SYRK), a symmetric eigensolver (Householder tridiagonalization +
-//! implicit-shift QL, with a cyclic-Jacobi oracle), positive-semidefinite
-//! cone projections `[·]_+ / [·]_-`, and a Lanczos minimum-eigenpair
-//! solver used by the SDLS screening rule.
+//! SYRK, embedding GEMM + single-sided scaled SYRK for the low-rank
+//! tier), the rank-r factor type [`LowRankFactor`] (`M̃ = LᵀL` with
+//! cached r×r Gram and exact compression error), a symmetric eigensolver
+//! (Householder tridiagonalization + implicit-shift QL, with a
+//! cyclic-Jacobi oracle), positive-semidefinite cone projections
+//! `[·]_+ / [·]_-`, and a Lanczos minimum-eigenpair solver used by the
+//! SDLS screening rule.
 
 pub mod gemm;
+mod factor;
 mod mat;
 mod sym_eig;
 mod psd;
 mod lanczos;
 
+pub use factor::LowRankFactor;
 pub use lanczos::min_eigpair;
 pub use mat::Mat;
 pub use psd::{psd_project, psd_split, PsdSplit};

@@ -15,7 +15,7 @@ use triplet_screen::data::{synthetic, Dataset};
 use triplet_screen::loss::Loss;
 use triplet_screen::path::{PathConfig, RegPath, TripletSource};
 use triplet_screen::prelude::*;
-use triplet_screen::runtime::{KernelCore, PrecisionTier};
+use triplet_screen::runtime::{parse_rank, validate_rank, FactoredEngine, KernelCore, PrecisionTier};
 use triplet_screen::solver::Problem;
 use triplet_screen::triplet::{MiningStrategy, TripletMiner};
 use triplet_screen::util::cli::Args;
@@ -39,6 +39,14 @@ common options
                         certified rounding envelope and promotes
                         boundary-ambiguous triplets to f64 — screened
                         sets are provably identical to all-f64)
+  --rank R              factored screening backend (native engines only):
+                        compress each frame reference to rank R (M = L'L,
+                        L stored R x d) and serve reference margins/norms
+                        in O(R) per row from cached embeddings Z = X L';
+                        the exact compression error folds into the frame
+                        epsilon, so screening stays safe for the dense
+                        problem. R must be in 1..=d; omit for the dense
+                        backend
   --threads N           worker threads (0 = auto)                 [0]
   --k N                 neighbors per anchor (triplet construction)
   --seed N              RNG seed                                  [7]
@@ -91,21 +99,31 @@ fn make_engine(args: &Args) -> Box<dyn Engine> {
     make_engine_with(args, None)
 }
 
+/// Wrap a native engine in the rank-r factored screening backend when
+/// `--rank` / `[engine] rank` asks for one; dense pass-through otherwise.
+fn maybe_factored(inner: NativeEngine, rank: Option<usize>) -> Box<dyn Engine> {
+    match rank {
+        Some(r) => Box::new(FactoredEngine::new(inner, r)),
+        None => Box::new(inner),
+    }
+}
+
 /// Engine construction with CLI > config-file > default precedence for
-/// the kernel-core and precision-tier selection (`[engine]` section
-/// keys; see `util::config::engine_overrides`).
+/// the kernel-core, precision-tier, and factored-rank selection
+/// (`[engine]` section keys; see `util::config::engine_overrides`).
 fn make_engine_with(
     args: &Args,
     file_cfg: Option<&triplet_screen::util::config::Config>,
 ) -> Box<dyn Engine> {
-    let (cfg_core, cfg_threshold, cfg_threads, cfg_precision) = file_cfg
+    let (cfg_core, cfg_threshold, cfg_threads, cfg_precision, cfg_rank) = file_cfg
         .map(triplet_screen::util::config::engine_overrides)
-        .unwrap_or((None, None, None, None));
+        .unwrap_or((None, None, None, None, None));
     let threads = args
         .get("threads")
         .map(|s| s.parse().expect("--threads expects an integer"))
         .or(cfg_threads)
         .unwrap_or(0);
+    let rank = args.get("rank").and_then(parse_rank).or(cfg_rank);
     match args.get_or("engine", "native") {
         "native" => {
             // kernel-core override: auto (default) picks row-stream vs
@@ -119,13 +137,23 @@ fn make_engine_with(
                 .get("precision")
                 .map(PrecisionTier::parse_cli)
                 .or(cfg_precision);
-            Box::new(NativeEngine::from_options(threads, core, threshold, precision))
+            maybe_factored(
+                NativeEngine::from_options(threads, core, threshold, precision),
+                rank,
+            )
         }
         // scalar reference core: parity oracle / perf baseline
-        "native-scalar" => Box::new(NativeEngine::scalar(threads)),
-        "pjrt" => Box::new(
-            PjrtEngine::from_default_dir().expect("loading PJRT artifacts (run `make artifacts`)"),
-        ),
+        "native-scalar" => maybe_factored(NativeEngine::scalar(threads), rank),
+        "pjrt" => {
+            assert!(
+                rank.is_none(),
+                "--rank wraps the native engines; it is not supported with --engine pjrt"
+            );
+            Box::new(
+                PjrtEngine::from_default_dir()
+                    .expect("loading PJRT artifacts (run `make artifacts`)"),
+            )
+        }
         other => panic!("unknown engine {other:?} (native|native-scalar|pjrt)"),
     }
 }
@@ -163,6 +191,14 @@ fn load_store(args: &Args, rng: &mut Pcg64) -> TripletStore {
     store
 }
 
+/// Fail fast — right after the data loads, before any solving — when
+/// `--rank` exceeds the feature dimension of the chosen dataset.
+fn check_rank(engine: &dyn Engine, d: usize) {
+    if let Some(r) = engine.rank() {
+        validate_rank(r, d);
+    }
+}
+
 fn parse_strategy(s: &str) -> MiningStrategy {
     match s.to_ascii_lowercase().as_str() {
         "exhaustive" => MiningStrategy::Exhaustive,
@@ -193,6 +229,7 @@ fn main() {
         Some("info") => {
             let engine = make_engine(&args);
             let store = load_store(&args, &mut rng);
+            check_rank(engine.as_ref(), store.d);
             let loss = Loss::smoothed_hinge(args.get_f64("gamma", 0.05));
             let lmax = Problem::lambda_max(&store, &loss, engine.as_ref());
             println!("triplets       : {}", store.len());
@@ -202,6 +239,7 @@ fn main() {
         Some("train") => {
             let engine = make_engine(&args);
             let store = load_store(&args, &mut rng);
+            check_rank(engine.as_ref(), store.d);
             let loss = Loss::smoothed_hinge(args.get_f64("gamma", 0.05));
             let lmax = Problem::lambda_max(&store, &loss, engine.as_ref());
             let lambda = args.get_f64("lambda", lmax * 0.1);
@@ -272,6 +310,7 @@ fn main() {
             let res = if args.flag("streamed") {
                 // streamed source: mine lazily, screen at admission time
                 let (ds, k) = load_dataset(&args, &mut rng);
+                check_rank(engine.as_ref(), ds.d());
                 let strategy = parse_strategy(args.get_or("strategy", "exhaustive"));
                 let mut miner =
                     TripletMiner::new(&ds, k, strategy, args.get_usize("batch", 4096));
@@ -287,6 +326,7 @@ fn main() {
                 RegPath::new(cfg).run_source(TripletSource::Streamed(&mut miner), engine.as_ref())
             } else {
                 let store = load_store(&args, &mut rng);
+                check_rank(engine.as_ref(), store.d);
                 RegPath::new(cfg).run(&store, engine.as_ref())
             };
             let mut t = Table::new(

@@ -1,0 +1,512 @@
+//! Low-rank factored screening engine: O(r) rule scalars for very high d.
+//!
+//! [`FactoredEngine`] wraps a [`NativeEngine`] and changes exactly one
+//! thing: how *reference* matrices are consumed. When the screening
+//! layer builds a frame it hands the reference through
+//! [`Engine::compress_reference`]; this engine replaces it with the
+//! rank-r reconstruction `M̃ = LᵀL` ([`LowRankFactor::compress`]) and
+//! returns the **exact** compression error τ, which the frame folds
+//! into its ε. By the paper's Theorem 3.10 the compressed reference is
+//! just another approximate reference at distance `ε + τ` from the
+//! optimum, so every sphere bound built from it remains **safe for the
+//! original dense problem** — screening only ever discards triplets the
+//! dense rules would also discard at that slack. The solve itself stays
+//! dense f64: [`Engine::margins`]/[`Engine::wgram`]/[`Engine::step`]
+//! delegate to the inner engine untouched, so solver trajectories are
+//! bitwise identical to the dense backend's.
+//!
+//! After compression the two reference-scoped queries are cheap:
+//!
+//! - [`Engine::ref_margins`] — embed the rows once (`Z = X·Lᵀ`, the
+//!   panel GEMM, O(n·d·r)) and answer each margin as
+//!   `‖z_a‖² − ‖z_b‖²` in O(r), against the dense path's O(n·d²).
+//!   Embeddings are cached per (factor, input allocation) and verified
+//!   by **full bitwise comparison** before reuse — a stale pointer can
+//!   never silently serve wrong margins.
+//! - [`Engine::ref_norm`] — `‖M̃‖_F = ‖LLᵀ‖_F` from the cached r×r
+//!   Gram, O(1) per query.
+//!
+//! Reference identity is established the same defensive way: a matrix
+//! is treated as "ours" only if its bits equal a reconstruction this
+//! engine produced (allocation pointers are used as a shortlist, never
+//! as proof). Anything unrecognized falls back to the dense kernels,
+//! so a [`FactoredEngine`] is *always* correct, merely slower off its
+//! fast path.
+//!
+//! Determinism: compression is a pure function of `(M, r)` (seeded
+//! range finder), the embed GEMM and the O(r) margins are whole-chain
+//! [`crate::linalg::gemm::dot`] kernels, so N-worker factored output is
+//! bitwise identical to 1-worker — the same contract the dense pool
+//! kernels carry.
+
+use super::{Engine, NativeEngine, PrecisionTier, StepOut};
+use crate::linalg::{gemm, LowRankFactor, Mat};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// References remembered per engine (a solver holds one live frame;
+/// the slack covers tests and interleaved path studies).
+const REF_CAP: usize = 4;
+
+/// Embedding-cache entries per engine: one pair of store-sized arrays
+/// per frame plus a few admission batches in flight.
+const EMBED_CAP: usize = 8;
+
+/// Parse a `--rank` / `[engine] rank` value. The empty string means
+/// "no factored tier" (`None`, dense backend); `0` and non-numeric
+/// input are loud configuration errors, mirroring the `TS_THREADS`
+/// hardening in [`crate::util::parallel::parse_ts_threads`]. The upper
+/// bound r ≤ d is checked once the data dimension is known — see
+/// [`validate_rank`].
+pub fn parse_rank(v: &str) -> Option<usize> {
+    let v = v.trim();
+    if v.is_empty() {
+        return None;
+    }
+    match v.parse::<usize>() {
+        Ok(0) => panic!("--rank must be a positive integer (r = 0 has no factored form; omit the flag for the dense backend)"),
+        Ok(n) => Some(n),
+        Err(_) => panic!("--rank must be a positive integer, got {v:?}"),
+    }
+}
+
+/// Reject a factor rank above the feature dimension with a CLI-grade
+/// message. `r = d` is allowed (the lossless parity configuration);
+/// `r > d` would silently degrade to r = d work while reporting r, so
+/// it is refused outright.
+pub fn validate_rank(rank: usize, d: usize) {
+    assert!(
+        rank <= d,
+        "--rank {rank} exceeds the feature dimension d = {d}; pick r in 1..={d}"
+    );
+}
+
+/// Counters of the factored backend's cache and fast-path traffic,
+/// snapshot via [`Engine::factored_telemetry`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FactoredTelemetry {
+    /// Factor rank r the engine compresses references to.
+    pub rank: usize,
+    /// References compressed (one per frame build).
+    pub compressions: u64,
+    /// Embedding GEMM passes actually run (cache misses).
+    pub embed_passes: u64,
+    /// Embedding requests served from the verified cache.
+    pub embed_cache_hits: u64,
+    /// Margin rows answered on the O(r) factored fast path.
+    pub factored_rows: u64,
+    /// Margin rows that fell back to the dense kernels (reference not
+    /// recognized — by design for sphere centers not proportional to a
+    /// compressed reference).
+    pub dense_fallback_rows: u64,
+    /// Compression error τ of the most recent reference (the additive
+    /// ε inflation handed to the frame).
+    pub last_tau: f64,
+}
+
+/// A reference this engine compressed: the reconstruction kept for
+/// bitwise identification, the allocation pointer of the copy handed to
+/// the caller (shortlist only), and the factor serving the fast path.
+struct RefEntry {
+    dense: Mat,
+    ptr: usize,
+    factor: LowRankFactor,
+}
+
+/// One verified embedding: `z = x·lᵀ` for factor `factor_version`,
+/// with a full copy of `x` so reuse is provably sound.
+struct EmbedEntry {
+    factor_version: u64,
+    ptr: usize,
+    x_copy: Mat,
+    z: Mat,
+}
+
+#[derive(Default)]
+struct FactoredState {
+    refs: Vec<RefEntry>,
+    embeds: Vec<EmbedEntry>,
+}
+
+/// The factored compute engine (see the module docs).
+pub struct FactoredEngine {
+    inner: NativeEngine,
+    rank: usize,
+    state: Mutex<FactoredState>,
+    compressions: AtomicU64,
+    embed_passes: AtomicU64,
+    embed_cache_hits: AtomicU64,
+    factored_rows: AtomicU64,
+    dense_fallback_rows: AtomicU64,
+    last_tau_bits: AtomicU64,
+}
+
+impl FactoredEngine {
+    /// Wrap a dense engine with a rank-r factored reference tier. The
+    /// rank must be positive ([`parse_rank`] enforces this for CLI
+    /// input); r ≤ d is enforced per reference at compression time.
+    pub fn new(inner: NativeEngine, rank: usize) -> FactoredEngine {
+        assert!(rank >= 1, "factor rank must be at least 1");
+        FactoredEngine {
+            inner,
+            rank,
+            state: Mutex::new(FactoredState::default()),
+            compressions: AtomicU64::new(0),
+            embed_passes: AtomicU64::new(0),
+            embed_cache_hits: AtomicU64::new(0),
+            factored_rows: AtomicU64::new(0),
+            dense_fallback_rows: AtomicU64::new(0),
+            last_tau_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// The wrapped dense engine (solver kernels delegate to it).
+    pub fn inner(&self) -> &NativeEngine {
+        &self.inner
+    }
+
+    fn slices_bit_equal(x: &[f64], y: &[f64]) -> bool {
+        x.len() == y.len()
+            && x.iter()
+                .zip(y)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    /// Index of the remembered reference whose reconstruction is
+    /// bit-identical to `m0` — pointer matches first (the common case:
+    /// the very allocation we returned, moved into the frame), then any
+    /// value-identical entry. Always verified by full comparison.
+    fn find_ref(st: &FactoredState, m0: &Mat) -> Option<usize> {
+        let ptr = m0.as_slice().as_ptr() as usize;
+        let candidate = |e: &RefEntry| {
+            (e.dense.rows(), e.dense.cols()) == (m0.rows(), m0.cols())
+                && Self::slices_bit_equal(e.dense.as_slice(), m0.as_slice())
+        };
+        if let Some(i) = st
+            .refs
+            .iter()
+            .rposition(|e| e.ptr == ptr && candidate(e))
+        {
+            return Some(i);
+        }
+        st.refs.iter().rposition(candidate)
+    }
+
+    /// Embed `x` under `factor`, reusing a cached embedding only after
+    /// verifying the cached input copy is bit-identical to `x`.
+    fn embed_cached(&self, embeds: &mut Vec<EmbedEntry>, factor: &LowRankFactor, x: &Mat) -> Mat {
+        let ptr = x.as_slice().as_ptr() as usize;
+        for e in embeds.iter() {
+            if e.factor_version == factor.version()
+                && e.ptr == ptr
+                && (e.x_copy.rows(), e.x_copy.cols()) == (x.rows(), x.cols())
+                && Self::slices_bit_equal(e.x_copy.as_slice(), x.as_slice())
+            {
+                self.embed_cache_hits.fetch_add(1, Ordering::Relaxed);
+                return e.z.clone();
+            }
+        }
+        let z = factor.embed(x, self.inner.workers());
+        self.embed_passes.fetch_add(1, Ordering::Relaxed);
+        embeds.push(EmbedEntry {
+            factor_version: factor.version(),
+            ptr,
+            x_copy: x.clone(),
+            z: z.clone(),
+        });
+        if embeds.len() > EMBED_CAP {
+            embeds.remove(0);
+        }
+        z
+    }
+}
+
+impl Engine for FactoredEngine {
+    fn name(&self) -> &'static str {
+        "factored"
+    }
+
+    fn margins(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64]) {
+        self.inner.margins(mat, a, b, out);
+    }
+
+    fn wgram(&self, a: &Mat, b: &Mat, w: &[f64]) -> Mat {
+        self.inner.wgram(a, b, w)
+    }
+
+    fn step(&self, mat: &Mat, a: &Mat, b: &Mat, gamma: f64, margins_out: &mut [f64]) -> StepOut {
+        self.inner.step(mat, a, b, gamma, margins_out)
+    }
+
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn precision(&self) -> PrecisionTier {
+        self.inner.precision()
+    }
+
+    fn margins_f32(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64], env: &mut [f64]) -> bool {
+        self.inner.margins_f32(mat, a, b, out, env)
+    }
+
+    fn compress_reference(&self, m0: Mat) -> (Mat, f64) {
+        validate_rank(self.rank, m0.rows());
+        let (factor, tau) = LowRankFactor::compress(&m0, self.rank);
+        let dense = factor.to_dense(self.inner.workers());
+        let ptr = dense.as_slice().as_ptr() as usize;
+        let mut st = self.state.lock().unwrap();
+        st.refs.push(RefEntry {
+            dense: dense.clone(),
+            ptr,
+            factor,
+        });
+        if st.refs.len() > REF_CAP {
+            st.refs.remove(0);
+        }
+        let FactoredState { refs, embeds } = &mut *st;
+        embeds.retain(|e| refs.iter().any(|rf| rf.factor.version() == e.factor_version));
+        drop(st);
+        self.compressions.fetch_add(1, Ordering::Relaxed);
+        self.last_tau_bits.store(tau.to_bits(), Ordering::Relaxed);
+        (dense, tau)
+    }
+
+    fn ref_margins(&self, m0: &Mat, a: &Mat, b: &Mat, out: &mut [f64]) {
+        debug_assert_eq!(a.rows(), b.rows());
+        debug_assert_eq!(out.len(), a.rows());
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(i) = Self::find_ref(&st, m0) {
+                let FactoredState { refs, embeds } = &mut *st;
+                let factor = &refs[i].factor;
+                let za = self.embed_cached(embeds, factor, a);
+                let zb = self.embed_cached(embeds, factor, b);
+                drop(st);
+                gemm::embed_margins_parallel(&za, &zb, out, self.inner.workers());
+                self.factored_rows
+                    .fetch_add(a.rows() as u64, Ordering::Relaxed);
+                return;
+            }
+        }
+        self.dense_fallback_rows
+            .fetch_add(a.rows() as u64, Ordering::Relaxed);
+        self.inner.margins(m0, a, b, out);
+    }
+
+    fn ref_norm(&self, m0: &Mat) -> f64 {
+        let st = self.state.lock().unwrap();
+        match Self::find_ref(&st, m0) {
+            Some(i) => st.refs[i].factor.norm(),
+            None => m0.norm(),
+        }
+    }
+
+    fn rank(&self) -> Option<usize> {
+        Some(self.rank)
+    }
+
+    fn factored_telemetry(&self) -> Option<FactoredTelemetry> {
+        Some(FactoredTelemetry {
+            rank: self.rank,
+            compressions: self.compressions.load(Ordering::Relaxed),
+            embed_passes: self.embed_passes.load(Ordering::Relaxed),
+            embed_cache_hits: self.embed_cache_hits.load(Ordering::Relaxed),
+            factored_rows: self.factored_rows.load(Ordering::Relaxed),
+            dense_fallback_rows: self.dense_fallback_rows.load(Ordering::Relaxed),
+            last_tau: f64::from_bits(self.last_tau_bits.load(Ordering::Relaxed)),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_psd(rng: &mut Pcg64, d: usize, rank: usize) -> Mat {
+        let mut m = Mat::zeros(d, d);
+        for _ in 0..rank {
+            let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            m.axpy(1.0, &Mat::outer(&v));
+        }
+        m
+    }
+
+    #[test]
+    fn parse_rank_accepts_valid_and_empty() {
+        assert_eq!(parse_rank("64"), Some(64));
+        assert_eq!(parse_rank("  16 "), Some(16));
+        assert_eq!(parse_rank(""), None);
+        assert_eq!(parse_rank("   "), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "--rank must be a positive integer (r = 0")]
+    fn parse_rank_rejects_zero() {
+        parse_rank("0");
+    }
+
+    #[test]
+    #[should_panic(expected = "--rank must be a positive integer, got")]
+    fn parse_rank_rejects_junk() {
+        parse_rank("sixteen");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the feature dimension d = 8")]
+    fn validate_rank_rejects_rank_above_dim() {
+        validate_rank(9, 8);
+    }
+
+    #[test]
+    fn validate_rank_allows_full_rank() {
+        validate_rank(8, 8);
+        validate_rank(1, 8);
+    }
+
+    #[test]
+    fn solver_kernels_delegate_bitwise_to_inner() {
+        let mut rng = Pcg64::seed(21);
+        let (n, d) = (37usize, 9usize);
+        let mut m = Mat::from_fn(d, d, |_, _| rng.normal());
+        m.symmetrize();
+        let a = Mat::from_fn(n, d, |_, _| rng.normal());
+        let b = Mat::from_fn(n, d, |_, _| rng.normal());
+        let dense = NativeEngine::new(0);
+        let fact = FactoredEngine::new(NativeEngine::new(0), 4);
+        let (mut out_d, mut out_f) = (vec![0.0; n], vec![0.0; n]);
+        dense.margins(&m, &a, &b, &mut out_d);
+        fact.margins(&m, &a, &b, &mut out_f);
+        for t in 0..n {
+            assert_eq!(out_d[t].to_bits(), out_f[t].to_bits(), "margins differ at {t}");
+        }
+        let (ld, gd) = dense.step(&m, &a, &b, 0.1, &mut out_d);
+        let (lf, gf) = fact.step(&m, &a, &b, 0.1, &mut out_f);
+        assert_eq!(ld.to_bits(), lf.to_bits());
+        for (x, y) in gd.as_slice().iter().zip(gf.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "step gradient differs");
+        }
+    }
+
+    #[test]
+    fn compressed_reference_serves_factored_margins() {
+        let mut rng = Pcg64::seed(33);
+        let (n, d) = (90usize, 13usize);
+        let m0 = rand_psd(&mut rng, d, d + 3);
+        let a = Mat::from_fn(n, d, |_, _| rng.normal());
+        let b = Mat::from_fn(n, d, |_, _| rng.normal());
+        let fact = FactoredEngine::new(NativeEngine::new(0), d);
+        let (mt, tau) = fact.compress_reference(m0.clone());
+        // full rank on a PSD reference: reconstruction ≈ original, τ tiny
+        assert!(mt.sub(&m0).max_abs() < 1e-9 * (1.0 + m0.max_abs()));
+        assert!(tau < 1e-9 * (1.0 + m0.norm()), "τ = {tau}");
+        let (mut fast, mut dense) = (vec![0.0; n], vec![0.0; n]);
+        fact.ref_margins(&mt, &a, &b, &mut fast);
+        fact.margins(&mt, &a, &b, &mut dense);
+        for t in 0..n {
+            let tol = 1e-9 * (1.0 + dense[t].abs());
+            assert!(
+                (fast[t] - dense[t]).abs() < tol,
+                "factored margin {t}: {} vs dense {}",
+                fast[t],
+                dense[t]
+            );
+        }
+        let tel = fact.factored_telemetry().unwrap();
+        assert_eq!(tel.compressions, 1);
+        assert_eq!(tel.factored_rows, n as u64);
+        assert_eq!(tel.dense_fallback_rows, 0);
+        assert_eq!(tel.embed_passes, 2);
+        // ‖M̃‖ from the Gram matches the dense norm
+        assert!((fact.ref_norm(&mt) - mt.norm()).abs() < 1e-9 * (1.0 + mt.norm()));
+    }
+
+    #[test]
+    fn embed_cache_hits_on_repeated_inputs_and_verifies_content() {
+        let mut rng = Pcg64::seed(5);
+        let (n, d) = (40usize, 10usize);
+        let m0 = rand_psd(&mut rng, d, d);
+        let a = Mat::from_fn(n, d, |_, _| rng.normal());
+        let b = Mat::from_fn(n, d, |_, _| rng.normal());
+        let fact = FactoredEngine::new(NativeEngine::new(0), 3);
+        let (mt, _tau) = fact.compress_reference(m0);
+        let mut out1 = vec![0.0; n];
+        fact.ref_margins(&mt, &a, &b, &mut out1);
+        let mut out2 = vec![0.0; n];
+        fact.ref_margins(&mt, &a, &b, &mut out2);
+        for t in 0..n {
+            assert_eq!(out1[t].to_bits(), out2[t].to_bits());
+        }
+        let tel = fact.factored_telemetry().unwrap();
+        assert_eq!(tel.embed_passes, 2, "second pass must be served from cache");
+        assert_eq!(tel.embed_cache_hits, 2);
+        // mutating the input (same allocation!) must not reuse the
+        // stale embedding — the bitwise verification catches it
+        let mut a2 = a.clone();
+        a2[(0, 0)] += 1.0;
+        let mut out3 = vec![0.0; n];
+        fact.ref_margins(&mt, &a2, &b, &mut out3);
+        let tel = fact.factored_telemetry().unwrap();
+        assert_eq!(tel.embed_passes, 3, "changed input must re-embed");
+    }
+
+    #[test]
+    fn unrecognized_reference_falls_back_to_dense_bitwise() {
+        let mut rng = Pcg64::seed(77);
+        let (n, d) = (25usize, 7usize);
+        let mut q = Mat::from_fn(d, d, |_, _| rng.normal());
+        q.symmetrize();
+        let a = Mat::from_fn(n, d, |_, _| rng.normal());
+        let b = Mat::from_fn(n, d, |_, _| rng.normal());
+        let fact = FactoredEngine::new(NativeEngine::new(0), 3);
+        let (mut via_ref, mut via_dense) = (vec![0.0; n], vec![0.0; n]);
+        fact.ref_margins(&q, &a, &b, &mut via_ref);
+        fact.margins(&q, &a, &b, &mut via_dense);
+        for t in 0..n {
+            assert_eq!(via_ref[t].to_bits(), via_dense[t].to_bits());
+        }
+        let tel = fact.factored_telemetry().unwrap();
+        assert_eq!(tel.dense_fallback_rows, n as u64);
+        assert_eq!(tel.factored_rows, 0);
+        assert_eq!(fact.ref_norm(&q).to_bits(), q.norm().to_bits());
+    }
+
+    #[test]
+    fn factored_margins_bitwise_invariant_across_worker_counts() {
+        let mut rng = Pcg64::seed(13);
+        let (n, d, r) = (70usize, 11usize, 4usize);
+        let m0 = rand_psd(&mut rng, d, d);
+        let a = Mat::from_fn(n, d, |_, _| rng.normal());
+        let b = Mat::from_fn(n, d, |_, _| rng.normal());
+        let mut reference: Option<Vec<f64>> = None;
+        for workers in [1usize, 2, 7] {
+            let fact = FactoredEngine::new(
+                NativeEngine::from_options(workers, None, None, None),
+                r,
+            );
+            let (mt, _tau) = fact.compress_reference(m0.clone());
+            let mut out = vec![0.0; n];
+            fact.ref_margins(&mt, &a, &b, &mut out);
+            match &reference {
+                None => reference = Some(out),
+                Some(want) => {
+                    for t in 0..n {
+                        assert_eq!(
+                            out[t].to_bits(),
+                            want[t].to_bits(),
+                            "workers={workers} row {t} split bits"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the feature dimension")]
+    fn compress_reference_rejects_rank_above_dim() {
+        let fact = FactoredEngine::new(NativeEngine::new(0), 9);
+        let _ = fact.compress_reference(Mat::identity(4));
+    }
+}

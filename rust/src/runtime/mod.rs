@@ -35,7 +35,25 @@
 //! inside the envelope are promoted to the exact f64 path, so the
 //! screened sets are provably identical to an all-f64 run (the
 //! safety battery in `rust/tests/workset_safety.rs` enforces this).
+//!
+//! **Reference-scoped factored access.** The screening layer consumes a
+//! reference matrix `M̃₀` only through three operations — margins
+//! against it, its Frobenius norm, and (optionally) a compression step
+//! when the frame is built. [`Engine::compress_reference`],
+//! [`Engine::ref_margins`] and [`Engine::ref_norm`] lift exactly those
+//! behind the trait, with dense pass-through defaults, so
+//! `ScreeningManager::screen`, `admit_batch`,
+//! `ReferenceFrame::admission_decision` and the rule loop are
+//! backend-agnostic: [`NativeEngine`] (and the PJRT stub) run them
+//! unchanged, while [`FactoredEngine`] compresses the reference to a
+//! rank-r factor `L` (`M̃ = LᵀL`, [`crate::linalg::LowRankFactor`]),
+//! answers `ref_margins` in O(r) per row from cached embeddings
+//! `Z = X·Lᵀ`, answers `ref_norm` from the r×r Gram, and folds the
+//! exact compression error τ into the frame's ε (the paper's Thm 3.10
+//! reference-ball argument), so factored screening stays safe for the
+//! *dense* problem. The solve itself always stays dense f64.
 
+mod factored;
 mod native;
 // The real PJRT engine needs the vendored `xla` + `anyhow` crates, which
 // the offline image cannot carry in Cargo.toml. `--features pjrt` opts
@@ -51,6 +69,7 @@ mod pjrt;
 #[path = "pjrt_stub.rs"]
 mod pjrt;
 
+pub use factored::{parse_rank, validate_rank, FactoredEngine, FactoredTelemetry};
 pub use native::{KernelCore, NativeEngine};
 pub use pjrt::{PjrtEngine, ARTIFACTS_DIR_ENV};
 
@@ -156,5 +175,50 @@ pub trait Engine: Sync {
     fn margins_f32(&self, mat: &Mat, a: &Mat, b: &Mat, out: &mut [f64], env: &mut [f64]) -> bool {
         let _ = (mat, a, b, out, env);
         false
+    }
+
+    /// Optionally rewrite a reference matrix at frame-build time,
+    /// returning the (possibly replaced) reference plus an **additive
+    /// ε inflation** bounding `‖returned − original‖_F`. The screening
+    /// layer hands every new frame reference through this hook; dense
+    /// engines return it untouched with inflation 0 (the default).
+    /// [`FactoredEngine`] returns the rank-r reconstruction `M̃ = LᵀL`
+    /// and its exact compression error τ — Theorem 3.10's
+    /// approximate-reference argument then keeps every rule safe for
+    /// the original dense problem.
+    fn compress_reference(&self, m0: Mat) -> (Mat, f64) {
+        (m0, 0.0)
+    }
+
+    /// Margins against a *reference* matrix previously returned by
+    /// [`Engine::compress_reference`] (the frame's `m0`, or a sphere
+    /// center proportional to it). Defaults to the dense
+    /// [`Engine::margins`]; [`FactoredEngine`] recognizes its own
+    /// reconstructions and answers in O(r) per row from cached
+    /// embeddings instead.
+    fn ref_margins(&self, m0: &Mat, a: &Mat, b: &Mat, out: &mut [f64]) {
+        self.margins(m0, a, b, out);
+    }
+
+    /// Frobenius norm of a reference matrix previously returned by
+    /// [`Engine::compress_reference`]. Defaults to the dense
+    /// `m0.norm()`; [`FactoredEngine`] answers from the r×r Gram
+    /// (`‖LᵀL‖_F = ‖LLᵀ‖_F`) without touching a d×d object.
+    fn ref_norm(&self, m0: &Mat) -> f64 {
+        m0.norm()
+    }
+
+    /// The factored-backend rank, when this engine screens against
+    /// rank-r compressed references (`None` for dense engines — the
+    /// default). Telemetry and reports key on this.
+    fn rank(&self) -> Option<usize> {
+        None
+    }
+
+    /// Factored-backend counters (embedding cache traffic, O(r) margin
+    /// rows served), when this engine keeps them. `None` for dense
+    /// engines (the default).
+    fn factored_telemetry(&self) -> Option<FactoredTelemetry> {
+        None
     }
 }

@@ -111,8 +111,16 @@ pub fn cdgb(k_plus: &Mat, gap_at_dual: f64, lambda: f64) -> Sphere {
 /// **RPB** (Thm 3.7): given the *optimal* `M₀*` at λ₀, for λ₁:
 /// center `((λ₀+λ₁)/2λ₁)·M₀*`, radius `(|λ₀−λ₁|/2λ₁)·‖M₀*‖`.
 pub fn rpb(m0_star: &Mat, lambda0: f64, lambda1: f64) -> Sphere {
+    rpb_with_norm(m0_star, m0_star.norm(), lambda0, lambda1)
+}
+
+/// [`rpb`] with the reference norm supplied by the caller — the frame
+/// caches `‖M₀‖` once (under the factored backend it comes from the
+/// r×r Gram via `Engine::ref_norm`, never a d×d pass), so per-λ sphere
+/// construction touches no d×d object beyond the O(d²) center scaling.
+pub fn rpb_with_norm(m0_star: &Mat, m0_norm: f64, lambda0: f64, lambda1: f64) -> Sphere {
     let c = (lambda0 + lambda1) / (2.0 * lambda1);
-    let r = (lambda0 - lambda1).abs() / (2.0 * lambda1) * m0_star.norm();
+    let r = (lambda0 - lambda1).abs() / (2.0 * lambda1) * m0_norm;
     Sphere::new(m0_star.scaled(c), r, true)
 }
 
@@ -121,9 +129,18 @@ pub fn rpb(m0_star: &Mat, lambda0: f64, lambda1: f64) -> Sphere {
 /// center `((λ₀+λ₁)/2λ₁)·M₀`, radius
 /// `(|λ₀−λ₁|/2λ₁)‖M₀‖ + ((|λ₀−λ₁|+λ₀+λ₁)/2λ₁)·ε`.
 pub fn rrpb(m0: &Mat, eps: f64, lambda0: f64, lambda1: f64) -> Sphere {
+    rrpb_with_norm(m0, m0.norm(), eps, lambda0, lambda1)
+}
+
+/// [`rrpb`] with the reference norm supplied by the caller (see
+/// [`rpb_with_norm`]). Under the factored backend the frame's ε already
+/// carries the compression error τ — Thm 3.10 makes no assumption about
+/// *why* the reference is ε-approximate, so the same radius formula
+/// covers truncation and solver inexactness uniformly.
+pub fn rrpb_with_norm(m0: &Mat, m0_norm: f64, eps: f64, lambda0: f64, lambda1: f64) -> Sphere {
     let dl = (lambda0 - lambda1).abs();
     let c = (lambda0 + lambda1) / (2.0 * lambda1);
-    let r = dl / (2.0 * lambda1) * m0.norm() + (dl + lambda0 + lambda1) / (2.0 * lambda1) * eps;
+    let r = dl / (2.0 * lambda1) * m0_norm + (dl + lambda0 + lambda1) / (2.0 * lambda1) * eps;
     Sphere::new(m0.scaled(c), r, true)
 }
 

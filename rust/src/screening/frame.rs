@@ -194,6 +194,16 @@ impl ReferenceFrame {
     /// Build a frame from a reference solution: one full-store margins
     /// pass, plus O(|T|) closed-form certificate derivation when `certs`
     /// is given (and one `wgram` + margins pass for the DGB/GB families).
+    ///
+    /// The reference is first handed through
+    /// [`Engine::compress_reference`]: dense engines return it untouched
+    /// with zero ε inflation, while the factored backend swaps in its
+    /// rank-r reconstruction `M̃ = LᵀL` and reports the exact truncation
+    /// error τ, which is folded into ε here — Thm 3.10 then keeps every
+    /// rule built from this frame safe for the *dense* problem. The
+    /// margins lane and the cached norm go through
+    /// [`Engine::ref_margins`] / [`Engine::ref_norm`], so a factored
+    /// engine serves them in O(r) per row / from the r×r Gram.
     pub fn build(
         m0: Mat,
         lambda0: f64,
@@ -202,9 +212,11 @@ impl ReferenceFrame {
         engine: &dyn Engine,
         certs: Option<(&Loss, CertFamilies)>,
     ) -> ReferenceFrame {
+        let (m0, eps_extra) = engine.compress_reference(m0);
+        let eps = eps + eps_extra;
         let mut margins = vec![0.0; store.len()];
-        engine.margins(&m0, &store.a, &store.b, &mut margins);
-        let m0_norm = m0.norm();
+        engine.ref_margins(&m0, &store.a, &store.b, &mut margins);
+        let m0_norm = engine.ref_norm(&m0);
         let mut frame = ReferenceFrame {
             m0,
             lambda0,

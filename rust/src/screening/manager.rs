@@ -310,7 +310,13 @@ impl ScreeningManager {
             }
         } else {
             if !batch.is_empty() {
-                engine.margins(frame.m0(), &batch.a, &batch.b, hm);
+                // reference-scoped margins: the factored backend answers
+                // these in O(r) per row from cached embeddings of the
+                // batch; dense engines route to the plain kernels. (The
+                // mixed tier above stays on the dense f32/f64 kernels —
+                // its rounding envelope is certified against the dense
+                // f64 pass.)
+                engine.ref_margins(frame.m0(), &batch.a, &batch.b, hm);
             }
             for t in 0..batch.len() {
                 out.push(frame.admission_decision(hm[t], batch.h_norm[t], lambda, loss));
@@ -356,12 +362,15 @@ impl ScreeningManager {
                 bounds::cdgb(ctx.k_plus, ev.p - ctx.d, lambda)
             }
             BoundKind::Rpb => {
+                // the frame's cached norm (engine-provided: the factored
+                // backend computes it from the r×r Gram at build time)
+                // keeps sphere construction free of d×d norm passes
                 let f = self.frame.as_ref()?;
-                bounds::rpb(f.m0(), f.lambda0(), lambda)
+                bounds::rpb_with_norm(f.m0(), f.m0_norm(), f.lambda0(), lambda)
             }
             BoundKind::Rrpb => {
                 let f = self.frame.as_ref()?;
-                bounds::rrpb(f.m0(), f.eps(), f.lambda0(), lambda)
+                bounds::rrpb_with_norm(f.m0(), f.m0_norm(), f.eps(), f.lambda0(), lambda)
             }
         })
     }

@@ -8,8 +8,8 @@
 //! Recognized sections: `[path]` / `[solver]` / `[screening]` / `[loss]`
 //! (consumed by [`path_config`]) and `[engine]` (consumed by
 //! [`engine_overrides`]: `kernel_core`, `d_threshold`, `threads`,
-//! `precision` — the kernel-core and precision-tier selection documented
-//! in `triplet-screen --help`).
+//! `precision`, `rank` — the kernel-core, precision-tier, and
+//! factored-backend selection documented in `triplet-screen --help`).
 
 use std::collections::BTreeMap;
 
@@ -196,14 +196,17 @@ pub fn path_config(cfg: &Config) -> crate::path::PathConfig {
 }
 
 /// Native-engine selection from a config's `[engine]` section:
-/// `(kernel_core, d_threshold, threads, precision)`, each `None` when
-/// the key is absent (CLI flags take precedence over these in
+/// `(kernel_core, d_threshold, threads, precision, rank)`, each `None`
+/// when the key is absent (CLI flags take precedence over these in
 /// `main.rs`).
 ///
 /// Panics on an unrecognized `engine.kernel_core` or `engine.precision`
-/// spelling and on negative/fractional `d_threshold`/`threads` — a
-/// config typo should fail loudly, not silently truncate or fall back
-/// to a default.
+/// spelling, on negative/fractional `d_threshold`/`threads`, and on a
+/// zero/fractional `rank` — a config typo should fail loudly, not
+/// silently truncate or fall back to a default. (`rank = 0` is rejected
+/// outright: r = 0 has no factored form; omit the key for the dense
+/// backend. The r ≤ d check needs the dataset and happens after the
+/// data loads, in `crate::runtime::validate_rank`.)
 pub fn engine_overrides(
     cfg: &Config,
 ) -> (
@@ -211,6 +214,7 @@ pub fn engine_overrides(
     Option<usize>,
     Option<usize>,
     Option<crate::runtime::PrecisionTier>,
+    Option<usize>,
 ) {
     let core = cfg.get("engine.kernel_core").map(|v| match v {
         Value::Str(s) => crate::runtime::KernelCore::parse(s)
@@ -230,7 +234,14 @@ pub fn engine_overrides(
             .unwrap_or_else(|| panic!("bad engine.precision {s:?} (use f64 or mixed)")),
         other => panic!("engine.precision expects a string, got {other:?}"),
     });
-    (core, d_threshold, threads, precision)
+    let rank = cfg.get("engine.rank").map(|v| match v {
+        Value::Num(x) if *x >= 1.0 && x.fract() == 0.0 => *x as usize,
+        other => panic!(
+            "engine.rank must be a positive integer (r = 0 has no factored form; \
+             omit the key for the dense backend), got {other:?}"
+        ),
+    });
+    (core, d_threshold, threads, precision, rank)
 }
 
 #[cfg(test)]
@@ -257,6 +268,7 @@ kernel_core = "d-blocked"
 d_threshold = 300
 threads = 2
 precision = "mixed"
+rank = 16
 
 [data]
 datasets = ["segment", "wine"]
@@ -304,7 +316,7 @@ datasets = ["segment", "wine"]
     #[test]
     fn engine_section_parses() {
         let c = Config::parse(SAMPLE).unwrap();
-        let (core, d_threshold, threads, precision) = engine_overrides(&c);
+        let (core, d_threshold, threads, precision, rank) = engine_overrides(&c);
         assert_eq!(core, Some(crate::runtime::KernelCore::DBlocked));
         assert_eq!(d_threshold, Some(300));
         assert_eq!(threads, Some(2));
@@ -312,9 +324,10 @@ datasets = ["segment", "wine"]
             precision,
             Some(crate::runtime::PrecisionTier::MixedCertified)
         );
+        assert_eq!(rank, Some(16));
         // absent section: all None
         let empty = Config::parse("[path]\nrho = 0.9\n").unwrap();
-        assert_eq!(engine_overrides(&empty), (None, None, None, None));
+        assert_eq!(engine_overrides(&empty), (None, None, None, None, None));
     }
 
     #[test]
@@ -365,6 +378,27 @@ datasets = ["segment", "wine"]
     #[should_panic(expected = "non-negative integer")]
     fn engine_fractional_threads_fail_loudly() {
         let c = Config::parse("[engine]\nthreads = 2.7\n").unwrap();
+        let _ = engine_overrides(&c);
+    }
+
+    #[test]
+    #[should_panic(expected = "engine.rank must be a positive integer")]
+    fn engine_zero_rank_fails_loudly() {
+        let c = Config::parse("[engine]\nrank = 0\n").unwrap();
+        let _ = engine_overrides(&c);
+    }
+
+    #[test]
+    #[should_panic(expected = "engine.rank must be a positive integer")]
+    fn engine_fractional_rank_fails_loudly() {
+        let c = Config::parse("[engine]\nrank = 12.5\n").unwrap();
+        let _ = engine_overrides(&c);
+    }
+
+    #[test]
+    #[should_panic(expected = "engine.rank must be a positive integer")]
+    fn engine_non_numeric_rank_fails_loudly() {
+        let c = Config::parse("[engine]\nrank = \"full\"\n").unwrap();
         let _ = engine_overrides(&c);
     }
 

@@ -225,6 +225,66 @@ mod screening_properties {
     }
 }
 
+/// Factored-backend properties: the r×r Gram norm identity and the O(r)
+/// embedded margins, randomized over factor shapes including rank 1 and
+/// the GEMM panel boundaries `PANEL_ROWS ± 1`.
+#[cfg(test)]
+mod factored_properties {
+    use super::{close, forall};
+    use crate::linalg::gemm::{self, PANEL_ROWS};
+    use crate::linalg::{LowRankFactor, Mat};
+    use crate::runtime::{Engine, NativeEngine};
+    use crate::util::rng::Pcg64;
+
+    /// Random L (r×d) at shapes that straddle the panel boundaries.
+    fn random_factor(rng: &mut Pcg64) -> (usize, Mat) {
+        let dims = [1, 2, PANEL_ROWS - 1, PANEL_ROWS, PANEL_ROWS + 1];
+        let d = dims[rng.below(dims.len())];
+        let ranks = [1, 2, PANEL_ROWS - 1, PANEL_ROWS, PANEL_ROWS + 1];
+        let r = ranks[rng.below(ranks.len())].min(d);
+        (d, Mat::from_fn(r, d, |_, _| rng.normal()))
+    }
+
+    /// `‖LᵀL‖_F == ‖L Lᵀ‖_F` (cyclic trace): the factored backend's
+    /// `ref_norm`, served from the r×r Gram, must equal the dense norm
+    /// of the reconstruction it hands to the screening layer.
+    #[test]
+    fn gram_norm_equals_dense_reconstruction_norm() {
+        forall("factored-norm-identity", 64, |rng| {
+            let (_, l) = random_factor(rng);
+            let f = LowRankFactor::from_l(l);
+            let dense = f.to_dense(1);
+            close(f.norm(), dense.norm(), 1e-10, 1e-12, "‖LLᵀ‖_F vs ‖LᵀL‖_F")
+        });
+    }
+
+    /// Embedded margins (`‖z_a‖² − ‖z_b‖²` with `Z = X Lᵀ`) equal the
+    /// dense margins of the reconstruction `M̃ = LᵀL` — at every rank
+    /// (including r = d, the decision-parity regime), since both sides
+    /// are exact quadratic forms of the same matrix.
+    #[test]
+    fn embedded_margins_match_dense_margins() {
+        forall("factored-margin-identity", 48, |rng| {
+            let (d, l) = random_factor(rng);
+            let n = 1 + rng.below(2 * PANEL_ROWS);
+            let a = Mat::from_fn(n, d, |_, _| rng.normal());
+            let b = Mat::from_fn(n, d, |_, _| rng.normal());
+            let f = LowRankFactor::from_l(l);
+            let (za, zb) = (f.embed(&a, 1), f.embed(&b, 1));
+            let mut fac = vec![0.0; n];
+            gemm::embed_margins_into(&za, &zb, 0..n, &mut fac);
+            let dense = f.to_dense(1);
+            let engine = NativeEngine::scalar(1);
+            let mut want = vec![0.0; n];
+            engine.margins(&dense, &a, &b, &mut want);
+            for t in 0..n {
+                close(fac[t], want[t], 1e-9, 1e-9, &format!("margin[{t}]"))?;
+            }
+            Ok(())
+        });
+    }
+}
+
 #[cfg(test)]
 mod workset_properties {
     use super::forall;

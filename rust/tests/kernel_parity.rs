@@ -545,6 +545,69 @@ fn margins_f32_envelope_parity_battery_dims() {
     }
 }
 
+/// Factored-backend parity at every panel-boundary row count: at r = d
+/// the compressed reference's O(r) margin path must reproduce the dense
+/// kernels on the exact same reconstruction, and `ref_norm` (served
+/// from the r×r Gram via `‖LᵀL‖_F = ‖LLᵀ‖_F`) must equal the dense
+/// Frobenius norm.
+#[test]
+fn factored_ref_margins_parity_panel_boundary_shapes() {
+    use triplet_screen::runtime::FactoredEngine;
+    let p = gemm::PANEL_ROWS;
+    let mut rng = Pcg64::seed(83);
+    for &n in &[1usize, 2, p - 1, p, p + 1, 2 * p - 1, 2 * p, 2 * p + 1, 3 * p + 7] {
+        for &d in &[2usize, 19] {
+            let (m, a, b, _) = rand_inputs(&mut rng, n, d);
+            let fac = FactoredEngine::new(NativeEngine::new(2), d);
+            let (m_tilde, _tau) = fac.compress_reference(m);
+            let mut of = vec![0.0; n];
+            fac.ref_margins(&m_tilde, &a, &b, &mut of);
+            let mut os = vec![0.0; n];
+            NativeEngine::scalar(2).margins(&m_tilde, &a, &b, &mut os);
+            for t in 0..n {
+                assert!(
+                    (of[t] - os[t]).abs() <= TOL * (1.0 + os[t].abs()),
+                    "n={n} d={d} t={t}: factored margin {} vs dense {}",
+                    of[t],
+                    os[t]
+                );
+            }
+            let nf = fac.ref_norm(&m_tilde);
+            assert!(
+                (nf - m_tilde.norm()).abs() <= TOL * (1.0 + m_tilde.norm()),
+                "n={n} d={d}: gram norm {nf} vs dense {}",
+                m_tilde.norm()
+            );
+        }
+    }
+}
+
+/// The whole factored chain — compression, reconstruction, τ, and the
+/// embedded margin pass — must be bitwise invariant to the worker
+/// count, same contract as the dense pooled kernels above.
+#[test]
+fn factored_chain_bitwise_invariant_across_worker_counts() {
+    use triplet_screen::runtime::FactoredEngine;
+    let mut rng = Pcg64::seed(89);
+    let (n, d) = (3 * gemm::PANEL_ROWS + 5, 24);
+    let (m, a, b, _) = rand_inputs(&mut rng, n, d);
+    let run = |workers: usize| {
+        let fac = FactoredEngine::new(NativeEngine::from_options(workers, None, None, None), d);
+        let (m_tilde, tau) = fac.compress_reference(m.clone());
+        let mut out = vec![0.0; n];
+        fac.ref_margins(&m_tilde, &a, &b, &mut out);
+        (
+            tau.to_bits(),
+            m_tilde.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+            out.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+        )
+    };
+    let reference = run(1);
+    for workers in [2usize, 7] {
+        assert_eq!(run(workers), reference, "factored chain bits moved at {workers} workers");
+    }
+}
+
 /// Cross-engine `Engine::step` parity: native (tiled) vs the PJRT
 /// engine. The offline stub's constructors fail by design, in which case
 /// this skips loudly — on a real `--features pjrt` + artifacts build it

@@ -601,6 +601,179 @@ fn mixed_tier_streamed_admission_matches_f64() {
     assert_eq!(se.promotions, 0);
 }
 
+/// Factored backend at full rank (r = d): the tentpole parity gate. The
+/// factored engine compresses every frame reference through an exact
+/// eigendecomposition (τ is round-off-sized on the solver's PSD
+/// iterates) and serves its margins from rank-d embeddings, so a full
+/// screened path must retire exactly the same triplets at every λ as
+/// the dense run — same L̂/R̂ counts, same rule-evaluation counts — and
+/// reach the same optimum.
+#[test]
+fn factored_full_rank_path_matches_dense_decisions() {
+    let st = store(2);
+    let dense = NativeEngine::new(0);
+    let factored = FactoredEngine::new(NativeEngine::new(0), st.d);
+    let mut cfg = PathConfig {
+        max_steps: 12,
+        solver: SolverConfig {
+            tol: 1e-9,
+            tol_relative: false,
+            max_iters: 100_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+    cfg.range_screening = true;
+    let r_dense = RegPath::new(cfg.clone()).run(&st, &dense);
+    let r_fact = RegPath::new(cfg).run(&st, &factored);
+
+    assert_eq!(r_dense.steps.len(), r_fact.steps.len());
+    for (e, f) in r_dense.steps.iter().zip(&r_fact.steps) {
+        assert!(e.converged && f.converged);
+        assert_eq!(e.screened_l, f.screened_l, "L̂ diverged at λ={}", e.lambda);
+        assert_eq!(e.screened_r, f.screened_r, "R̂ diverged at λ={}", e.lambda);
+        assert_eq!(e.rule_evals, f.rule_evals, "eval counts diverged at λ={}", e.lambda);
+    }
+    let diff = r_fact.m_final.sub(&r_dense.m_final).norm();
+    assert!(diff < 1e-6, "factored r=d moved the optimum: ‖ΔM‖_F = {diff:e}");
+
+    let sd = r_dense.screening_stats.expect("dense stats");
+    let sf = r_fact.screening_stats.expect("factored stats");
+    assert_eq!(sd.rule_evals, sf.rule_evals, "cumulative eval budgets diverged");
+    let tel = factored.factored_telemetry().expect("factored telemetry");
+    assert_eq!(tel.rank, st.d);
+    assert!(tel.compressions > 0, "no reference was ever compressed");
+    assert!(tel.factored_rows > 0, "no margin row was served from embeddings");
+    assert!(
+        tel.last_tau < 1e-8,
+        "full-rank τ = {} is not round-off-sized",
+        tel.last_tau
+    );
+}
+
+/// Streamed mining through the factored backend at r = d: the
+/// screen-on-admission batches route through `Engine::ref_margins`
+/// (O(r) from freshly embedded batch rows), and must admit exactly the
+/// same candidates at the same steps, retire the same triplets, and
+/// reach the same optimum as the dense streamed run.
+#[test]
+fn factored_full_rank_streamed_admission_matches_dense() {
+    let (ds, _) = fixture(2);
+    let dense = NativeEngine::new(0);
+    let factored = FactoredEngine::new(NativeEngine::new(0), ds.d());
+    let mut cfg = PathConfig {
+        max_steps: 10,
+        solver: SolverConfig {
+            tol: 1e-9,
+            tol_relative: false,
+            max_iters: 100_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.screening = Some(ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere));
+    cfg.range_screening = true;
+
+    let mut miner_d = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 96);
+    let r_dense =
+        RegPath::new(cfg.clone()).run_source(TripletSource::Streamed(&mut miner_d), &dense);
+    let mut miner_f = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 96);
+    let r_fact = RegPath::new(cfg).run_source(TripletSource::Streamed(&mut miner_f), &factored);
+
+    assert_eq!(r_dense.steps.len(), r_fact.steps.len());
+    for (e, f) in r_dense.steps.iter().zip(&r_fact.steps) {
+        assert!(e.converged && f.converged);
+        assert_eq!(e.admitted, f.admitted, "admission timing diverged at λ={}", e.lambda);
+        assert_eq!(e.screened_l, f.screened_l, "L̂ diverged at λ={}", e.lambda);
+        assert_eq!(e.screened_r, f.screened_r, "R̂ diverged at λ={}", e.lambda);
+    }
+    let diff = r_fact.m_final.sub(&r_dense.m_final).norm();
+    assert!(diff < 1e-6, "factored streamed optimum drifted: ‖ΔM‖_F = {diff:e}");
+
+    let sum_d = r_dense.stream.as_ref().expect("dense summary");
+    let sum_f = r_fact.stream.as_ref().expect("factored summary");
+    assert_eq!(sum_d.candidates, sum_f.candidates);
+    assert_eq!(sum_d.admitted_rows, sum_f.admitted_rows, "admitted sets differ in size");
+    assert_eq!(sum_d.pending_end, sum_f.pending_end);
+    assert_eq!(sum_d.store.idx, sum_f.store.idx, "admitted candidate order diverged");
+    for t in 0..sum_d.store.len() {
+        assert_eq!(
+            sum_d.final_status.get(t),
+            sum_f.final_status.get(t),
+            "final status diverged on admitted triplet {t}"
+        );
+    }
+    let tel = factored.factored_telemetry().expect("factored telemetry");
+    assert!(tel.compressions > 0, "streamed path never compressed a reference");
+    assert!(tel.embed_passes > 0, "admission batches never embedded");
+}
+
+/// Factored backend below full rank: **no dense-equivalence claim** —
+/// the compressed reference is a coarser certificate, and its exact
+/// compression error τ inflates the frame's ε (Thm 3.10's
+/// approximate-reference ball) — but screening must stay *safe*: a
+/// screened solve through the rank-r backend reaches the unscreened
+/// optimum, and every retired triplet carries the oracle α*.
+#[test]
+fn factored_low_rank_screened_solve_matches_unscreened_oracle() {
+    let st = store(1);
+    let loss = Loss::smoothed_hinge(0.05);
+    for rank in [2usize, 3] {
+        let engine = FactoredEngine::new(NativeEngine::new(0), rank);
+        let lmax = Problem::lambda_max(&st, &loss, &engine);
+        let lambda = lmax * 0.5;
+        let l0 = lambda / 0.8;
+        // unscreened solves delegate bitwise to the dense kernels — the
+        // oracle is the true dense optimum
+        let (m_oracle, _) = solve_oracle(&st, loss, lambda, &engine);
+        let (m_ref, eps_ref) = solve_oracle(&st, loss, l0, &engine);
+        let mut oracle_margins = vec![0.0; st.len()];
+        engine.margins(&m_oracle, &st.a, &st.b, &mut oracle_margins);
+        let hn_max = st.h_norm.iter().cloned().fold(0.0f64, f64::max);
+
+        // RRPB only: it is the ε-aware bound, and ε-folding is exactly
+        // how the rank-r reference stays safe for the dense problem
+        let cfg = ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere);
+        let mut mgr = ScreeningManager::new(cfg);
+        mgr.set_reference(m_ref.clone(), l0, eps_ref, &st, &engine);
+        let tau = engine.factored_telemetry().expect("telemetry").last_tau;
+        assert!(tau > 0.0, "rank {rank} < d must report strictly positive τ");
+        let mut prob = Problem::new(&st, loss, lambda);
+        let engine_ref: &dyn Engine = &engine;
+        let mut cb = |p: &Problem, ctx: &ScreenCtx| mgr.screen(p, ctx, engine_ref);
+        let (m, stats) = Solver::new(SolverConfig {
+            tol: 1e-11,
+            tol_relative: false,
+            max_iters: 100_000,
+            ..Default::default()
+        })
+        .solve(&mut prob, &engine, Mat::zeros(st.d, st.d), Some(&mut cb));
+        assert!(stats.converged, "rank {rank}: screened solve stalled");
+        let diff = m.sub(&m_oracle).norm();
+        assert!(diff < 1e-6, "rank {rank}: ‖M_screened − M_oracle‖_F = {diff:e}");
+
+        // α* slack: the reference is ε-certified AND rank-r compressed
+        let slack = 1e-6 + 4.0 * (eps_ref + tau) * hn_max;
+        for t in 0..st.len() {
+            match prob.status().get(t) {
+                TripletStatus::ScreenedL => assert!(
+                    oracle_margins[t] < loss.l_threshold() + slack,
+                    "rank {rank}: t={t} screened L but oracle margin {} (α* != 1)",
+                    oracle_margins[t]
+                ),
+                TripletStatus::ScreenedR => assert!(
+                    oracle_margins[t] > loss.r_threshold() - slack,
+                    "rank {rank}: t={t} screened R but oracle margin {} (α* != 0)",
+                    oracle_margins[t]
+                ),
+                TripletStatus::Active => {}
+            }
+        }
+        prob.workset().assert_consistent(&st);
+    }
+}
+
 /// Regression for the old range-extension loop that re-tested every
 /// store id: the certificate sweep must only emit ids that are active in
 /// the presented workset — retired ids are never revisited, even while
