@@ -1,0 +1,169 @@
+//! `triplet-serve` — multi-tenant path-serving demo binary.
+//!
+//! Drives the `service` subsystem end to end: per-tenant [`Session`]s
+//! with sharded admission, a shared [`FrameStore`], warm cache hits and
+//! incremental updates, all on the persistent worker pool.
+//!
+//! `triplet-serve --help` prints the full option reference — the same
+//! text as the `triplet-serve` CLI section of `rust/README.md`,
+//! enforced byte-for-byte by the
+//! `readme_service_section_embeds_help_verbatim` test below.
+
+use triplet_screen::coordinator::report::{fnum, Table};
+use triplet_screen::data::synthetic;
+use triplet_screen::prelude::*;
+use triplet_screen::service::{FrameStore, ServeResult, Session, SessionConfig};
+use triplet_screen::util::cli::Args;
+
+/// Full option reference, printed by `--help` and mirrored verbatim in
+/// the `triplet-serve` CLI section of `rust/README.md`.
+const HELP: &str = "\
+usage: triplet-serve demo [options]
+
+Multi-tenant serving demonstration on the shared worker pool. Each
+tenant session runs the full lifecycle: a cold sharded path solve, a
+replay of the same dataset (warm FrameStore hit, zero rule
+evaluations), then an incremental update (one row perturbed, one label
+flipped) served by a warm-started re-solve at the tenant's pinned
+lambda instead of a fresh path from lambda_max.
+
+options
+  --tenants N           tenant sessions to run                    [4]
+  --shards N            admission shards per request              [4]
+  --dataset NAME        synthetic analogue per tenant             [segment-small]
+  --k N                 neighbors per anchor                      [3]
+  --seed N              RNG seed (tenant t solves seed+t)         [7]
+  --rho F               geometric decay of the lambda path        [0.9]
+  --max-steps N         lambda steps per cold solve               [8]
+  --tol F               solver duality-gap tolerance              [1e-6]
+  --gamma F             smoothed-hinge gamma (0 = plain hinge)    [0.05]
+  --batch N             mining batch size                         [1024]
+  --frame-capacity N    FrameStore LRU capacity                   [8]
+  --max-candidates N    per-request candidate budget (0 = off)    [0]
+  --max-workset N       per-request workset-row budget (0 = off)  [0]
+  --threads N           worker threads (0 = auto)                 [0]
+  --json                emit one telemetry JSON object per request
+";
+
+fn main() {
+    let args = Args::parse();
+    if args.flag("help") {
+        print!("{HELP}");
+        return;
+    }
+    match args.subcommand.as_deref() {
+        Some("demo") | None => demo(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            print!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn demo(args: &Args) {
+    let tenants = args.get_usize("tenants", 4);
+    let cfg = SessionConfig {
+        k: args.get_usize("k", 3),
+        batch: args.get_usize("batch", 1024),
+        shards: args.get_usize("shards", 4),
+        rho: args.get_f64("rho", 0.9),
+        max_steps: args.get_usize("max-steps", 8),
+        stop_ratio: 0.0,
+        gamma: args.get_f64("gamma", 0.05),
+        tol: args.get_f64("tol", 1e-6),
+        max_candidates: args.get_usize("max-candidates", 0),
+        max_workset_rows: args.get_usize("max-workset", 0),
+    };
+    let engine = NativeEngine::new(args.get_usize("threads", 0));
+    let dataset = args.get_or("dataset", "segment-small");
+    let seed = args.get_usize("seed", 7) as u64;
+    let json = args.flag("json");
+
+    let mut frames = FrameStore::new(args.get_usize("frame-capacity", 8));
+    let headers = [
+        "tenant",
+        "request",
+        "steps",
+        "admitted",
+        "reused",
+        "shards",
+        "faults",
+        "rule_evals",
+        "wall_s",
+    ];
+    let mut table = Table::new("triplet-serve demo", &headers);
+
+    for t in 0..tenants {
+        let name = format!("tenant-{t}");
+        let mut session = Session::new(name.clone(), cfg.clone());
+        let mut rng = Pcg64::seed(seed + t as u64);
+        let ds = synthetic::analogue(dataset, &mut rng);
+
+        let cold = session.serve(&ds, &mut frames, &engine).expect("cold solve");
+        record(&mut table, &name, "cold", &cold, json);
+
+        let warm = session.serve(&ds, &mut frames, &engine).expect("warm hit");
+        assert_eq!(warm.telemetry.rule_evals, 0, "warm hit must skip the rules");
+        record(&mut table, &name, "warm-hit", &warm, json);
+
+        // incremental update: nudge one row, flip one label
+        let mut updated = ds.clone();
+        let r = rng.below(updated.n());
+        updated.x.row_mut(r)[0] += 0.05;
+        let f = rng.below(updated.n());
+        updated.y[f] = (updated.y[f] + 1) % updated.n_classes;
+        let inc = session
+            .serve(&updated, &mut frames, &engine)
+            .expect("incremental update");
+        record(&mut table, &name, "incremental", &inc, json);
+    }
+
+    if !json {
+        println!("{}", table.to_markdown());
+        println!(
+            "frame store: {} entries, {} hits, {} misses, {} evictions",
+            frames.len(),
+            frames.hits(),
+            frames.misses(),
+            frames.evictions()
+        );
+    }
+}
+
+fn record(table: &mut Table, tenant: &str, request: &str, res: &ServeResult, json: bool) {
+    let tel = &res.telemetry;
+    if json {
+        println!("{}", tel.to_json().to_string_compact());
+    }
+    table.row(vec![
+        tenant.to_string(),
+        request.to_string(),
+        res.steps.to_string(),
+        res.admitted_idx.len().to_string(),
+        tel.frames_reused.to_string(),
+        tel.shards.to_string(),
+        tel.shard_faults.to_string(),
+        tel.rule_evals.to_string(),
+        fnum(tel.wall_seconds),
+    ]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::HELP;
+
+    /// The README's `triplet-serve` section claims to mirror `--help`
+    /// verbatim — hold it to that, byte for byte (same rot-guard as the
+    /// `triplet-screen` CLI section).
+    #[test]
+    fn readme_service_section_embeds_help_verbatim() {
+        let readme = include_str!("../../README.md");
+        assert!(
+            readme.contains(HELP),
+            "rust/README.md triplet-serve section diverged from the HELP const in \
+             triplet_serve.rs — update the fenced block to match `triplet-serve --help` \
+             byte for byte"
+        );
+    }
+}

@@ -69,6 +69,7 @@ pub mod solver;
 pub mod screening;
 pub mod runtime;
 pub mod path;
+pub mod service;
 #[allow(missing_docs)] // experiment/report harness; sweep tracked
 pub mod coordinator;
 

@@ -1,0 +1,279 @@
+//! `FrameStore` — an LRU cache of solved regularization paths keyed by
+//! dataset fingerprint.
+//!
+//! ## Fingerprint scheme
+//!
+//! The key is a 128-bit FNV-1a hash over everything that determines a
+//! tenant's solve: `n`, `d`, the triplet-construction `k`, every label,
+//! and the raw IEEE-754 bit pattern of every feature value (so `-0.0`
+//! vs `0.0` or a 1-ulp perturbation changes the key — bitwise equality
+//! is exactly the granularity at which the service guarantees replay).
+//! Because a 128-bit hash can still collide in principle, every entry
+//! keeps the dataset it was keyed from and a lookup verifies **bitwise
+//! equality** of rows + labels + `k` before reporting a hit: a mutated
+//! dataset can never be served a stale frame, no matter what the hash
+//! does (`rust/tests/service_safety.rs` holds property tests to this).
+//!
+//! A hit returns the cached [`CachedSolve`] without touching the
+//! solver, the screening rules, or the admission pipeline — zero rule
+//! evaluations by construction (asserted in the safety battery and
+//! gated in `benches/screening.rs`).
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+
+/// 128-bit FNV-1a offset basis.
+const FNV_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// 128-bit FNV-1a prime.
+const FNV_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+fn fnv_mix(h: &mut u128, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u128;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// 128-bit fingerprint of `(dataset, k)`: FNV-1a over the dimensions,
+/// `k`, the labels, and the bit patterns of every feature value.
+pub fn fingerprint(ds: &Dataset, k: usize) -> u128 {
+    let mut h = FNV_OFFSET;
+    fnv_mix(&mut h, &(ds.n() as u64).to_le_bytes());
+    fnv_mix(&mut h, &(ds.d() as u64).to_le_bytes());
+    fnv_mix(&mut h, &(k as u64).to_le_bytes());
+    for &y in &ds.y {
+        fnv_mix(&mut h, &(y as u64).to_le_bytes());
+    }
+    for &x in ds.x.as_slice() {
+        fnv_mix(&mut h, &x.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Bitwise dataset equality at the fingerprint's granularity: same
+/// shape, same labels, same feature bit patterns.
+fn same_dataset(a: &Dataset, b: &Dataset) -> bool {
+    a.n() == b.n()
+        && a.d() == b.d()
+        && a.y == b.y
+        && a.x
+            .as_slice()
+            .iter()
+            .zip(b.x.as_slice())
+            .all(|(p, q)| p.to_bits() == q.to_bits())
+}
+
+/// Everything a warm hit replays without re-solving: the final iterate
+/// and path position plus the screening outcome summary of the original
+/// request.
+#[derive(Clone, Debug)]
+pub struct CachedSolve {
+    /// final Mahalanobis matrix of the path
+    pub m_final: Mat,
+    /// λ the path stopped at
+    pub lambda: f64,
+    /// λ_max the cold path started from
+    pub lambda_max: f64,
+    /// ε-accuracy of `m_final` at `lambda` (from the duality gap)
+    pub eps: f64,
+    /// reduced primal at the final step
+    pub p: f64,
+    /// λ steps the cold path took
+    pub steps: usize,
+    /// `(i, j, l)` ids admitted into the final workset, admission order
+    pub admitted_idx: Vec<(u32, u32, u32)>,
+    /// triplets screened into L* at the final step
+    pub screened_l: usize,
+    /// triplets screened into R* at the final step
+    pub screened_r: usize,
+}
+
+struct Entry {
+    key: u128,
+    k: usize,
+    dataset: Dataset,
+    solve: CachedSolve,
+}
+
+/// LRU cache of solved frames keyed by [`fingerprint`]; see the module
+/// docs for the scheme and the staleness guarantee.
+pub struct FrameStore {
+    capacity: usize,
+    /// recency order: index 0 = least recently used, last = most recent
+    entries: Vec<Entry>,
+    hits: usize,
+    misses: usize,
+    insertions: usize,
+    evictions: usize,
+}
+
+impl FrameStore {
+    /// An empty store holding at most `capacity` solved frames
+    /// (`capacity` is clamped to ≥ 1).
+    pub fn new(capacity: usize) -> FrameStore {
+        FrameStore {
+            capacity: capacity.max(1),
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Cached solves currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the store holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Maximum number of cached solves.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lookups that returned a verified hit.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Lookups that missed (or failed bitwise verification).
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Entries inserted over the store's lifetime.
+    pub fn insertions(&self) -> usize {
+        self.insertions
+    }
+
+    /// Entries evicted to respect the capacity.
+    pub fn evictions(&self) -> usize {
+        self.evictions
+    }
+
+    /// Look up the solved frame for `(ds, k)`. A hit requires both the
+    /// fingerprint match **and** bitwise dataset equality (stale frames
+    /// are unreachable even under hash collision) and promotes the
+    /// entry to most-recently-used.
+    pub fn lookup(&mut self, ds: &Dataset, k: usize) -> Option<&CachedSolve> {
+        let key = fingerprint(ds, k);
+        let pos = self
+            .entries
+            .iter()
+            .position(|e| e.key == key && e.k == k && same_dataset(&e.dataset, ds));
+        match pos {
+            Some(i) => {
+                self.hits += 1;
+                let entry = self.entries.remove(i);
+                self.entries.push(entry);
+                Some(&self.entries.last().expect("just pushed").solve)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) the solved frame for `(ds, k)` as the
+    /// most-recently-used entry, evicting the least-recently-used one
+    /// if the store is at capacity. The dataset is copied into the
+    /// entry for the bitwise verification on later lookups.
+    pub fn insert(&mut self, ds: &Dataset, k: usize, solve: CachedSolve) {
+        let key = fingerprint(ds, k);
+        if let Some(i) = self
+            .entries
+            .iter()
+            .position(|e| e.key == key && e.k == k && same_dataset(&e.dataset, ds))
+        {
+            self.entries.remove(i);
+        } else if self.entries.len() >= self.capacity {
+            self.entries.remove(0);
+            self.evictions += 1;
+        }
+        self.insertions += 1;
+        self.entries.push(Entry {
+            key,
+            k,
+            dataset: ds.clone(),
+            solve,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg64;
+
+    fn dummy_solve(d: usize) -> CachedSolve {
+        CachedSolve {
+            m_final: Mat::identity(d),
+            lambda: 0.5,
+            lambda_max: 1.0,
+            eps: 0.0,
+            p: 1.0,
+            steps: 3,
+            admitted_idx: vec![(0, 1, 2)],
+            screened_l: 1,
+            screened_r: 2,
+        }
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_every_field() {
+        let mut rng = Pcg64::seed(5);
+        let ds = synthetic::gaussian_mixture("fp", 10, 3, 2, 2.0, &mut rng);
+        let base = fingerprint(&ds, 2);
+        assert_eq!(base, fingerprint(&ds.clone(), 2), "fingerprint must be pure");
+        assert_ne!(base, fingerprint(&ds, 3), "k must enter the key");
+
+        let mut row = ds.clone();
+        row.x.row_mut(4)[1] += 1e-12;
+        assert_ne!(base, fingerprint(&row, 2), "row bits must enter the key");
+
+        let mut label = ds.clone();
+        label.y[7] = (label.y[7] + 1) % label.n_classes;
+        assert_ne!(base, fingerprint(&label, 2), "labels must enter the key");
+    }
+
+    #[test]
+    fn lru_eviction_and_recency_promotion() {
+        let mut rng = Pcg64::seed(6);
+        let mk = |rng: &mut Pcg64, n: usize| synthetic::gaussian_mixture("lru", n, 3, 2, 2.0, rng);
+        let a = mk(&mut rng, 8);
+        let b = mk(&mut rng, 10);
+        let c = mk(&mut rng, 12);
+        let mut store = FrameStore::new(2);
+        store.insert(&a, 2, dummy_solve(3));
+        store.insert(&b, 2, dummy_solve(3));
+        assert!(store.lookup(&a, 2).is_some(), "a is resident");
+        // a is now most-recent; inserting c must evict b, not a
+        store.insert(&c, 2, dummy_solve(3));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.evictions(), 1);
+        assert!(store.lookup(&b, 2).is_none(), "b was the LRU victim");
+        assert!(store.lookup(&a, 2).is_some());
+        assert!(store.lookup(&c, 2).is_some());
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces_without_eviction() {
+        let mut rng = Pcg64::seed(7);
+        let ds = synthetic::gaussian_mixture("dup", 9, 3, 2, 2.0, &mut rng);
+        let mut store = FrameStore::new(2);
+        store.insert(&ds, 2, dummy_solve(3));
+        let mut newer = dummy_solve(3);
+        newer.steps = 9;
+        store.insert(&ds, 2, newer);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.evictions(), 0);
+        assert_eq!(store.lookup(&ds, 2).expect("hit").steps, 9);
+    }
+}

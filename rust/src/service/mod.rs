@@ -1,0 +1,37 @@
+//! Multi-tenant serving layer: sharded admission, frame caching, and
+//! per-tenant sessions with budgets — the first subsystem of the crate
+//! that runs as a resident process rather than a batch experiment
+//! (`triplet-serve`).
+//!
+//! Layering (each piece is independently testable):
+//!
+//! - [`shard`] — fan a [`crate::triplet::CandidateBatch`] across the
+//!   persistent worker pool, decide each candidate against a
+//!   `Send + Sync` [`shard::FrameSnapshot`] of the reference frame, and
+//!   merge the outcomes serially in enumeration order. Bitwise
+//!   shard-count invariance by construction; worker panics degrade to a
+//!   serial replay of the same plan.
+//! - [`frame_store`] — an LRU cache of solved paths keyed by a 128-bit
+//!   dataset fingerprint, with bitwise dataset verification on every
+//!   hit so a mutated dataset can never reach a stale frame.
+//! - [`session`] — per-tenant lifecycle: budget checks, cache hits
+//!   (zero rule evaluations), incremental warm starts that revive only
+//!   affected triplets, cold sharded path solves, and
+//!   BENCH_SCHEMA.md-conformant request telemetry.
+//!
+//! The test battery lives in `rust/tests/service_safety.rs`,
+//! `rust/tests/service_faults.rs` and `rust/tests/service_soak.rs`;
+//! `benches/screening.rs` gates the warm-hit and shard-scaling
+//! economics.
+
+pub mod frame_store;
+pub mod session;
+pub mod shard;
+
+pub use frame_store::{fingerprint, CachedSolve, FrameStore};
+pub use session::{
+    materialize_universe, RequestTelemetry, ServeResult, ServiceError, Session, SessionConfig,
+};
+pub use shard::{
+    apply_admissions, AdmissionCounters, FrameSnapshot, ShardOutcome, ShardedAdmitter,
+};

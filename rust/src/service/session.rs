@@ -1,0 +1,717 @@
+//! Per-tenant serving state: budgets, warm starts, sharded λ-path
+//! solves, and per-request telemetry.
+//!
+//! ## Session lifecycle
+//!
+//! A [`Session`] owns one tenant's configuration and warm-start lineage
+//! and serves requests against a (shareable) [`FrameStore`]:
+//!
+//! 1. **Budget check** — the request's candidate universe is counted
+//!    *before* any compute and rejected with a typed
+//!    [`ServiceError::BudgetExhausted`] if it exceeds
+//!    `max_candidates`; workset growth is checked against
+//!    `max_workset_rows` after every admission sweep. A rejected
+//!    request leaves the `FrameStore` untouched — budget errors can
+//!    never publish a partial frame.
+//! 2. **Warm hit** — if the `(dataset, k)` fingerprint verifies
+//!    bitwise in the store, the cached solve is replayed with zero
+//!    rule evaluations and zero admission work (`frames_reused = 1`).
+//! 3. **Incremental update** — if the tenant solved before (same `d`)
+//!    but the data changed, the service does *not* re-solve from
+//!    λ_max: it re-solves the **new** problem once at
+//!    λ₀ = λ_target/ρ, warm-started from the previous final iterate
+//!    (a few iterations when the update is small), takes the exact
+//!    duality gap as the reference ε — so the frame is sound for the
+//!    new problem by construction — and then runs a single sharded
+//!    admission + solve step down to the tenant's pinned λ_target.
+//!    Unaffected triplets sit deep inside their certified λ-ranges
+//!    and are rejected at admission; only triplets whose margins the
+//!    update actually moved get revived into the workset via the
+//!    pending-certificate / `retarget_lambda` machinery.
+//! 4. **Cold solve** — otherwise the full streamed path runs from
+//!    λ_max, with every admission sweep sharded across the pool
+//!    ([`crate::service::shard`]).
+//!
+//! Successful solves are published to the `FrameStore` and recorded as
+//! the tenant's new warm-start lineage. Every request emits a
+//! [`RequestTelemetry`] whose JSON keys are documented in
+//! `rust/docs/BENCH_SCHEMA.md` (conformance-gated in the service test
+//! battery).
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::linalg::{psd_split, Mat};
+use crate::loss::Loss;
+use crate::runtime::Engine;
+use crate::screening::{
+    BoundKind, CertFamilies, ReferenceFrame, RuleKind, ScreeningConfig, ScreeningManager,
+};
+use crate::solver::{Problem, ProblemState, ScreenCtx, Solver, SolverConfig};
+use crate::triplet::{
+    CandidateBatch, MiningStrategy, PendingCert, PendingPool, StatusVec, TripletMiner,
+    TripletStore,
+};
+use crate::util::json::Json;
+
+use super::frame_store::{CachedSolve, FrameStore};
+use super::shard::{apply_admissions, AdmissionCounters, ShardedAdmitter};
+
+/// Per-tenant service configuration: path shape, sharding, and budgets.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// neighbors per anchor for triplet construction
+    pub k: usize,
+    /// mining batch size (candidates per admission sweep)
+    pub batch: usize,
+    /// admission shards per batch (clamped to ≥ 1)
+    pub shards: usize,
+    /// geometric λ decay per path step
+    pub rho: f64,
+    /// λ steps per cold solve
+    pub max_steps: usize,
+    /// paper §5 early-termination ratio (0 disables — keeps λ grids
+    /// identical across tenants/configs, which the determinism tests
+    /// rely on)
+    pub stop_ratio: f64,
+    /// smoothed-hinge γ (0 = plain hinge)
+    pub gamma: f64,
+    /// solver duality-gap tolerance
+    pub tol: f64,
+    /// per-request candidate-universe budget (0 = unlimited)
+    pub max_candidates: usize,
+    /// per-request admitted-workset budget in rows (0 = unlimited)
+    pub max_workset_rows: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> SessionConfig {
+        SessionConfig {
+            k: 3,
+            batch: 1024,
+            shards: 1,
+            rho: 0.9,
+            max_steps: 8,
+            stop_ratio: 0.0,
+            gamma: 0.05,
+            tol: 1e-6,
+            max_candidates: 0,
+            max_workset_rows: 0,
+        }
+    }
+}
+
+impl SessionConfig {
+    fn loss(&self) -> Loss {
+        if self.gamma > 0.0 {
+            Loss::smoothed_hinge(self.gamma)
+        } else {
+            Loss::hinge()
+        }
+    }
+
+    fn solver(&self) -> SolverConfig {
+        SolverConfig {
+            tol: self.tol,
+            ..SolverConfig::default()
+        }
+    }
+}
+
+/// Typed request-rejection errors. Budget errors are raised *before*
+/// any partial result could be published, so a rejected request never
+/// leaves a frame (partial or otherwise) in the [`FrameStore`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// A per-request budget would be exceeded.
+    BudgetExhausted {
+        /// which budget tripped (`"candidates"` or `"workset_rows"`)
+        resource: &'static str,
+        /// the configured limit
+        limit: usize,
+        /// what the request needed
+        requested: usize,
+    },
+    /// The dataset yields no triplet candidates (or a degenerate
+    /// λ_max), so there is nothing to solve.
+    EmptyUniverse,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::BudgetExhausted {
+                resource,
+                limit,
+                requested,
+            } => write!(
+                f,
+                "budget exhausted: {requested} {resource} requested, limit {limit}"
+            ),
+            ServiceError::EmptyUniverse => write!(f, "no triplet candidates to solve"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Per-request telemetry; `to_json` keys are documented in
+/// `rust/docs/BENCH_SCHEMA.md` (the service tests run the same
+/// `undocumented_keys` conformance gate the bench uses).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RequestTelemetry {
+    /// cached frames this request was served from (0 or 1)
+    pub frames_reused: usize,
+    /// admission shards configured for the request
+    pub shards: usize,
+    /// worker panics caught and degraded to serial during admission
+    pub shard_faults: usize,
+    /// whether the solve warm-started from tenant lineage or a cache hit
+    pub warm_start: bool,
+    /// λ steps executed (0 for a pure cache hit)
+    pub steps: usize,
+    /// candidates decided at admission
+    pub adm_candidates: usize,
+    /// candidates admitted into the workset
+    pub adm_admitted: usize,
+    /// candidates certified into L* at admission
+    pub adm_rejected_l: usize,
+    /// candidates certified into R* at admission
+    pub adm_rejected_r: usize,
+    /// screening-rule evaluations performed by the dynamic screener
+    pub rule_evals: usize,
+    /// dynamic-screening calls during the solves
+    pub screen_calls: usize,
+    /// L-certified candidates folded into the external L̂ accumulator
+    pub external_l: usize,
+    /// pending admission certificates alive at the end of the request
+    pub pending_certs: usize,
+    /// peak admitted workset rows across the path
+    pub peak_workset_rows: usize,
+    /// wall seconds in sharded admission (margins + decisions)
+    pub admit_wall_seconds: f64,
+    /// wall seconds in the serial merge phase of admission
+    pub merge_wall_seconds: f64,
+    /// end-to-end request wall seconds
+    pub wall_seconds: f64,
+}
+
+impl RequestTelemetry {
+    /// All deterministic (non-wall-clock) counters as a fixed-size
+    /// array — the soak test compares these across interleaved vs
+    /// isolated runs.
+    pub fn counters(&self) -> [usize; 14] {
+        [
+            self.frames_reused,
+            self.shards,
+            self.shard_faults,
+            self.warm_start as usize,
+            self.steps,
+            self.adm_candidates,
+            self.adm_admitted,
+            self.adm_rejected_l,
+            self.adm_rejected_r,
+            self.rule_evals,
+            self.screen_calls,
+            self.external_l,
+            self.pending_certs,
+            self.peak_workset_rows,
+        ]
+    }
+
+    /// Emit the telemetry as a JSON object (BENCH_SCHEMA.md-conformant
+    /// keys).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("frames_reused", Json::Num(self.frames_reused as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("shard_faults", Json::Num(self.shard_faults as f64)),
+            ("warm_start", Json::Bool(self.warm_start)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("adm_candidates", Json::Num(self.adm_candidates as f64)),
+            ("adm_admitted", Json::Num(self.adm_admitted as f64)),
+            ("adm_rejected_l", Json::Num(self.adm_rejected_l as f64)),
+            ("adm_rejected_r", Json::Num(self.adm_rejected_r as f64)),
+            ("rule_evals", Json::Num(self.rule_evals as f64)),
+            ("screen_calls", Json::Num(self.screen_calls as f64)),
+            ("external_l", Json::Num(self.external_l as f64)),
+            ("pending_certs", Json::Num(self.pending_certs as f64)),
+            ("peak_workset_rows", Json::Num(self.peak_workset_rows as f64)),
+            ("admit_wall_seconds", Json::Num(self.admit_wall_seconds)),
+            ("merge_wall_seconds", Json::Num(self.merge_wall_seconds)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+        ])
+    }
+}
+
+/// Result of one served request.
+#[derive(Clone, Debug)]
+pub struct ServeResult {
+    /// learned Mahalanobis matrix at the final λ
+    pub m: Mat,
+    /// final λ of the path
+    pub lambda: f64,
+    /// λ_max the (cold) path started from
+    pub lambda_max: f64,
+    /// reduced primal at the final step
+    pub p: f64,
+    /// λ steps executed by the original solve
+    pub steps: usize,
+    /// `(i, j, l)` ids admitted into the final workset, admission order
+    pub admitted_idx: Vec<(u32, u32, u32)>,
+    /// triplets screened into L* at the final step
+    pub screened_l: usize,
+    /// triplets screened into R* at the final step
+    pub screened_r: usize,
+    /// per-request telemetry
+    pub telemetry: RequestTelemetry,
+}
+
+/// Tenant warm-start lineage: the last successful solve.
+#[derive(Clone, Debug)]
+struct PreviousSolve {
+    m: Mat,
+    lambda: f64,
+    lambda_max: f64,
+    d: usize,
+}
+
+/// Internal warm-start plan for an incremental update.
+struct WarmStart {
+    m_ref: Mat,
+    lambda0: f64,
+    eps0: f64,
+    lambda_target: f64,
+    lambda_max: f64,
+}
+
+/// Outcome of one sharded path run (pre-publication).
+struct SolveOutcome {
+    m: Mat,
+    lambda: f64,
+    lambda_max: f64,
+    p: f64,
+    eps: f64,
+    steps: usize,
+    admitted_idx: Vec<(u32, u32, u32)>,
+    screened_l: usize,
+    screened_r: usize,
+}
+
+/// Per-tenant serving session; see the module docs for the lifecycle.
+pub struct Session {
+    tenant: String,
+    cfg: SessionConfig,
+    admitter: ShardedAdmitter,
+    previous: Option<PreviousSolve>,
+    requests: usize,
+}
+
+impl Session {
+    /// A new session for `tenant` with the given configuration.
+    pub fn new(tenant: impl Into<String>, cfg: SessionConfig) -> Session {
+        let admitter = ShardedAdmitter::new(cfg.shards);
+        Session {
+            tenant: tenant.into(),
+            cfg,
+            admitter,
+            previous: None,
+            requests: 0,
+        }
+    }
+
+    /// The tenant this session belongs to.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// The session's configuration.
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Requests served (including rejected ones).
+    pub fn requests(&self) -> usize {
+        self.requests
+    }
+
+    /// Arm a one-shot injected worker panic in the next admission pass
+    /// (fault-injection tests; see
+    /// [`crate::service::shard::ShardedAdmitter::inject_fault`]).
+    pub fn inject_shard_fault(&mut self) {
+        self.admitter.inject_fault();
+    }
+
+    /// Worker panics caught (and recovered from) by this session.
+    pub fn faults_caught(&self) -> usize {
+        self.admitter.faults_caught()
+    }
+
+    /// Serve one request: budget check, then cache hit / incremental
+    /// warm start / cold sharded path solve, in that order. Successful
+    /// solves are published to `frames` and become the tenant's
+    /// warm-start lineage; errors publish nothing.
+    pub fn serve(
+        &mut self,
+        ds: &Dataset,
+        frames: &mut FrameStore,
+        engine: &dyn Engine,
+    ) -> Result<ServeResult, ServiceError> {
+        let t0 = Instant::now();
+        self.requests += 1;
+        let mut tel = RequestTelemetry {
+            shards: self.admitter.shards(),
+            ..RequestTelemetry::default()
+        };
+
+        let mut miner =
+            TripletMiner::new(ds, self.cfg.k, MiningStrategy::Exhaustive, self.cfg.batch);
+        let universe = miner.total_candidates();
+        if universe == 0 {
+            return Err(ServiceError::EmptyUniverse);
+        }
+        if self.cfg.max_candidates > 0 && universe > self.cfg.max_candidates {
+            return Err(ServiceError::BudgetExhausted {
+                resource: "candidates",
+                limit: self.cfg.max_candidates,
+                requested: universe,
+            });
+        }
+
+        if let Some(hit) = frames.lookup(ds, self.cfg.k) {
+            tel.frames_reused = 1;
+            tel.warm_start = true;
+            tel.steps = hit.steps;
+            tel.peak_workset_rows = hit.admitted_idx.len();
+            tel.wall_seconds = t0.elapsed().as_secs_f64();
+            let res = ServeResult {
+                m: hit.m_final.clone(),
+                lambda: hit.lambda,
+                lambda_max: hit.lambda_max,
+                p: hit.p,
+                steps: hit.steps,
+                admitted_idx: hit.admitted_idx.clone(),
+                screened_l: hit.screened_l,
+                screened_r: hit.screened_r,
+                telemetry: tel,
+            };
+            self.previous = Some(PreviousSolve {
+                m: res.m.clone(),
+                lambda: res.lambda,
+                lambda_max: res.lambda_max,
+                d: ds.d(),
+            });
+            return Ok(res);
+        }
+
+        let warm = match &self.previous {
+            Some(prev) if prev.d == ds.d() => {
+                // Incremental update: re-solve the *new* problem once at
+                // λ₀ = λ_target/ρ, warm from the previous iterate. The
+                // duality gap of that solve gives the reference ε, so
+                // the frame below is sound for the new problem no
+                // matter how much the data moved.
+                tel.warm_start = true;
+                let full = materialize_universe(&mut miner);
+                let lambda_target = prev.lambda;
+                let lambda0 = lambda_target / self.cfg.rho;
+                let loss = self.cfg.loss();
+                let mut problem = Problem::new(&full, loss, lambda0);
+                let solver = Solver::new(self.cfg.solver());
+                let (m_ref, st) = solver.solve(&mut problem, engine, prev.m.clone(), None);
+                let eps0 = (2.0 * st.gap.max(0.0) / lambda0).sqrt();
+                Some(WarmStart {
+                    m_ref,
+                    lambda0,
+                    eps0,
+                    lambda_target,
+                    lambda_max: prev.lambda_max,
+                })
+            }
+            _ => None,
+        };
+
+        let outcome = run_sharded_path(
+            &self.cfg,
+            &mut self.admitter,
+            &mut miner,
+            engine,
+            warm,
+            &mut tel,
+        )?;
+
+        let cached = CachedSolve {
+            m_final: outcome.m.clone(),
+            lambda: outcome.lambda,
+            lambda_max: outcome.lambda_max,
+            eps: outcome.eps,
+            p: outcome.p,
+            steps: outcome.steps,
+            admitted_idx: outcome.admitted_idx.clone(),
+            screened_l: outcome.screened_l,
+            screened_r: outcome.screened_r,
+        };
+        frames.insert(ds, self.cfg.k, cached);
+        self.previous = Some(PreviousSolve {
+            m: outcome.m.clone(),
+            lambda: outcome.lambda,
+            lambda_max: outcome.lambda_max,
+            d: ds.d(),
+        });
+        tel.steps = outcome.steps;
+        tel.wall_seconds = t0.elapsed().as_secs_f64();
+        Ok(ServeResult {
+            m: outcome.m,
+            lambda: outcome.lambda,
+            lambda_max: outcome.lambda_max,
+            p: outcome.p,
+            steps: outcome.steps,
+            admitted_idx: outcome.admitted_idx,
+            screened_l: outcome.screened_l,
+            screened_r: outcome.screened_r,
+            telemetry: tel,
+        })
+    }
+}
+
+/// Materialize the miner's full candidate universe into a
+/// [`TripletStore`] (enumeration order). Used for the incremental
+/// warm-start reference solve and as the oracle in the service tests.
+pub fn materialize_universe(miner: &mut TripletMiner<'_>) -> TripletStore {
+    let mut store = TripletStore::empty(miner.d());
+    let mut batch = CandidateBatch::new(miner.d());
+    miner.reset();
+    while miner.next_into(&mut batch) {
+        for t in 0..batch.len() {
+            store.push(batch.idx[t], batch.a.row(t), batch.b.row(t), batch.h_norm[t]);
+        }
+    }
+    store
+}
+
+/// The sharded streamed λ-path loop (the service mirror of the path
+/// driver's streamed mode): per step, shard-admit the candidate
+/// universe against the current frame, re-test expired pending
+/// certificates, then solve the reduced problem warm-started from the
+/// previous iterate, rebuilding the frame between steps. Errors out on
+/// workset-budget exhaustion before anything is published.
+#[allow(clippy::too_many_arguments)]
+fn run_sharded_path(
+    cfg: &SessionConfig,
+    admitter: &mut ShardedAdmitter,
+    miner: &mut TripletMiner<'_>,
+    engine: &dyn Engine,
+    warm: Option<WarmStart>,
+    tel: &mut RequestTelemetry,
+) -> Result<SolveOutcome, ServiceError> {
+    let loss = cfg.loss();
+    let families = CertFamilies::rrpb_only();
+    let d = miner.d();
+    let mut batch = CandidateBatch::new(d);
+    let mut store = TripletStore::empty(d);
+    let mut lane: Vec<f64> = Vec::new();
+    let mut pending = PendingPool::new();
+    let mut h_ext = Mat::zeros(d, d);
+    let mut n_ext: usize = 0;
+    let mut expired: Vec<PendingCert> = Vec::new();
+    let mut retest_idx: Vec<(u32, u32, u32)> = Vec::new();
+    let mut cover_l: Vec<usize> = Vec::new();
+    let mut cover_r: Vec<usize> = Vec::new();
+    let mut counters = AdmissionCounters::default();
+
+    // Reference frame + path start: λ_max closed form (cold) or the
+    // caller's warm reference (incremental).
+    let (lambda_max, mut lambda, lambda_target, mut m_warm, mut frame) = match warm {
+        None => {
+            let sum_h = miner.sum_h_streamed(engine, &mut batch);
+            let sum_h_plus = psd_split(&sum_h).plus;
+            let max_hq = miner.max_margin_streamed(&sum_h_plus, engine, &mut batch);
+            let lambda_max = Problem::lambda_max_from_parts(max_hq, &loss);
+            if !(lambda_max.is_finite() && lambda_max > 0.0) {
+                return Err(ServiceError::EmptyUniverse);
+            }
+            let m_warm = sum_h_plus.scaled(1.0 / lambda_max);
+            let frame = Rc::new(ReferenceFrame::build(
+                m_warm.clone(),
+                lambda_max,
+                0.0,
+                &store,
+                engine,
+                Some((&loss, families)),
+            ));
+            (lambda_max, lambda_max, None, m_warm, frame)
+        }
+        Some(w) => {
+            let frame = Rc::new(ReferenceFrame::build(
+                w.m_ref.clone(),
+                w.lambda0,
+                w.eps0,
+                &store,
+                engine,
+                Some((&loss, families)),
+            ));
+            (w.lambda_max, w.lambda0, Some(w.lambda_target), w.m_ref, frame)
+        }
+    };
+
+    let scfg = ScreeningConfig::new(BoundKind::Rrpb, RuleKind::Sphere);
+    let mut manager = ScreeningManager::new(scfg);
+    manager.set_frame(frame.clone());
+
+    let steps_cap = if lambda_target.is_some() {
+        1
+    } else {
+        cfg.max_steps
+    };
+    let mut state: Option<ProblemState> = None;
+    let mut mined_all = false;
+    let mut prev_loss_term = f64::INFINITY;
+    let mut eps = 0.0;
+    let mut last_p = 0.0;
+    let mut steps = 0usize;
+
+    for step_i in 0..steps_cap {
+        let lambda_prev = lambda;
+        lambda = match lambda_target {
+            // incremental: land exactly on the tenant's pinned λ
+            Some(t) => t,
+            None => lambda * cfg.rho,
+        };
+
+        // ---- sharded admission sweep -------------------------------
+        let t_admit = Instant::now();
+        if !mined_all {
+            miner.reset();
+            while miner.next_into(&mut batch) {
+                let out = admitter.admit(&frame, engine, &batch, lambda, &loss);
+                if out.degraded {
+                    tel.shard_faults += 1;
+                }
+                let t_merge = Instant::now();
+                apply_admissions(
+                    &batch,
+                    &out,
+                    &mut store,
+                    &mut lane,
+                    &mut pending,
+                    &mut h_ext,
+                    &mut n_ext,
+                    None,
+                    &mut counters,
+                );
+                tel.merge_wall_seconds += t_merge.elapsed().as_secs_f64();
+            }
+            mined_all = true;
+        }
+        pending.pop_expired(lambda, &mut expired);
+        for group in expired.chunks(miner.batch_size()) {
+            retest_idx.clear();
+            retest_idx.extend(group.iter().map(|r| r.idx));
+            miner.materialize_into(&retest_idx, &mut batch);
+            let out = admitter.admit(&frame, engine, &batch, lambda, &loss);
+            if out.degraded {
+                tel.shard_faults += 1;
+            }
+            let t_merge = Instant::now();
+            apply_admissions(
+                &batch,
+                &out,
+                &mut store,
+                &mut lane,
+                &mut pending,
+                &mut h_ext,
+                &mut n_ext,
+                Some(group),
+                &mut counters,
+            );
+            tel.merge_wall_seconds += t_merge.elapsed().as_secs_f64();
+        }
+        tel.admit_wall_seconds += t_admit.elapsed().as_secs_f64();
+        tel.peak_workset_rows = tel.peak_workset_rows.max(store.len());
+
+        // ---- workset budget (typed error, nothing published) -------
+        if cfg.max_workset_rows > 0 && store.len() > cfg.max_workset_rows {
+            return Err(ServiceError::BudgetExhausted {
+                resource: "workset_rows",
+                limit: cfg.max_workset_rows,
+                requested: store.len(),
+            });
+        }
+
+        // ---- certificate range pass + reduced solve ----------------
+        cover_l.clear();
+        cover_r.clear();
+        frame.advance_covered(lambda, &mut cover_l, &mut cover_r);
+        let mut problem = match state.take() {
+            None => Problem::new(&store, loss, lambda),
+            Some(st) => Problem::resume(&store, loss, lambda, st),
+        };
+        problem.retarget_lambda(lambda, &cover_l, &cover_r);
+        problem.set_external_l(&h_ext, n_ext);
+        problem.install_ref_margins(&lane, frame.tag());
+        let (m_sol, stats) = {
+            let mut cb = |p: &Problem, ctx: &ScreenCtx| manager.screen(p, ctx, engine);
+            Solver::new(cfg.solver()).solve(&mut problem, engine, m_warm.clone(), Some(&mut cb))
+        };
+
+        let loss_term = stats.p - 0.5 * lambda * m_sol.norm_sq();
+        eps = (2.0 * stats.gap.max(0.0) / lambda).sqrt();
+        last_p = stats.p;
+        m_warm = m_sol;
+        state = Some(problem.into_state());
+        steps += 1;
+
+        // paper termination criterion (only meaningful on cold paths
+        // with stop_ratio > 0 and a positive previous loss term)
+        let mut stop = false;
+        if cfg.stop_ratio > 0.0 && prev_loss_term.is_finite() && prev_loss_term > 0.0 {
+            let drop = (prev_loss_term - loss_term) / prev_loss_term;
+            let stretch = lambda_prev / (lambda_prev - lambda);
+            stop = drop * stretch < cfg.stop_ratio;
+        }
+        prev_loss_term = loss_term;
+        if stop {
+            break;
+        }
+
+        // rebuild the reference at the fresh solution for the next step
+        if step_i + 1 < steps_cap {
+            frame = Rc::new(ReferenceFrame::build(
+                m_warm.clone(),
+                lambda,
+                eps,
+                &store,
+                engine,
+                Some((&loss, families)),
+            ));
+            manager.set_frame(frame.clone());
+            lane = frame.margins().to_vec();
+        }
+    }
+
+    let status = state
+        .map(|st| st.into_status())
+        .unwrap_or_else(|| StatusVec::new(store.len()));
+
+    tel.adm_candidates = counters.candidates;
+    tel.adm_admitted = counters.admitted;
+    tel.adm_rejected_l = counters.rejected_l;
+    tel.adm_rejected_r = counters.rejected_r;
+    tel.rule_evals = manager.stats.rule_evals;
+    tel.screen_calls = manager.stats.calls;
+    tel.external_l = n_ext;
+    tel.pending_certs = pending.len();
+
+    Ok(SolveOutcome {
+        m: m_warm,
+        lambda,
+        lambda_max,
+        p: last_p,
+        eps,
+        steps,
+        admitted_idx: store.idx.clone(),
+        screened_l: status.n_screened_l(),
+        screened_r: status.n_screened_r(),
+    })
+}

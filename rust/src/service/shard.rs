@@ -1,0 +1,447 @@
+//! Sharded admission: fan one [`CandidateBatch`] out across the worker
+//! pool, decide every candidate against an immutable frame snapshot, and
+//! merge the outcomes back in enumeration order.
+//!
+//! ## Determinism argument
+//!
+//! A shard is a *contiguous slice* of the batch in candidate enumeration
+//! order ([`crate::util::parallel::split_ranges`]). Each shard computes
+//! its candidates' exact-f64 reference margins with
+//! [`Engine::ref_margins`]; the tiled margin kernels accumulate each
+//! row's chain independently of every other row (the summation order
+//! depends only on `d`, never on batch composition — the PR 7 bitwise
+//! batteries pin this), so slicing the batch does not change a single
+//! margin bit. Decisions are pure functions of `(margin, ‖H‖, λ)` via
+//! [`FrameSnapshot::decide`], and the merge phase replays the outcomes
+//! serially in shard order = enumeration order, so the admitted store,
+//! pending heap, external-L̂ accumulator and margins lane after an
+//! N-shard pass are **bitwise identical** to the single-shard pass
+//! (`rust/tests/service_safety.rs` asserts this at shards ∈ {1, 2, 7}).
+//!
+//! ## Fault path
+//!
+//! The parallel phase runs under `catch_unwind`: a worker panicking
+//! mid-shard (the pool re-raises it on the caller after sibling tasks
+//! drain — see `util::parallel::ThreadPool`) degrades the whole batch to
+//! a serial re-run over the same shard plan, which produces the same
+//! bits. [`ShardedAdmitter::inject_fault`] arms a one-shot panic in the
+//! last shard so `rust/tests/service_faults.rs` can exercise the path
+//! under real load.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::linalg::Mat;
+use crate::loss::Loss;
+use crate::runtime::Engine;
+use crate::screening::{l_range, r_range, Admission, CertSide, ReferenceFrame};
+use crate::triplet::{CandidateBatch, PendingCert, PendingPool, TripletStore};
+use crate::util::parallel;
+
+/// Immutable, `Send + Sync` view of the scalars a [`ReferenceFrame`]
+/// admission decision needs (`‖M₀‖`, ε, λ₀). The frame itself is not
+/// `Sync` (it carries interior sweep state), so shard workers decide
+/// against this snapshot; [`FrameSnapshot::decide`] mirrors
+/// [`ReferenceFrame::admission_decision`] term for term and the
+/// module-level tests hold the two to exact agreement.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameSnapshot {
+    m0_norm: f64,
+    eps: f64,
+    lambda0: f64,
+}
+
+impl FrameSnapshot {
+    /// Snapshot the decision scalars of `frame`.
+    pub fn of(frame: &ReferenceFrame) -> FrameSnapshot {
+        FrameSnapshot {
+            m0_norm: frame.m0_norm(),
+            eps: frame.eps(),
+            lambda0: frame.lambda0(),
+        }
+    }
+
+    /// Admission decision for one candidate from its reference margin
+    /// `hm = ⟨H, M₀⟩` and norm `hn = ‖H‖_F` — the same closed RRPB
+    /// range forms, in the same order (R first, then L), as
+    /// [`ReferenceFrame::admission_decision`].
+    pub fn decide(&self, hm: f64, hn: f64, lambda: f64, loss: &Loss) -> Admission {
+        let rr = r_range(hm, hn, self.m0_norm, self.eps, self.lambda0, loss.r_threshold());
+        if rr.contains(lambda) {
+            return Admission::Certified {
+                side: CertSide::R,
+                expires: rr.lo.max(0.0),
+            };
+        }
+        let rl = l_range(hm, hn, self.m0_norm, self.eps, self.lambda0, loss.l_threshold());
+        if rl.contains(lambda) {
+            return Admission::Certified {
+                side: CertSide::L,
+                expires: rl.lo.max(0.0),
+            };
+        }
+        Admission::Admit
+    }
+}
+
+/// Merged result of one sharded admission pass over a batch: per
+/// candidate (enumeration order) the exact-f64 reference margin and the
+/// decision, plus how the pass executed.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    /// exact reference margins `⟨H_t, M₀⟩`, aligned with the batch
+    pub hm: Vec<f64>,
+    /// admission decisions, aligned with the batch
+    pub decisions: Vec<Admission>,
+    /// number of shards the batch was split into
+    pub shards_run: usize,
+    /// true when a worker panicked and the serial fallback produced the
+    /// outcome (bits are identical either way — see the module docs)
+    pub degraded: bool,
+}
+
+/// Monotone admission counters accumulated by [`apply_admissions`] —
+/// the service-level mirror of the manager's `adm_*` statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionCounters {
+    /// candidates decided
+    pub candidates: usize,
+    /// candidates admitted into the workset
+    pub admitted: usize,
+    /// candidates certified into L* at admission
+    pub rejected_l: usize,
+    /// candidates certified into R* at admission
+    pub rejected_r: usize,
+}
+
+/// Executes sharded admission passes; owns the shard count and the
+/// fault-injection / degrade bookkeeping.
+#[derive(Debug)]
+pub struct ShardedAdmitter {
+    shards: usize,
+    fault_pending: bool,
+    faults_caught: usize,
+}
+
+impl ShardedAdmitter {
+    /// A sharded admitter splitting every batch into (at most) `shards`
+    /// contiguous slices; `shards` is clamped to ≥ 1.
+    pub fn new(shards: usize) -> ShardedAdmitter {
+        ShardedAdmitter {
+            shards: shards.max(1),
+            fault_pending: false,
+            faults_caught: 0,
+        }
+    }
+
+    /// Configured shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Arm a one-shot injected panic: the next parallel pass panics in
+    /// its last shard, exercising the degrade-to-serial path
+    /// (test-only; the serial re-run consumes the fault and succeeds).
+    pub fn inject_fault(&mut self) {
+        self.fault_pending = true;
+    }
+
+    /// Worker panics caught (and recovered from) so far.
+    pub fn faults_caught(&self) -> usize {
+        self.faults_caught
+    }
+
+    /// Decide every candidate in `batch` at `lambda` against `frame`,
+    /// fanning the margin passes across the pool. Margins always take
+    /// the exact f64 [`Engine::ref_margins`] path (the mixed-precision
+    /// envelope tier is a manager-side concern), so the merged outcome
+    /// is bitwise independent of the shard count.
+    pub fn admit(
+        &mut self,
+        frame: &ReferenceFrame,
+        engine: &dyn Engine,
+        batch: &CandidateBatch,
+        lambda: f64,
+        loss: &Loss,
+    ) -> ShardOutcome {
+        let n = batch.len();
+        let m0: &Mat = frame.m0();
+        let snap = FrameSnapshot::of(frame);
+        let ranges = parallel::split_ranges(n, self.shards);
+        let shards_run = ranges.len().max(1);
+
+        // One-shot injected fault: armed before dispatch, consumed by
+        // the first shard that trips it, so the serial fallback below
+        // re-runs clean.
+        let fault = AtomicBool::new(self.fault_pending);
+        self.fault_pending = false;
+        let fault_start = ranges.last().map(|r| r.start);
+
+        let run_shard = |r: Range<usize>| -> (Vec<f64>, Vec<Admission>) {
+            if Some(r.start) == fault_start && fault.swap(false, Ordering::SeqCst) {
+                panic!("injected shard fault (service fault-injection test)");
+            }
+            let idx: Vec<usize> = r.clone().collect();
+            let mut hm = vec![0.0; idx.len()];
+            if !idx.is_empty() {
+                let a = batch.a.select_rows(&idx);
+                let b = batch.b.select_rows(&idx);
+                engine.ref_margins(m0, &a, &b, &mut hm);
+            }
+            let decisions = hm
+                .iter()
+                .zip(r)
+                .map(|(&m, t)| snap.decide(m, batch.h_norm[t], lambda, loss))
+                .collect();
+            (hm, decisions)
+        };
+
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            parallel::par_range_tasks(ranges.clone(), &run_shard)
+        }));
+        let (per_shard, degraded) = match attempt {
+            Ok(v) => (v, false),
+            Err(_) => {
+                // A worker died mid-shard. The pool has already drained
+                // sibling tasks and stays usable (PR 7 guarantee);
+                // replay the same shard plan serially — same rows, same
+                // chains, same bits.
+                self.faults_caught += 1;
+                let serial: Vec<_> = ranges.into_iter().map(&run_shard).collect();
+                (serial, true)
+            }
+        };
+
+        let mut hm = Vec::with_capacity(n);
+        let mut decisions = Vec::with_capacity(n);
+        for (h, d) in per_shard {
+            hm.extend(h);
+            decisions.extend(d);
+        }
+        debug_assert_eq!(hm.len(), n);
+        ShardOutcome {
+            hm,
+            decisions,
+            shards_run,
+            degraded,
+        }
+    }
+}
+
+/// Serial merge phase: replay a [`ShardOutcome`] onto the tenant state
+/// in enumeration order — admitted rows into the store + margins lane,
+/// certificates into the pending heap, L-certified mass folded into the
+/// row-less external L̂ accumulator. Mirrors the streamed path driver's
+/// admission bookkeeping exactly (including the `prior` transition
+/// handling for re-tested pending certificates); the external-L̂ outer
+/// products are applied serially in enumeration order on purpose — f64
+/// addition is not associative, and this pins the accumulator's bits
+/// across shard counts.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_admissions(
+    batch: &CandidateBatch,
+    outcome: &ShardOutcome,
+    store: &mut TripletStore,
+    lane: &mut Vec<f64>,
+    pending: &mut PendingPool,
+    h_ext: &mut Mat,
+    n_ext: &mut usize,
+    prior: Option<&[PendingCert]>,
+    counters: &mut AdmissionCounters,
+) {
+    debug_assert_eq!(outcome.hm.len(), batch.len());
+    debug_assert_eq!(outcome.decisions.len(), batch.len());
+    for t in 0..batch.len() {
+        let decision = outcome.decisions[t];
+        counters.candidates += 1;
+        let was_l = prior.is_some_and(|p| p[t].side == CertSide::L);
+        let now_l = matches!(
+            decision,
+            Admission::Certified {
+                side: CertSide::L,
+                ..
+            }
+        );
+        if was_l && !now_l {
+            h_ext.add_h_outer(batch.a.row(t), batch.b.row(t), -1.0);
+            *n_ext -= 1;
+        } else if !was_l && now_l {
+            h_ext.add_h_outer(batch.a.row(t), batch.b.row(t), 1.0);
+            *n_ext += 1;
+        }
+        match decision {
+            Admission::Admit => {
+                store.push(batch.idx[t], batch.a.row(t), batch.b.row(t), batch.h_norm[t]);
+                lane.push(outcome.hm[t]);
+                counters.admitted += 1;
+            }
+            Admission::Certified { side, expires } => {
+                pending.push(PendingCert {
+                    idx: batch.idx[t],
+                    side,
+                    expires,
+                });
+                match side {
+                    CertSide::L => counters.rejected_l += 1,
+                    CertSide::R => counters.rejected_r += 1,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::runtime::NativeEngine;
+    use crate::screening::CertFamilies;
+    use crate::solver::Problem;
+    use crate::triplet::{MiningStrategy, TripletMiner};
+    use crate::util::quickcheck::forall;
+    use crate::util::rng::Pcg64;
+
+    fn fixture(seed: u64) -> (crate::data::Dataset, NativeEngine, Loss) {
+        let mut rng = Pcg64::seed(seed);
+        let ds = synthetic::gaussian_mixture("shard", 36, 4, 3, 2.6, &mut rng);
+        (ds, NativeEngine::new(2), Loss::smoothed_hinge(0.05))
+    }
+
+    /// `FrameSnapshot::decide` must agree with the frame's own
+    /// `admission_decision` on every candidate, at several λ.
+    #[test]
+    fn snapshot_decide_matches_frame() {
+        let (ds, engine, loss) = fixture(11);
+        let mut rng = Pcg64::seed(12);
+        let store = crate::triplet::TripletStore::from_dataset(&ds, 3, &mut rng);
+        let lambda0 = Problem::lambda_max(&store, &loss, &engine);
+        let ones = vec![1.0; store.len()];
+        let m0 = crate::linalg::psd_project(&engine.wgram(&store.a, &store.b, &ones))
+            .scaled(1.0 / lambda0);
+        let frame = ReferenceFrame::build(
+            m0,
+            lambda0,
+            1e-3,
+            &store,
+            &engine,
+            Some((&loss, CertFamilies::rrpb_only())),
+        );
+        let snap = FrameSnapshot::of(&frame);
+        for (t, &hm) in frame.margins().iter().enumerate() {
+            let hn = store.h_norm[t];
+            for mul in [0.95, 0.7, 0.4, 0.1] {
+                let lambda = lambda0 * mul;
+                assert_eq!(
+                    snap.decide(hm, hn, lambda, &loss),
+                    frame.admission_decision(hm, hn, lambda, &loss),
+                    "snapshot diverged at t={t} lambda={lambda}"
+                );
+            }
+        }
+    }
+
+    /// Any shard count produces bitwise-identical margins and decisions.
+    #[test]
+    fn shard_count_invariance() {
+        let (ds, engine, loss) = fixture(21);
+        let mut miner = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 4096);
+        let mut batch = CandidateBatch::new(ds.d());
+        let sum_h = miner.sum_h_streamed(&engine, &mut batch);
+        let plus = crate::linalg::psd_split(&sum_h).plus;
+        let max_hq = miner.max_margin_streamed(&plus, &engine, &mut batch);
+        let lambda0 = Problem::lambda_max_from_parts(max_hq, &loss);
+        let m0 = plus.scaled(1.0 / lambda0);
+        let empty = TripletStore::empty(ds.d());
+        let frame = ReferenceFrame::build(m0, lambda0, 0.0, &empty, &engine, None);
+
+        miner.reset();
+        assert!(miner.next_into(&mut batch));
+        let lambda = lambda0 * 0.8;
+        let base = ShardedAdmitter::new(1).admit(&frame, &engine, &batch, lambda, &loss);
+        for shards in [2, 3, 7, 16] {
+            let out = ShardedAdmitter::new(shards).admit(&frame, &engine, &batch, lambda, &loss);
+            assert_eq!(out.decisions, base.decisions, "decisions differ at {shards} shards");
+            for t in 0..batch.len() {
+                assert_eq!(
+                    out.hm[t].to_bits(),
+                    base.hm[t].to_bits(),
+                    "margin bits differ at {shards} shards, t={t}"
+                );
+            }
+        }
+    }
+
+    /// The injected fault degrades to serial and still produces the
+    /// same bits; the admitter records the catch and the pool survives.
+    #[test]
+    fn injected_fault_degrades_to_serial() {
+        let (ds, engine, loss) = fixture(31);
+        let mut miner = TripletMiner::new(&ds, 3, MiningStrategy::Exhaustive, 4096);
+        let mut batch = CandidateBatch::new(ds.d());
+        let sum_h = miner.sum_h_streamed(&engine, &mut batch);
+        let plus = crate::linalg::psd_split(&sum_h).plus;
+        let max_hq = miner.max_margin_streamed(&plus, &engine, &mut batch);
+        let lambda0 = Problem::lambda_max_from_parts(max_hq, &loss);
+        let empty = TripletStore::empty(ds.d());
+        let m0 = plus.scaled(1.0 / lambda0);
+        let frame = ReferenceFrame::build(m0, lambda0, 0.0, &empty, &engine, None);
+
+        miner.reset();
+        assert!(miner.next_into(&mut batch));
+        let lambda = lambda0 * 0.8;
+        let mut clean = ShardedAdmitter::new(4);
+        let base = clean.admit(&frame, &engine, &batch, lambda, &loss);
+        assert!(!base.degraded);
+
+        let mut faulty = ShardedAdmitter::new(4);
+        faulty.inject_fault();
+        let out = faulty.admit(&frame, &engine, &batch, lambda, &loss);
+        assert!(out.degraded, "injected fault must trip the serial fallback");
+        assert_eq!(faulty.faults_caught(), 1);
+        assert_eq!(out.decisions, base.decisions);
+        for t in 0..batch.len() {
+            assert_eq!(out.hm[t].to_bits(), base.hm[t].to_bits());
+        }
+        // the pool and the admitter both stay usable
+        let again = faulty.admit(&frame, &engine, &batch, lambda, &loss);
+        assert!(!again.degraded);
+        assert_eq!(again.decisions, base.decisions);
+    }
+
+    /// Property: `decide` never returns a certificate whose range fails
+    /// to contain the query λ (consistency with the range forms).
+    #[test]
+    fn decide_certificates_contain_lambda() {
+        forall("shard_decide_contains", 64, |rng| {
+            let m0_norm = rng.range(0.1, 5.0);
+            let eps = rng.range(0.0, 0.5);
+            let lambda0 = rng.range(0.5, 3.0);
+            let snap = FrameSnapshot {
+                m0_norm,
+                eps,
+                lambda0,
+            };
+            let loss = Loss::smoothed_hinge(0.05);
+            let hm = rng.range(-3.0, 3.0);
+            let hn = rng.range(0.05, 4.0);
+            let lambda = lambda0 * rng.range(0.05, 0.999);
+            match snap.decide(hm, hn, lambda, &loss) {
+                Admission::Admit => Ok(()),
+                Admission::Certified { side, expires } => {
+                    let range = match side {
+                        CertSide::R => r_range(hm, hn, m0_norm, eps, lambda0, loss.r_threshold()),
+                        CertSide::L => l_range(hm, hn, m0_norm, eps, lambda0, loss.l_threshold()),
+                    };
+                    if !range.contains(lambda) {
+                        return Err(format!("certified outside its own range at λ={lambda}"));
+                    }
+                    if expires > lambda {
+                        return Err(format!("expires {expires} above query λ {lambda}"));
+                    }
+                    Ok(())
+                }
+            }
+        });
+    }
+}

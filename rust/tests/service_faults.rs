@@ -1,0 +1,160 @@
+//! Fault-injection battery for the serving layer: worker panics must
+//! degrade gracefully, and budget exhaustion must be a clean typed
+//! error — never a partial frame in the store.
+//!
+//! 1. A worker panicking mid-shard (one-shot injected fault) trips the
+//!    `catch_unwind` + help-drain path from the pool layer: the batch
+//!    is replayed serially over the same shard plan, the merged result
+//!    is bitwise identical to the clean run, and both the admitter and
+//!    the shared pool stay usable afterwards.
+//! 2. Exceeding the per-request candidate or workset budget returns
+//!    [`ServiceError::BudgetExhausted`] with the tripped resource named,
+//!    and the `FrameStore` is left untouched (no partial publication).
+//! 3. A dataset with no triplet candidates is a typed
+//!    [`ServiceError::EmptyUniverse`], not a panic.
+
+use triplet_screen::prelude::*;
+use triplet_screen::service::{FrameStore, ServiceError, Session, SessionConfig};
+
+fn service_cfg(shards: usize) -> SessionConfig {
+    SessionConfig {
+        k: 2,
+        batch: 256,
+        shards,
+        rho: 0.8,
+        max_steps: 3,
+        tol: 1e-7,
+        ..SessionConfig::default()
+    }
+}
+
+fn assert_bitwise_eq(a: &triplet_screen::linalg::Mat, b: &triplet_screen::linalg::Mat) {
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "bit divergence at flat index {i}");
+    }
+}
+
+/// Guarantee 1: the injected worker panic degrades admission to serial,
+/// the merged optimum is bitwise identical, and the session + pool keep
+/// serving afterwards.
+#[test]
+fn worker_panic_mid_shard_still_produces_the_merged_optimum() {
+    let mut rng = Pcg64::seed(13);
+    let ds = synthetic::gaussian_mixture("fault", 30, 4, 3, 2.6, &mut rng);
+    let engine = NativeEngine::new(2);
+
+    let mut clean_frames = FrameStore::new(4);
+    let mut clean = Session::new("clean", service_cfg(4));
+    let base = clean.serve(&ds, &mut clean_frames, &engine).expect("clean solve");
+    assert_eq!(clean.faults_caught(), 0);
+    assert_eq!(base.telemetry.shard_faults, 0);
+
+    let mut frames = FrameStore::new(4);
+    let mut faulty = Session::new("faulty", service_cfg(4));
+    faulty.inject_shard_fault();
+    let out = faulty.serve(&ds, &mut frames, &engine).expect("degraded solve");
+    assert_eq!(faulty.faults_caught(), 1, "exactly one injected panic is caught");
+    assert!(out.telemetry.shard_faults >= 1, "telemetry must record the degrade");
+
+    assert_bitwise_eq(&out.m, &base.m);
+    assert_eq!(out.admitted_idx, base.admitted_idx);
+    assert_eq!(out.screened_l, base.screened_l);
+    assert_eq!(out.screened_r, base.screened_r);
+    assert_eq!(out.lambda.to_bits(), base.lambda.to_bits());
+
+    // the fault is consumed: the session (and the shared pool) keep
+    // serving — a warm hit, then a clean re-solve of fresh data
+    let warm = faulty.serve(&ds, &mut frames, &engine).expect("warm hit after fault");
+    assert_eq!(warm.telemetry.frames_reused, 1);
+    let ds2 = synthetic::gaussian_mixture("fault2", 26, 4, 3, 2.6, &mut rng);
+    let mut fresh = Session::new("fresh", service_cfg(4));
+    let again = fresh.serve(&ds2, &mut frames, &engine).expect("pool survives");
+    assert_eq!(again.telemetry.shard_faults, 0);
+    assert_eq!(fresh.faults_caught(), 0);
+}
+
+/// Guarantee 2a: the candidate budget is checked before any compute and
+/// reports exactly what was requested; nothing reaches the store.
+#[test]
+fn candidate_budget_exhaustion_is_a_clean_typed_error() {
+    let mut rng = Pcg64::seed(23);
+    let ds = synthetic::gaussian_mixture("budget", 24, 3, 2, 2.4, &mut rng);
+    let engine = NativeEngine::new(0);
+    let cfg = SessionConfig {
+        max_candidates: 1,
+        ..service_cfg(2)
+    };
+    let universe = {
+        let miner = TripletMiner::new(&ds, cfg.k, MiningStrategy::Exhaustive, cfg.batch);
+        miner.total_candidates()
+    };
+    assert!(universe > 1, "fixture must exceed the budget");
+
+    let mut frames = FrameStore::new(4);
+    let mut session = Session::new("tenant", cfg);
+    let err = session.serve(&ds, &mut frames, &engine).expect_err("budget must trip");
+    assert_eq!(
+        err,
+        ServiceError::BudgetExhausted {
+            resource: "candidates",
+            limit: 1,
+            requested: universe,
+        }
+    );
+    assert!(err.to_string().contains("budget exhausted"), "Display names the failure");
+    assert!(frames.is_empty(), "a rejected request must not publish a frame");
+    assert_eq!(frames.insertions(), 0);
+    assert_eq!(session.requests(), 1, "the rejected request still counts");
+}
+
+/// Guarantee 2b: the workset budget trips mid-path (after an admission
+/// sweep), the error names the resource, nothing is published, and the
+/// same store serves an unbudgeted session normally afterwards.
+#[test]
+fn workset_budget_exhaustion_never_publishes_a_partial_frame() {
+    let mut rng = Pcg64::seed(29);
+    let ds = synthetic::gaussian_mixture("rows", 30, 4, 3, 2.6, &mut rng);
+    let engine = NativeEngine::new(2);
+    let mut frames = FrameStore::new(4);
+
+    let cfg = SessionConfig {
+        max_workset_rows: 2,
+        ..service_cfg(2)
+    };
+    let mut tight = Session::new("tight", cfg);
+    let err = tight.serve(&ds, &mut frames, &engine).expect_err("workset budget must trip");
+    match err {
+        ServiceError::BudgetExhausted {
+            resource,
+            limit,
+            requested,
+        } => {
+            assert_eq!(resource, "workset_rows");
+            assert_eq!(limit, 2);
+            assert!(requested > 2, "error reports the actual workset demand");
+        }
+        other => panic!("expected a workset budget error, got {other:?}"),
+    }
+    assert!(frames.is_empty(), "a mid-path rejection must not publish a partial frame");
+
+    // the same store + pool serve an unbudgeted session normally
+    let mut open = Session::new("open", service_cfg(2));
+    let ok = open.serve(&ds, &mut frames, &engine).expect("unbudgeted solve");
+    assert!(ok.admitted_idx.len() > 2);
+    assert_eq!(frames.len(), 1);
+}
+
+/// Guarantee 3: a single-class dataset (no valid triplets) is a typed
+/// error, and the store stays untouched.
+#[test]
+fn empty_candidate_universe_is_a_typed_error() {
+    // single-class dataset: every candidate needs a different-class
+    // negative, so the exhaustive universe is empty
+    let ds = Dataset::new("mono", triplet_screen::linalg::Mat::zeros(6, 3), vec![0; 6]);
+    let engine = NativeEngine::new(0);
+    let mut frames = FrameStore::new(2);
+    let mut session = Session::new("tenant", service_cfg(1));
+    let err = session.serve(&ds, &mut frames, &engine).expect_err("no triplets to solve");
+    assert_eq!(err, ServiceError::EmptyUniverse);
+    assert!(frames.is_empty());
+}

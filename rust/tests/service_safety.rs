@@ -1,0 +1,301 @@
+//! Service-layer safety battery: determinism, cache staleness, and
+//! warm-start soundness for the multi-tenant serving subsystem.
+//!
+//! Four guarantees, audited end-to-end:
+//!
+//! 1. **Shard-count invariance** — the sharded path solve reproduces
+//!    the single-shard optimum bitwise at shards ∈ {1, 2, 7} (identical
+//!    `M`, identical admitted sets, identical screened counts,
+//!    identical deterministic telemetry counters).
+//! 2. **Warm-hit economics** — re-serving a cached `(dataset, k)`
+//!    performs **zero** rule evaluations and zero admission work, and
+//!    replays the original result bitwise.
+//! 3. **Staleness is unreachable** — quickcheck'd: any bitwise dataset
+//!    mutation (row perturbed at 1e-9, label flipped) or a different
+//!    `k` misses the cache; the LRU store tracks a reference model
+//!    exactly under random insert/lookup sequences.
+//! 4. **Incremental soundness** — an incremental update (warm-started
+//!    re-solve at the pinned λ) matches the high-accuracy full-universe
+//!    oracle for the *new* dataset, while admission screening still
+//!    rejects certified triplets.
+
+use triplet_screen::linalg::Mat;
+use triplet_screen::prelude::*;
+use triplet_screen::service::{
+    materialize_universe, CachedSolve, FrameStore, ServeResult, Session, SessionConfig,
+};
+use triplet_screen::solver::Problem;
+use triplet_screen::util::json::undocumented_keys;
+use triplet_screen::util::quickcheck::forall;
+
+fn service_cfg(shards: usize) -> SessionConfig {
+    SessionConfig {
+        k: 2,
+        batch: 256,
+        shards,
+        rho: 0.8,
+        max_steps: 4,
+        tol: 1e-7,
+        ..SessionConfig::default()
+    }
+}
+
+fn max_abs_diff(a: &Mat, b: &Mat) -> f64 {
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+fn assert_bitwise_eq(a: &Mat, b: &Mat, what: &str) {
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit divergence at flat index {i}");
+    }
+}
+
+fn dummy_solve(d: usize) -> CachedSolve {
+    CachedSolve {
+        m_final: Mat::identity(d),
+        lambda: 0.5,
+        lambda_max: 1.0,
+        eps: 0.0,
+        p: 1.0,
+        steps: 1,
+        admitted_idx: vec![(0, 1, 2)],
+        screened_l: 0,
+        screened_r: 0,
+    }
+}
+
+/// Guarantee 1: shards ∈ {2, 7} reproduce the single-shard optimum —
+/// the acceptance criterion (‖ΔM‖ < 1e-6, equal screened sets) plus the
+/// stronger bitwise identity the shard merge is designed for.
+#[test]
+fn sharded_solve_reproduces_single_shard_optimum() {
+    let mut rng = Pcg64::seed(41);
+    let ds = synthetic::gaussian_mixture("svc", 33, 4, 3, 2.6, &mut rng);
+    let engine = NativeEngine::new(2);
+    let serve = |shards: usize| -> ServeResult {
+        let mut frames = FrameStore::new(4);
+        let mut session = Session::new("tenant", service_cfg(shards));
+        session.serve(&ds, &mut frames, &engine).expect("solve")
+    };
+
+    let base = serve(1);
+    assert!(base.steps > 0, "path must take steps");
+    assert!(!base.admitted_idx.is_empty(), "workset must be non-empty");
+
+    for shards in [2, 7] {
+        let out = serve(shards);
+        assert_eq!(out.telemetry.shards, shards);
+        assert!(
+            max_abs_diff(&out.m, &base.m) < 1e-6,
+            "optimum drifted at {shards} shards"
+        );
+        assert_bitwise_eq(&out.m, &base.m, &format!("M at {shards} shards"));
+        assert_eq!(out.admitted_idx, base.admitted_idx, "admitted set at {shards} shards");
+        assert_eq!(out.screened_l, base.screened_l, "L* count at {shards} shards");
+        assert_eq!(out.screened_r, base.screened_r, "R* count at {shards} shards");
+        assert_eq!(out.lambda.to_bits(), base.lambda.to_bits());
+        assert_eq!(out.p.to_bits(), base.p.to_bits());
+
+        let mut bc = base.telemetry.counters();
+        let mut oc = out.telemetry.counters();
+        // the shard count itself is the one counter that differs by
+        // construction; everything else must match exactly
+        bc[1] = 0;
+        oc[1] = 0;
+        assert_eq!(oc, bc, "deterministic telemetry counters at {shards} shards");
+    }
+}
+
+/// Guarantee 2: a warm FrameStore hit does zero rule evaluations, zero
+/// admission work, and replays the cold result bitwise.
+#[test]
+fn warm_hit_replays_bitwise_with_zero_rule_evaluations() {
+    let mut rng = Pcg64::seed(51);
+    let ds = synthetic::gaussian_mixture("hit", 30, 4, 3, 2.6, &mut rng);
+    let engine = NativeEngine::new(2);
+    let mut frames = FrameStore::new(4);
+    let mut session = Session::new("tenant", service_cfg(2));
+
+    let cold = session.serve(&ds, &mut frames, &engine).expect("cold solve");
+    assert_eq!(cold.telemetry.frames_reused, 0);
+    assert!(cold.telemetry.adm_candidates > 0, "cold solve decides candidates");
+
+    let warm = session.serve(&ds, &mut frames, &engine).expect("warm hit");
+    assert_eq!(warm.telemetry.frames_reused, 1);
+    assert!(warm.telemetry.warm_start);
+    assert_eq!(warm.telemetry.rule_evals, 0, "warm hit must not evaluate rules");
+    assert_eq!(warm.telemetry.screen_calls, 0);
+    assert_eq!(warm.telemetry.adm_candidates, 0, "warm hit must not re-admit");
+    assert_eq!(warm.telemetry.steps, cold.steps);
+    assert_bitwise_eq(&warm.m, &cold.m, "warm replay of M");
+    assert_eq!(warm.admitted_idx, cold.admitted_idx);
+    assert_eq!(warm.screened_l, cold.screened_l);
+    assert_eq!(warm.screened_r, cold.screened_r);
+    assert_eq!(frames.hits(), 1);
+    assert_eq!(frames.len(), 1);
+}
+
+/// Guarantee 3a: any bitwise mutation of the dataset (or a different
+/// `k`) misses the cache — stale frames are unreachable.
+#[test]
+fn mutated_datasets_never_hit_a_stale_frame() {
+    forall("service_store_staleness", 32, |rng| {
+        let n = 8 + rng.below(8);
+        let ds = synthetic::gaussian_mixture("stale", n, 3, 2, 2.2, rng);
+        let mut store = FrameStore::new(4);
+        store.insert(&ds, 2, dummy_solve(3));
+        if store.lookup(&ds, 2).is_none() {
+            return Err("identical dataset must hit".into());
+        }
+
+        let mut row = ds.clone();
+        let i = rng.below(n);
+        let j = rng.below(3);
+        row.x.row_mut(i)[j] += 1e-9 * rng.range(0.5, 2.0);
+        if store.lookup(&row, 2).is_some() {
+            return Err(format!("perturbed row ({i},{j}) reached a stale frame"));
+        }
+
+        let mut label = ds.clone();
+        let f = rng.below(n);
+        label.y[f] = (label.y[f] + 1) % label.n_classes;
+        if store.lookup(&label, 2).is_some() {
+            return Err(format!("flipped label {f} reached a stale frame"));
+        }
+
+        if store.lookup(&ds, 3).is_some() {
+            return Err("different k reached a stale frame".into());
+        }
+        Ok(())
+    });
+}
+
+/// Guarantee 3b: the LRU store tracks a reference model exactly under
+/// quickcheck'd insert/lookup sequences, never exceeding its capacity.
+#[test]
+fn lru_store_matches_reference_model() {
+    let mut rng0 = Pcg64::seed(77);
+    let pool: Vec<Dataset> = (0..6)
+        .map(|i| synthetic::gaussian_mixture("pool", 7 + i, 3, 2, 2.0, &mut rng0))
+        .collect();
+    forall("service_store_lru_model", 48, |rng| {
+        let cap = 1 + rng.below(4);
+        let mut store = FrameStore::new(cap);
+        // reference model: dataset indices in recency order, 0 = LRU
+        let mut model: Vec<usize> = Vec::new();
+        for step in 0..40 {
+            let i = rng.below(pool.len());
+            if rng.below(2) == 0 {
+                if let Some(p) = model.iter().position(|&m| m == i) {
+                    model.remove(p);
+                } else if model.len() >= cap {
+                    model.remove(0);
+                }
+                model.push(i);
+                store.insert(&pool[i], 2, dummy_solve(3));
+            } else {
+                let expect = model.iter().position(|&m| m == i);
+                let got = store.lookup(&pool[i], 2).is_some();
+                if got != expect.is_some() {
+                    return Err(format!(
+                        "step {step}: lookup({i}) hit={got}, model order {model:?}"
+                    ));
+                }
+                if let Some(p) = expect {
+                    model.remove(p);
+                    model.push(i);
+                }
+            }
+            if store.len() != model.len() {
+                return Err(format!("step {step}: len {} vs model {}", store.len(), model.len()));
+            }
+            if store.len() > cap {
+                return Err(format!("step {step}: capacity {cap} exceeded"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every telemetry key the service emits is documented in
+/// BENCH_SCHEMA.md (same conformance gate the bench harness uses).
+#[test]
+fn request_telemetry_keys_are_documented_in_bench_schema() {
+    const SCHEMA_MD: &str = include_str!("../docs/BENCH_SCHEMA.md");
+    let mut rng = Pcg64::seed(71);
+    let ds = synthetic::gaussian_mixture("tel", 24, 3, 2, 2.4, &mut rng);
+    let engine = NativeEngine::new(0);
+    let mut frames = FrameStore::new(2);
+    let mut session = Session::new("tenant", service_cfg(2));
+    let cold = session.serve(&ds, &mut frames, &engine).expect("cold");
+    let warm = session.serve(&ds, &mut frames, &engine).expect("warm");
+    for (label, res) in [("cold", &cold), ("warm", &warm)] {
+        let missing = undocumented_keys(&res.telemetry.to_json(), SCHEMA_MD);
+        assert!(
+            missing.is_empty(),
+            "{label} telemetry emits keys missing from BENCH_SCHEMA.md: {missing:?}"
+        );
+    }
+}
+
+/// Guarantee 4: an incremental update re-solves only at the pinned λ,
+/// still rejects certified triplets at admission, and lands on the same
+/// optimum as the high-accuracy full-universe oracle for the *new*
+/// dataset. The updated frame is published and replayable.
+#[test]
+fn incremental_update_matches_cold_oracle() {
+    let mut rng = Pcg64::seed(61);
+    let ds = synthetic::gaussian_mixture("inc", 30, 4, 3, 2.6, &mut rng);
+    let engine = NativeEngine::new(2);
+    let mut frames = FrameStore::new(4);
+    let cfg = SessionConfig {
+        tol: 1e-9,
+        ..service_cfg(2)
+    };
+    let mut session = Session::new("tenant", cfg.clone());
+    let first = session.serve(&ds, &mut frames, &engine).expect("cold solve");
+
+    let mut updated = ds.clone();
+    updated.x.row_mut(3)[1] += 0.05;
+    updated.y[11] = (updated.y[11] + 1) % updated.n_classes;
+    let inc = session.serve(&updated, &mut frames, &engine).expect("incremental");
+    assert!(inc.telemetry.warm_start, "same-d update must warm start");
+    assert_eq!(inc.telemetry.frames_reused, 0, "mutated dataset cannot hit the cache");
+    assert_eq!(inc.steps, 1, "incremental runs one sharded step");
+    assert_eq!(
+        inc.lambda.to_bits(),
+        first.lambda.to_bits(),
+        "incremental must land exactly on the tenant's pinned λ"
+    );
+    assert!(
+        inc.telemetry.adm_rejected_l + inc.telemetry.adm_rejected_r > 0,
+        "admission screening must certify some unaffected triplets"
+    );
+
+    // oracle: high-accuracy solve of the NEW problem over the full
+    // candidate universe at the pinned λ, from scratch
+    let loss = Loss::smoothed_hinge(cfg.gamma);
+    let mut miner = TripletMiner::new(&updated, cfg.k, MiningStrategy::Exhaustive, cfg.batch);
+    let full = materialize_universe(&mut miner);
+    let mut prob = Problem::new(&full, loss, inc.lambda);
+    let solver = Solver::new(SolverConfig {
+        tol: 1e-11,
+        tol_relative: false,
+        max_iters: 200_000,
+        ..Default::default()
+    });
+    let (m_oracle, st) = solver.solve(&mut prob, &engine, Mat::zeros(ds.d(), ds.d()), None);
+    assert!(st.converged, "oracle solve stalled at gap {:e}", st.gap);
+    let diff = max_abs_diff(&inc.m, &m_oracle);
+    assert!(diff < 1e-3, "incremental optimum drifted from the oracle: {diff:e}");
+
+    // the updated frame was published: serving it again is a pure hit
+    let again = session.serve(&updated, &mut frames, &engine).expect("replay");
+    assert_eq!(again.telemetry.frames_reused, 1);
+    assert_eq!(again.telemetry.rule_evals, 0);
+    assert_bitwise_eq(&again.m, &inc.m, "replay of the incremental frame");
+}

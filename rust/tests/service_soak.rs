@@ -1,0 +1,141 @@
+//! Concurrent-tenant soak: four sessions interleaving warm-started
+//! solves and incremental updates on the shared worker pool and a
+//! shared `FrameStore` must behave exactly like four isolated serial
+//! runs.
+//!
+//! Each tenant runs a four-round lifecycle (cold solve → warm hit →
+//! incremental update → warm hit of the updated frame). The interleaved
+//! schedule round-robins tenants inside every round, so admission
+//! sweeps, pending-certificate retests and pool sections from different
+//! tenants alternate on the same global pool. Per-request results (`M`
+//! bits, admitted sets, deterministic telemetry counters) must match
+//! the isolated replays, and the pool's task accounting must conserve:
+//! the interleaved phase consumes exactly as many tasks and scopes as
+//! the isolated phase, because every request's pool usage is
+//! deterministic and order-independent.
+
+use triplet_screen::prelude::*;
+use triplet_screen::service::{FrameStore, ServeResult, Session, SessionConfig};
+use triplet_screen::util::parallel;
+
+const TENANTS: usize = 4;
+
+fn service_cfg(shards: usize) -> SessionConfig {
+    SessionConfig {
+        k: 2,
+        batch: 256,
+        shards,
+        rho: 0.8,
+        max_steps: 3,
+        tol: 1e-7,
+        ..SessionConfig::default()
+    }
+}
+
+fn tenant_dataset(t: usize) -> Dataset {
+    let mut rng = Pcg64::seed(100 + t as u64);
+    synthetic::gaussian_mixture("soak", 24 + 2 * t, 4, 3, 2.6, &mut rng)
+}
+
+fn tenant_update(ds: &Dataset, t: usize) -> Dataset {
+    let mut up = ds.clone();
+    up.x.row_mut(t + 1)[0] += 0.04;
+    up.y[t + 2] = (up.y[t + 2] + 1) % up.n_classes;
+    up
+}
+
+/// The four-request lifecycle of one tenant, in order.
+fn requests(t: usize) -> [Dataset; 4] {
+    let ds = tenant_dataset(t);
+    let up = tenant_update(&ds, t);
+    [ds.clone(), ds, up.clone(), up]
+}
+
+fn assert_same_result(a: &ServeResult, b: &ServeResult, what: &str) {
+    for (i, (x, y)) in a.m.as_slice().iter().zip(b.m.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: M bits diverge at flat index {i}");
+    }
+    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{what}: λ");
+    assert_eq!(a.admitted_idx, b.admitted_idx, "{what}: admitted set");
+    assert_eq!(a.screened_l, b.screened_l, "{what}: L*");
+    assert_eq!(a.screened_r, b.screened_r, "{what}: R*");
+    assert_eq!(
+        a.telemetry.counters(),
+        b.telemetry.counters(),
+        "{what}: deterministic telemetry counters"
+    );
+}
+
+#[test]
+fn interleaved_tenants_match_isolated_serial_runs() {
+    let engine = NativeEngine::new(2);
+
+    // warm the lazy pool/engine initialization out of the measurement
+    {
+        let mut frames = FrameStore::new(2);
+        let mut warmup = Session::new("warmup", service_cfg(2));
+        warmup.serve(&tenant_dataset(0), &mut frames, &engine).expect("warmup");
+    }
+
+    // ---- interleaved phase: shared store, tenants round-robin -------
+    let before_inter = parallel::pool_stats();
+    let mut shared = FrameStore::new(2 * TENANTS);
+    let mut sessions: Vec<Session> = (0..TENANTS)
+        .map(|t| Session::new(format!("tenant-{t}"), service_cfg(1 + t % 3)))
+        .collect();
+    let plans: Vec<[Dataset; 4]> = (0..TENANTS).map(requests).collect();
+    let mut interleaved: Vec<Vec<ServeResult>> = vec![Vec::new(); TENANTS];
+    for round in 0..4 {
+        for t in 0..TENANTS {
+            let res = sessions[t]
+                .serve(&plans[t][round], &mut shared, &engine)
+                .expect("interleaved serve");
+            interleaved[t].push(res);
+        }
+    }
+    let after_inter = parallel::pool_stats();
+
+    // ---- isolated phase: fresh session + private store per tenant ---
+    let before_iso = parallel::pool_stats();
+    let mut isolated: Vec<Vec<ServeResult>> = vec![Vec::new(); TENANTS];
+    for t in 0..TENANTS {
+        let mut frames = FrameStore::new(2 * TENANTS);
+        let mut session = Session::new(format!("isolated-{t}"), service_cfg(1 + t % 3));
+        for ds in &plans[t] {
+            let res = session.serve(ds, &mut frames, &engine).expect("isolated serve");
+            isolated[t].push(res);
+        }
+    }
+    let after_iso = parallel::pool_stats();
+
+    // per-tenant, per-round identity
+    let labels = ["cold", "warm-hit", "incremental", "warm-hit-updated"];
+    for t in 0..TENANTS {
+        for round in 0..4 {
+            let what = format!("tenant {t}, {}", labels[round]);
+            assert_same_result(&interleaved[t][round], &isolated[t][round], &what);
+        }
+        // lifecycle shape: rounds 2 and 4 are pure cache hits
+        assert_eq!(interleaved[t][1].telemetry.frames_reused, 1);
+        assert_eq!(interleaved[t][1].telemetry.rule_evals, 0);
+        assert_eq!(interleaved[t][3].telemetry.frames_reused, 1);
+        assert!(interleaved[t][2].telemetry.warm_start, "update must warm start");
+    }
+
+    // shared-store accounting: every tenant's two frames are resident
+    assert_eq!(shared.len(), 2 * TENANTS);
+    assert_eq!(shared.evictions(), 0);
+    assert_eq!(shared.hits(), 2 * TENANTS);
+
+    // pool conservation: same requests → same task/scope consumption,
+    // regardless of schedule; thread count is pinned to the pool
+    let inter_tasks = after_inter.tasks - before_inter.tasks;
+    let iso_tasks = after_iso.tasks - before_iso.tasks;
+    let inter_scopes = after_inter.scopes - before_inter.scopes;
+    let iso_scopes = after_iso.scopes - before_iso.scopes;
+    assert!(inter_tasks > 0, "the interleaved phase must use the pool");
+    assert_eq!(inter_tasks, iso_tasks, "task counts must conserve across schedules");
+    assert_eq!(inter_scopes, iso_scopes, "scope counts must conserve across schedules");
+    assert_eq!(after_inter.threads, parallel::pool().capacity());
+    assert!(after_inter.threads >= 1);
+}
