@@ -1,48 +1,86 @@
-//! `triplet-serve` — multi-tenant path-serving demo binary.
+//! `triplet-serve` — multi-tenant serving binary.
 //!
 //! Drives the `service` subsystem end to end: per-tenant [`Session`]s
-//! with sharded admission, a shared [`FrameStore`], warm cache hits and
-//! incremental updates, all on the persistent worker pool.
+//! with sharded admission and a shared frame cache (`demo`), the
+//! concurrent request front end with its line-oriented protocol
+//! (`serve`), and cross-process frame export in the versioned TSFS
+//! byte format (`export-frames` / `--import-frames`).
 //!
 //! `triplet-serve --help` prints the full option reference — the same
 //! text as the `triplet-serve` CLI section of `rust/README.md`,
 //! enforced byte-for-byte by the
 //! `readme_service_section_embeds_help_verbatim` test below.
 
+use std::sync::Arc;
+
 use triplet_screen::coordinator::report::{fnum, Table};
 use triplet_screen::data::synthetic;
 use triplet_screen::prelude::*;
-use triplet_screen::service::{FrameStore, ServeResult, Session, SessionConfig};
+use triplet_screen::service::{
+    parse_request, request_dataset, FrameStore, FrontConfig, ServeFront, ServeResult, Session,
+    SessionConfig, SubmitOptions, Ticket,
+};
 use triplet_screen::util::cli::Args;
 
 /// Full option reference, printed by `--help` and mirrored verbatim in
 /// the `triplet-serve` CLI section of `rust/README.md`.
 const HELP: &str = "\
-usage: triplet-serve demo [options]
+usage: triplet-serve [demo|serve|export-frames] [options]
 
-Multi-tenant serving demonstration on the shared worker pool. Each
-tenant session runs the full lifecycle: a cold sharded path solve, a
-replay of the same dataset (warm FrameStore hit, zero rule
-evaluations), then an incremental update (one row perturbed, one label
-flipped) served by a warm-started re-solve at the tenant's pinned
-lambda instead of a fresh path from lambda_max.
+Multi-tenant serving on the shared worker pool.
 
-options
-  --tenants N           tenant sessions to run                    [4]
-  --shards N            admission shards per request              [4]
-  --dataset NAME        synthetic analogue per tenant             [segment-small]
+demo: each tenant session runs the full lifecycle — a cold sharded
+path solve, a replay of the same dataset (warm FrameStore hit, zero
+rule evaluations), then an incremental update (one row perturbed, one
+label flipped) served by a warm-started re-solve at the tenant's
+pinned lambda instead of a fresh path from lambda_max.
+
+serve: concurrent request front end. Reads newline-delimited requests
+
+  solve <tenant> <n> <d> <classes> <seed>
+
+from --requests (default: stdin), routes them through a bounded queue
+into per-tenant actor mailboxes (each tenant stays serial, tenants run
+concurrently on front-end worker threads), and drains gracefully at
+end of input — every accepted request resolves before exit. Tenant ids
+are tenant-0 .. tenant-(N-1). Lines starting with '#' are comments;
+malformed lines and unknown tenants are typed per-line errors, never a
+crash.
+
+export-frames: run the same front end over --requests, then write
+every cached frame to --out in the versioned, checksummed TSFS byte
+format. A later `serve --import-frames FILE` starts warm: imported
+frames answer repeat requests with zero rule evaluations.
+
+options (all subcommands)
   --k N                 neighbors per anchor                      [3]
-  --seed N              RNG seed (tenant t solves seed+t)         [7]
+  --shards N            admission shards per request              [4]
   --rho F               geometric decay of the lambda path        [0.9]
   --max-steps N         lambda steps per cold solve               [8]
   --tol F               solver duality-gap tolerance              [1e-6]
   --gamma F             smoothed-hinge gamma (0 = plain hinge)    [0.05]
   --batch N             mining batch size                         [1024]
-  --frame-capacity N    FrameStore LRU capacity                   [8]
   --max-candidates N    per-request candidate budget (0 = off)    [0]
   --max-workset N       per-request workset-row budget (0 = off)  [0]
-  --threads N           worker threads (0 = auto)                 [0]
+  --threads N           compute pool workers (0 = auto)           [0]
   --json                emit one telemetry JSON object per request
+
+demo options
+  --tenants N           tenant sessions to run                    [4]
+  --dataset NAME        synthetic analogue per tenant             [segment-small]
+  --seed N              RNG seed (tenant t solves seed+t)         [7]
+  --frame-capacity N    FrameStore LRU capacity                   [8]
+
+serve / export-frames options
+  --tenants N           tenants (ids tenant-0 ..)                 [4]
+  --requests FILE       request file ('-' = stdin)                [-]
+  --workers N           front-end worker threads                  [2]
+  --queue N             request-queue capacity                    [64]
+  --store-shards N      shared-store lock shards                  [4]
+  --frame-capacity N    cached frames per store shard             [8]
+  --import-frames FILE  warm-start the store from exported frames
+  --export-frames FILE  also write the store on exit (serve)
+  --out FILE            export target (export-frames)
 ";
 
 fn main() {
@@ -53,6 +91,8 @@ fn main() {
     }
     match args.subcommand.as_deref() {
         Some("demo") | None => demo(&args),
+        Some("serve") => serve(&args, false),
+        Some("export-frames") => serve(&args, true),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
             print!("{HELP}");
@@ -61,9 +101,9 @@ fn main() {
     }
 }
 
-fn demo(args: &Args) {
-    let tenants = args.get_usize("tenants", 4);
-    let cfg = SessionConfig {
+/// The per-tenant session configuration every subcommand shares.
+fn session_config(args: &Args) -> SessionConfig {
+    SessionConfig {
         k: args.get_usize("k", 3),
         batch: args.get_usize("batch", 1024),
         shards: args.get_usize("shards", 4),
@@ -74,7 +114,12 @@ fn demo(args: &Args) {
         tol: args.get_f64("tol", 1e-6),
         max_candidates: args.get_usize("max-candidates", 0),
         max_workset_rows: args.get_usize("max-workset", 0),
-    };
+    }
+}
+
+fn demo(args: &Args) {
+    let tenants = args.get_usize("tenants", 4);
+    let cfg = session_config(args);
     let engine = NativeEngine::new(args.get_usize("threads", 0));
     let dataset = args.get_or("dataset", "segment-small");
     let seed = args.get_usize("seed", 7) as u64;
@@ -147,6 +192,152 @@ fn record(table: &mut Table, tenant: &str, request: &str, res: &ServeResult, jso
         tel.rule_evals.to_string(),
         fnum(tel.wall_seconds),
     ]);
+}
+
+/// One request line's outcome, printed in line order after the drain.
+enum LineOutcome {
+    /// parse/submit rejection — resolved before any solve ran
+    Done(String),
+    /// accepted — resolves when the front end drains
+    Pending { tenant: String, ticket: Ticket },
+}
+
+fn serve(args: &Args, export_mode: bool) {
+    let out_path: Option<String> = if export_mode {
+        match args.get("out") {
+            Some(p) => Some(p.to_string()),
+            None => {
+                eprintln!("export-frames requires --out FILE");
+                std::process::exit(2);
+            }
+        }
+    } else {
+        args.get("export-frames").map(|p| p.to_string())
+    };
+
+    let tenants = args.get_usize("tenants", 4);
+    let tenant_names: Vec<String> = (0..tenants).map(|t| format!("tenant-{t}")).collect();
+    let cfg = FrontConfig {
+        workers: args.get_usize("workers", 2),
+        queue_capacity: args.get_usize("queue", 64),
+        store_shards: args.get_usize("store-shards", 4),
+        store_capacity: args.get_usize("frame-capacity", 8),
+        session: session_config(args),
+    };
+    let engine = Arc::new(NativeEngine::new(args.get_usize("threads", 0)));
+    let mut front = ServeFront::new(cfg, &tenant_names, engine);
+    let json = args.flag("json");
+
+    if let Some(path) = args.get("import-frames") {
+        let bytes = std::fs::read(path).unwrap_or_else(|e| {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(2);
+        });
+        match front.store().import_bytes(&bytes) {
+            Ok(n) => eprintln!("imported {n} frames from {path}"),
+            Err(e) => {
+                eprintln!("import of {path} failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let source = args.get_or("requests", "-");
+    let input = if source == "-" {
+        std::io::read_to_string(std::io::stdin()).unwrap_or_else(|e| {
+            eprintln!("cannot read stdin: {e}");
+            std::process::exit(2);
+        })
+    } else {
+        std::fs::read_to_string(source).unwrap_or_else(|e| {
+            eprintln!("cannot read {source}: {e}");
+            std::process::exit(2);
+        })
+    };
+
+    // Submit every line first (tenants interleave across the queue),
+    // then drain and report in line order.
+    let mut outcomes: Vec<(usize, LineOutcome)> = Vec::new();
+    for (i, line) in input.lines().enumerate() {
+        let lineno = i + 1;
+        if line.trim_start().starts_with('#') {
+            continue;
+        }
+        let outcome = match parse_request(line) {
+            Err(e) => LineOutcome::Done(format!("protocol error: {e}")),
+            Ok(req) => {
+                let ds = request_dataset(&req);
+                match front.submit(&req.tenant, &ds, SubmitOptions::default()) {
+                    Ok(ticket) => LineOutcome::Pending {
+                        tenant: req.tenant,
+                        ticket,
+                    },
+                    Err(e) => LineOutcome::Done(format!("rejected: {e}")),
+                }
+            }
+        };
+        outcomes.push((lineno, outcome));
+    }
+    if outcomes.is_empty() {
+        // typed outcome for empty input: no requests is an explicit
+        // protocol-level error, not a silent no-op
+        eprintln!("protocol error: empty request input (no request lines)");
+        std::process::exit(1);
+    }
+
+    // Graceful drain: closes the queue, processes everything accepted
+    // above, joins the workers. Every Pending ticket resolves here.
+    front.shutdown();
+
+    for (lineno, outcome) in outcomes {
+        match outcome {
+            LineOutcome::Done(msg) => println!("line {lineno}: {msg}"),
+            LineOutcome::Pending { tenant, ticket } => match ticket.wait() {
+                Ok(res) => {
+                    if json {
+                        println!("{}", res.telemetry.to_json().to_string_compact());
+                    }
+                    println!(
+                        "line {lineno}: ok tenant={tenant} steps={} admitted={} reused={} \
+                         rule_evals={} wall_s={}",
+                        res.steps,
+                        res.admitted_idx.len(),
+                        res.telemetry.frames_reused,
+                        res.telemetry.rule_evals,
+                        fnum(res.telemetry.wall_seconds),
+                    );
+                }
+                Err(e) => println!("line {lineno}: error: {e}"),
+            },
+        }
+    }
+
+    let store = front.store();
+    println!(
+        "front end: {} accepted, {} rejected-full, {} completed, {} timed-out, {} panics",
+        front.accepted(),
+        front.rejected_full(),
+        front.completed(),
+        front.timed_out(),
+        front.panics_caught()
+    );
+    println!(
+        "frame store: {} entries, {} hits, {} misses, {} evictions",
+        store.len(),
+        store.hits(),
+        store.misses(),
+        store.evictions()
+    );
+
+    if let Some(path) = out_path {
+        let bytes = store.export_bytes();
+        let frames = store.len();
+        std::fs::write(&path, &bytes).unwrap_or_else(|e| {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(2);
+        });
+        println!("exported {frames} frames ({} bytes) to {path}", bytes.len());
+    }
 }
 
 #[cfg(test)]

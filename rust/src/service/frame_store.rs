@@ -18,6 +18,33 @@
 //! solver, the screening rules, or the admission pipeline — zero rule
 //! evaluations by construction (asserted in the safety battery and
 //! gated in `benches/screening.rs`).
+//!
+//! ## Shared wrapper and the cache trait (PR 10)
+//!
+//! [`SharedFrameStore`] makes the store drivable from many OS threads
+//! at once: N independent `Mutex<FrameStore>` lock shards, with every
+//! operation routed by `fingerprint % N`. Because the routing is a pure
+//! function of the key, shard `i` observes *exactly* the subsequence of
+//! operations a serial [`FrameStore`] would observe if fed only those
+//! keys — its hit/miss/LRU/eviction behavior is the serial store's by
+//! construction (one shard **is** the serial store), which the
+//! equivalence property test replays against manually-routed serial
+//! stores. [`FrameCache`] abstracts over the two so
+//! [`crate::service::Session::serve`] runs unchanged against either.
+//!
+//! ## Frame codec (PR 10)
+//!
+//! [`encode_frame`]/[`decode_frame`] give every cached solve a
+//! versioned, fingerprint-stamped byte format (magic `TSFR`): all f64
+//! payloads travel as raw IEEE-754 bit patterns so a round trip is
+//! bitwise exact, the fingerprint stamp must re-verify against the
+//! *decoded* dataset, and a 128-bit FNV-1a trailer rejects corruption.
+//! `export_bytes`/`import_bytes` wrap whole stores in a `TSFS`
+//! container so frames survive process boundaries
+//! (`triplet-serve export-frames` / `serve --import-frames`); every
+//! rejection is a typed [`CodecError`], never a panic.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use crate::data::Dataset;
 use crate::linalg::Mat;
@@ -204,6 +231,521 @@ impl FrameStore {
             solve,
         });
     }
+
+    /// Serialize every resident frame (LRU → MRU order, so an import
+    /// reconstructs the recency order) into a `TSFS` container; see the
+    /// module docs for the format.
+    pub fn export_bytes(&self) -> Vec<u8> {
+        let blobs: Vec<Vec<u8>> = self
+            .entries
+            .iter()
+            .map(|e| encode_frame(&e.dataset, e.k, &e.solve))
+            .collect();
+        container_from(&blobs)
+    }
+
+    /// Import every frame of a `TSFS` container (in container order, so
+    /// recency is preserved), inserting each as if it had just been
+    /// solved. Returns the number of frames imported; any malformed
+    /// byte is a typed [`CodecError`] and nothing before the error is
+    /// rolled back (each frame is self-validating, so partial imports
+    /// only ever contain verified frames).
+    pub fn import_bytes(&mut self, bytes: &[u8]) -> Result<usize, CodecError> {
+        let frames = split_container(bytes)?;
+        let mut imported = 0usize;
+        for blob in frames {
+            let (ds, k, solve) = decode_frame(blob)?;
+            self.insert(&ds, k, solve);
+            imported += 1;
+        }
+        Ok(imported)
+    }
+}
+
+/// What [`crate::service::Session::serve`] needs from a frame cache:
+/// an owned copy of a verified hit, and publication of a fresh solve.
+/// Implemented by the single-owner [`FrameStore`] (the serial serving
+/// path) and by `&`[`SharedFrameStore`] (the concurrent front end —
+/// interior mutability behind the lock shards, so worker threads share
+/// one store through a plain shared reference).
+pub trait FrameCache {
+    /// Verified lookup of `(ds, k)`; a hit is returned by value (the
+    /// serve path clones the cached fields anyway) and promotes the
+    /// entry to most-recently-used.
+    fn lookup_cached(&mut self, ds: &Dataset, k: usize) -> Option<CachedSolve>;
+    /// Publish a completed solve for `(ds, k)` as the newest entry.
+    fn publish(&mut self, ds: &Dataset, k: usize, solve: CachedSolve);
+}
+
+impl FrameCache for FrameStore {
+    fn lookup_cached(&mut self, ds: &Dataset, k: usize) -> Option<CachedSolve> {
+        self.lookup(ds, k).cloned()
+    }
+
+    fn publish(&mut self, ds: &Dataset, k: usize, solve: CachedSolve) {
+        self.insert(ds, k, solve);
+    }
+}
+
+impl FrameCache for &SharedFrameStore {
+    fn lookup_cached(&mut self, ds: &Dataset, k: usize) -> Option<CachedSolve> {
+        SharedFrameStore::lookup(self, ds, k)
+    }
+
+    fn publish(&mut self, ds: &Dataset, k: usize, solve: CachedSolve) {
+        SharedFrameStore::insert(self, ds, k, solve);
+    }
+}
+
+/// A [`FrameStore`] shareable across OS threads: N `Mutex<FrameStore>`
+/// lock shards with every operation routed by `fingerprint % N`. See
+/// the module docs for the serial-equivalence argument; the property
+/// test in `rust/tests/service_concurrent.rs` replays it against
+/// manually-routed serial stores.
+pub struct SharedFrameStore {
+    shards: Vec<Mutex<FrameStore>>,
+}
+
+impl SharedFrameStore {
+    /// A store with `shards` lock shards (clamped to ≥ 1), each an
+    /// independent serial [`FrameStore`] holding at most
+    /// `capacity_per_shard` frames.
+    pub fn new(shards: usize, capacity_per_shard: usize) -> SharedFrameStore {
+        let n = shards.max(1);
+        SharedFrameStore {
+            shards: (0..n)
+                .map(|_| Mutex::new(FrameStore::new(capacity_per_shard)))
+                .collect(),
+        }
+    }
+
+    fn shard(&self, i: usize) -> MutexGuard<'_, FrameStore> {
+        // Locks are held only across non-panicking FrameStore calls;
+        // recover from poisoning so one worker's panic elsewhere can
+        // never wedge the cache for every tenant.
+        self.shards[i].lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Number of lock shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which lock shard `(ds, k)` routes to — a pure function of the
+    /// fingerprint, exposed so the equivalence test can route the same
+    /// operations through serial stores.
+    pub fn shard_of(&self, ds: &Dataset, k: usize) -> usize {
+        (fingerprint(ds, k) % self.shards.len() as u128) as usize
+    }
+
+    /// Verified lookup (fingerprint + bitwise dataset equality) on the
+    /// routed shard; a hit is returned by value and promotes the entry
+    /// to most-recently-used within its shard.
+    pub fn lookup(&self, ds: &Dataset, k: usize) -> Option<CachedSolve> {
+        let i = self.shard_of(ds, k);
+        self.shard(i).lookup(ds, k).cloned()
+    }
+
+    /// Insert (or replace) the solved frame for `(ds, k)` on the
+    /// routed shard, evicting that shard's LRU entry at capacity.
+    pub fn insert(&self, ds: &Dataset, k: usize, solve: CachedSolve) {
+        let i = self.shard_of(ds, k);
+        self.shard(i).insert(ds, k, solve);
+    }
+
+    /// Cached solves currently held, across all shards.
+    pub fn len(&self) -> usize {
+        (0..self.shards.len()).map(|i| self.shard(i).len()).sum()
+    }
+
+    /// Whether no shard holds an entry.
+    pub fn is_empty(&self) -> bool {
+        (0..self.shards.len()).all(|i| self.shard(i).is_empty())
+    }
+
+    /// Total capacity (shards × per-shard capacity).
+    pub fn capacity(&self) -> usize {
+        (0..self.shards.len())
+            .map(|i| self.shard(i).capacity())
+            .sum()
+    }
+
+    /// Verified hits across all shards.
+    pub fn hits(&self) -> usize {
+        (0..self.shards.len()).map(|i| self.shard(i).hits()).sum()
+    }
+
+    /// Misses (or failed verifications) across all shards.
+    pub fn misses(&self) -> usize {
+        (0..self.shards.len()).map(|i| self.shard(i).misses()).sum()
+    }
+
+    /// Lifetime insertions across all shards.
+    pub fn insertions(&self) -> usize {
+        (0..self.shards.len())
+            .map(|i| self.shard(i).insertions())
+            .sum()
+    }
+
+    /// Capacity evictions across all shards.
+    pub fn evictions(&self) -> usize {
+        (0..self.shards.len())
+            .map(|i| self.shard(i).evictions())
+            .sum()
+    }
+
+    /// Serialize every resident frame (shard 0 → N, LRU → MRU inside
+    /// each) into one `TSFS` container.
+    pub fn export_bytes(&self) -> Vec<u8> {
+        let mut blobs: Vec<Vec<u8>> = Vec::new();
+        for i in 0..self.shards.len() {
+            let store = self.shard(i);
+            for e in &store.entries {
+                blobs.push(encode_frame(&e.dataset, e.k, &e.solve));
+            }
+        }
+        container_from(&blobs)
+    }
+
+    /// Import every frame of a `TSFS` container, routing each to its
+    /// fingerprint shard. Returns the number of frames imported.
+    pub fn import_bytes(&self, bytes: &[u8]) -> Result<usize, CodecError> {
+        let frames = split_container(bytes)?;
+        let mut imported = 0usize;
+        for blob in frames {
+            let (ds, k, solve) = decode_frame(blob)?;
+            self.insert(&ds, k, solve);
+            imported += 1;
+        }
+        Ok(imported)
+    }
+}
+
+// ---------------------------------------------------------------------
+// frame codec
+// ---------------------------------------------------------------------
+
+/// Magic prefix of a single serialized frame.
+const FRAME_MAGIC: [u8; 4] = *b"TSFR";
+/// Magic prefix of a multi-frame store container.
+const STORE_MAGIC: [u8; 4] = *b"TSFS";
+/// Current codec version; bumped on any layout change.
+const CODEC_VERSION: u32 = 1;
+/// Bytes of the FNV-1a trailer at the end of every frame blob.
+const CHECKSUM_BYTES: usize = 16;
+
+/// Typed rejection of serialized frame bytes — every way an import can
+/// fail, none of them a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The byte stream ends before a declared field does.
+    Truncated,
+    /// The magic prefix is not `TSFR` (frame) / `TSFS` (container).
+    BadMagic,
+    /// The version field names a layout this build does not read.
+    BadVersion {
+        /// the version found in the byte stream
+        found: u32,
+    },
+    /// The FNV-1a trailer does not match the payload — corruption.
+    BadChecksum,
+    /// The fingerprint stamp does not match the decoded `(dataset, k)`
+    /// — the frame was stamped for different data.
+    FingerprintMismatch,
+    /// A structurally invalid field (impossible length, empty dataset,
+    /// non-UTF-8 name, trailing bytes).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated => write!(f, "frame bytes truncated"),
+            CodecError::BadMagic => write!(f, "bad frame magic"),
+            CodecError::BadVersion { found } => {
+                write!(f, "unsupported frame version {found} (expected {CODEC_VERSION})")
+            }
+            CodecError::BadChecksum => write!(f, "frame checksum mismatch"),
+            CodecError::FingerprintMismatch => {
+                write!(f, "fingerprint stamp does not match the decoded dataset")
+            }
+            CodecError::Malformed(what) => write!(f, "malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// The 128-bit FNV-1a digest the codec stamps at the end of every
+/// frame blob — exposed so tools (and the corruption battery) can
+/// re-stamp deliberately tampered bytes.
+pub fn frame_checksum(bytes: &[u8]) -> u128 {
+    let mut h = FNV_OFFSET;
+    fnv_mix(&mut h, bytes);
+    h
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize one solved frame; see the module docs for the layout.
+/// Every f64 travels as its raw bit pattern, so
+/// [`decode_frame`] ∘ [`encode_frame`] is bitwise identity
+/// (quickcheck'd in `rust/tests/service_safety.rs`).
+pub fn encode_frame(ds: &Dataset, k: usize, solve: &CachedSolve) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&FRAME_MAGIC);
+    push_u32(&mut out, CODEC_VERSION);
+    out.extend_from_slice(&fingerprint(ds, k).to_le_bytes());
+
+    push_u64(&mut out, k as u64);
+    let name = ds.name.as_bytes();
+    push_u64(&mut out, name.len() as u64);
+    out.extend_from_slice(name);
+    push_u64(&mut out, ds.n() as u64);
+    push_u64(&mut out, ds.d() as u64);
+    for &y in &ds.y {
+        push_u64(&mut out, y as u64);
+    }
+    for &x in ds.x.as_slice() {
+        push_u64(&mut out, x.to_bits());
+    }
+
+    push_u64(&mut out, solve.m_final.rows() as u64);
+    push_u64(&mut out, solve.m_final.cols() as u64);
+    for &m in solve.m_final.as_slice() {
+        push_u64(&mut out, m.to_bits());
+    }
+    push_u64(&mut out, solve.lambda.to_bits());
+    push_u64(&mut out, solve.lambda_max.to_bits());
+    push_u64(&mut out, solve.eps.to_bits());
+    push_u64(&mut out, solve.p.to_bits());
+    push_u64(&mut out, solve.steps as u64);
+    push_u64(&mut out, solve.admitted_idx.len() as u64);
+    for &(i, j, l) in &solve.admitted_idx {
+        out.extend_from_slice(&i.to_le_bytes());
+        out.extend_from_slice(&j.to_le_bytes());
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+    push_u64(&mut out, solve.screened_l as u64);
+    push_u64(&mut out, solve.screened_r as u64);
+
+    let sum = frame_checksum(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let end = self.pos.checked_add(n).ok_or(CodecError::Truncated)?;
+        if end > self.bytes.len() {
+            return Err(CodecError::Truncated);
+        }
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn u128(&mut self) -> Result<u128, CodecError> {
+        let b = self.take(16)?;
+        let mut a = [0u8; 16];
+        a.copy_from_slice(b);
+        Ok(u128::from_le_bytes(a))
+    }
+
+    fn f64_bits(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length field that must still fit in the unread remainder at
+    /// `elem_bytes` per element — checked *before* any allocation, so
+    /// a corrupted length can never demand absurd memory.
+    fn len_field(&mut self, elem_bytes: usize) -> Result<usize, CodecError> {
+        let n = self.u64()? as usize;
+        let need = n
+            .checked_mul(elem_bytes)
+            .ok_or(CodecError::Malformed("length overflow"))?;
+        if self.pos.checked_add(need).ok_or(CodecError::Truncated)? > self.bytes.len() {
+            return Err(CodecError::Truncated);
+        }
+        Ok(n)
+    }
+}
+
+/// Decode one frame blob back into its `(dataset, k, solve)` triple.
+/// Validation order: magic, checksum trailer, version, structure, then
+/// the fingerprint stamp against the *decoded* dataset — so corruption,
+/// version skew and mis-stamped frames each surface as their own typed
+/// [`CodecError`].
+pub fn decode_frame(bytes: &[u8]) -> Result<(Dataset, usize, CachedSolve), CodecError> {
+    if bytes.len() < 4 {
+        return Err(CodecError::Truncated);
+    }
+    if bytes[0..4] != FRAME_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    if bytes.len() < 4 + 4 + 16 + CHECKSUM_BYTES {
+        return Err(CodecError::Truncated);
+    }
+    let payload_end = bytes.len() - CHECKSUM_BYTES;
+    let mut trailer = [0u8; CHECKSUM_BYTES];
+    trailer.copy_from_slice(&bytes[payload_end..]);
+    if frame_checksum(&bytes[..payload_end]) != u128::from_le_bytes(trailer) {
+        return Err(CodecError::BadChecksum);
+    }
+
+    let mut c = Cursor {
+        bytes: &bytes[..payload_end],
+        pos: 4,
+    };
+    let version = c.u32()?;
+    if version != CODEC_VERSION {
+        return Err(CodecError::BadVersion { found: version });
+    }
+    let stamp = c.u128()?;
+
+    let k = c.u64()? as usize;
+    let name_len = c.len_field(1)?;
+    let name = std::str::from_utf8(c.take(name_len)?)
+        .map_err(|_| CodecError::Malformed("dataset name is not UTF-8"))?
+        .to_string();
+    let n = c.u64()? as usize;
+    let d = c.u64()? as usize;
+    if n == 0 || d == 0 {
+        return Err(CodecError::Malformed("empty dataset"));
+    }
+    let n_checked = {
+        // the label and feature lengths are implied by (n, d); check
+        // them against the remainder before allocating either
+        let cells = n.checked_mul(d).ok_or(CodecError::Malformed("n*d overflow"))?;
+        let need = n
+            .checked_add(cells)
+            .and_then(|w| w.checked_mul(8))
+            .ok_or(CodecError::Malformed("n*d overflow"))?;
+        if c.pos.checked_add(need).ok_or(CodecError::Truncated)? > c.bytes.len() {
+            return Err(CodecError::Truncated);
+        }
+        cells
+    };
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        y.push(c.u64()? as usize);
+    }
+    let mut x = Vec::with_capacity(n_checked);
+    for _ in 0..n_checked {
+        x.push(c.f64_bits()?);
+    }
+    let ds = Dataset::new(name, Mat::from_rows(n, d, x), y);
+
+    let m_rows = c.u64()? as usize;
+    let m_cols = c.u64()? as usize;
+    let m_cells = {
+        let cells = m_rows
+            .checked_mul(m_cols)
+            .ok_or(CodecError::Malformed("matrix shape overflow"))?;
+        if c.pos
+            .checked_add(cells.checked_mul(8).ok_or(CodecError::Malformed("matrix shape overflow"))?)
+            .ok_or(CodecError::Truncated)?
+            > c.bytes.len()
+        {
+            return Err(CodecError::Truncated);
+        }
+        cells
+    };
+    let mut m = Vec::with_capacity(m_cells);
+    for _ in 0..m_cells {
+        m.push(c.f64_bits()?);
+    }
+    let solve = CachedSolve {
+        m_final: Mat::from_rows(m_rows, m_cols, m),
+        lambda: c.f64_bits()?,
+        lambda_max: c.f64_bits()?,
+        eps: c.f64_bits()?,
+        p: c.f64_bits()?,
+        steps: c.u64()? as usize,
+        admitted_idx: {
+            let len = c.len_field(12)?;
+            let mut idx = Vec::with_capacity(len);
+            for _ in 0..len {
+                let i = c.u32()?;
+                let j = c.u32()?;
+                let l = c.u32()?;
+                idx.push((i, j, l));
+            }
+            idx
+        },
+        screened_l: c.u64()? as usize,
+        screened_r: c.u64()? as usize,
+    };
+    if c.pos != c.bytes.len() {
+        return Err(CodecError::Malformed("trailing bytes after frame payload"));
+    }
+    if fingerprint(&ds, k) != stamp {
+        return Err(CodecError::FingerprintMismatch);
+    }
+    Ok((ds, k, solve))
+}
+
+/// Wrap per-frame blobs in the `TSFS` container layout.
+fn container_from(blobs: &[Vec<u8>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&STORE_MAGIC);
+    push_u32(&mut out, CODEC_VERSION);
+    push_u64(&mut out, blobs.len() as u64);
+    for blob in blobs {
+        push_u64(&mut out, blob.len() as u64);
+        out.extend_from_slice(blob);
+    }
+    out
+}
+
+/// Split a `TSFS` container into its per-frame blobs (still encoded —
+/// each frame self-validates in [`decode_frame`]).
+fn split_container(bytes: &[u8]) -> Result<Vec<&[u8]>, CodecError> {
+    if bytes.len() < 4 {
+        return Err(CodecError::Truncated);
+    }
+    if bytes[0..4] != STORE_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    let mut c = Cursor { bytes, pos: 4 };
+    let version = c.u32()?;
+    if version != CODEC_VERSION {
+        return Err(CodecError::BadVersion { found: version });
+    }
+    let count = c.u64()? as usize;
+    let mut frames = Vec::new();
+    for _ in 0..count {
+        let len = c.len_field(1)?;
+        frames.push(c.take(len)?);
+    }
+    if c.pos != bytes.len() {
+        return Err(CodecError::Malformed("trailing bytes after container"));
+    }
+    Ok(frames)
 }
 
 #[cfg(test)]
@@ -275,5 +817,122 @@ mod tests {
         assert_eq!(store.len(), 1);
         assert_eq!(store.evictions(), 0);
         assert_eq!(store.lookup(&ds, 2).expect("hit").steps, 9);
+    }
+
+    #[test]
+    fn frame_codec_round_trips_bitwise() {
+        let mut rng = Pcg64::seed(8);
+        let ds = synthetic::gaussian_mixture("codec", 11, 4, 3, 2.0, &mut rng);
+        let mut solve = dummy_solve(4);
+        solve.lambda = -0.0; // sign-of-zero must survive
+        solve.eps = f64::MIN_POSITIVE;
+        let bytes = encode_frame(&ds, 3, &solve);
+        let (ds2, k2, solve2) = decode_frame(&bytes).expect("round trip decodes");
+        assert_eq!(k2, 3);
+        assert_eq!(ds2.name, ds.name);
+        assert_eq!(ds2.y, ds.y);
+        assert_eq!(
+            fingerprint(&ds2, k2),
+            fingerprint(&ds, 3),
+            "decoded dataset is bitwise identical"
+        );
+        assert_eq!(solve2.lambda.to_bits(), solve.lambda.to_bits());
+        assert_eq!(solve2.eps.to_bits(), solve.eps.to_bits());
+        assert_eq!(solve2.admitted_idx, solve.admitted_idx);
+        let m1: Vec<u64> = solve.m_final.as_slice().iter().map(|v| v.to_bits()).collect();
+        let m2: Vec<u64> = solve2.m_final.as_slice().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(m1, m2, "optimum matrix bits survive the codec");
+    }
+
+    #[test]
+    fn frame_codec_rejects_tampering_with_typed_errors() {
+        let mut rng = Pcg64::seed(9);
+        let ds = synthetic::gaussian_mixture("tamper", 8, 3, 2, 2.0, &mut rng);
+        let bytes = encode_frame(&ds, 2, &dummy_solve(3));
+
+        assert_eq!(decode_frame(&bytes[..bytes.len() - 1]).err(), Some(CodecError::BadChecksum));
+        assert_eq!(decode_frame(&bytes[..2]).err(), Some(CodecError::Truncated));
+        assert_eq!(decode_frame(b"NOPE").err(), Some(CodecError::BadMagic));
+
+        // flip a payload byte: the checksum catches it first
+        let mut corrupt = bytes.clone();
+        corrupt[30] ^= 0xff;
+        assert_eq!(decode_frame(&corrupt).err(), Some(CodecError::BadChecksum));
+
+        // bump the version and re-stamp: typed version error
+        let mut versioned = bytes.clone();
+        versioned[4] = 99;
+        let end = versioned.len() - CHECKSUM_BYTES;
+        let sum = frame_checksum(&versioned[..end]).to_le_bytes();
+        versioned[end..].copy_from_slice(&sum);
+        assert_eq!(
+            decode_frame(&versioned).err(),
+            Some(CodecError::BadVersion { found: 99 })
+        );
+
+        // swap the fingerprint stamp and re-stamp the checksum: the
+        // decoded dataset no longer matches the claim
+        let mut restamped = bytes.clone();
+        restamped[8] ^= 0x01;
+        let sum = frame_checksum(&restamped[..end]).to_le_bytes();
+        restamped[end..].copy_from_slice(&sum);
+        assert_eq!(decode_frame(&restamped).err(), Some(CodecError::FingerprintMismatch));
+    }
+
+    #[test]
+    fn store_export_import_preserves_frames_and_recency() {
+        let mut rng = Pcg64::seed(10);
+        let a = synthetic::gaussian_mixture("exp-a", 8, 3, 2, 2.0, &mut rng);
+        let b = synthetic::gaussian_mixture("exp-b", 10, 3, 2, 2.0, &mut rng);
+        let mut store = FrameStore::new(4);
+        store.insert(&a, 2, dummy_solve(3));
+        store.insert(&b, 2, dummy_solve(3));
+        store.lookup(&a, 2).expect("promote a to MRU");
+
+        let bytes = store.export_bytes();
+        let mut fresh = FrameStore::new(4);
+        assert_eq!(fresh.import_bytes(&bytes), Ok(2));
+        assert_eq!(fresh.len(), 2);
+        assert!(fresh.lookup(&a, 2).is_some());
+        assert!(fresh.lookup(&b, 2).is_some());
+
+        // a was MRU at export; after import + one insert at capacity 2,
+        // the LRU victim must be b, mirroring the source store.
+        let mut tight = FrameStore::new(2);
+        tight.import_bytes(&bytes).expect("import");
+        let c = synthetic::gaussian_mixture("exp-c", 12, 3, 2, 2.0, &mut rng);
+        tight.insert(&c, 2, dummy_solve(3));
+        assert!(tight.lookup(&b, 2).is_none(), "b was LRU at export");
+        assert!(tight.lookup(&a, 2).is_some(), "a kept its MRU recency");
+
+        assert_eq!(fresh.import_bytes(b"TSFRjunk"), Err(CodecError::BadMagic));
+    }
+
+    #[test]
+    fn shared_store_matches_manually_routed_serial_stores() {
+        let mut rng = Pcg64::seed(11);
+        let shared = SharedFrameStore::new(2, 2);
+        let mut serial: Vec<FrameStore> = (0..2).map(|_| FrameStore::new(2)).collect();
+        let datasets: Vec<_> = (0..6)
+            .map(|i| synthetic::gaussian_mixture("shard", 8 + i, 3, 2, 2.0, &mut rng))
+            .collect();
+        for ds in &datasets {
+            let i = shared.shard_of(ds, 2);
+            shared.insert(ds, 2, dummy_solve(3));
+            serial[i].insert(ds, 2, dummy_solve(3));
+        }
+        for ds in &datasets {
+            let i = shared.shard_of(ds, 2);
+            assert_eq!(
+                shared.lookup(ds, 2).is_some(),
+                serial[i].lookup(ds, 2).is_some(),
+                "per-shard hit/evict behaviour must equal the serial store"
+            );
+        }
+        let serial_hits: usize = serial.iter().map(|s| s.hits()).sum();
+        let serial_evictions: usize = serial.iter().map(|s| s.evictions()).sum();
+        assert_eq!(shared.hits(), serial_hits);
+        assert_eq!(shared.evictions(), serial_evictions);
+        assert_eq!(shared.len(), serial.iter().map(|s| s.len()).sum::<usize>());
     }
 }

@@ -1,7 +1,7 @@
-//! Multi-tenant serving layer: sharded admission, frame caching, and
-//! per-tenant sessions with budgets — the first subsystem of the crate
-//! that runs as a resident process rather than a batch experiment
-//! (`triplet-serve`).
+//! Multi-tenant serving layer: sharded admission, frame caching,
+//! per-tenant sessions with budgets, and a concurrent request front
+//! end — the first subsystem of the crate that runs as a resident
+//! process rather than a batch experiment (`triplet-serve`).
 //!
 //! Layering (each piece is independently testable):
 //!
@@ -13,22 +13,43 @@
 //!   serial replay of the same plan.
 //! - [`frame_store`] — an LRU cache of solved paths keyed by a 128-bit
 //!   dataset fingerprint, with bitwise dataset verification on every
-//!   hit so a mutated dataset can never reach a stale frame.
+//!   hit so a mutated dataset can never reach a stale frame. PR 10
+//!   added the [`FrameCache`] trait (serial store and shared store
+//!   behind one serve path), the sharded-lock [`SharedFrameStore`],
+//!   and a versioned, checksummed, fingerprint-stamped frame codec
+//!   ([`encode_frame`]/[`decode_frame`]) for cross-process export.
 //! - [`session`] — per-tenant lifecycle: budget checks, cache hits
 //!   (zero rule evaluations), incremental warm starts that revive only
 //!   affected triplets, cold sharded path solves, and
 //!   BENCH_SCHEMA.md-conformant request telemetry.
+//! - [`queue`] + [`server`] — the concurrent front end: a bounded MPMC
+//!   request queue with typed backpressure, per-tenant actor mailboxes
+//!   that keep each `Session` serial while tenants run concurrently on
+//!   OS worker threads, per-request deadlines, confined worker panics,
+//!   and the line-oriented request protocol behind
+//!   `triplet-serve serve`.
 //!
 //! The test battery lives in `rust/tests/service_safety.rs`,
-//! `rust/tests/service_faults.rs` and `rust/tests/service_soak.rs`;
-//! `benches/screening.rs` gates the warm-hit and shard-scaling
-//! economics.
+//! `rust/tests/service_faults.rs`, `rust/tests/service_soak.rs`,
+//! `rust/tests/service_concurrent.rs` and
+//! `rust/tests/service_protocol.rs`; `benches/screening.rs` gates the
+//! warm-hit, shard-scaling and front-end-concurrency economics.
 
 pub mod frame_store;
+pub mod queue;
+pub mod server;
 pub mod session;
 pub mod shard;
 
-pub use frame_store::{fingerprint, CachedSolve, FrameStore};
+pub use frame_store::{
+    decode_frame, encode_frame, fingerprint, frame_checksum, CachedSolve, CodecError, FrameCache,
+    FrameStore, SharedFrameStore,
+};
+pub use queue::{BoundedQueue, PushError};
+pub use server::{
+    parse_request, request_dataset, FrontConfig, ProtocolError, Request, ServeFront,
+    SubmitOptions, Ticket, MAX_LINE_BYTES,
+};
 pub use session::{
     materialize_universe, RequestTelemetry, ServeResult, ServiceError, Session, SessionConfig,
 };

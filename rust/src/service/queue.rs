@@ -1,0 +1,245 @@
+//! `BoundedQueue` — the MPMC request queue behind the serving front
+//! end's backpressure.
+//!
+//! A fixed-capacity FIFO shared by every submitter and every front-end
+//! worker. `try_push` never blocks: a full queue is an immediate
+//! [`PushError::Full`] that hands the item back, which is what turns
+//! overload into the typed `ServiceError::QueueFull` at the
+//! [`crate::service::ServeFront`] layer instead of unbounded memory
+//! growth. `pop` blocks until an item arrives or the queue is closed;
+//! after [`close`](BoundedQueue::close) it keeps draining whatever is
+//! already queued (graceful shutdown never drops an accepted request)
+//! and only then starts returning `None`.
+//!
+//! The queue carries plain values and takes its one lock only for
+//! pointer-sized pushes and pops — requests themselves live in the
+//! per-tenant actor mailboxes, so the queue never holds a dataset.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, PoisonError};
+
+/// Why a `try_push` did not enqueue; the rejected item is handed back
+/// so the caller can roll back whatever bookkeeping preceded the push.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The queue is at capacity — backpressure, not failure.
+    Full(T),
+    /// The queue was closed (shutdown in progress); nothing new is
+    /// accepted.
+    Closed(T),
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer/multi-consumer FIFO; see the module docs.
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    capacity: usize,
+    available: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// An open queue holding at most `capacity` items (`capacity` is
+    /// clamped to ≥ 1).
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            capacity: capacity.max(1),
+            available: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState<T>> {
+        // The lock is only ever held across non-panicking VecDeque
+        // operations, but recover from poisoning anyway: a poisoned
+        // queue would otherwise cascade one worker's panic into every
+        // submitter.
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Maximum number of queued items.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    /// Whether nothing is currently queued.
+    pub fn is_empty(&self) -> bool {
+        self.lock().items.is_empty()
+    }
+
+    /// Whether [`close`](BoundedQueue::close) has been called.
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Enqueue `item` without blocking. Fails with the item handed
+    /// back if the queue is full ([`PushError::Full`]) or closed
+    /// ([`PushError::Closed`]).
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available and dequeue it. Returns `None`
+    /// only once the queue is closed **and** fully drained — pending
+    /// items always come out first.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self
+                .available
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Dequeue without blocking: `None` means "nothing queued right
+    /// now", whether or not the queue is closed.
+    pub fn try_pop(&self) -> Option<T> {
+        self.lock().items.pop_front()
+    }
+
+    /// Close the queue: subsequent pushes fail with
+    /// [`PushError::Closed`], blocked `pop`s wake, and pops keep
+    /// draining already-queued items before returning `None`.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.available.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        assert!(q.is_empty());
+        q.try_push(1).expect("first push fits");
+        q.try_push(2).expect("second push fits");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)), "third push bounces");
+        assert_eq!(q.pop(), Some(1), "FIFO order");
+        q.try_push(3).expect("space freed");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let q = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.try_push(7).expect("clamped capacity admits one item");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = BoundedQueue::new(4);
+        q.try_push("a").expect("push");
+        q.try_push("b").expect("push");
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(
+            q.try_push("c"),
+            Err(PushError::Closed("c")),
+            "closed queue rejects new items"
+        );
+        // graceful drain: queued items still come out, then None
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None, "closed + drained stays terminal");
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(BoundedQueue::<usize>::new(2));
+        let q2 = Arc::clone(&q);
+        let waiter = std::thread::spawn(move || q2.pop());
+        // give the consumer a moment to block, then close
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(waiter.join().expect("no panic"), None);
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_conserve_items() {
+        let q = Arc::new(BoundedQueue::<usize>::new(8));
+        let mut producers = Vec::new();
+        for p in 0..4 {
+            let q = Arc::clone(&q);
+            producers.push(std::thread::spawn(move || {
+                let mut pushed = 0usize;
+                for i in 0..64 {
+                    let mut item = p * 1000 + i;
+                    loop {
+                        match q.try_push(item) {
+                            Ok(()) => {
+                                pushed += 1;
+                                break;
+                            }
+                            Err(PushError::Full(back)) => {
+                                item = back;
+                                std::thread::yield_now();
+                            }
+                            Err(PushError::Closed(_)) => unreachable!("queue stays open"),
+                        }
+                    }
+                }
+                pushed
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let q = Arc::clone(&q);
+            consumers.push(std::thread::spawn(move || {
+                let mut got = 0usize;
+                while q.pop().is_some() {
+                    got += 1;
+                }
+                got
+            }));
+        }
+        let pushed: usize = producers
+            .into_iter()
+            .map(|h| h.join().expect("producer ok"))
+            .sum();
+        q.close();
+        let got: usize = consumers
+            .into_iter()
+            .map(|h| h.join().expect("consumer ok"))
+            .sum();
+        assert_eq!(pushed, 4 * 64);
+        assert_eq!(got, pushed, "every pushed item is popped exactly once");
+    }
+}

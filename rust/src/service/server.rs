@@ -1,0 +1,726 @@
+//! `ServeFront` — the concurrent request front end over the PR 9
+//! serving layer, plus the line-oriented request protocol behind
+//! `triplet-serve serve`.
+//!
+//! ## Two thread domains
+//!
+//! The front end owns a small pool of **OS worker threads**
+//! (`ts-front-{i}`) whose only job is draining the request queue and
+//! driving tenant sessions. They are deliberately distinct from the
+//! compute [`crate::util::parallel::ThreadPool`] (`ts-pool-{n}`): a
+//! front-end worker *calls into* the compute pool (via
+//! [`crate::service::Session::serve`] → sharded admission → kernels)
+//! and blocks until its request finishes; compute workers never block
+//! on front-end state. [`Ticket::wait`] asserts it is not called from
+//! a compute pool thread, so the two domains cannot deadlock by
+//! construction.
+//!
+//! ## Actor mailboxes keep each tenant serial
+//!
+//! Every tenant gets an actor: a mailbox (`VecDeque` of queued
+//! requests) plus an `executing` flag, both behind one small lock.
+//! The shared [`BoundedQueue`] carries only tenant-index *tokens* —
+//! one per accepted request. A worker popping a token tries to become
+//! the tenant's **exclusive executor**: if the flag is already set the
+//! token is a no-op hint (the active executor is obligated to drain
+//! the mailbox before clearing the flag, and it only clears it under
+//! the lock with the mailbox observed empty), otherwise the worker
+//! sets the flag and drains the mailbox itself. So:
+//!
+//! * a tenant's requests are processed strictly one at a time, in
+//!   submission order — `Session` stays `&mut self`-serial and PR 9's
+//!   never-publish-partial-state invariant carries over unchanged;
+//! * different tenants are driven by different workers concurrently;
+//! * no request is ever stranded: while a request sits in a mailbox,
+//!   either its token is still in the queue (some worker will pop it —
+//!   after [`ServeFront::shutdown`] closes the queue, pops keep
+//!   draining queued tokens before returning `None`) or an executor is
+//!   active and must pop the request before it may deactivate.
+//!
+//! Submission holds the tenant lock across mailbox-push *and* token
+//! push; a full queue rolls the mailbox entry back under the same
+//! lock, so [`crate::service::ServiceError::QueueFull`] means
+//! *nothing* was enqueued anywhere. Lock order is always
+//! tenant-core → queue; workers take the queue lock and the core lock
+//! only in separate critical sections, so the ordering is acyclic.
+//!
+//! ## Determinism
+//!
+//! The front end adds scheduling, not arithmetic: each request runs
+//! the same `Session::serve` path on the same engine as the serial
+//! schedule, and each tenant's requests run in submission order.
+//! Per-tenant results are therefore bitwise identical to the serial
+//! schedule at any worker count — proven across workers {1, 2, 4} in
+//! `rust/tests/service_concurrent.rs`.
+//!
+//! ## Request protocol
+//!
+//! `triplet-serve serve` reads newline-delimited requests:
+//!
+//! ```text
+//! solve <tenant> <n> <d> <classes> <seed>
+//! ```
+//!
+//! All five fields are required; `n`/`d`/`classes`/`seed` are decimal
+//! integers. The grammar is numeric-only by design — the dataset is
+//! *generated* (`gaussian_mixture`, separation 2.6, seeded) rather
+//! than named, so no request line can reach a panicking loader. Lines
+//! over [`MAX_LINE_BYTES`], unknown commands, missing/non-numeric
+//! fields and out-of-range sizes are typed [`ProtocolError`]s; unknown
+//! tenants surface as `ServiceError::UnknownTenant` at submission.
+//! Blank lines are [`ProtocolError::Empty`] so empty input is an
+//! explicit typed outcome, never a panic.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::data::{synthetic, Dataset};
+use crate::runtime::Engine;
+use crate::util::parallel::on_pool_thread;
+use crate::util::rng::Pcg64;
+
+use super::frame_store::SharedFrameStore;
+use super::queue::{BoundedQueue, PushError};
+use super::session::{ServeResult, ServiceError, Session, SessionConfig};
+
+/// Front-end shape: worker count, queue depth, shared-store geometry,
+/// and the per-tenant session configuration.
+#[derive(Clone, Debug)]
+pub struct FrontConfig {
+    /// OS worker threads draining the queue. `0` means caller-driven:
+    /// no threads are spawned and requests run on whichever thread
+    /// calls [`ServeFront::drain_now`] — the mode the deterministic
+    /// fault tests use to pin exact queue occupancy.
+    pub workers: usize,
+    /// Request-queue capacity; submissions beyond it fail with
+    /// [`ServiceError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Lock shards of the shared frame store.
+    pub store_shards: usize,
+    /// Cached frames per store shard.
+    pub store_capacity: usize,
+    /// Session configuration applied to every tenant.
+    pub session: SessionConfig,
+}
+
+impl Default for FrontConfig {
+    fn default() -> FrontConfig {
+        FrontConfig {
+            workers: 2,
+            queue_capacity: 64,
+            store_shards: 4,
+            store_capacity: 8,
+            session: SessionConfig::default(),
+        }
+    }
+}
+
+/// Per-request submission options.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    /// Give up if the request is still queued after this long; expiry
+    /// completes the ticket with [`ServiceError::TimedOut`] without
+    /// ever touching the tenant's session.
+    pub deadline: Option<Duration>,
+    /// Fault injection: panic the worker at the top of this request's
+    /// solve. The panic is confined to the request (ticket resolves to
+    /// [`ServiceError::WorkerPanicked`]); the tenant session and the
+    /// shared store are untouched.
+    pub inject_panic: bool,
+}
+
+struct ResponseState {
+    result: Option<Result<ServeResult, ServiceError>>,
+}
+
+struct ResponseSlot {
+    state: Mutex<ResponseState>,
+    ready: Condvar,
+}
+
+impl ResponseSlot {
+    fn new() -> ResponseSlot {
+        ResponseSlot {
+            state: Mutex::new(ResponseState { result: None }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, result: Result<ServeResult, ServiceError>) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.result = Some(result);
+        drop(st);
+        self.ready.notify_all();
+    }
+}
+
+/// Handle to one accepted request; resolves exactly once.
+pub struct Ticket {
+    slot: Arc<ResponseSlot>,
+}
+
+impl Ticket {
+    /// Block until the request resolves. Panics if called from a
+    /// compute pool worker — a compute thread blocking on front-end
+    /// progress would invert the two thread domains (see the module
+    /// docs) and can deadlock.
+    pub fn wait(self) -> Result<ServeResult, ServiceError> {
+        assert!(
+            !on_pool_thread(),
+            "Ticket::wait called from a compute pool worker; \
+             front-end waits must stay out of the kernel thread domain"
+        );
+        let mut st = self
+            .slot
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(result) = st.result.take() {
+                return result;
+            }
+            st = self
+                .slot
+                .ready
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Non-blocking poll: `Some` exactly once, after resolution.
+    pub fn try_wait(&self) -> Option<Result<ServeResult, ServiceError>> {
+        self.slot
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .result
+            .take()
+    }
+}
+
+struct QueuedRequest {
+    dataset: Dataset,
+    deadline: Option<Instant>,
+    inject_panic: bool,
+    slot: Arc<ResponseSlot>,
+}
+
+struct ActorCore {
+    mailbox: VecDeque<QueuedRequest>,
+    executing: bool,
+}
+
+struct TenantActor {
+    core: Mutex<ActorCore>,
+    /// Exclusivity comes from `ActorCore::executing`; this lock exists
+    /// only to make the session shareable across worker threads, and
+    /// is uncontended by construction.
+    session: Mutex<Session>,
+}
+
+struct FrontShared {
+    queue: BoundedQueue<usize>,
+    tenants: Vec<TenantActor>,
+    tenant_index: BTreeMap<String, usize>,
+    store: SharedFrameStore,
+    engine: Arc<dyn Engine + Send>,
+    accepted: AtomicUsize,
+    rejected_full: AtomicUsize,
+    completed: AtomicUsize,
+    timed_out: AtomicUsize,
+    panics: AtomicUsize,
+}
+
+impl FrontShared {
+    fn core(&self, idx: usize) -> MutexGuard<'_, ActorCore> {
+        self.tenants[idx]
+            .core
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Process one popped token: become `idx`'s exclusive executor if
+    /// nobody is, then drain the mailbox; otherwise the token is a
+    /// no-op hint.
+    fn drive_actor(&self, idx: usize) {
+        {
+            let mut core = self.core(idx);
+            if core.executing || core.mailbox.is_empty() {
+                return;
+            }
+            core.executing = true;
+        }
+        loop {
+            let req = {
+                let mut core = self.core(idx);
+                match core.mailbox.pop_front() {
+                    Some(req) => req,
+                    None => {
+                        // Deactivate only under the lock with the
+                        // mailbox observed empty — the linchpin of the
+                        // no-stranded-request argument (module docs).
+                        core.executing = false;
+                        return;
+                    }
+                }
+            };
+            self.process(idx, req);
+        }
+    }
+
+    fn process(&self, idx: usize, req: QueuedRequest) {
+        if let Some(deadline) = req.deadline {
+            if Instant::now() >= deadline {
+                // Expired in the queue: resolve without ever touching
+                // the session.
+                self.timed_out.fetch_add(1, Ordering::Relaxed);
+                req.slot.complete(Err(ServiceError::TimedOut));
+                return;
+            }
+        }
+        let mut session = self.tenants[idx]
+            .session
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        let mut cache = &self.store;
+        let engine: &dyn Engine = &*self.engine;
+        // The session is captured by `&mut`, not moved, so a panicking
+        // request leaves the tenant's session alive for the next one;
+        // serve() itself never publishes partial state on any path.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if req.inject_panic {
+                panic!("injected front-end worker fault");
+            }
+            session.serve(&req.dataset, &mut cache, engine)
+        }));
+        let result = match outcome {
+            Ok(result) => result,
+            Err(_) => {
+                self.panics.fetch_add(1, Ordering::Relaxed);
+                Err(ServiceError::WorkerPanicked)
+            }
+        };
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        req.slot.complete(result);
+    }
+}
+
+/// The concurrent front end; see the module docs for the scheduling
+/// and determinism arguments.
+pub struct ServeFront {
+    shared: Arc<FrontShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServeFront {
+    /// Build a front end for the given tenants (one actor + session
+    /// each). With `cfg.workers > 0`, that many `ts-front-{i}` OS
+    /// threads start draining immediately; with `workers == 0` the
+    /// caller drives processing via [`ServeFront::drain_now`].
+    pub fn new<S: AsRef<str>>(
+        cfg: FrontConfig,
+        tenants: &[S],
+        engine: Arc<dyn Engine + Send>,
+    ) -> ServeFront {
+        let mut actors = Vec::with_capacity(tenants.len());
+        let mut tenant_index = BTreeMap::new();
+        for t in tenants {
+            let name = t.as_ref().to_string();
+            tenant_index.insert(name.clone(), actors.len());
+            actors.push(TenantActor {
+                core: Mutex::new(ActorCore {
+                    mailbox: VecDeque::new(),
+                    executing: false,
+                }),
+                session: Mutex::new(Session::new(name, cfg.session.clone())),
+            });
+        }
+        let shared = Arc::new(FrontShared {
+            queue: BoundedQueue::new(cfg.queue_capacity),
+            tenants: actors,
+            tenant_index,
+            store: SharedFrameStore::new(cfg.store_shards, cfg.store_capacity),
+            engine,
+            accepted: AtomicUsize::new(0),
+            rejected_full: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            timed_out: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ts-front-{i}"))
+                    .spawn(move || {
+                        while let Some(idx) = shared.queue.pop() {
+                            shared.drive_actor(idx);
+                        }
+                    })
+                    .expect("spawn front-end worker")
+            })
+            .collect();
+        ServeFront { shared, workers }
+    }
+
+    /// Submit one request for `tenant`. Accepted submissions return a
+    /// [`Ticket`] that always resolves; rejections
+    /// ([`ServiceError::UnknownTenant`], [`ServiceError::QueueFull`],
+    /// [`ServiceError::ShuttingDown`]) enqueue nothing at all.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        ds: &Dataset,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, ServiceError> {
+        let shared = &self.shared;
+        let idx = *shared
+            .tenant_index
+            .get(tenant)
+            .ok_or_else(|| ServiceError::UnknownTenant(tenant.to_string()))?;
+        let slot = Arc::new(ResponseSlot::new());
+        let req = QueuedRequest {
+            dataset: ds.clone(),
+            deadline: opts.deadline.map(|d| Instant::now() + d),
+            inject_panic: opts.inject_panic,
+            slot: Arc::clone(&slot),
+        };
+        // Mailbox push and token push under one lock; a failed token
+        // push rolls the mailbox entry back before the lock drops, so
+        // a rejected submission leaves no trace anywhere.
+        let mut core = shared.core(idx);
+        core.mailbox.push_back(req);
+        match shared.queue.try_push(idx) {
+            Ok(()) => {
+                drop(core);
+                shared.accepted.fetch_add(1, Ordering::Relaxed);
+                Ok(Ticket { slot })
+            }
+            Err(PushError::Full(_)) => {
+                core.mailbox.pop_back();
+                drop(core);
+                shared.rejected_full.fetch_add(1, Ordering::Relaxed);
+                Err(ServiceError::QueueFull {
+                    capacity: shared.queue.capacity(),
+                })
+            }
+            Err(PushError::Closed(_)) => {
+                core.mailbox.pop_back();
+                Err(ServiceError::ShuttingDown)
+            }
+        }
+    }
+
+    /// Drain queued tokens on the calling thread until the queue is
+    /// momentarily empty. The processing path in the `workers == 0`
+    /// mode, and part of [`shutdown`](ServeFront::shutdown)'s graceful
+    /// drain in every mode.
+    pub fn drain_now(&self) {
+        while let Some(idx) = self.shared.queue.try_pop() {
+            self.shared.drive_actor(idx);
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain every queued token
+    /// (worker threads keep popping until the closed queue is empty,
+    /// and the caller helps), then join the workers. Every ticket
+    /// accepted before shutdown resolves — zero dropped-but-
+    /// acknowledged requests, asserted in the fault battery.
+    pub fn shutdown(&mut self) {
+        self.shared.queue.close();
+        self.drain_now();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+
+    /// The shared frame store (for export/import and cache counters).
+    pub fn store(&self) -> &SharedFrameStore {
+        &self.shared.store
+    }
+
+    /// Tokens currently queued.
+    pub fn pending(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Request-queue capacity.
+    pub fn queue_capacity(&self) -> usize {
+        self.shared.queue.capacity()
+    }
+
+    /// Submissions accepted (ticket issued).
+    pub fn accepted(&self) -> usize {
+        self.shared.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Submissions bounced with [`ServiceError::QueueFull`].
+    pub fn rejected_full(&self) -> usize {
+        self.shared.rejected_full.load(Ordering::Relaxed)
+    }
+
+    /// Requests resolved by a worker (success, typed error, or caught
+    /// panic) — excludes deadline expiries.
+    pub fn completed(&self) -> usize {
+        self.shared.completed.load(Ordering::Relaxed)
+    }
+
+    /// Requests that expired in the queue without touching a session.
+    pub fn timed_out(&self) -> usize {
+        self.shared.timed_out.load(Ordering::Relaxed)
+    }
+
+    /// Worker panics caught and confined to their request.
+    pub fn panics_caught(&self) -> usize {
+        self.shared.panics.load(Ordering::Relaxed)
+    }
+
+    /// Requests counted by `tenant`'s session (includes rejected ones,
+    /// per [`crate::service::Session::requests`]); `None` for unknown
+    /// tenants.
+    pub fn session_requests(&self, tenant: &str) -> Option<usize> {
+        let idx = *self.shared.tenant_index.get(tenant)?;
+        Some(
+            self.shared.tenants[idx]
+                .session
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .requests(),
+        )
+    }
+}
+
+impl Drop for ServeFront {
+    fn drop(&mut self) {
+        if !self.workers.is_empty() || !self.shared.queue.is_closed() {
+            self.shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// request protocol
+// ---------------------------------------------------------------------
+
+/// Longest request line `triplet-serve serve` accepts, in bytes.
+pub const MAX_LINE_BYTES: usize = 4096;
+
+/// Largest synthetic dataset a request may name: n ≤ 65536, d ≤ 1024,
+/// 2 ≤ classes ≤ min(n, 64), n·d ≤ 2²⁰ cells.
+const MAX_REQ_N: usize = 65_536;
+const MAX_REQ_D: usize = 1_024;
+const MAX_REQ_CLASSES: usize = 64;
+const MAX_REQ_CELLS: usize = 1 << 20;
+
+/// Typed rejection of a request line — every parse failure is one of
+/// these; parsing never panics (fuzzed over arbitrary lines in
+/// `rust/tests/service_protocol.rs`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// The line is blank (or whitespace only).
+    Empty,
+    /// The line exceeds [`MAX_LINE_BYTES`].
+    Oversized {
+        /// observed line length in bytes
+        bytes: usize,
+    },
+    /// The leading word is not a known command.
+    UnknownCommand(String),
+    /// A required field is absent (truncated line).
+    MissingField(&'static str),
+    /// A numeric field did not parse as a decimal integer.
+    BadNumber(&'static str),
+    /// A field parsed but violates the size limits.
+    OutOfRange(&'static str),
+    /// Extra fields after a complete request.
+    TrailingFields,
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::Empty => write!(f, "empty request line"),
+            ProtocolError::Oversized { bytes } => {
+                write!(f, "request line of {bytes} bytes exceeds {MAX_LINE_BYTES}")
+            }
+            ProtocolError::UnknownCommand(cmd) => write!(f, "unknown command '{cmd}'"),
+            ProtocolError::MissingField(field) => write!(f, "missing field <{field}>"),
+            ProtocolError::BadNumber(field) => write!(f, "field <{field}> is not an integer"),
+            ProtocolError::OutOfRange(field) => write!(f, "field <{field}> is out of range"),
+            ProtocolError::TrailingFields => write!(f, "trailing fields after request"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// One parsed `solve` request: which tenant, and the seeded synthetic
+/// dataset shape to solve.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// tenant id the request is routed to
+    pub tenant: String,
+    /// dataset rows
+    pub n: usize,
+    /// dataset features
+    pub d: usize,
+    /// mixture classes
+    pub classes: usize,
+    /// generator seed
+    pub seed: u64,
+}
+
+fn num_field(
+    parts: &mut std::str::SplitWhitespace<'_>,
+    name: &'static str,
+) -> Result<u64, ProtocolError> {
+    let raw = parts.next().ok_or(ProtocolError::MissingField(name))?;
+    raw.parse::<u64>().map_err(|_| ProtocolError::BadNumber(name))
+}
+
+/// Parse one request line (`solve <tenant> <n> <d> <classes> <seed>`);
+/// see the module docs for the grammar and limits.
+pub fn parse_request(line: &str) -> Result<Request, ProtocolError> {
+    if line.len() > MAX_LINE_BYTES {
+        return Err(ProtocolError::Oversized { bytes: line.len() });
+    }
+    let mut parts = line.split_whitespace();
+    let cmd = parts.next().ok_or(ProtocolError::Empty)?;
+    if cmd != "solve" {
+        return Err(ProtocolError::UnknownCommand(cmd.to_string()));
+    }
+    let tenant = parts
+        .next()
+        .ok_or(ProtocolError::MissingField("tenant"))?
+        .to_string();
+    let n = num_field(&mut parts, "n")? as usize;
+    let d = num_field(&mut parts, "d")? as usize;
+    let classes = num_field(&mut parts, "classes")? as usize;
+    let seed = num_field(&mut parts, "seed")?;
+    if parts.next().is_some() {
+        return Err(ProtocolError::TrailingFields);
+    }
+    if n == 0 || n > MAX_REQ_N {
+        return Err(ProtocolError::OutOfRange("n"));
+    }
+    if d == 0 || d > MAX_REQ_D {
+        return Err(ProtocolError::OutOfRange("d"));
+    }
+    // the generator requires ≥ 2 classes and n ≥ classes; enforce both
+    // here so `request_dataset` can never hit a generator assert
+    if classes < 2 || classes > classes_limit(n) {
+        return Err(ProtocolError::OutOfRange("classes"));
+    }
+    if n * d > MAX_REQ_CELLS {
+        return Err(ProtocolError::OutOfRange("n*d"));
+    }
+    Ok(Request {
+        tenant,
+        n,
+        d,
+        classes,
+        seed,
+    })
+}
+
+fn classes_limit(n: usize) -> usize {
+    MAX_REQ_CLASSES.min(n)
+}
+
+/// Materialize the dataset a [`Request`] names: a seeded
+/// `gaussian_mixture` at separation 2.6, so identical requests hash to
+/// identical fingerprints (and repeat requests hit the frame cache).
+pub fn request_dataset(req: &Request) -> Dataset {
+    let mut rng = Pcg64::seed(req.seed);
+    let name = format!(
+        "req-{}-{}x{}c{}s{}",
+        req.tenant, req.n, req.d, req.classes, req.seed
+    );
+    synthetic::gaussian_mixture(&name, req.n, req.d, req.classes, 2.6, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_canonical_line() {
+        let req = parse_request("solve alice 24 4 3 7").expect("parses");
+        assert_eq!(
+            req,
+            Request {
+                tenant: "alice".to_string(),
+                n: 24,
+                d: 4,
+                classes: 3,
+                seed: 7,
+            }
+        );
+        let ds = request_dataset(&req);
+        assert_eq!(ds.n(), 24);
+        assert_eq!(ds.d(), 4);
+        let again = request_dataset(&req);
+        assert_eq!(
+            crate::service::fingerprint(&ds, 3),
+            crate::service::fingerprint(&again, 3),
+            "identical requests must fingerprint identically"
+        );
+    }
+
+    #[test]
+    fn parse_rejects_each_malformation_with_its_own_error() {
+        assert_eq!(parse_request(""), Err(ProtocolError::Empty));
+        assert_eq!(parse_request("   \t "), Err(ProtocolError::Empty));
+        assert_eq!(
+            parse_request("frobnicate alice 8 3 2 1"),
+            Err(ProtocolError::UnknownCommand("frobnicate".to_string()))
+        );
+        assert_eq!(
+            parse_request("solve"),
+            Err(ProtocolError::MissingField("tenant"))
+        );
+        assert_eq!(
+            parse_request("solve alice 8 3"),
+            Err(ProtocolError::MissingField("classes"))
+        );
+        assert_eq!(
+            parse_request("solve alice eight 3 2 1"),
+            Err(ProtocolError::BadNumber("n"))
+        );
+        assert_eq!(
+            parse_request("solve alice 8 3 2 1 extra"),
+            Err(ProtocolError::TrailingFields)
+        );
+        assert_eq!(
+            parse_request("solve alice 0 3 2 1"),
+            Err(ProtocolError::OutOfRange("n"))
+        );
+        assert_eq!(
+            parse_request("solve alice 8 2048 2 1"),
+            Err(ProtocolError::OutOfRange("d"))
+        );
+        assert_eq!(
+            parse_request("solve alice 8 3 9 1"),
+            Err(ProtocolError::OutOfRange("classes")),
+            "classes must not exceed n"
+        );
+        assert_eq!(
+            parse_request("solve alice 8 3 1 1"),
+            Err(ProtocolError::OutOfRange("classes")),
+            "the mixture generator needs at least 2 classes"
+        );
+        assert_eq!(
+            parse_request("solve alice 65536 1024 2 1"),
+            Err(ProtocolError::OutOfRange("n*d"))
+        );
+        let long = format!("solve alice 8 3 2 {}", "9".repeat(MAX_LINE_BYTES));
+        assert_eq!(
+            parse_request(&long),
+            Err(ProtocolError::Oversized { bytes: long.len() })
+        );
+    }
+}

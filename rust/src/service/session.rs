@@ -4,7 +4,9 @@
 //! ## Session lifecycle
 //!
 //! A [`Session`] owns one tenant's configuration and warm-start lineage
-//! and serves requests against a (shareable) [`FrameStore`]:
+//! and serves requests against any [`FrameCache`] — the single-owner
+//! [`crate::service::FrameStore`] on the serial path, the sharded-lock
+//! [`crate::service::SharedFrameStore`] under the concurrent front end:
 //!
 //! 1. **Budget check** — the request's candidate universe is counted
 //!    *before* any compute and rejected with a typed
@@ -55,7 +57,7 @@ use crate::triplet::{
 };
 use crate::util::json::Json;
 
-use super::frame_store::{CachedSolve, FrameStore};
+use super::frame_store::{CachedSolve, FrameCache};
 use super::shard::{apply_admissions, AdmissionCounters, ShardedAdmitter};
 
 /// Per-tenant service configuration: path shape, sharding, and budgets.
@@ -121,7 +123,12 @@ impl SessionConfig {
 
 /// Typed request-rejection errors. Budget errors are raised *before*
 /// any partial result could be published, so a rejected request never
-/// leaves a frame (partial or otherwise) in the [`FrameStore`].
+/// leaves a frame (partial or otherwise) in the
+/// [`crate::service::FrameStore`]. The queue/front-end variants
+/// (`QueueFull`, `TimedOut`, `ShuttingDown`, `UnknownTenant`,
+/// `WorkerPanicked`) are raised by [`crate::service::ServeFront`]
+/// before or instead of a `Session` ever running, so they share the
+/// same guarantee.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServiceError {
     /// A per-request budget would be exceeded.
@@ -136,6 +143,24 @@ pub enum ServiceError {
     /// The dataset yields no triplet candidates (or a degenerate
     /// λ_max), so there is nothing to solve.
     EmptyUniverse,
+    /// The front-end request queue is at capacity — backpressure;
+    /// nothing was enqueued and nothing will run.
+    QueueFull {
+        /// configured queue capacity
+        capacity: usize,
+    },
+    /// The request's deadline expired while it was still queued; it
+    /// never reached a `Session`.
+    TimedOut,
+    /// The front end is draining for shutdown; no new requests are
+    /// accepted.
+    ShuttingDown,
+    /// The request names a tenant the front end was not built with.
+    UnknownTenant(String),
+    /// The worker solving this request panicked. The tenant's session
+    /// and the shared store are unaffected (the panic was confined to
+    /// this request), but the request itself produced no result.
+    WorkerPanicked,
 }
 
 impl std::fmt::Display for ServiceError {
@@ -150,6 +175,13 @@ impl std::fmt::Display for ServiceError {
                 "budget exhausted: {requested} {resource} requested, limit {limit}"
             ),
             ServiceError::EmptyUniverse => write!(f, "no triplet candidates to solve"),
+            ServiceError::QueueFull { capacity } => {
+                write!(f, "request queue full (capacity {capacity})")
+            }
+            ServiceError::TimedOut => write!(f, "request deadline expired before service"),
+            ServiceError::ShuttingDown => write!(f, "front end is shutting down"),
+            ServiceError::UnknownTenant(t) => write!(f, "unknown tenant '{t}'"),
+            ServiceError::WorkerPanicked => write!(f, "worker panicked while serving the request"),
         }
     }
 }
@@ -351,11 +383,14 @@ impl Session {
     /// Serve one request: budget check, then cache hit / incremental
     /// warm start / cold sharded path solve, in that order. Successful
     /// solves are published to `frames` and become the tenant's
-    /// warm-start lineage; errors publish nothing.
-    pub fn serve(
+    /// warm-start lineage; errors publish nothing. Generic over the
+    /// cache so the serial [`crate::service::FrameStore`] and the
+    /// concurrent front end's shared
+    /// [`crate::service::SharedFrameStore`] drive the identical path.
+    pub fn serve<C: FrameCache>(
         &mut self,
         ds: &Dataset,
-        frames: &mut FrameStore,
+        frames: &mut C,
         engine: &dyn Engine,
     ) -> Result<ServeResult, ServiceError> {
         let t0 = Instant::now();
@@ -379,7 +414,7 @@ impl Session {
             });
         }
 
-        if let Some(hit) = frames.lookup(ds, self.cfg.k) {
+        if let Some(hit) = frames.lookup_cached(ds, self.cfg.k) {
             tel.frames_reused = 1;
             tel.warm_start = true;
             tel.steps = hit.steps;
@@ -452,7 +487,7 @@ impl Session {
             screened_l: outcome.screened_l,
             screened_r: outcome.screened_r,
         };
-        frames.insert(ds, self.cfg.k, cached);
+        frames.publish(ds, self.cfg.k, cached);
         self.previous = Some(PreviousSolve {
             m: outcome.m.clone(),
             lambda: outcome.lambda,

@@ -238,6 +238,7 @@ impl ThreadPool {
     }
 
     fn worker_loop(&'static self) {
+        ON_POOL_THREAD.with(|flag| flag.set(true));
         loop {
             let task = {
                 let mut q = self.shared.queue.lock().unwrap();
@@ -324,6 +325,23 @@ impl ThreadPool {
             wall_seconds: self.wall_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
         }
     }
+}
+
+thread_local! {
+    /// Set once, forever, on every compute pool worker the moment it
+    /// enters `worker_loop`. Lets other layers assert they are *not*
+    /// on a kernel thread — the serving front end's `Ticket::wait`
+    /// refuses to block a compute worker on front-end progress, which
+    /// keeps the two thread domains (front-end workers vs this pool)
+    /// free of cross-domain blocking by construction.
+    static ON_POOL_THREAD: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Whether the calling thread is a compute pool worker (`ts-pool-{n}`).
+/// Front-end worker threads (`ts-front-{i}`), the main thread, and test
+/// threads all report `false`.
+pub fn on_pool_thread() -> bool {
+    ON_POOL_THREAD.with(|flag| flag.get())
 }
 
 /// The process-wide pool. Creation is cheap (no threads until the first

@@ -1,0 +1,292 @@
+//! Cross-thread determinism battery for the PR 10 concurrent front
+//! end: N OS worker threads × M tenants × randomized submission
+//! interleavings must produce per-tenant results **bitwise identical**
+//! to the serial schedule — optimum bits, screened/admitted sets, and
+//! deterministic telemetry counters — at front-end workers ∈ {1, 2, 4}.
+//!
+//! The argument being tested (see `rust/src/service/server.rs` module
+//! docs): the front end adds *scheduling*, never arithmetic. Each
+//! tenant's requests run strictly serially in submission order through
+//! the same `Session::serve` path and the same engine as a plain
+//! serial loop, so concurrency between tenants cannot move a bit.
+//! Alongside: the shared pool's task/scope accounting must conserve
+//! across schedules, and the sharded-lock `SharedFrameStore` must be
+//! observationally equivalent to manually-routed serial `FrameStore`s
+//! (quickcheck'd, plus a genuine multi-thread hammer).
+//!
+//! CI runs this battery under the default build and `--features simd`,
+//! at `TS_THREADS` ∈ {1, 4}, and 10× in a stress leg as a flake
+//! detector — the assertions are exact, so one schedule-dependent bit
+//! anywhere fails loudly.
+
+use std::sync::Arc;
+
+use triplet_screen::prelude::*;
+use triplet_screen::service::{
+    CachedSolve, FrameStore, FrontConfig, ServeFront, ServeResult, Session, SessionConfig,
+    SharedFrameStore, SubmitOptions, Ticket,
+};
+use triplet_screen::util::parallel;
+use triplet_screen::util::quickcheck::forall;
+
+const TENANTS: usize = 4;
+const ROUNDS: usize = 4;
+
+fn service_cfg() -> SessionConfig {
+    SessionConfig {
+        k: 2,
+        batch: 256,
+        shards: 2,
+        rho: 0.8,
+        max_steps: 3,
+        tol: 1e-7,
+        ..SessionConfig::default()
+    }
+}
+
+fn tenant_dataset(t: usize) -> Dataset {
+    let mut rng = Pcg64::seed(700 + t as u64);
+    synthetic::gaussian_mixture("conc", 24 + 2 * t, 4, 3, 2.6, &mut rng)
+}
+
+fn tenant_update(ds: &Dataset, t: usize) -> Dataset {
+    let mut up = ds.clone();
+    up.x.row_mut(t + 1)[0] += 0.04;
+    up.y[t + 2] = (up.y[t + 2] + 1) % up.n_classes;
+    up
+}
+
+/// The four-request lifecycle of one tenant, in order: cold solve,
+/// warm hit, incremental update, warm hit of the updated frame.
+fn requests(t: usize) -> [Dataset; ROUNDS] {
+    let ds = tenant_dataset(t);
+    let up = tenant_update(&ds, t);
+    [ds.clone(), ds, up.clone(), up]
+}
+
+fn assert_same_result(a: &ServeResult, b: &ServeResult, what: &str) {
+    for (i, (x, y)) in a.m.as_slice().iter().zip(b.m.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: M bits diverge at flat index {i}");
+    }
+    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{what}: λ");
+    assert_eq!(a.admitted_idx, b.admitted_idx, "{what}: admitted set");
+    assert_eq!(a.screened_l, b.screened_l, "{what}: L*");
+    assert_eq!(a.screened_r, b.screened_r, "{what}: R*");
+    assert_eq!(
+        a.telemetry.counters(),
+        b.telemetry.counters(),
+        "{what}: deterministic telemetry counters"
+    );
+}
+
+fn dummy_solve(d: usize) -> CachedSolve {
+    CachedSolve {
+        m_final: Mat::identity(d),
+        lambda: 0.5,
+        lambda_max: 1.0,
+        eps: 0.0,
+        p: 1.0,
+        steps: 1,
+        admitted_idx: vec![(0, 1, 2)],
+        screened_l: 0,
+        screened_r: 0,
+    }
+}
+
+/// The headline identity: at front-end workers ∈ {1, 2, 4}, with the
+/// submission order randomized across tenants (per-tenant order
+/// preserved, as the actor mailboxes guarantee), every tenant's four
+/// results are bitwise equal to its serial-schedule run — and the
+/// compute pool's task/scope consumption is conserved across all four
+/// schedules.
+#[test]
+fn concurrent_front_end_is_bitwise_identical_to_the_serial_schedule() {
+    let engine = NativeEngine::new(0);
+
+    // warm the lazy pool/engine initialization out of the accounting
+    {
+        let mut frames = FrameStore::new(2);
+        let mut warmup = Session::new("warmup", service_cfg());
+        warmup.serve(&tenant_dataset(0), &mut frames, &engine).expect("warmup");
+    }
+
+    let plans: Vec<[Dataset; ROUNDS]> = (0..TENANTS).map(requests).collect();
+
+    // ---- serial schedule: fresh session + private store per tenant --
+    let before_serial = parallel::pool_stats();
+    let mut serial: Vec<Vec<ServeResult>> = Vec::new();
+    for t in 0..TENANTS {
+        let mut frames = FrameStore::new(2 * TENANTS);
+        let mut session = Session::new(format!("serial-{t}"), service_cfg());
+        let mut runs = Vec::new();
+        for ds in &plans[t] {
+            runs.push(session.serve(ds, &mut frames, &engine).expect("serial serve"));
+        }
+        serial.push(runs);
+    }
+    let after_serial = parallel::pool_stats();
+    let serial_tasks = after_serial.tasks - before_serial.tasks;
+    let serial_scopes = after_serial.scopes - before_serial.scopes;
+
+    let tenant_names: Vec<String> = (0..TENANTS).map(|t| format!("tenant-{t}")).collect();
+    for workers in [1, 2, 4] {
+        let cfg = FrontConfig {
+            workers,
+            queue_capacity: 64,
+            store_shards: 4,
+            store_capacity: 2 * TENANTS,
+            session: service_cfg(),
+        };
+        let before = parallel::pool_stats();
+        let mut front = ServeFront::new(cfg, &tenant_names, Arc::new(NativeEngine::new(0)));
+
+        // randomized interleaving across tenants; each tenant's own
+        // requests go in lifecycle order (the mailbox keeps them so)
+        let mut order = Pcg64::seed(9000 + workers as u64);
+        let mut next = [0usize; TENANTS];
+        let mut tickets: Vec<Vec<Ticket>> = (0..TENANTS).map(|_| Vec::new()).collect();
+        let mut remaining = TENANTS * ROUNDS;
+        while remaining > 0 {
+            let t = order.below(TENANTS);
+            if next[t] < ROUNDS {
+                let ticket = front
+                    .submit(&tenant_names[t], &plans[t][next[t]], SubmitOptions::default())
+                    .expect("submission fits the queue");
+                tickets[t].push(ticket);
+                next[t] += 1;
+                remaining -= 1;
+            }
+        }
+
+        // graceful drain: every accepted request resolves before the
+        // workers join
+        front.shutdown();
+        let after = parallel::pool_stats();
+
+        for (t, tenant_tickets) in tickets.into_iter().enumerate() {
+            for (round, ticket) in tenant_tickets.into_iter().enumerate() {
+                let res = ticket.wait().expect("concurrent serve");
+                let what = format!("workers {workers}, tenant {t}, round {round}");
+                assert_same_result(&res, &serial[t][round], &what);
+            }
+        }
+
+        // front-end accounting: everything accepted, everything
+        // completed, nothing bounced or dropped
+        assert_eq!(front.accepted(), TENANTS * ROUNDS);
+        assert_eq!(front.completed(), TENANTS * ROUNDS);
+        assert_eq!(front.rejected_full(), 0);
+        assert_eq!(front.timed_out(), 0);
+        assert_eq!(front.panics_caught(), 0);
+        assert_eq!(front.pending(), 0);
+
+        // shared-store accounting matches the serial economics: two
+        // resident frames and two warm hits per tenant, no evictions
+        assert_eq!(front.store().len(), 2 * TENANTS);
+        assert_eq!(front.store().hits(), 2 * TENANTS);
+        assert_eq!(front.store().evictions(), 0);
+
+        // pool conservation: the same requests consume exactly the
+        // same pool tasks/scopes at any front-end worker count
+        let tasks = after.tasks - before.tasks;
+        let scopes = after.scopes - before.scopes;
+        assert_eq!(tasks, serial_tasks, "pool task delta at {workers} front-end workers");
+        assert_eq!(scopes, serial_scopes, "pool scope delta at {workers} front-end workers");
+        assert_eq!(after.threads, parallel::pool().capacity());
+    }
+}
+
+/// Quickcheck'd shared-store equivalence: a random insert/lookup
+/// sequence against the sharded-lock store behaves exactly like the
+/// same operations manually routed (by `shard_of`) to independent
+/// serial `FrameStore`s — hit/miss outcomes and all aggregate counters.
+#[test]
+fn shared_store_is_equivalent_to_manually_routed_serial_stores() {
+    let mut rng0 = Pcg64::seed(91);
+    let pool: Vec<Dataset> = (0..8)
+        .map(|i| synthetic::gaussian_mixture("equiv", 8 + i, 3, 2, 2.0, &mut rng0))
+        .collect();
+    forall("shared_store_equivalence", 32, |rng| {
+        let shards = 1 + rng.below(3);
+        let cap = 1 + rng.below(3);
+        let shared = SharedFrameStore::new(shards, cap);
+        let mut serial: Vec<FrameStore> = (0..shards).map(|_| FrameStore::new(cap)).collect();
+        for step in 0..48 {
+            let ds = &pool[rng.below(pool.len())];
+            let route = shared.shard_of(ds, 2);
+            if rng.below(2) == 0 {
+                shared.insert(ds, 2, dummy_solve(3));
+                serial[route].insert(ds, 2, dummy_solve(3));
+            } else {
+                let got = shared.lookup(ds, 2).is_some();
+                let want = serial[route].lookup(ds, 2).is_some();
+                if got != want {
+                    return Err(format!(
+                        "step {step}: shared hit={got}, routed serial hit={want} \
+                         (shards {shards}, cap {cap})"
+                    ));
+                }
+            }
+        }
+        let sums = [
+            (shared.len(), serial.iter().map(|s| s.len()).sum::<usize>(), "len"),
+            (shared.hits(), serial.iter().map(|s| s.hits()).sum(), "hits"),
+            (shared.misses(), serial.iter().map(|s| s.misses()).sum(), "misses"),
+            (shared.insertions(), serial.iter().map(|s| s.insertions()).sum(), "insertions"),
+            (shared.evictions(), serial.iter().map(|s| s.evictions()).sum(), "evictions"),
+        ];
+        for (got, want, what) in sums {
+            if got != want {
+                return Err(format!("{what}: shared {got} vs routed serial {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Genuine multi-thread hammer: four OS threads concurrently insert
+/// and look up eight distinct frames in one shared store. The end
+/// state is exact — every frame resident and verifiable, zero
+/// evictions — because per-key routing serializes on the key's shard.
+#[test]
+fn shared_store_survives_concurrent_hammering_with_exact_end_state() {
+    let mut rng = Pcg64::seed(97);
+    let datasets: Arc<Vec<Dataset>> = Arc::new(
+        (0..8)
+            .map(|i| synthetic::gaussian_mixture("hammer", 8 + i, 3, 2, 2.0, &mut rng))
+            .collect(),
+    );
+    let shared = Arc::new(SharedFrameStore::new(4, 8));
+
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let shared = Arc::clone(&shared);
+            let datasets = Arc::clone(&datasets);
+            std::thread::spawn(move || {
+                for pass in 0..16 {
+                    for ds in datasets.iter() {
+                        if pass % 2 == 0 {
+                            shared.insert(ds, 2, dummy_solve(3));
+                        } else {
+                            // after any insert of this key, the lookup
+                            // must verify bitwise and hit
+                            assert!(
+                                shared.lookup(ds, 2).is_some(),
+                                "a previously inserted frame must stay reachable"
+                            );
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for handle in threads {
+        handle.join().expect("hammer thread must not panic");
+    }
+
+    assert_eq!(shared.len(), 8, "all eight distinct frames resident");
+    assert_eq!(shared.evictions(), 0, "capacity was never exceeded");
+    for ds in datasets.iter() {
+        assert!(shared.lookup(ds, 2).is_some(), "every frame verifies after the hammer");
+    }
+}

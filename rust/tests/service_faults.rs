@@ -12,9 +12,25 @@
 //!    and the `FrameStore` is left untouched (no partial publication).
 //! 3. A dataset with no triplet candidates is a typed
 //!    [`ServiceError::EmptyUniverse`], not a panic.
+//! 4. PR 10 front-end faults: a full request queue is a typed
+//!    [`ServiceError::QueueFull`] with *nothing* enqueued (queue length,
+//!    mailboxes, sessions and store all unchanged); a worker panicking
+//!    mid-request is confined to that request (the tenant's next request
+//!    succeeds, the store is unchanged by the panicked request); a
+//!    deadline that expires while the request is still queued resolves
+//!    to [`ServiceError::TimedOut`] without ever touching a `Session`.
+//!
+//! The front-end tests run with `workers: 0` (caller-driven
+//! [`ServeFront::drain_now`]) so queue occupancy at each step is exact
+//! and deterministic.
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use triplet_screen::prelude::*;
-use triplet_screen::service::{FrameStore, ServiceError, Session, SessionConfig};
+use triplet_screen::service::{
+    FrameStore, FrontConfig, ServeFront, ServiceError, Session, SessionConfig, SubmitOptions,
+};
 
 fn service_cfg(shards: usize) -> SessionConfig {
     SessionConfig {
@@ -157,4 +173,159 @@ fn empty_candidate_universe_is_a_typed_error() {
     let err = session.serve(&ds, &mut frames, &engine).expect_err("no triplets to solve");
     assert_eq!(err, ServiceError::EmptyUniverse);
     assert!(frames.is_empty());
+}
+
+fn front_cfg(workers: usize, queue_capacity: usize) -> FrontConfig {
+    FrontConfig {
+        workers,
+        queue_capacity,
+        store_shards: 2,
+        store_capacity: 4,
+        session: service_cfg(2),
+    }
+}
+
+fn fault_dataset(seed: u64, n: usize) -> Dataset {
+    let mut rng = Pcg64::seed(seed);
+    synthetic::gaussian_mixture("front-fault", n, 4, 3, 2.6, &mut rng)
+}
+
+/// Guarantee 4a: overflowing the bounded queue is a typed `QueueFull`
+/// that enqueues nothing — queue occupancy is unchanged, no session
+/// ever sees the rejected request, and the store stays empty until the
+/// accepted requests drain.
+#[test]
+fn queue_full_is_a_clean_typed_error_with_nothing_enqueued() {
+    let tenants = ["tenant-0".to_string(), "tenant-1".to_string()];
+    let engine = Arc::new(NativeEngine::new(0));
+    let mut front = ServeFront::new(front_cfg(0, 2), &tenants, engine);
+    let ds = fault_dataset(41, 26);
+
+    let t0 = front.submit("tenant-0", &ds, SubmitOptions::default()).expect("fits");
+    let t1 = front.submit("tenant-1", &ds, SubmitOptions::default()).expect("fits");
+    assert_eq!(front.pending(), 2, "queue is exactly at capacity");
+
+    let err = front
+        .submit("tenant-0", &ds, SubmitOptions::default())
+        .expect_err("third submission must bounce");
+    assert_eq!(err, ServiceError::QueueFull { capacity: 2 });
+    assert_eq!(front.pending(), 2, "the rejected request enqueued nothing");
+    assert_eq!(front.rejected_full(), 1);
+    assert_eq!(front.accepted(), 2);
+    assert_eq!(
+        front.session_requests("tenant-0"),
+        Some(0),
+        "no session ran yet — rejection happened entirely in the queue layer"
+    );
+    assert!(front.store().is_empty());
+
+    // the accepted requests drain normally afterwards
+    front.drain_now();
+    assert!(t0.wait().is_ok());
+    assert!(t1.wait().is_ok());
+    assert_eq!(front.completed(), 2);
+    assert_eq!(
+        front.rejected_full() + front.accepted(),
+        3,
+        "zero dropped-but-acknowledged: every submission is accounted for"
+    );
+    front.shutdown();
+}
+
+/// Guarantee 4b: an unknown tenant is a typed error before anything is
+/// enqueued.
+#[test]
+fn unknown_tenant_is_rejected_before_the_queue() {
+    let tenants = ["tenant-0".to_string()];
+    let engine = Arc::new(NativeEngine::new(0));
+    let front = ServeFront::new(front_cfg(0, 4), &tenants, engine);
+    let ds = fault_dataset(43, 24);
+    let err = front
+        .submit("nobody", &ds, SubmitOptions::default())
+        .expect_err("unknown tenant must bounce");
+    assert_eq!(err, ServiceError::UnknownTenant("nobody".to_string()));
+    assert_eq!(front.pending(), 0);
+    assert_eq!(front.accepted(), 0);
+}
+
+/// Guarantee 4c: an injected worker panic is confined to its request —
+/// the ticket resolves to `WorkerPanicked`, the store gains nothing
+/// from the panicked request, and the tenant's *next* request succeeds
+/// on the same session.
+#[test]
+fn worker_panic_mid_request_poisons_nothing() {
+    let tenants = ["tenant-0".to_string()];
+    let engine = Arc::new(NativeEngine::new(0));
+    let mut front = ServeFront::new(front_cfg(0, 4), &tenants, engine);
+    let ds = fault_dataset(47, 28);
+
+    let doomed = front
+        .submit(
+            "tenant-0",
+            &ds,
+            SubmitOptions {
+                inject_panic: true,
+                ..SubmitOptions::default()
+            },
+        )
+        .expect("accepted");
+    front.drain_now();
+    match doomed.wait() {
+        Err(ServiceError::WorkerPanicked) => {}
+        other => panic!("expected WorkerPanicked, got {:?}", other.map(|r| r.steps)),
+    }
+    assert_eq!(front.panics_caught(), 1);
+    assert!(
+        front.store().is_empty(),
+        "the panicked request must not have published a frame"
+    );
+    let store_insertions = front.store().insertions();
+
+    // same tenant, same session object: the next request runs clean
+    let next = front.submit("tenant-0", &ds, SubmitOptions::default()).expect("accepted");
+    front.drain_now();
+    let res = next.wait().expect("tenant survives the panicked request");
+    assert!(res.steps > 0);
+    assert_eq!(front.store().insertions(), store_insertions + 1);
+    assert_eq!(front.session_requests("tenant-0"), Some(1), "only the clean request ran");
+    front.shutdown();
+}
+
+/// Guarantee 4d: a deadline that expires in the queue resolves to
+/// `TimedOut` without the session ever running — and without blocking
+/// the requests queued behind it.
+#[test]
+fn deadline_expiry_mid_queue_never_reaches_a_session() {
+    let tenants = ["tenant-0".to_string()];
+    let engine = Arc::new(NativeEngine::new(0));
+    let mut front = ServeFront::new(front_cfg(0, 4), &tenants, engine);
+    let ds = fault_dataset(53, 26);
+
+    let expired = front
+        .submit(
+            "tenant-0",
+            &ds,
+            SubmitOptions {
+                deadline: Some(Duration::ZERO),
+                ..SubmitOptions::default()
+            },
+        )
+        .expect("accepted");
+    let live = front.submit("tenant-0", &ds, SubmitOptions::default()).expect("accepted");
+    // workers: 0 — nothing ran yet, so the zero deadline is already
+    // expired by the time the caller drains
+    front.drain_now();
+    match expired.wait() {
+        Err(ServiceError::TimedOut) => {}
+        other => panic!("expected TimedOut, got {:?}", other.map(|r| r.steps)),
+    }
+    assert_eq!(front.timed_out(), 1);
+    assert_eq!(
+        front.session_requests("tenant-0"),
+        Some(1),
+        "the expired request never reached the session; the live one did"
+    );
+    let res = live.wait().expect("the queued-behind request still serves");
+    assert!(res.steps > 0);
+    front.shutdown();
 }

@@ -1,0 +1,207 @@
+//! Protocol edge battery for the PR 10 line-oriented request grammar
+//! (`solve <tenant> <n> <d> <classes> <seed>`). The front door of
+//! `triplet-serve serve` must reject every malformed, oversized,
+//! truncated, or out-of-range line as a **typed** [`ProtocolError`] —
+//! never a panic — and a rejected line must never reach a queue,
+//! mailbox, or `Session`. Fuzzed over arbitrary lines plus a
+//! case-by-case sweep of each grammar violation.
+
+use std::sync::Arc;
+
+use triplet_screen::prelude::*;
+use triplet_screen::service::{
+    fingerprint, parse_request, request_dataset, FrontConfig, ProtocolError, Request, ServeFront,
+    ServiceError, SessionConfig, SubmitOptions, MAX_LINE_BYTES,
+};
+use triplet_screen::util::quickcheck::forall;
+
+fn small_session() -> SessionConfig {
+    SessionConfig {
+        k: 2,
+        batch: 256,
+        shards: 1,
+        rho: 0.8,
+        max_steps: 2,
+        tol: 1e-6,
+        ..SessionConfig::default()
+    }
+}
+
+/// Fuzz: `parse_request` never panics and, when it accepts a line, the
+/// accepted request always satisfies the documented limits — whatever
+/// bytes arrive on the wire.
+#[test]
+fn parse_never_panics_and_accepted_requests_respect_the_limits() {
+    const ALPHABET: &[u8] = b"solve tenat0123456789-_.#\t+x ";
+    forall("protocol_fuzz", 256, |rng| {
+        let len = rng.below(80);
+        let line: String = (0..len)
+            .map(|_| ALPHABET[rng.below(ALPHABET.len())] as char)
+            .collect();
+        // typed rejection is the expected common case; an accepted
+        // request must be inside every documented limit
+        if let Ok(req) = parse_request(&line) {
+            if req.n == 0 || req.n > 65_536 {
+                return Err(format!("accepted n={} from {line:?}", req.n));
+            }
+            if req.d == 0 || req.d > 1_024 {
+                return Err(format!("accepted d={} from {line:?}", req.d));
+            }
+            if req.classes < 2 || req.classes > req.n.min(64) {
+                return Err(format!("accepted classes={} from {line:?}", req.classes));
+            }
+            if req.n * req.d > (1 << 20) {
+                return Err(format!("accepted {}x{} cells from {line:?}", req.n, req.d));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Fuzz: every well-formed line round-trips through the parser into
+/// exactly the request it spells, regardless of whitespace shape.
+#[test]
+fn well_formed_lines_round_trip_exactly() {
+    forall("protocol_round_trip", 128, |rng| {
+        let n = 2 + rng.below(512);
+        let d = 1 + rng.below(32);
+        let classes = 2 + rng.below(n.min(64) - 1);
+        let seed = rng.below(1 << 32) as u64;
+        let tenant = format!("t{}", rng.below(1000));
+        let pad = ["", " ", "  ", "\t"][rng.below(4)];
+        let line = format!("{pad}solve{pad} {tenant} {n}{pad} {d} {classes} {seed}{pad}");
+        let want = Request {
+            tenant: tenant.clone(),
+            n,
+            d,
+            classes,
+            seed,
+        };
+        match parse_request(&line) {
+            Ok(req) if req == want => Ok(()),
+            other => Err(format!("line {line:?} parsed to {other:?}, wanted {want:?}")),
+        }
+    });
+}
+
+/// Case-by-case sweep: each grammar violation maps to its own typed
+/// error, checked for every truncation point and every limit.
+#[test]
+fn each_malformation_yields_its_own_typed_error() {
+    use ProtocolError::*;
+
+    // blank and whitespace-only input
+    assert_eq!(parse_request(""), Err(Empty));
+    assert_eq!(parse_request("   \t  "), Err(Empty));
+
+    // oversized lines bounce before any parsing
+    let long = format!("solve a 8 3 2 {}", "7".repeat(MAX_LINE_BYTES));
+    assert_eq!(parse_request(&long), Err(Oversized { bytes: long.len() }));
+
+    // unknown command
+    assert_eq!(
+        parse_request("Solve a 8 3 2 7"),
+        Err(UnknownCommand("Solve".to_string()))
+    );
+    assert_eq!(parse_request("quit"), Err(UnknownCommand("quit".to_string())));
+
+    // truncation at every field boundary
+    assert_eq!(parse_request("solve"), Err(MissingField("tenant")));
+    assert_eq!(parse_request("solve a"), Err(MissingField("n")));
+    assert_eq!(parse_request("solve a 8"), Err(MissingField("d")));
+    assert_eq!(parse_request("solve a 8 3"), Err(MissingField("classes")));
+    assert_eq!(parse_request("solve a 8 3 2"), Err(MissingField("seed")));
+
+    // non-integers, negatives, floats, and u64 overflow
+    assert_eq!(parse_request("solve a x 3 2 7"), Err(BadNumber("n")));
+    assert_eq!(parse_request("solve a -8 3 2 7"), Err(BadNumber("n")));
+    assert_eq!(parse_request("solve a 8 3.5 2 7"), Err(BadNumber("d")));
+    assert_eq!(parse_request("solve a 8 3 2 1e9"), Err(BadNumber("seed")));
+    let overflow = "9".repeat(30);
+    assert_eq!(parse_request(&format!("solve a {overflow} 3 2 7")), Err(BadNumber("n")));
+
+    // every size limit, both ends
+    assert_eq!(parse_request("solve a 0 3 2 7"), Err(OutOfRange("n")));
+    assert_eq!(parse_request("solve a 65537 3 2 7"), Err(OutOfRange("n")));
+    assert_eq!(parse_request("solve a 8 0 2 7"), Err(OutOfRange("d")));
+    assert_eq!(parse_request("solve a 8 1025 2 7"), Err(OutOfRange("d")));
+    assert_eq!(
+        parse_request("solve a 8 3 1 7"),
+        Err(OutOfRange("classes")),
+        "the generator needs ≥ 2 classes; 1 must bounce at the parser"
+    );
+    assert_eq!(parse_request("solve a 8 3 9 7"), Err(OutOfRange("classes")));
+    assert_eq!(parse_request("solve a 65536 3 65 7"), Err(OutOfRange("classes")));
+    assert_eq!(parse_request("solve a 2048 1024 2 7"), Err(OutOfRange("n*d")));
+
+    // a complete request followed by junk
+    assert_eq!(parse_request("solve a 8 3 2 7 extra"), Err(TrailingFields));
+}
+
+/// The dataset a request names is a pure function of the request:
+/// identical lines fingerprint identically (so repeats hit the frame
+/// cache) and a different seed or shape moves the fingerprint.
+#[test]
+fn request_dataset_is_deterministic_and_seed_sensitive() {
+    let req = parse_request("solve alice 24 4 3 7").expect("canonical line parses");
+    let a = request_dataset(&req);
+    let b = request_dataset(&req);
+    assert_eq!(fingerprint(&a, 2), fingerprint(&b, 2), "same request, same fingerprint");
+    let other = parse_request("solve alice 24 4 3 8").expect("parses");
+    assert_ne!(
+        fingerprint(&a, 2),
+        fingerprint(&request_dataset(&other), 2),
+        "a different seed must move the fingerprint"
+    );
+}
+
+/// End to end through the front door: malformed lines and unknown
+/// tenants are rejected before anything is enqueued, while the valid
+/// line on the same wire serves normally.
+#[test]
+fn rejected_lines_never_reach_a_queue_or_session() {
+    let cfg = FrontConfig {
+        workers: 0, // caller-driven: queue state is observable deterministically
+        queue_capacity: 8,
+        store_shards: 1,
+        store_capacity: 2,
+        session: small_session(),
+    };
+    let mut front = ServeFront::new(cfg, &["tenant-0"], Arc::new(NativeEngine::new(0)));
+
+    let wire = [
+        "# comment lines are skipped by the binary, not parsed",
+        "solve tenant-0 16 3 2 5",
+        "solve tenant-0 16 3 1 5", // classes below the generator's floor
+        "solve nobody 16 3 2 5",   // unknown tenant
+        "warmup tenant-0 16 3 2 5",
+    ];
+    let mut tickets = Vec::new();
+    for line in wire {
+        if line.starts_with('#') {
+            continue;
+        }
+        let req = match parse_request(line) {
+            Ok(req) => req,
+            Err(_) => continue, // typed rejection: nothing submitted
+        };
+        let ds = request_dataset(&req);
+        match front.submit(&req.tenant, &ds, SubmitOptions::default()) {
+            Ok(ticket) => tickets.push(ticket),
+            Err(ServiceError::UnknownTenant(name)) => assert_eq!(name, "nobody"),
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+
+    // only the single valid line made it past the front door
+    assert_eq!(tickets.len(), 1);
+    assert_eq!(front.pending(), 1);
+    assert_eq!(front.accepted(), 1);
+
+    front.drain_now();
+    let res = tickets.pop().expect("one ticket").wait().expect("serves");
+    assert!(res.steps >= 1, "the valid request actually solved");
+    assert_eq!(front.completed(), 1);
+    assert_eq!(front.session_requests("tenant-0"), Some(1));
+    assert_eq!(front.store().len(), 1, "exactly one frame published");
+}

@@ -18,11 +18,17 @@
 //!    re-solve at the pinned λ) matches the high-accuracy full-universe
 //!    oracle for the *new* dataset, while admission screening still
 //!    rejects certified triplets.
+//! 5. **Frame codec** (PR 10) — quickcheck'd: encode→decode of a real
+//!    solved frame is bitwise identical (every f64 bit pattern, every
+//!    set, λ); truncated/corrupted/wrong-version/wrong-fingerprint
+//!    bytes are typed [`CodecError`]s; an exported frame imported into
+//!    a fresh store serves a warm hit with `rule_evals == 0`.
 
 use triplet_screen::linalg::Mat;
 use triplet_screen::prelude::*;
 use triplet_screen::service::{
-    materialize_universe, CachedSolve, FrameStore, ServeResult, Session, SessionConfig,
+    decode_frame, encode_frame, frame_checksum, materialize_universe, CachedSolve, CodecError,
+    FrameStore, ServeResult, Session, SessionConfig,
 };
 use triplet_screen::solver::Problem;
 use triplet_screen::util::json::undocumented_keys;
@@ -298,4 +304,127 @@ fn incremental_update_matches_cold_oracle() {
     assert_eq!(again.telemetry.frames_reused, 1);
     assert_eq!(again.telemetry.rule_evals, 0);
     assert_bitwise_eq(&again.m, &inc.m, "replay of the incremental frame");
+}
+
+fn assert_solve_bitwise_eq(a: &CachedSolve, b: &CachedSolve, what: &str) {
+    assert_bitwise_eq(&a.m_final, &b.m_final, what);
+    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{what}: λ bits");
+    assert_eq!(a.lambda_max.to_bits(), b.lambda_max.to_bits(), "{what}: λ_max bits");
+    assert_eq!(a.eps.to_bits(), b.eps.to_bits(), "{what}: ε bits");
+    assert_eq!(a.p.to_bits(), b.p.to_bits(), "{what}: primal bits");
+    assert_eq!(a.steps, b.steps, "{what}: steps");
+    assert_eq!(a.admitted_idx, b.admitted_idx, "{what}: admitted set");
+    assert_eq!(a.screened_l, b.screened_l, "{what}: L* count");
+    assert_eq!(a.screened_r, b.screened_r, "{what}: R* count");
+}
+
+/// Guarantee 5a: the codec round-trips real solved frames bitwise —
+/// quickcheck'd over random dataset shapes, seeds, and k, with
+/// awkward f64 values (−0.0, subnormals) spliced into the solve.
+#[test]
+fn frame_codec_round_trip_is_bitwise_identity() {
+    let engine = NativeEngine::new(0);
+    forall("frame_codec_round_trip", 12, |rng| {
+        let n = 20 + rng.below(12);
+        let k = 2 + rng.below(2);
+        let ds = synthetic::gaussian_mixture("codec", n, 4, 3, 2.6, rng);
+        let mut frames = FrameStore::new(2);
+        let mut session = Session::new("tenant", service_cfg(1 + rng.below(3)));
+        if session.serve(&ds, &mut frames, &engine).is_err() {
+            return Err("fixture solve failed".into());
+        }
+        let mut solve = frames.lookup(&ds, 2).ok_or("solved frame must be cached")?.clone();
+        // splice in sign-of-zero and subnormal bit patterns the codec
+        // must carry exactly
+        solve.eps = if rng.below(2) == 0 { -0.0 } else { f64::MIN_POSITIVE };
+        let bytes = encode_frame(&ds, k, &solve);
+        let (ds2, k2, solve2) =
+            decode_frame(&bytes).map_err(|e| format!("decode failed: {e}"))?;
+        if k2 != k {
+            return Err(format!("k changed: {k} -> {k2}"));
+        }
+        if triplet_screen::service::fingerprint(&ds2, k2)
+            != triplet_screen::service::fingerprint(&ds, k)
+        {
+            return Err("dataset bits changed across the codec".into());
+        }
+        assert_solve_bitwise_eq(&solve2, &solve, "codec round trip");
+        // re-encoding the decoded frame reproduces the bytes exactly
+        if encode_frame(&ds2, k2, &solve2) != bytes {
+            return Err("re-encode is not byte-identical".into());
+        }
+        Ok(())
+    });
+}
+
+/// Guarantee 5b: tampered bytes are typed errors — quickcheck'd over
+/// random truncation points and byte flips; nothing panics.
+#[test]
+fn frame_codec_rejects_tampered_bytes_as_typed_errors() {
+    let mut rng0 = Pcg64::seed(83);
+    let ds = synthetic::gaussian_mixture("tamper", 24, 3, 2, 2.4, &mut rng0);
+    let bytes = encode_frame(&ds, 2, &dummy_solve(3));
+    let payload_end = bytes.len() - 16;
+
+    forall("frame_codec_tampering", 64, |rng| {
+        // random truncation: typed error, never Ok, never a panic
+        let cut = rng.below(bytes.len());
+        if decode_frame(&bytes[..cut]).is_ok() {
+            return Err(format!("truncation at {cut} decoded successfully"));
+        }
+        // random byte flip: checksum (or magic) must catch it
+        let pos = rng.below(bytes.len());
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 1 + (rng.below(255) as u8);
+        match decode_frame(&corrupt) {
+            Ok(_) => Err(format!("flip at {pos} decoded successfully")),
+            Err(
+                CodecError::BadChecksum | CodecError::BadMagic | CodecError::Truncated,
+            ) => Ok(()),
+            Err(other) => Err(format!("flip at {pos}: unexpected error {other:?}")),
+        }
+    });
+
+    // wrong version, checksum re-stamped so only the version differs
+    let mut versioned = bytes.clone();
+    versioned[4] = 7;
+    let sum = frame_checksum(&versioned[..payload_end]).to_le_bytes();
+    versioned[payload_end..].copy_from_slice(&sum);
+    assert_eq!(decode_frame(&versioned).err(), Some(CodecError::BadVersion { found: 7 }));
+
+    // wrong fingerprint stamp, checksum re-stamped: typed mismatch
+    let mut restamped = bytes.clone();
+    restamped[8] ^= 0x80;
+    let sum = frame_checksum(&restamped[..payload_end]).to_le_bytes();
+    restamped[payload_end..].copy_from_slice(&sum);
+    assert_eq!(decode_frame(&restamped).err(), Some(CodecError::FingerprintMismatch));
+}
+
+/// Guarantee 5c: an exported frame imported into a *fresh* store (new
+/// process simulation) serves a warm hit with zero rule evaluations,
+/// bitwise equal to the original solve.
+#[test]
+fn imported_frame_serves_a_warm_hit_with_zero_rule_evals() {
+    let mut rng = Pcg64::seed(89);
+    let ds = synthetic::gaussian_mixture("import", 30, 4, 3, 2.6, &mut rng);
+    let engine = NativeEngine::new(2);
+
+    let mut exporter_frames = FrameStore::new(4);
+    let mut exporter = Session::new("exporter", service_cfg(2));
+    let cold = exporter.serve(&ds, &mut exporter_frames, &engine).expect("cold solve");
+    let bytes = exporter_frames.export_bytes();
+
+    // a brand-new store + session, as a second process would build
+    let mut fresh_frames = FrameStore::new(4);
+    assert_eq!(fresh_frames.import_bytes(&bytes), Ok(1));
+    let mut importer = Session::new("importer", service_cfg(2));
+    let warm = importer.serve(&ds, &mut fresh_frames, &engine).expect("imported warm hit");
+    assert_eq!(warm.telemetry.frames_reused, 1, "import must serve the cache hit");
+    assert_eq!(warm.telemetry.rule_evals, 0, "imported warm hit must skip the rules");
+    assert_eq!(warm.telemetry.adm_candidates, 0);
+    assert_bitwise_eq(&warm.m, &cold.m, "imported replay of M");
+    assert_eq!(warm.admitted_idx, cold.admitted_idx);
+    assert_eq!(warm.screened_l, cold.screened_l);
+    assert_eq!(warm.screened_r, cold.screened_r);
+    assert_eq!(fresh_frames.hits(), 1);
 }
